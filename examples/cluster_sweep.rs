@@ -1,0 +1,70 @@
+//! E1/E2 — Fig 1 + §3.3 cluster-size trade-off, measured on *this* stack:
+//! evaluates the exported quantized models through the pure-Rust integer
+//! pipeline (lpinfer) and prints the accuracy-vs-precision table next to
+//! the python sweep results (results/sweep.json) when present.
+//!
+//!     cargo run --release --example cluster_sweep [-- --n 128]
+
+use anyhow::Result;
+use dfp_infer::cli::Args;
+use dfp_infer::io::read_dft;
+use dfp_infer::json;
+use dfp_infer::lpinfer::{forward_quant, QModelParams};
+use dfp_infer::model::resnet_mini_default;
+use dfp_infer::nn::argmax_rows;
+use dfp_infer::tensor::Tensor;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false)?;
+    let n: usize = args.get_or("n", 128)?;
+    let dir = std::path::Path::new("artifacts");
+    anyhow::ensure!(dir.join("eval_data.dft").exists(), "run `make artifacts` first");
+
+    let eval = read_dft(&dir.join("eval_data.dft"))?;
+    let images = eval["images"].as_f32()?;
+    let labels = eval["labels"].as_i32()?;
+    let img = images.dim(1);
+    let px = img * img * 3;
+    let n = n.min(images.dim(0));
+    let x = Tensor::new(&[n, img, img, 3], images.data()[..n * px].to_vec())?;
+    let net = resnet_mini_default();
+
+    // python full-sweep numbers, if the sweep has been run
+    let sweep = std::fs::read_to_string("results/sweep.json")
+        .ok()
+        .and_then(|t| json::parse(&t).ok());
+    let fp_ref = sweep
+        .as_ref()
+        .and_then(|s| s.path(&["fp32", "acc"]))
+        .and_then(json::Json::as_f64);
+
+    println!("Fig-1 reproduction (rust lpinfer on {n} images; python sweep in parens)");
+    println!("{:<12} {:>10} {:>14}", "variant", "rust acc", "python (1024)");
+    if let Some(fp) = fp_ref {
+        println!("{:<12} {:>10} {:>14.4}", "fp32", "—", fp);
+    }
+    for tag in ["8a8w_n4", "8a4w_n4", "8a2w_n4", "8a2w_n64"] {
+        let path = dir.join(format!("qweights_{tag}.dft"));
+        if !path.exists() {
+            continue;
+        }
+        let qmap = read_dft(&path)?;
+        let params = QModelParams::from_tensors(&qmap, &net)?;
+        let preds = argmax_rows(&forward_quant(&params, &net, &x));
+        let correct = preds
+            .iter()
+            .zip(labels.data())
+            .filter(|(p, l)| **p == **l as usize)
+            .count();
+        let py = sweep
+            .as_ref()
+            .and_then(|s| s.path(&[tag, "acc"]))
+            .and_then(json::Json::as_f64)
+            .map(|a| format!("{a:.4}"))
+            .unwrap_or_else(|| "—".into());
+        println!("{:<12} {:>10.4} {:>14}", tag, correct as f64 / n as f64, py);
+    }
+    println!("\n(full 3-bit-widths x 7-cluster-sizes sweep: python -m compile.eval_sweep;");
+    println!(" table lands in results/sweep_table.md)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT artifacts, classify one synthetic image at two
+//! precisions, and show the op-count economics behind the choice.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (Run `make artifacts` first — it trains the baseline and exports the
+//! quantized serving artifacts.)
+
+use anyhow::{Context, Result};
+use dfp_infer::data;
+use dfp_infer::model;
+use dfp_infer::opcount;
+use dfp_infer::runtime::Engine;
+use dfp_infer::tensor::Tensor;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    // 1. the economics (paper §3.3): why serve ternary-clustered weights
+    let net = model::resnet101();
+    let n4 = opcount::census_ternary(&net, 4);
+    let n64 = opcount::census_ternary(&net, 64);
+    println!(
+        "ResNet-101 op replacement: N=4 -> {:.1}%   N=64 -> {:.1}%",
+        100.0 * n4.replaced_frac(),
+        100.0 * n64.replaced_frac()
+    );
+
+    // 2. spin up the PJRT engine and classify one ShapeSet image
+    let mut engine = Engine::new(dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let protos = data::prototypes();
+    let (img, label) = data::sample(&protos, 42, 7, 1.0);
+    let x = Tensor::new(&[1, data::IMG, data::IMG, 3], img.data().to_vec())?;
+
+    for variant in ["fp32", "8a2w_n4"] {
+        let info = engine.manifest.variants.get(variant).context("variant")?.clone();
+        let exe = engine.load(variant, 1)?;
+        let logits = exe.run(&x)?;
+        let pred = logits
+            .data()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!(
+            "{variant:<8} ({}b weights, N={}) -> predicted class {pred} (true {label})  offline acc {:.3}",
+            info.w_bits, info.cluster, info.eval_acc
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,164 @@
+"""AOT lowering: quantized model variants -> HLO text artifacts (+ manifest).
+
+The interchange format is HLO *text*, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each serving variant is lowered once per batch size with the weights baked
+in as constants, so the rust hot path feeds only an f32 image batch and
+reads back f32 logits — python never runs at serving time.
+
+Run as:  python -m compile.aot --out ../artifacts     (from python/)
+
+Produces:
+    artifacts/model_<variant>_b<batch>.hlo.txt
+    artifacts/manifest.json          — variants, shapes, accuracy metadata
+    artifacts/eval_data.dft          — eval images + labels for rust drivers
+    artifacts/qweights_<variant>.dft — quantized layers for the rust lpinfer
+                                       cross-check (integration tests)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from .dft import read_dft, write_dft
+from .model import (
+    ModelSpec, QuantConfig, build_qmodel, eval_fp, eval_qmodel, forward_fp,
+    forward_quant,
+)
+
+HERE = os.path.dirname(__file__)
+MODELS_DIR = os.path.join(HERE, "..", "..", "models")
+
+BATCH_SIZES = (1, 8, 32)
+
+# Serving variants: tag -> QuantConfig (None = fp32 baseline)
+VARIANTS = {
+    "fp32": None,
+    "8a8w_n4": QuantConfig(w_bits=8, cluster=4),
+    "8a4w_n4": QuantConfig(w_bits=4, cluster=4),
+    "8a2w_n4": QuantConfig(w_bits=2, cluster=4),
+    "8a2w_n64": QuantConfig(w_bits=2, cluster=64),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # as_hlo_text(True) == print_large_constants: the baked weights MUST be
+    # in the text or the rust-side parse would silently zero-fill them.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text still elides large constants"
+    return text
+
+
+def ensure_weights(spec: ModelSpec) -> dict:
+    """Load trained weights; train a fresh baseline if none exist yet."""
+    path = os.path.join(MODELS_DIR, "weights_fp32.dft")
+    if not os.path.exists(path):
+        print("no trained weights found — training baseline (one-off)...")
+        from .train import train_fp
+
+        os.makedirs(MODELS_DIR, exist_ok=True)
+        params, hist = train_fp(spec, epochs=14)
+        write_dft(path, params)
+        with open(os.path.join(MODELS_DIR, "train_fp32.json"), "w") as f:
+            json.dump(hist, f, indent=1)
+    return read_dft(path)
+
+
+def export_qweights(path: str, qm) -> None:
+    """Flatten a QModel into a .dft for the rust lpinfer pipeline."""
+    t = {}
+    for name, l in qm.layers.items():
+        t[f"{name}.wq"] = l.wq
+        t[f"{name}.w_scale"] = l.w_scale.astype(np.float32)
+        t[f"{name}.bn_scale"] = l.bn_scale
+        t[f"{name}.bn_shift"] = l.bn_shift
+        t[f"{name}.act_exp"] = np.array([l.act_exp], np.int32)
+        t[f"{name}.w_bits"] = np.array([l.w_bits], np.int32)
+    t["fc.wq"] = qm.fc_wq
+    t["fc.scale"] = qm.fc_scale.astype(np.float32)
+    t["fc.b"] = qm.fc_b
+    t["meta.in_exp"] = np.array([qm.in_exp], np.int32)
+    t["meta.feat_exp"] = np.array([qm.feat_exp], np.int32)
+    t["meta.cluster"] = np.array([qm.cfg.cluster], np.int32)
+    t["meta.w_bits"] = np.array([qm.cfg.w_bits], np.int32)
+    write_dft(path, t)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(HERE, "..", "..", "artifacts"))
+    ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--variants", nargs="*", default=list(VARIANTS))
+    ap.add_argument("--n-eval", type=int, default=1024)
+    ap.add_argument("--calib-n", type=int, default=256)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    spec = ModelSpec()
+    params = ensure_weights(spec)
+    ex, ey = D.make_split(args.n_eval, seed=2)
+    calib = ex[: args.calib_n]
+
+    manifest = {
+        "img": spec.img, "channels": list(spec.channels),
+        "classes": spec.classes, "batch_sizes": list(args.batches),
+        "variants": {},
+    }
+
+    fp_acc = eval_fp(params, spec, ex, ey)
+    print(f"fp32 eval accuracy: {fp_acc:.4f}")
+
+    for tag in args.variants:
+        cfg = VARIANTS[tag]
+        if cfg is None:
+            fwd = lambda x: (forward_fp(params, x, spec),)
+            acc = fp_acc
+        else:
+            qm = build_qmodel(params, spec, cfg, calib)
+            acc = eval_qmodel(qm, ex, ey, engine="sim")
+            export_qweights(os.path.join(args.out, f"qweights_{tag}.dft"), qm)
+            fwd = lambda x, qm=qm: (forward_quant(qm, x, engine="pallas"),)
+        print(f"variant {tag}: eval_acc {acc:.4f}")
+        files = {}
+        for b in args.batches:
+            shape = jax.ShapeDtypeStruct((b, spec.img, spec.img, 3), jnp.float32)
+            lowered = jax.jit(fwd).lower(shape)
+            text = to_hlo_text(lowered)
+            fname = f"model_{tag}_b{b}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            files[str(b)] = fname
+            print(f"  wrote {fname} ({len(text)//1024} KiB)")
+        manifest["variants"][tag] = {
+            "files": files, "eval_acc": acc,
+            "w_bits": cfg.w_bits if cfg else 32,
+            "cluster": cfg.cluster if cfg else 0,
+        }
+
+    # eval data for the rust drivers (images f32, labels i32)
+    write_dft(os.path.join(args.out, "eval_data.dft"),
+              {"images": ex[:256], "labels": ey[:256].astype(np.int32)})
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""ShapeSet — procedural 10-class image dataset (ImageNet stand-in).
+
+Each class is defined by (a) a low-frequency sinusoidal colour texture with
+class-specific frequencies/phases and (b) a class-specific geometric mask
+(disc / ring / bar / checker / wedge, parameterised by class id). A sample
+is the class prototype under a random shift, horizontal flip, brightness
+jitter and additive Gaussian noise — hard enough that a linear model fails
+and a small conv net is needed, easy enough to train on one CPU core.
+
+The generator is fully deterministic given (seed, index) so the Rust side
+(rust/src/data/) regenerates identical request payloads for serving load.
+Mirrors rust/src/data/shapeset.rs — keep the two in sync (cross-checked by
+integration_runtime.rs against artifacts/shapeset_eval.dft).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import os
+
+IMG = 24          # image side
+CH = 3            # channels
+CLASSES = 10
+# additive noise sigma — tuned so FP32 accuracy lands in the mid/high-90s
+# with visible quantization spread below it. Override: SHAPESET_NOISE env.
+NOISE = float(os.environ.get("SHAPESET_NOISE", "1.0"))
+
+
+@dataclass
+class ShapeSetConfig:
+    n: int
+    seed: int = 0
+    noise: float = NOISE
+
+
+def _class_texture(cls: int, xx: np.ndarray, yy: np.ndarray) -> np.ndarray:
+    """Class-specific smooth RGB texture in [-1, 1], shape (IMG, IMG, 3)."""
+    out = np.zeros((IMG, IMG, CH), dtype=np.float32)
+    for c in range(CH):
+        fx = 1.0 + ((cls * 3 + c * 5) % 7) * 0.5
+        fy = 1.0 + ((cls * 5 + c * 3) % 5) * 0.7
+        ph = (cls * 1.7 + c * 0.9) % (2 * np.pi)
+        out[..., c] = np.sin(fx * xx + ph) * np.cos(fy * yy - ph)
+    return out
+
+
+def _class_mask(cls: int, xx: np.ndarray, yy: np.ndarray) -> np.ndarray:
+    """Class-specific geometric mask in {0, 1}, shape (IMG, IMG)."""
+    r2 = xx * xx + yy * yy
+    kind = cls % 5
+    if kind == 0:      # disc
+        m = r2 < (1.0 + 0.2 * (cls // 5)) ** 2
+    elif kind == 1:    # ring
+        m = (r2 > 0.8) & (r2 < 2.2 + 0.4 * (cls // 5))
+    elif kind == 2:    # horizontal bar
+        m = np.abs(yy) < 0.5 + 0.2 * (cls // 5)
+    elif kind == 3:    # checker
+        m = (np.floor(xx * (1.5 + cls // 5)) + np.floor(yy * 1.5)) % 2 == 0
+    else:              # wedge
+        m = (xx > 0) & (np.abs(yy) < xx * (0.8 + 0.3 * (cls // 5)))
+    return m.astype(np.float32)
+
+
+def _prototypes() -> np.ndarray:
+    """All class prototypes, shape (CLASSES, IMG, IMG, CH), values in [-1,1]."""
+    lin = np.linspace(-np.pi, np.pi, IMG, dtype=np.float32)
+    yy, xx = np.meshgrid(lin, lin, indexing="ij")
+    protos = np.zeros((CLASSES, IMG, IMG, CH), dtype=np.float32)
+    for cls in range(CLASSES):
+        tex = _class_texture(cls, xx, yy)
+        mask = _class_mask(cls, xx, yy)[..., None]
+        protos[cls] = tex * (0.4 + 0.6 * mask)
+    return protos
+
+
+_PROTOS = _prototypes()
+
+
+def sample(seed: int, index: int, noise: float = None):
+    """One (image, label). Deterministic in (seed, index).
+
+    Uses SplitMix64 for the per-sample stream so the rust generator can
+    reproduce it exactly. Returns (img: f32 (IMG,IMG,CH) in ~[-1.6,1.6],
+    label: int).
+    """
+    if noise is None:
+        noise = NOISE
+    rng = _SplitMix64((seed << 32) ^ (index * 0x9E3779B97F4A7C15 & 0xFFFFFFFFFFFFFFFF))
+    label = rng.next_below(CLASSES)
+    proto = _PROTOS[label]
+    dx = rng.next_below(9) - 4
+    dy = rng.next_below(9) - 4
+    img = np.roll(proto, (dy, dx), axis=(0, 1))
+    if rng.next_below(2) == 1:
+        img = img[:, ::-1, :]
+    bright = 0.8 + 0.4 * rng.next_f32()
+    img = img * bright
+    if noise > 0:
+        g = rng.normal(IMG * IMG * CH).reshape(IMG, IMG, CH)
+        img = img + noise * g
+    return img.astype(np.float32), label
+
+
+def make_split(n: int, seed: int, noise: float = None):
+    """Batch of n samples -> (images (n,IMG,IMG,CH) f32, labels (n,) i32)."""
+    xs = np.zeros((n, IMG, IMG, CH), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        xs[i], ys[i] = sample(seed, i, noise)
+    return xs, ys
+
+
+class _SplitMix64:
+    """SplitMix64 PRNG — mirrored bit-exactly in rust/src/util/rng.rs."""
+
+    MASK = 0xFFFFFFFFFFFFFFFF
+
+    def __init__(self, state: int):
+        self.state = state & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def next_below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def next_f32(self) -> float:
+        return (self.next_u64() >> 40) / float(1 << 24)
+
+    def normal(self, n: int) -> np.ndarray:
+        """Box-Muller over pairs of next_f32 — reproducible across languages."""
+        m = (n + 1) // 2
+        u1 = np.array([max(self.next_f32(), 1e-7) for _ in range(m)], dtype=np.float64)
+        u2 = np.array([self.next_f32() for _ in range(m)], dtype=np.float64)
+        r = np.sqrt(-2.0 * np.log(u1))
+        out = np.concatenate([r * np.cos(2 * np.pi * u2), r * np.sin(2 * np.pi * u2)])
+        return out[:n].astype(np.float32)

@@ -1,0 +1,73 @@
+"""DFT — tiny binary tensor container for python <-> rust interchange.
+
+Layout (little endian):
+    magic   b"DFT1"
+    u32     tensor count
+    per tensor:
+        u16     name length, then utf-8 name bytes
+        u8      dtype tag (0=f32, 1=i8, 2=i32, 3=u8, 4=i64)
+        u8      ndim
+        u32*    dims
+        u64     payload byte length, then raw row-major data
+
+The rust reader/writer lives in rust/src/io/; integration tests round-trip
+files written by each side through the other.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"DFT1"
+
+_DTYPE_TAGS = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int8): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.uint8): 3,
+    np.dtype(np.int64): 4,
+}
+_TAG_DTYPES = {v: k for k, v in _DTYPE_TAGS.items()}
+
+
+def write_dft(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a name->array mapping. Arrays are cast-checked, not converted."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_TAGS:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_TAGS[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_dft(path: str) -> Dict[str, np.ndarray]:
+    """Read a .dft file back into a name->array mapping."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            tag, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (blen,) = struct.unpack("<Q", f.read(8))
+            data = f.read(blen)
+            dt = _TAG_DTYPES[tag]
+            arr = np.frombuffer(data, dtype=dt).reshape(dims).copy()
+            out[name] = arr
+    return out

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from .qmatmul import qmatmul, qmatmul_acc, ternary_matmul  # noqa: F401
+from .quantize_act import bn_relu_quant, quantize_act  # noqa: F401

@@ -1,0 +1,153 @@
+"""Pallas quantized GEMM kernels — the paper's compute hot-spot (L1).
+
+Two entry points sharing one tiled kernel body:
+
+* ``qmatmul``        — generic int8 x int8 GEMM with int32 accumulate and a
+                       per-output-filter f32 dequantization scale. Used by
+                       the C1 (8-bit) layer, the 4-bit path (values stored
+                       in int8, range [-7, 7]) and the 8a8w variant.
+* ``ternary_matmul`` — the cluster-ternary contraction: weights are int8
+                       restricted to {-1, 0, +1}; the MXU/ALU work is pure
+                       sign-accumulation and the only multiply per output
+                       element is the cluster scale α̂ applied on the final
+                       accumulator — the literal kernel-level realisation of
+                       the paper's "one 8-bit multiply per N·K² ternary
+                       accumulations" (§3.3).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): grid tiles (BM, BF) with
+the full K dimension resident — for this model family K = kh·kw·C ≤ 576 so
+an (x-tile, w-tile, out-tile) triple is ≤ (BM+BF)·K + BM·BF words, far under
+a 16 MB VMEM budget with double buffering; the contraction maps onto the
+MXU as an int8 matmul. ``interpret=True`` everywhere: CPU PJRT cannot run
+Mosaic custom-calls; numerics are validated on the interpret path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: BM rows of activations, BF output filters per program.
+# PERF (§Perf L1, iteration 2): interpret-mode pallas lowers each grid step
+# into an XLA while-loop iteration with dynamic slices — on CPU the grid
+# *is* the overhead, so tiles are chosen adaptively large (few steps). The
+# TPU deployment would instead use VMEM-budgeted 64x64..128x128 tiles; see
+# DESIGN.md §Hardware-Adaptation for the footprint math.
+BM = 64
+BF = 64
+CPU_BM = 4096
+CPU_BF = 256
+
+
+def _adaptive(m, f, bm, bf):
+    """Pick tile sizes: explicit args win; otherwise cover the whole matrix
+    up to the CPU_* caps (minimizing grid steps + padding)."""
+    bm = bm or min(m, CPU_BM)
+    bf = bf or min(f, CPU_BF)
+    return bm, bf
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref):
+    """One (BM, BF) output tile: integer accumulate + per-filter scale.
+
+    PERF (§Perf L1, iteration 1): the contraction is carried in f32, not
+    int32 — XLA-CPU has no fast int8 GEMM path (naive loops, ~50x slower),
+    while the f32 path hits the optimized SGEMM kernels. Exactness: every
+    product |x·w| <= 127·127 and partial sums stay well under 2^24 for the
+    ternary (|w|<=1 -> |acc| <= K·127 ~ 1.5e5) and 4-bit (<= 1.0e6) paths,
+    so f32 accumulation is bit-identical to int32. The int32 reference
+    lives in `_qacc_kernel`/`qmatmul_acc`; pytest pins f32==int32. On TPU
+    the same contraction maps to the MXU int8/bf16 path (DESIGN.md
+    §Hardware-Adaptation).
+    """
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = acc * s_ref[...][None, :]
+
+
+def _pad_to(x, axis, mult):
+    rem = x.shape[axis] % mult
+    if rem == 0:
+        return x, 0
+    padw = [(0, 0)] * x.ndim
+    padw[axis] = (0, mult - rem)
+    return jnp.pad(x, padw), mult - rem
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf"))
+def qmatmul(xq, wq, scale, *, bm: int = None, bf: int = None):
+    """int8[M,K] @ int8[K,F] * scale[F] -> f32[M,F] (tiled Pallas GEMM).
+
+    Pads M and F up to the tile sizes (zero rows / filters), runs the tiled
+    kernel over a (M/bm, F/bf) grid, slices the result back.
+    """
+    m, k = xq.shape
+    k2, f = wq.shape
+    assert k == k2 and scale.shape == (f,)
+    bm, bf = _adaptive(m, f, bm, bf)
+    xp, _ = _pad_to(xq, 0, bm)
+    wp, _ = _pad_to(wq, 1, bf)
+    sp, _ = _pad_to(scale.astype(jnp.float32), 0, bf)
+    mp, fp = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=(mp // bm, fp // bf),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, fp), jnp.float32),
+        interpret=True,
+    )(xp, wp, sp)
+    return out[:m, :f]
+
+
+def ternary_matmul(xq, wt, alpha, *, bm: int = None, bf: int = None):
+    """Cluster-ternary GEMM: int8 activations x {-1,0,+1} weights.
+
+    ``alpha`` is the per-filter dequantized cluster scale α̂ (already
+    expanded from per-cluster (mantissa, exp) pairs — the expansion is free:
+    filters in a cluster share the value). Numerically identical to
+    ``qmatmul``; kept distinct because the op-accounting (and the real-HW
+    kernel) differ: here the inner contraction is multiplication-free.
+    """
+    return qmatmul(xq, wt, alpha, bm=bm, bf=bf)
+
+
+def _qacc_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf"))
+def qmatmul_acc(xq, wq, *, bm: int = None, bf: int = None):
+    """Raw int32 accumulator variant (scale applied by the caller)."""
+    m, k = xq.shape
+    _, f = wq.shape
+    bm, bf = _adaptive(m, f, bm, bf)
+    xp, _ = _pad_to(xq, 0, bm)
+    wp, _ = _pad_to(wq, 1, bf)
+    mp, fp = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _qacc_kernel,
+        grid=(mp // bm, fp // bf),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, fp), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :f]

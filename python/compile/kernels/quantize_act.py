@@ -1,0 +1,78 @@
+"""Pallas activation (re)quantization kernels.
+
+``quantize_act``  f32 -> int8 dynamic fixed point with a shared power-of-two
+exponent (the paper's 8-bit activation path, §3). ``bn_relu_quant`` fuses
+the folded-BatchNorm affine, ReLU and the requantization into one pass so
+the f32 intermediate never round-trips through HBM — on TPU this is the
+VPU epilogue of the matmul kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# PERF (§Perf L1, iteration 2): elementwise kernels run as a SINGLE grid
+# step — interpret-mode grid iterations dominate cost on CPU, and an
+# elementwise op has no cross-tile reuse to exploit anyway. (On TPU the
+# epilogue fuses into the matmul kernel; see bn_relu_quant.)
+BLK = 4096  # max flattened row width per (single) program
+
+
+def _quant_kernel(x_ref, o_ref, *, inv_scale, q):
+    x = x_ref[...] * jnp.float32(inv_scale)
+    o_ref[...] = jnp.clip(jnp.round(x), -q, q).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("exp", "bits"))
+def quantize_act(x, *, exp: int, bits: int = 8):
+    """f32[any] -> int8 DFP: q = clip(round(x * 2**-exp)).
+
+    Shapes are flattened to (rows, cols) internally; row-tiled grid.
+    """
+    q = (1 << (bits - 1)) - 1
+    orig = x.shape
+    flat = x.reshape(-1)
+    width = min(BLK, flat.shape[0]) or 1
+    pad = (-flat.shape[0]) % width
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, width)
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, inv_scale=float(2.0 ** (-exp)), q=q),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.int8),
+        interpret=True,
+    )(flat)
+    import math
+
+    return out.reshape(-1)[: math.prod(orig)].reshape(orig)
+
+
+def _bn_relu_quant_kernel(y_ref, s_ref, b_ref, o_ref, *, inv_scale, q, relu):
+    z = y_ref[...] * s_ref[...][None, :] + b_ref[...][None, :]
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = jnp.clip(jnp.round(z * jnp.float32(inv_scale)), -q, q).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("exp_out", "bits", "relu"))
+def bn_relu_quant(y, scale, shift, *, exp_out: int, bits: int = 8, relu: bool = True):
+    """f32[M,C] * scale[C] + shift[C] -> relu -> int8 DFP[M,C] (fused epilogue).
+
+    Single grid step (see BLK note): the whole epilogue is one fused
+    elementwise pass — on TPU this is the VPU tail of the matmul tile.
+    """
+    q = (1 << (bits - 1)) - 1
+    m, _c = y.shape
+    out = pl.pallas_call(
+        functools.partial(
+            _bn_relu_quant_kernel,
+            inv_scale=float(2.0 ** (-exp_out)),
+            q=q,
+            relu=relu,
+        ),
+        out_shape=jax.ShapeDtypeStruct(y.shape, jnp.int8),
+        interpret=True,
+    )(y, scale.astype(jnp.float32), shift.astype(jnp.float32))
+    return out[:m]

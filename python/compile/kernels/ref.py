@@ -1,0 +1,76 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest + hypothesis
+compare them elementwise (exact for integer paths, allclose for f32).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_qmatmul(xq, wq, scale):
+    """int8[M,K] @ int8[K,F] -> f32[M,F], int32 accumulate, per-filter scale.
+
+    The integer GEMM at the heart of the paper's pipeline: `scale` is the
+    per-output-filter dequantization factor (cluster alpha * 2**act_exp).
+    """
+    acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+    return acc.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+
+
+def ref_qmatmul_acc(xq, wq):
+    """int8[M,K] @ int8[K,F] -> int32[M,F] raw accumulator (no scale)."""
+    return xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+
+
+def ref_quantize_act(x, exp, bits=8):
+    """f32 -> int8 DFP with shared power-of-two exponent (round-half-even)."""
+    q = (1 << (bits - 1)) - 1
+    scaled = x.astype(jnp.float32) * jnp.float32(2.0 ** (-exp))
+    return jnp.clip(jnp.round(scaled), -q, q).astype(jnp.int8)
+
+
+def ref_dequantize_act(xq, exp):
+    return xq.astype(jnp.float32) * jnp.float32(2.0**exp)
+
+
+def ref_bn_relu_quant(y, scale, shift, exp_out, bits=8, relu=True):
+    """Folded BN (per-channel affine) + optional ReLU + requant to int8 DFP."""
+    z = y * scale[None, :] + shift[None, :]
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    return ref_quantize_act(z, exp_out, bits)
+
+
+def im2col(x, kh, kw, stride=1, pad=1):
+    """NHWC -> (N*Ho*Wo, kh*kw*C) patches, zero padded.
+
+    Matches the layout the conv kernels expect: patch index varies over
+    (kh, kw, C) fastest-last, rows over (N, Ho, Wo).
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i : i + stride * ho : stride, j : j + stride * wo : stride, :])
+    patches = jnp.stack(cols, axis=3)  # (N, Ho, Wo, kh*kw, C)
+    return patches.reshape(n * ho * wo, kh * kw * c), (n, ho, wo)
+
+
+def ref_conv2d_int(xq, wq, stride=1, pad=1):
+    """Integer conv (int8 NHWC x int8 HWIO -> int32 NHWC) via im2col GEMM."""
+    kh, kw, ci, co = wq.shape
+    cols, (n, ho, wo) = im2col(xq.astype(jnp.int32), kh, kw, stride, pad)
+    flat = wq.reshape(-1, co).astype(jnp.int32)
+    out = cols @ flat
+    return out.reshape(n, ho, wo, co)
+
+
+def np_round_half_even(x):
+    """numpy round-half-even (np.rint) — shared by the quantizer tests."""
+    return np.rint(x)

@@ -1,0 +1,439 @@
+"""L2 — ResNet-mini in JAX: FP32 training graph + quantized inference graph.
+
+The model family mirrors the paper's ResNet-50/101 structure at laptop
+scale (see DESIGN.md §2 for the substitution argument): a 3×3 stem,
+three residual stages with both 3×3 convs and 1×1 projection shortcuts
+(so the op-mix argument of §3.3 applies), BatchNorm after every conv,
+global average pooling, and a linear classifier.
+
+Two forward paths:
+
+* ``forward_fp``       — plain f32 lax.conv graph used for training and as
+                         the accuracy baseline.
+* ``forward_quant``    — the paper's integer pipeline: int8 DFP activations,
+                         cluster-quantized weights (ternary / 4-bit / 8-bit),
+                         int32 accumulation, per-cluster α̂ scale, folded
+                         (re-estimated) BatchNorm, requantization after every
+                         layer. ``engine="sim"`` uses exact integer-valued
+                         f32 ops (fast, vectorized — used for the accuracy
+                         sweeps); ``engine="pallas"`` routes every GEMM
+                         through the L1 kernels (used by pytest and the AOT
+                         artifacts — bit-identical to "sim" by construction).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as Q
+from .kernels import qmatmul, quantize_act
+from .kernels.ref import im2col
+
+# --------------------------------------------------------------------------
+# Architecture description
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    stride: int
+    pad: int
+    relu: bool        # ReLU after BN?
+    residual: bool    # add skip connection output *before* ReLU
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """ResNet-mini: stem + `blocks_per_stage` basic blocks per stage."""
+
+    img: int = 24
+    channels: Tuple[int, ...] = (32, 64, 128)
+    blocks_per_stage: int = 1
+    classes: int = 10
+
+    def conv_specs(self) -> List[ConvSpec]:
+        specs = [ConvSpec("stem", 3, 3, 3, self.channels[0], 1, 1, True, False)]
+        cin = self.channels[0]
+        for s, ch in enumerate(self.channels):
+            for b in range(self.blocks_per_stage):
+                stride = 2 if (s > 0 and b == 0) else 1
+                pre = f"s{s}b{b}"
+                specs.append(ConvSpec(f"{pre}c1", 3, 3, cin, ch, stride, 1, True, False))
+                specs.append(ConvSpec(f"{pre}c2", 3, 3, ch, ch, 1, 1, True, True))
+                if stride != 1 or cin != ch:
+                    specs.append(ConvSpec(f"{pre}proj", 1, 1, cin, ch, stride, 0, False, False))
+                cin = ch
+        return specs
+
+    def feat_dim(self) -> int:
+        return self.channels[-1]
+
+
+# --------------------------------------------------------------------------
+# Parameter init / containers  (params: flat dict name -> np/jnp array)
+#   conv layers:  {name}.w (HWIO), {name}.{gamma,beta,mean,var}
+#   classifier:   fc.w (D, classes), fc.b
+# --------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for cs in spec.conv_specs():
+        fan_in = cs.kh * cs.kw * cs.cin
+        std = float(np.sqrt(2.0 / fan_in))
+        params[f"{cs.name}.w"] = rng.normal(0, std, (cs.kh, cs.kw, cs.cin, cs.cout)).astype(np.float32)
+        params[f"{cs.name}.gamma"] = np.ones(cs.cout, np.float32)
+        params[f"{cs.name}.beta"] = np.zeros(cs.cout, np.float32)
+        params[f"{cs.name}.mean"] = np.zeros(cs.cout, np.float32)
+        params[f"{cs.name}.var"] = np.ones(cs.cout, np.float32)
+    d = spec.feat_dim()
+    params["fc.w"] = rng.normal(0, np.sqrt(1.0 / d), (d, spec.classes)).astype(np.float32)
+    params["fc.b"] = np.zeros(spec.classes, np.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# FP32 forward (training / baseline)
+# --------------------------------------------------------------------------
+
+BN_EPS = 1e-5
+
+
+def _conv(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def forward_fp(params, x, spec: ModelSpec, train: bool = False):
+    """f32 forward. train=True uses batch statistics and also returns them
+    (for updating the running BN stats outside)."""
+    batch_stats = {}
+
+    def bn(name, y):
+        if train:
+            mu = jnp.mean(y, axis=(0, 1, 2))
+            var = jnp.var(y, axis=(0, 1, 2))
+            batch_stats[name] = (mu, var)
+        else:
+            mu, var = params[f"{name}.mean"], params[f"{name}.var"]
+        inv = jax.lax.rsqrt(var + BN_EPS)
+        return (y - mu) * inv * params[f"{name}.gamma"] + params[f"{name}.beta"]
+
+    specs = {cs.name: cs for cs in spec.conv_specs()}
+
+    def apply_conv(name, h):
+        cs = specs[name]
+        y = _conv(h, params[f"{name}.w"], cs.stride, cs.pad)
+        return bn(name, y)
+
+    h = jax.nn.relu(apply_conv("stem", x))
+    cin = spec.channels[0]
+    for s, ch in enumerate(spec.channels):
+        for b in range(spec.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pre = f"s{s}b{b}"
+            skip = h
+            h1 = jax.nn.relu(apply_conv(f"{pre}c1", h))
+            h2 = apply_conv(f"{pre}c2", h1)
+            if stride != 1 or cin != ch:
+                skip = apply_conv(f"{pre}proj", skip)
+            h = jax.nn.relu(h2 + skip)
+            cin = ch
+    feat = jnp.mean(h, axis=(1, 2))
+    logits = feat @ params["fc.w"] + params["fc.b"]
+    return (logits, batch_stats) if train else logits
+
+
+# --------------------------------------------------------------------------
+# Quantized model construction
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class QuantConfig:
+    w_bits: int = 2            # 2 (ternary), 4 or 8
+    cluster: int = 4           # N — filters per cluster (paper §3)
+    a_bits: int = 8
+    first_layer_bits: int = 8  # C1 stays 8-bit (paper §3.2)
+    fc_bits: Optional[int] = None  # None -> same as w_bits
+    recompute_bn: bool = True  # §3.2 BN re-estimation
+    ternary_mode: str = "support"  # "paper" (Alg 1 verbatim) | "support" (decoupled)
+    calib_n: int = 256
+
+    def tag(self) -> str:
+        t = f"{self.a_bits}a{self.w_bits}w_n{self.cluster}"
+        if self.w_bits == 2 and self.ternary_mode != "support":
+            t += f"_{self.ternary_mode}"
+        return t
+
+
+@dataclass
+class QConvLayer:
+    spec: ConvSpec
+    wq: np.ndarray             # int8 (HWIO): {-1,0,1} ternary or k-bit values
+    w_scale: np.ndarray        # f32 per output filter (α̂ or 2**exp)
+    bn_scale: np.ndarray       # folded BN multiplier  (f32 per channel)
+    bn_shift: np.ndarray       # folded BN offset
+    act_exp: int = 0           # DFP exponent of this layer's *output* acts
+    # metadata for rust export / op accounting
+    cluster_size: int = 1
+    w_bits: int = 8
+    alpha_mant: Optional[np.ndarray] = None
+    alpha_exp: Optional[np.ndarray] = None
+
+
+@dataclass
+class QModel:
+    spec: ModelSpec
+    cfg: QuantConfig
+    layers: Dict[str, QConvLayer]
+    fc_wq: np.ndarray
+    fc_scale: np.ndarray
+    fc_b: np.ndarray
+    in_exp: int = 0            # input image DFP exponent
+    feat_exp: int = 0          # pooled-feature DFP exponent (calibrated)
+
+
+def _quantize_weights(w: np.ndarray, bits: int, cluster: int, mode: str = "support"):
+    """Dispatch to Algorithm 1 (ternary) or k-bit clustered DFP."""
+    if bits == 2:
+        t = Q.ternarize_layer(w, cluster, mode=mode)
+        return t.wq, t.alpha.astype(np.float32), t.alpha_mant, t.alpha_exp
+    d = Q.quantize_layer_dfp(w, bits, cluster)
+    return d.wq, d.scales(), None, d.exp
+
+
+def build_qmodel(params: Dict[str, np.ndarray], spec: ModelSpec, cfg: QuantConfig,
+                 calib_x: np.ndarray) -> QModel:
+    """Quantize a trained FP32 model into the paper's integer pipeline.
+
+    Calibration over `calib_x` (§3.2):
+      1. quantized weights + original BN -> collect pre-BN channel stats,
+         re-estimate BN (compensates the quantization variance shift);
+      2. folded BN -> collect post-ReLU activation ranges -> freeze the
+         per-layer DFP exponents.
+    """
+    layers: Dict[str, QConvLayer] = {}
+    for cs in spec.conv_specs():
+        w = params[f"{cs.name}.w"]
+        bits = cfg.first_layer_bits if cs.name == "stem" else cfg.w_bits
+        wq, w_scale, am, ae = _quantize_weights(w, bits, cfg.cluster, cfg.ternary_mode)
+        layers[cs.name] = QConvLayer(
+            spec=cs, wq=wq, w_scale=w_scale,
+            bn_scale=np.ones(cs.cout, np.float32), bn_shift=np.zeros(cs.cout, np.float32),
+            cluster_size=cfg.cluster, w_bits=bits, alpha_mant=am,
+            alpha_exp=np.asarray(ae) if ae is not None else None,
+        )
+
+    fc_bits = cfg.fc_bits if cfg.fc_bits is not None else cfg.w_bits
+    fc_wq, fc_scale, _, _ = _quantize_weights(params["fc.w"], fc_bits, cfg.cluster, cfg.ternary_mode)
+
+    qm = QModel(spec=spec, cfg=cfg, layers=layers,
+                fc_wq=fc_wq, fc_scale=fc_scale.astype(np.float32),
+                fc_b=params["fc.b"].astype(np.float32))
+    qm.in_exp = Q.choose_exp(float(np.max(np.abs(calib_x))), cfg.a_bits)
+
+    # ---- pass 1: BN statistics under quantized weights (or reuse trained) --
+    if cfg.recompute_bn:
+        stats = _collect_bn_stats(qm, params, calib_x)
+    else:
+        stats = {n: (params[f"{n}.mean"], params[f"{n}.var"]) for n in layers}
+    for name, (mu, var) in stats.items():
+        g, b = params[f"{name}.gamma"], params[f"{name}.beta"]
+        inv = 1.0 / np.sqrt(np.asarray(var) + BN_EPS)
+        layers[name].bn_scale = (np.asarray(g) * inv).astype(np.float32)
+        layers[name].bn_shift = (np.asarray(b) - np.asarray(mu) * np.asarray(g) * inv).astype(np.float32)
+
+    # ---- pass 2: activation ranges -> DFP exponents ------------------------
+    ranges, feat_max = _collect_act_ranges(qm, calib_x)
+    for name, mx in ranges.items():
+        layers[name].act_exp = Q.choose_exp(mx, cfg.a_bits)
+    qm.feat_exp = Q.choose_exp(feat_max, cfg.a_bits)
+    return qm
+
+
+# ---- calibration helpers (f32 graph with quantized weights) ---------------
+
+
+def _dequant_w(l: QConvLayer) -> jnp.ndarray:
+    return jnp.asarray(l.wq, jnp.float32) * jnp.asarray(l.w_scale)[None, None, None, :]
+
+
+def _collect_bn_stats(qm: QModel, params, calib_x) -> Dict[str, Tuple[np.ndarray, np.ndarray]]:
+    """Forward with quantized weights + *original* BN, recording pre-BN
+    moments per conv — the paper's §3.2 variance-shift compensation."""
+    spec, layers = qm.spec, qm.layers
+    stats: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def bn_batch(name, y):
+        # Normalize with the *batch* statistics being recorded (train-mode
+        # semantics): every layer then sees the input distribution it will
+        # see at inference once the recomputed stats are folded in, so the
+        # re-estimation is self-consistent through depth.
+        mu, var = jnp.mean(y, (0, 1, 2)), jnp.var(y, (0, 1, 2))
+        stats[name] = (np.asarray(mu), np.asarray(var))
+        inv = jax.lax.rsqrt(var + BN_EPS)
+        return (y - mu) * inv * params[f"{name}.gamma"] + params[f"{name}.beta"]
+
+    def conv_q(name, h):
+        l = layers[name]
+        return bn_batch(name, _conv(h, _dequant_w(l), l.spec.stride, l.spec.pad))
+
+    x = jnp.asarray(calib_x)
+    h = jax.nn.relu(conv_q("stem", x))
+    cin = spec.channels[0]
+    for s, ch in enumerate(spec.channels):
+        for b in range(spec.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pre = f"s{s}b{b}"
+            skip = h
+            h1 = jax.nn.relu(conv_q(f"{pre}c1", h))
+            h2 = conv_q(f"{pre}c2", h1)
+            if stride != 1 or cin != ch:
+                skip = conv_q(f"{pre}proj", skip)
+            h = jax.nn.relu(h2 + skip)
+            cin = ch
+    return stats
+
+
+def _collect_act_ranges(qm: QModel, calib_x) -> Tuple[Dict[str, float], float]:
+    """Forward with quantized weights + folded BN, recording max |act| at
+    every requantization point (post-ReLU / post-residual)."""
+    spec, layers = qm.spec, qm.layers
+    ranges: Dict[str, float] = {}
+
+    def conv_bn(name, h):
+        l = layers[name]
+        y = _conv(h, _dequant_w(l), l.spec.stride, l.spec.pad)
+        return y * jnp.asarray(l.bn_scale) + jnp.asarray(l.bn_shift)
+
+    def record(name, h):
+        ranges[name] = float(jnp.max(jnp.abs(h)))
+        return h
+
+    x = jnp.asarray(calib_x)
+    h = record("stem", jax.nn.relu(conv_bn("stem", x)))
+    cin = spec.channels[0]
+    for s, ch in enumerate(spec.channels):
+        for b in range(spec.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pre = f"s{s}b{b}"
+            skip = h
+            h1 = record(f"{pre}c1", jax.nn.relu(conv_bn(f"{pre}c1", h)))
+            h2 = conv_bn(f"{pre}c2", h1)
+            if stride != 1 or cin != ch:
+                skip = conv_bn(f"{pre}proj", h)
+                ranges[f"{pre}proj"] = float(jnp.max(jnp.abs(skip)))
+            h = record(f"{pre}c2", jax.nn.relu(h2 + skip))
+            cin = ch
+    feat_max = float(jnp.max(jnp.abs(jnp.mean(h, axis=(1, 2)))))
+    return ranges, feat_max
+
+
+# --------------------------------------------------------------------------
+# Quantized inference forward
+# --------------------------------------------------------------------------
+
+
+def _gemm(engine, xq, wq_flat, scale):
+    """int8 GEMM dispatch: pallas kernel or exact integer-valued f32 sim."""
+    if engine == "pallas":
+        return qmatmul(xq, wq_flat, scale)
+    acc = xq.astype(jnp.float32) @ wq_flat.astype(jnp.float32)  # exact: |acc| < 2^24
+    return acc * scale[None, :]
+
+
+def _requant(engine, z, exp, a_bits):
+    if engine == "pallas":
+        return quantize_act(z, exp=int(exp), bits=a_bits)
+    qmx = (1 << (a_bits - 1)) - 1
+    return jnp.clip(jnp.round(z * (2.0 ** (-int(exp)))), -qmx, qmx).astype(jnp.int8)
+
+
+def forward_quant(qm: QModel, x: jnp.ndarray, engine: str = "sim") -> jnp.ndarray:
+    """The paper's inference pipeline on a f32 image batch -> f32 logits.
+
+    Every intermediate activation tensor is int8 DFP; convolutions are
+    integer GEMMs (int8 activations x int8/ternary weights -> int32). The
+    previous layer's DFP exponent 2**exp_in is folded into the per-filter
+    scale so the GEMM operands stay int8.
+    """
+    spec, cfg, layers = qm.spec, qm.cfg, qm.layers
+    a_bits = cfg.a_bits
+
+    def conv(name, hq, exp_in, relu=True, skip=None):
+        l = layers[name]
+        cs = l.spec
+        cols, (n, ho, wo) = im2col(hq, cs.kh, cs.kw, cs.stride, cs.pad)
+        wflat = jnp.asarray(l.wq.reshape(-1, cs.cout))
+        scale = jnp.asarray(l.w_scale) * jnp.float32(2.0 ** exp_in)
+        y = _gemm(engine, cols, wflat, scale).reshape(n, ho, wo, cs.cout)
+        z = y * jnp.asarray(l.bn_scale) + jnp.asarray(l.bn_shift)
+        if skip is not None:
+            z = z + skip
+        if relu:
+            z = jnp.maximum(z, 0.0)
+        return _requant(engine, z, l.act_exp, a_bits), z
+
+    xq = _requant(engine, x, qm.in_exp, a_bits)
+    hq, _ = conv("stem", xq, qm.in_exp)
+    exp_h = layers["stem"].act_exp
+    cin = spec.channels[0]
+    for s, ch in enumerate(spec.channels):
+        for b in range(spec.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pre = f"s{s}b{b}"
+            h1q, _ = conv(f"{pre}c1", hq, exp_h)
+            exp1 = layers[f"{pre}c1"].act_exp
+            if stride != 1 or cin != ch:
+                _, skip_f = conv(f"{pre}proj", hq, exp_h, relu=False)
+            else:
+                skip_f = hq.astype(jnp.float32) * jnp.float32(2.0 ** exp_h)
+            hq, _ = conv(f"{pre}c2", h1q, exp1, relu=True, skip=skip_f)
+            exp_h = layers[f"{pre}c2"].act_exp
+            cin = ch
+
+    feat = jnp.mean(hq.astype(jnp.float32) * jnp.float32(2.0 ** exp_h), axis=(1, 2))
+    fq = _requant(engine, feat, qm.feat_exp, a_bits)
+    logits = _gemm(engine, fq, jnp.asarray(qm.fc_wq),
+                   jnp.asarray(qm.fc_scale) * jnp.float32(2.0 ** qm.feat_exp))
+    return logits + jnp.asarray(qm.fc_b)
+
+
+# --------------------------------------------------------------------------
+# Utilities
+# --------------------------------------------------------------------------
+
+
+def accuracy(logits: jnp.ndarray, labels: np.ndarray) -> float:
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(labels)))
+
+
+def eval_qmodel(qm: QModel, xs: np.ndarray, ys: np.ndarray, engine="sim", batch=256) -> float:
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = forward_quant(qm, jnp.asarray(xs[i : i + batch]), engine=engine)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(ys[i : i + batch])))
+    return correct / len(xs)
+
+
+def eval_fp(params, spec: ModelSpec, xs, ys, batch=256) -> float:
+    fwd = jax.jit(lambda p, x: forward_fp(p, x, spec))
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = fwd(params, jnp.asarray(xs[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(ys[i : i + batch])))
+    return correct / len(xs)

@@ -1,0 +1,279 @@
+"""Cluster-based low-precision quantization (paper Algorithms 1 & 2) + DFP.
+
+Dynamic fixed point (DFP): a tensor is represented as integers sharing one
+power-of-two exponent, value = q * 2**exp. Weights additionally carry one
+scaling factor per *cluster* of N output filters; for the 2-bit (ternary)
+path the scale is the RMS alpha of Algorithm 1, itself re-quantized to an
+8-bit mantissa so no datum in the pipeline is wider than 8 bits
+(accumulators are 32-bit, as in the paper's "8-bit accumulation" MACs).
+
+This module is mirrored by rust/src/quant/ (bit-for-bit on Ŵ and α̂ — see
+rust/tests/integration_quant.rs).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Dynamic fixed point primitives
+# --------------------------------------------------------------------------
+
+
+def qmax(bits: int) -> int:
+    """Largest magnitude representable in a signed `bits`-bit integer, symmetric."""
+    return (1 << (bits - 1)) - 1
+
+
+def choose_exp(max_abs: float, bits: int) -> int:
+    """Smallest exponent e with max_abs <= qmax * 2**e (DFP range fit)."""
+    if max_abs <= 0.0:
+        return 0
+    return int(math.ceil(math.log2(max_abs / qmax(bits))))
+
+
+def quantize_dfp(x: np.ndarray, bits: int, exp: Optional[int] = None) -> Tuple[np.ndarray, int]:
+    """f32 -> (int q, exp) with value = q * 2**exp, round-to-nearest-even."""
+    if exp is None:
+        exp = choose_exp(float(np.max(np.abs(x))) if x.size else 0.0, bits)
+    scale = 2.0 ** (-exp)
+    q = np.clip(np.rint(x * scale), -qmax(bits), qmax(bits))
+    dt = np.int8 if bits <= 8 else np.int32
+    return q.astype(dt), exp
+
+
+def dequantize_dfp(q: np.ndarray, exp: int) -> np.ndarray:
+    return q.astype(np.float32) * np.float32(2.0**exp)
+
+
+def quantize_scale_u8(alpha: float) -> Tuple[int, int]:
+    """Positive scale -> (mantissa in [0,255], exp) with alpha ~= m * 2**exp.
+
+    Mantissa is normalized into [128, 255] for maximum precision (paper §3.1:
+    "we further quantize the scaling factors down to 8-bit").
+    """
+    if alpha <= 0.0:
+        return 0, 0
+    e = int(math.floor(math.log2(alpha))) - 7  # puts m in [128, 255]
+    m = int(round(alpha / 2.0**e))
+    if m > 255:  # rounding pushed it over; renormalize
+        m //= 2
+        e += 1
+    return m, e
+
+
+def dequantize_scale_u8(m: int, e: int) -> float:
+    return float(m) * 2.0**e
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 — per-filter threshold selection (RMS alpha)
+# --------------------------------------------------------------------------
+
+
+def threshold_select(w: np.ndarray) -> float:
+    """Paper Algorithm 2: best RMS alpha over sorted-magnitude prefixes.
+
+    For support I_t = top-t |w|, alpha_t = sqrt(sum_{I_t} w^2 / t), and the
+    approximation error with Ŵ = sign(w) on I_t is
+        E(t) = sum w^2 - 2 alpha_t * S1(t) + alpha_t^2 * t
+    (vectorized over all prefixes via cumulative sums). Returns alpha_{t*}.
+    """
+    a = np.sort(np.abs(w.ravel().astype(np.float64)))[::-1]
+    if a.size == 0 or a[0] == 0.0:
+        return 0.0
+    s1 = np.cumsum(a)
+    s2 = np.cumsum(a * a)
+    t = np.arange(1, a.size + 1, dtype=np.float64)
+    alpha_t = np.sqrt(s2 / t)
+    total = s2[-1]
+    err = total - 2.0 * alpha_t * s1 + alpha_t * alpha_t * t
+    return float(alpha_t[int(np.argmin(err))])
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — cluster ternarization
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TernaryLayer:
+    """Ternarized weights for one layer (HWIO, clusters along O)."""
+
+    wq: np.ndarray              # int8 in {-1,0,+1}, HWIO
+    alpha: np.ndarray           # f32 per output filter (the dequantized α̂)
+    alpha_mant: np.ndarray      # u8 mantissa per cluster
+    alpha_exp: np.ndarray       # i32 exponent per cluster
+    cluster_size: int
+    cluster_of: np.ndarray      # i32 map: filter -> cluster index
+
+    def dequantize(self) -> np.ndarray:
+        return self.wq.astype(np.float32) * self.alpha[None, None, None, :]
+
+
+def ternarize_cluster(wc: np.ndarray, mode: str = "paper") -> Tuple[np.ndarray, float]:
+    """Cluster ternarization — one cluster of N filters.
+
+    wc: (n_elems_per_filter, N) column-per-filter view of the cluster.
+
+    mode="paper" — Algorithm 1 steps 4-8 verbatim: Algorithm 2 per filter
+    gives candidate thresholds alpha_i; for each t the candidate cluster
+    scale is the RMS of the top-t alphas and *doubles as the pruning
+    threshold* (step 7: Ŵ_i = Sign(W_i) if |W_i| >= alpha_t). The RMS
+    coupling "pushes the threshold towards larger values ... helps speed
+    up weight pruning" (§3.1) — i.e. it is deliberately aggressive; on
+    heavily over-parameterized nets (ResNet-101) accuracy survives, on
+    small nets it needs the decoupled mode below (see DESIGN.md §2).
+
+    mode="support" — decoupled variant (cluster-level Algorithm 2): the
+    support is the top-τ pooled |W| by *count*, alpha is the RMS over that
+    support (eq. 1), and τ is searched to minimize the Frobenius error.
+    Contains exact-ternary recovery as a fixed point.
+    """
+    absw = np.abs(wc.astype(np.float64))
+    total = float(np.sum(absw * absw))
+    if mode == "support":
+        a = np.sort(absw.ravel())[::-1]
+        if a.size == 0 or a[0] == 0.0:
+            return np.zeros_like(wc, dtype=np.int8), 0.0
+        s1, s2 = np.cumsum(a), np.cumsum(a * a)
+        t = np.arange(1, a.size + 1, dtype=np.float64)
+        alpha_t = np.sqrt(s2 / t)
+        err = total - 2.0 * alpha_t * s1 + alpha_t * alpha_t * t
+        k = int(np.argmin(err))
+        best_alpha, thresh = float(alpha_t[k]), float(a[k])
+        wq = (np.sign(wc) * (absw >= thresh)).astype(np.int8)
+        return wq, best_alpha
+
+    n = wc.shape[1]
+    alphas = np.array([threshold_select(wc[:, j]) for j in range(n)], dtype=np.float64)
+    a_sorted = np.sort(alphas)[::-1]
+    best_err, best_alpha = math.inf, 0.0
+    for t in range(1, n + 1):
+        alpha_t = math.sqrt(float(np.sum(a_sorted[:t] ** 2)) / t)
+        mask = absw >= alpha_t
+        s1 = float(np.sum(absw[mask]))
+        cnt = int(np.count_nonzero(mask))
+        err = total - 2.0 * alpha_t * s1 + alpha_t * alpha_t * cnt
+        if err < best_err:
+            best_err, best_alpha = err, alpha_t
+    wq = (np.sign(wc) * (absw >= best_alpha)).astype(np.int8)
+    return wq, best_alpha
+
+
+def ternarize_layer(w: np.ndarray, cluster_size: int, mode: str = "paper") -> TernaryLayer:
+    """Paper Algorithm 1 over a full HWIO weight tensor.
+
+    Output filters are grouped into static clusters of `cluster_size`
+    consecutive filters (they accumulate into the same output feature map,
+    §3: "static clustering to group filters that accumulate to the same
+    output"). The final cluster may be smaller when d % N != 0.
+    """
+    if w.ndim == 2:  # FC layer (in, out) -> treat as 1x1xIxO
+        w = w[None, None, :, :]
+        squeeze = True
+    else:
+        squeeze = False
+    kh, kw, ci, co = w.shape
+    flat = w.reshape(-1, co)
+    wq = np.zeros_like(flat, dtype=np.int8)
+    alpha = np.zeros(co, dtype=np.float32)
+    n_clusters = (co + cluster_size - 1) // cluster_size
+    mants = np.zeros(n_clusters, dtype=np.uint8)
+    exps = np.zeros(n_clusters, dtype=np.int32)
+    cluster_of = np.zeros(co, dtype=np.int32)
+    for c in range(n_clusters):
+        lo, hi = c * cluster_size, min((c + 1) * cluster_size, co)
+        wq_c, a = ternarize_cluster(flat[:, lo:hi], mode=mode)
+        m, e = quantize_scale_u8(a)
+        a_hat = dequantize_scale_u8(m, e)
+        wq[:, lo:hi] = wq_c
+        alpha[lo:hi] = a_hat
+        mants[c], exps[c] = m, e
+        cluster_of[lo:hi] = c
+    wq = wq.reshape(kh, kw, ci, co)
+    if squeeze:
+        wq = wq[0, 0]
+    return TernaryLayer(wq, alpha, mants, exps, cluster_size, cluster_of)
+
+
+# --------------------------------------------------------------------------
+# TWN baseline (Li et al. [7]) — for experiment E8
+# --------------------------------------------------------------------------
+
+
+def ternarize_twn(w: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Li et al. threshold Δ = 0.7·E|w|, α = mean |w| over support (one per
+    layer — the baseline Algorithm 1 is compared against)."""
+    a = np.abs(w.astype(np.float64))
+    delta = 0.7 * float(np.mean(a))
+    mask = a > delta
+    alpha = float(np.mean(a[mask])) if mask.any() else 0.0
+    wq = (np.sign(w) * mask).astype(np.int8)
+    return wq, alpha
+
+
+# --------------------------------------------------------------------------
+# k-bit clustered DFP weights (4-bit / 8-bit paths)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class DfpLayer:
+    """k-bit DFP weights with one power-of-two exponent per cluster."""
+
+    wq: np.ndarray              # int8 holding k-bit values, HWIO
+    exp: np.ndarray             # i32 exponent per cluster
+    bits: int
+    cluster_size: int
+    cluster_of: np.ndarray
+
+    def scales(self) -> np.ndarray:
+        """Per-filter f32 scale (2**exp broadcast over the cluster)."""
+        return (2.0 ** self.exp.astype(np.float64))[self.cluster_of].astype(np.float32)
+
+    def dequantize(self) -> np.ndarray:
+        s = self.scales()
+        if self.wq.ndim == 2:
+            return self.wq.astype(np.float32) * s[None, :]
+        return self.wq.astype(np.float32) * s[None, None, None, :]
+
+
+def quantize_layer_dfp(w: np.ndarray, bits: int, cluster_size: int) -> DfpLayer:
+    """k-bit dynamic fixed point with per-cluster shared exponent."""
+    if w.ndim == 2:
+        flat, co, shape2d = w, w.shape[1], True
+    else:
+        co, shape2d = w.shape[3], False
+        flat = w.reshape(-1, co)
+    n_clusters = (co + cluster_size - 1) // cluster_size
+    wq = np.zeros_like(flat, dtype=np.int8)
+    exps = np.zeros(n_clusters, dtype=np.int32)
+    cluster_of = np.zeros(co, dtype=np.int32)
+    for c in range(n_clusters):
+        lo, hi = c * cluster_size, min((c + 1) * cluster_size, co)
+        q, e = quantize_dfp(flat[:, lo:hi], bits)
+        wq[:, lo:hi] = q
+        exps[c] = e
+        cluster_of[lo:hi] = c
+    if not shape2d:
+        wq = wq.reshape(w.shape)
+    return DfpLayer(wq, exps, bits, cluster_size, cluster_of)
+
+
+# --------------------------------------------------------------------------
+# Quantization error metrics (E8)
+# --------------------------------------------------------------------------
+
+
+def sqnr_db(w: np.ndarray, w_hat: np.ndarray) -> float:
+    """Signal-to-quantization-noise ratio in dB."""
+    sig = float(np.sum(w.astype(np.float64) ** 2))
+    noise = float(np.sum((w.astype(np.float64) - w_hat.astype(np.float64)) ** 2))
+    if noise == 0.0:
+        return math.inf
+    return 10.0 * math.log10(sig / noise)

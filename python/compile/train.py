@@ -1,0 +1,207 @@
+"""Training (FP32 baseline) and low-precision fine-tuning (paper §4).
+
+Build-time only — never on the request path. Usage (from python/):
+
+    python -m compile.train                  # train FP32 baseline
+    python -m compile.train --finetune       # §4: ternary-forward STE
+                                             #     fine-tune (Fig 2 curve)
+
+The FP32 run saves weights to ../models/weights_fp32.dft plus a metrics
+JSON; the fine-tune run loads them, quantizes (8a2w, N=64 — the paper's
+"needs retraining" configuration), and fine-tunes with the straight-through
+estimator: forward uses ternarized weights + 8-bit activations, gradients
+are applied to the full-precision master copy at lr 1e-4-scale (paper:
+"gradient updates are performed in full precision ... learning rate
+reduced to the order of 1e-4").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import quantize as Q
+from .dft import read_dft, write_dft
+from .model import (
+    ModelSpec, QuantConfig, build_qmodel, eval_fp, eval_qmodel, forward_fp,
+    init_params,
+)
+
+MODELS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "models")
+
+BN_MOMENTUM = 0.9
+
+
+def loss_fn(params, x, y, spec):
+    logits, stats = forward_fp(params, x, spec, train=True)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return nll, stats
+
+
+def sgd_step(params, x, y, spec, lr, momentum, velocity):
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y, spec)
+    new_p, new_v = {}, {}
+    for k in params:
+        if k.endswith(".mean") or k.endswith(".var"):
+            new_p[k], new_v[k] = params[k], velocity[k]
+            continue
+        v = momentum * velocity[k] + grads[k]
+        new_v[k] = v
+        new_p[k] = params[k] - lr * v
+    # BN running stats
+    for name, (mu, var) in stats.items():
+        new_p[f"{name}.mean"] = BN_MOMENTUM * params[f"{name}.mean"] + (1 - BN_MOMENTUM) * mu
+        new_p[f"{name}.var"] = BN_MOMENTUM * params[f"{name}.var"] + (1 - BN_MOMENTUM) * var
+    return new_p, new_v, loss
+
+
+def train_fp(spec: ModelSpec, *, n_train=8192, n_eval=1024, batch=64, epochs=12,
+             lr=0.1, momentum=0.9, seed=0, log=print) -> Dict[str, np.ndarray]:
+    xs, ys = D.make_split(n_train, seed=1)
+    ex, ey = D.make_split(n_eval, seed=2)
+    params = init_params(spec, seed)
+    velocity = {k: np.zeros_like(v) for k, v in params.items()}
+    step_jit = jax.jit(sgd_step, static_argnames=("spec",))
+    steps_per_epoch = n_train // batch
+    rng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+    for ep in range(epochs):
+        order = rng.permutation(n_train)
+        ep_lr = lr * (0.5 ** (ep // 4))  # step decay
+        losses = []
+        for i in range(steps_per_epoch):
+            idx = order[i * batch : (i + 1) * batch]
+            params, velocity, loss = step_jit(
+                params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]), spec,
+                ep_lr, momentum, velocity)
+            losses.append(float(loss))
+        acc = eval_fp(params, spec, ex, ey)
+        history.append({"epoch": ep, "loss": float(np.mean(losses)), "eval_acc": acc,
+                        "lr": ep_lr, "wall_s": time.time() - t0})
+        log(f"[fp32] epoch {ep:2d}  loss {np.mean(losses):.4f}  eval_acc {acc:.4f}  "
+            f"lr {ep_lr:.4f}  ({time.time()-t0:.0f}s)")
+    return {k: np.asarray(v) for k, v in params.items()}, history
+
+
+# --------------------------------------------------------------------------
+# §4 — low-precision fine-tuning (STE)
+# --------------------------------------------------------------------------
+
+
+def quantize_fwd_params(params, spec, cfg: QuantConfig):
+    """Ternarize/quantize conv weights for the forward pass (master stays fp).
+
+    Returns a params dict whose conv weights are α·Ŵ (dequantized ternary) —
+    C1 at 8-bit, FC left in FP (paper §4: "we did not quantize the weights
+    in FC layer for the training exercise")."""
+    out = dict(params)
+    for cs in spec.conv_specs():
+        w = params[f"{cs.name}.w"]
+        if cs.name == "stem":
+            d = Q.quantize_layer_dfp(w, cfg.first_layer_bits, cfg.cluster)
+            out[f"{cs.name}.w"] = d.dequantize()
+        else:
+            t = Q.ternarize_layer(w, cfg.cluster, mode=cfg.ternary_mode)
+            out[f"{cs.name}.w"] = t.dequantize()
+    return out
+
+
+def finetune(params, spec: ModelSpec, cfg: QuantConfig, *, n_train=8192, n_eval=1024,
+             batch=64, epochs=4, lr=1e-3, momentum=0.9, seed=3, log=print):
+    """STE fine-tuning: fwd/bwd at w_hat = α·Ŵ, update full-precision master.
+
+    Returns (master params, history) where history holds the Fig-2 curve:
+    eval accuracy of the *quantized* model after each epoch.
+    """
+    xs, ys = D.make_split(n_train, seed=11)
+    ex, ey = D.make_split(n_eval, seed=2)
+    velocity = {k: np.zeros_like(v) for k, v in params.items()}
+    step_jit = jax.jit(sgd_step, static_argnames=("spec",))
+    steps_per_epoch = n_train // batch
+    rng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+
+    def q_eval(p):
+        calib = ex[: cfg.calib_n]
+        qm = build_qmodel(p, spec, cfg, calib)
+        return eval_qmodel(qm, ex, ey)
+
+    acc0 = q_eval(params)
+    history.append({"epoch": 0, "eval_acc_quant": acc0, "wall_s": 0.0})
+    log(f"[ft] epoch 0 (pre)  quant_acc {acc0:.4f}")
+    for ep in range(1, epochs + 1):
+        order = rng.permutation(n_train)
+        losses = []
+        for i in range(steps_per_epoch):
+            idx = order[i * batch : (i + 1) * batch]
+            # STE: gradients computed at the quantized point, applied to master
+            qp = quantize_fwd_params(params, spec, cfg)
+            new_qp, velocity, loss = step_jit(
+                qp, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]), spec,
+                lr, momentum, velocity)
+            # delta computed on quantized params == gradient step; apply to master
+            for k in params:
+                if k.endswith(".w") and not k.startswith("fc") and k != "stem.w":
+                    params[k] = params[k] + (new_qp[k] - qp[k])
+                else:
+                    params[k] = new_qp[k]
+            losses.append(float(loss))
+        acc = q_eval(params)
+        history.append({"epoch": ep, "loss": float(np.mean(losses)),
+                        "eval_acc_quant": acc, "wall_s": time.time() - t0})
+        log(f"[ft] epoch {ep}  loss {np.mean(losses):.4f}  quant_acc {acc:.4f}  "
+            f"({time.time()-t0:.0f}s)")
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--finetune", action="store_true")
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--n-train", type=int, default=8192)
+    ap.add_argument("--n-eval", type=int, default=1024)
+    ap.add_argument("--cluster", type=int, default=64, help="N for --finetune")
+    ap.add_argument("--out-dir", default=MODELS_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    spec = ModelSpec()
+
+    if not args.finetune:
+        epochs = args.epochs or 12
+        params, history = train_fp(spec, n_train=args.n_train, n_eval=args.n_eval,
+                                   epochs=epochs)
+        write_dft(os.path.join(args.out_dir, "weights_fp32.dft"), params)
+        with open(os.path.join(args.out_dir, "train_fp32.json"), "w") as f:
+            json.dump(history, f, indent=1)
+        print(f"saved weights_fp32.dft (final eval_acc {history[-1]['eval_acc']:.4f})")
+    else:
+        params = read_dft(os.path.join(args.out_dir, "weights_fp32.dft"))
+        cfg = QuantConfig(w_bits=2, cluster=args.cluster)
+        epochs = args.epochs or 4
+        params, history = finetune(params, spec, cfg, n_train=args.n_train,
+                                   n_eval=args.n_eval, epochs=epochs)
+        write_dft(os.path.join(args.out_dir, f"weights_ft_{cfg.tag()}.dft"), params)
+        with open(os.path.join(args.out_dir, f"finetune_{cfg.tag()}.json"), "w") as f:
+            json.dump(history, f, indent=1)
+        print(f"saved fine-tuned weights ({cfg.tag()}), "
+              f"final quant_acc {history[-1]['eval_acc_quant']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

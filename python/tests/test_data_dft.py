@@ -1,0 +1,97 @@
+"""ShapeSet generator determinism + DFT container round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile.dft import read_dft, write_dft
+
+
+# ------------------------------------------------------------------ ShapeSet
+
+
+def test_sample_deterministic():
+    a_img, a_lab = D.sample(seed=7, index=13)
+    b_img, b_lab = D.sample(seed=7, index=13)
+    np.testing.assert_array_equal(a_img, b_img)
+    assert a_lab == b_lab
+
+
+def test_sample_varies_with_index_and_seed():
+    a, _ = D.sample(seed=7, index=13)
+    b, _ = D.sample(seed=7, index=14)
+    c, _ = D.sample(seed=8, index=13)
+    assert not np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_make_split_shapes_and_balance():
+    xs, ys = D.make_split(500, seed=0)
+    assert xs.shape == (500, D.IMG, D.IMG, D.CH) and xs.dtype == np.float32
+    assert ys.shape == (500,) and ys.dtype == np.int32
+    # roughly balanced labels
+    counts = np.bincount(ys, minlength=D.CLASSES)
+    assert counts.min() > 20
+
+
+def test_noise_zero_is_clean_prototype_transform():
+    img, lab = D.sample(seed=1, index=2, noise=0.0)
+    assert np.max(np.abs(img)) <= 1.6 * 1.3  # brightness-jittered prototype range
+
+
+def test_splitmix64_reference_vector():
+    """Pin the PRNG to known values — rust mirrors these exactly
+    (rust/src/util/rng.rs test_reference_vector)."""
+    rng = D._SplitMix64(0)
+    vals = [rng.next_u64() for _ in range(3)]
+    assert vals == [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4, 0x06C45D188009454F]
+
+
+# ------------------------------------------------------------------ DFT file
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dft_roundtrip_random(seed):
+    rng = np.random.default_rng(seed)
+    tensors = {
+        "a.f32": rng.normal(size=(3, 4)).astype(np.float32),
+        "b.i8": rng.integers(-128, 128, (7,), dtype=np.int8),
+        "c.i32": rng.integers(-1000, 1000, (2, 2, 2), dtype=np.int32),
+        "d.scalarish": rng.normal(size=(1,)).astype(np.float32),
+    }
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "t.dft")
+        write_dft(p, tensors)
+        back = read_dft(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_dft_rejects_bad_magic():
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "bad.dft")
+        with open(p, "wb") as f:
+            f.write(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(ValueError):
+            read_dft(p)
+
+
+def test_dft_rejects_unsupported_dtype():
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "t.dft")
+        with pytest.raises(ValueError):
+            write_dft(p, {"x": np.zeros(3, np.float64)})
+
+
+def test_dft_empty_file_roundtrip():
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "t.dft")
+        write_dft(p, {})
+        assert read_dft(p) == {}

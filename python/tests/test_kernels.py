@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; integer paths must match exactly,
+f32 epilogues to 1e-5. This is the core correctness signal for the
+compute hot-spot that the AOT artifacts embed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bn_relu_quant, qmatmul, qmatmul_acc, quantize_act, ternary_matmul,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand_int8(rng, shape, lo=-127, hi=128):
+    return rng.integers(lo, hi, shape, dtype=np.int8)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 96),
+    f=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (m, k))
+    w = rand_int8(rng, (k, f))
+    s = (rng.random(f, dtype=np.float32) + 0.01).astype(np.float32)
+    out = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s)))
+    want = np.asarray(ref.ref_qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s)))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 80),
+    f=st.integers(1, 66),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_acc_exact(m, k, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (m, k))
+    w = rand_int8(rng, (k, f))
+    out = np.asarray(qmatmul_acc(jnp.asarray(x), jnp.asarray(w)))
+    want = x.astype(np.int64) @ w.astype(np.int64)
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(out.astype(np.int64), want)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 90),
+    k=st.integers(1, 64),
+    f=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ternary_matmul_is_sign_accumulation(m, k, f, seed):
+    """Ternary weights: kernel result == alpha * (sum of signed activations)."""
+    rng = np.random.default_rng(seed)
+    x = rand_int8(rng, (m, k))
+    wt = rng.integers(-1, 2, (k, f)).astype(np.int8)
+    alpha = (rng.random(f, dtype=np.float32) * 0.5 + 0.01).astype(np.float32)
+    out = np.asarray(ternary_matmul(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(alpha)))
+    acc = x.astype(np.int64) @ wt.astype(np.int64)
+    np.testing.assert_allclose(out, acc.astype(np.float32) * alpha[None, :], rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 2000),
+    exp=st.integers(-10, 4),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_act_matches_ref(n, exp, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=n) * scale).astype(np.float32)
+    out = np.asarray(quantize_act(jnp.asarray(x), exp=exp))
+    want = np.asarray(ref.ref_quantize_act(jnp.asarray(x), exp))
+    np.testing.assert_array_equal(out, want)
+
+
+def test_quantize_act_saturates():
+    x = jnp.asarray(np.array([1e9, -1e9, 0.0], np.float32))
+    out = np.asarray(quantize_act(x, exp=0))
+    np.testing.assert_array_equal(out, [127, -127, 0])
+
+
+def test_quantize_act_preserves_shape_3d():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(3, 5, 7)).astype(np.float32)
+    out = np.asarray(quantize_act(jnp.asarray(x), exp=-3))
+    assert out.shape == (3, 5, 7)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    c=st.integers(1, 64),
+    exp=st.integers(-8, 2),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bn_relu_quant_matches_ref(m, c, exp, relu, seed):
+    rng = np.random.default_rng(seed)
+    y = (rng.normal(size=(m, c)) * 4).astype(np.float32)
+    sc = (rng.random(c) + 0.1).astype(np.float32)
+    sh = rng.normal(size=c).astype(np.float32)
+    out = np.asarray(bn_relu_quant(jnp.asarray(y), jnp.asarray(sc), jnp.asarray(sh),
+                                   exp_out=exp, relu=relu))
+    want = np.asarray(ref.ref_bn_relu_quant(jnp.asarray(y), jnp.asarray(sc),
+                                            jnp.asarray(sh), exp, relu=relu))
+    np.testing.assert_array_equal(out, want)
+
+
+@pytest.mark.parametrize("stride,pad,kh", [(1, 1, 3), (2, 1, 3), (1, 0, 1), (2, 0, 1)])
+def test_im2col_conv_matches_lax(stride, pad, kh):
+    """im2col+GEMM convolution equals lax.conv on integer data."""
+    import jax
+
+    rng = np.random.default_rng(1)
+    x = rng.integers(-10, 10, (2, 8, 8, 3)).astype(np.int8)
+    w = rng.integers(-10, 10, (kh, kh, 3, 5)).astype(np.int8)
+    got = np.asarray(ref.ref_conv2d_int(jnp.asarray(x), jnp.asarray(w), stride, pad))
+    want = jax.lax.conv_general_dilated(
+        x.astype(np.float32), w.astype(np.float32), (stride, stride),
+        [(pad, pad), (pad, pad)], dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(got, np.asarray(want).astype(np.int32))
+
+
+@pytest.mark.parametrize("bm,bf", [(8, 8), (16, 64), (64, 16), (128, 128)])
+def test_qmatmul_tile_size_invariance(bm, bf):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(7)
+    x = rand_int8(rng, (50, 33))
+    w = rand_int8(rng, (33, 29))
+    s = (rng.random(29, dtype=np.float32) + 0.01).astype(np.float32)
+    base = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s)))
+    tiled = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s), bm=bm, bf=bf))
+    np.testing.assert_array_equal(base, tiled)

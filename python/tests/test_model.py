@@ -1,0 +1,115 @@
+"""L2 model tests: shapes, quantized-pipeline invariants, sim==pallas."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.model import (
+    ModelSpec, QuantConfig, build_qmodel, eval_qmodel, forward_fp,
+    forward_quant, init_params,
+)
+
+# a deliberately tiny spec so tests stay fast on one core
+SPEC = ModelSpec(channels=(8, 16, 32), blocks_per_stage=1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(SPEC, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return D.make_split(16, seed=42)
+
+
+@pytest.fixture(scope="module")
+def qmodel(params, batch):
+    return build_qmodel(params, SPEC, QuantConfig(w_bits=2, cluster=4), batch[0])
+
+
+def test_conv_specs_structure():
+    specs = SPEC.conv_specs()
+    names = [c.name for c in specs]
+    assert names[0] == "stem"
+    assert "s1b0proj" in names and "s2b0proj" in names  # strided stages project
+    assert "s0b0proj" not in names                      # same-width stage: identity skip
+    k1 = [c for c in specs if c.kh == 1]
+    k3 = [c for c in specs if c.kh == 3]
+    assert k1 and k3  # both op mixes present (§3.3 op-ratio analysis applies)
+
+
+def test_forward_fp_shapes(params, batch):
+    logits = forward_fp(params, jnp.asarray(batch[0]), SPEC)
+    assert logits.shape == (16, SPEC.classes)
+    logits, stats = forward_fp(params, jnp.asarray(batch[0]), SPEC, train=True)
+    assert set(stats) == {c.name for c in SPEC.conv_specs()}
+
+
+def test_build_qmodel_layer_inventory(qmodel):
+    assert set(qmodel.layers) == {c.name for c in SPEC.conv_specs()}
+    stem = qmodel.layers["stem"]
+    assert stem.w_bits == 8                      # C1 stays 8-bit (§3.2)
+    assert np.max(np.abs(stem.wq)) <= 127
+    for name, l in qmodel.layers.items():
+        if name == "stem":
+            continue
+        assert set(np.unique(l.wq)).issubset({-1, 0, 1}), name
+
+
+def test_qmodel_activation_exponents_finite(qmodel):
+    for name, l in qmodel.layers.items():
+        assert -20 < l.act_exp < 10, (name, l.act_exp)
+
+
+def test_forward_quant_logits_shape(qmodel, batch):
+    logits = forward_quant(qmodel, jnp.asarray(batch[0][:4]), engine="sim")
+    assert logits.shape == (4, SPEC.classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_sim_equals_pallas(qmodel, batch):
+    """The fast sweep path and the AOT kernel path must agree bit-for-bit."""
+    x = jnp.asarray(batch[0][:8])
+    sim = np.asarray(forward_quant(qmodel, x, engine="sim"))
+    pal = np.asarray(forward_quant(qmodel, x, engine="pallas"))
+    np.testing.assert_allclose(sim, pal, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_invariance(qmodel, batch):
+    """Per-image logits must not depend on batch composition."""
+    x = jnp.asarray(batch[0][:8])
+    full = np.asarray(forward_quant(qmodel, x, engine="sim"))
+    one = np.asarray(forward_quant(qmodel, x[:1], engine="sim"))
+    np.testing.assert_allclose(full[:1], one, rtol=1e-5, atol=1e-5)
+
+
+def test_8bit_weights_close_to_fp(params, batch):
+    """8a8w should track the fp32 logits closely (sanity on the pipeline)."""
+    qm = build_qmodel(params, SPEC, QuantConfig(w_bits=8, cluster=4), batch[0])
+    x = jnp.asarray(batch[0][:8])
+    ql = np.asarray(forward_quant(qm, x, engine="sim"))
+    assert np.all(np.isfinite(ql))
+    # ranks should broadly agree between fp and 8-bit on an untrained net is
+    # too weak a signal; instead assert the quantized activations actually
+    # used the int8 range (not collapsed to zero)
+    assert np.std(ql) > 0
+
+
+def test_bn_recompute_changes_folds(params, batch):
+    a = build_qmodel(params, SPEC, QuantConfig(w_bits=2, cluster=4, recompute_bn=True), batch[0])
+    b = build_qmodel(params, SPEC, QuantConfig(w_bits=2, cluster=4, recompute_bn=False), batch[0])
+    diffs = [np.max(np.abs(a.layers[n].bn_scale - b.layers[n].bn_scale)) for n in a.layers]
+    assert max(diffs) > 0  # §3.2 re-estimation must actually do something
+
+
+def test_eval_qmodel_range(qmodel, batch):
+    acc = eval_qmodel(qmodel, batch[0], batch[1], engine="sim")
+    assert 0.0 <= acc <= 1.0
+
+
+def test_quant_config_tags():
+    assert QuantConfig(w_bits=2, cluster=4).tag() == "8a2w_n4"
+    assert QuantConfig(w_bits=2, cluster=4, ternary_mode="paper").tag() == "8a2w_n4_paper"
+    assert QuantConfig(w_bits=4, cluster=64).tag() == "8a4w_n64"

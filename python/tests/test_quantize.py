@@ -1,0 +1,197 @@
+"""Quantizer correctness: DFP primitives, Algorithm 1 & 2, TWN baseline."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------- DFP core
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 4, 8]), scale=st.floats(1e-4, 1e4),
+       seed=st.integers(0, 2**31 - 1))
+def test_dfp_roundtrip_error_bound(bits, scale, seed):
+    """|x - dequant(quant(x))| <= 2**(exp-1) elementwise (half-ulp)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=257) * scale).astype(np.float32)
+    q, e = Q.quantize_dfp(x, bits)
+    err = np.abs(Q.dequantize_dfp(q, e) - x)
+    assert np.all(err <= 2.0 ** (e - 1) + 1e-12)
+
+
+@settings(**SETTINGS)
+@given(v=st.floats(1e-6, 1e6))
+def test_choose_exp_fits_range(v):
+    for bits in (2, 4, 8):
+        e = Q.choose_exp(v, bits)
+        assert v <= Q.qmax(bits) * 2.0**e
+        # one step tighter would not fit
+        assert v > Q.qmax(bits) * 2.0 ** (e - 1) or math.isclose(v, Q.qmax(bits) * 2.0 ** (e - 1))
+
+
+def test_quantize_dfp_empty_and_zero():
+    q, e = Q.quantize_dfp(np.zeros(5, np.float32), 8)
+    assert e == 0 and np.all(q == 0)
+
+
+@settings(**SETTINGS)
+@given(alpha=st.floats(1e-5, 1e5))
+def test_scale_u8_roundtrip(alpha):
+    m, e = Q.quantize_scale_u8(alpha)
+    a_hat = Q.dequantize_scale_u8(m, e)
+    assert abs(a_hat - alpha) / alpha < 1.0 / 128  # normalized mantissa precision
+    assert 0 <= m <= 255
+
+
+def test_scale_u8_zero():
+    assert Q.quantize_scale_u8(0.0) == (0, 0)
+    assert Q.dequantize_scale_u8(0, 0) == 0.0
+
+
+# ---------------------------------------------------- Algorithm 2 (thresholds)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 400))
+def test_threshold_select_is_rms_of_some_prefix(seed, n):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=n).astype(np.float32)
+    a = Q.threshold_select(w)
+    s = np.sort(np.abs(w.astype(np.float64)))[::-1]
+    prefixes = np.sqrt(np.cumsum(s * s) / np.arange(1, n + 1))
+    assert np.min(np.abs(prefixes - a)) < 1e-9
+
+
+def test_threshold_select_zero_vector():
+    assert Q.threshold_select(np.zeros(16, np.float32)) == 0.0
+
+
+def test_threshold_select_constant_vector():
+    w = np.full(32, 0.25, np.float32)
+    assert Q.threshold_select(w) == pytest.approx(0.25, rel=1e-6)
+
+
+# ---------------------------------------------------- Algorithm 1 (clusters)
+
+
+@pytest.mark.parametrize("mode", ["paper", "support"])
+@pytest.mark.parametrize("n_cluster", [1, 4, 16])
+def test_exact_ternary_recovery(mode, n_cluster):
+    rng = np.random.default_rng(0)
+    wq_true = rng.integers(-1, 2, (3, 3, 8, 16)).astype(np.float32)
+    w = wq_true * 0.37
+    t = Q.ternarize_layer(w, n_cluster, mode=mode)
+    rel = np.linalg.norm(w - t.dequantize()) / np.linalg.norm(w)
+    assert rel < 0.01  # only alpha-requantization (8-bit mantissa) error
+
+
+@pytest.mark.parametrize("mode", ["paper", "support"])
+def test_ternary_values_are_ternary(mode):
+    rng = np.random.default_rng(3)
+    w = rng.normal(0, 0.1, (3, 3, 16, 24)).astype(np.float32)
+    t = Q.ternarize_layer(w, 4, mode=mode)
+    assert set(np.unique(t.wq)).issubset({-1, 0, 1})
+    assert t.wq.shape == w.shape
+    assert np.all(t.alpha >= 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       co=st.integers(2, 32), n_cluster=st.sampled_from([1, 2, 4, 8]))
+def test_cluster_alpha_shared_within_cluster(seed, co, n_cluster):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, (3, 3, 4, co)).astype(np.float32)
+    t = Q.ternarize_layer(w, n_cluster, mode="support")
+    n_clusters = (co + n_cluster - 1) // n_cluster
+    assert len(t.alpha_mant) == n_clusters
+    for c in range(n_clusters):
+        lo, hi = c * n_cluster, min((c + 1) * n_cluster, co)
+        assert np.all(t.alpha[lo:hi] == t.alpha[lo])
+        assert np.all(t.cluster_of[lo:hi] == c)
+
+
+def test_smaller_clusters_do_not_increase_error():
+    """More scales (smaller N) => layer approximation error monotone non-up."""
+    rng = np.random.default_rng(5)
+    w = rng.normal(0, 0.1, (3, 3, 32, 64)).astype(np.float32)
+    errs = []
+    for n in (1, 4, 16, 64):
+        t = Q.ternarize_layer(w, n, mode="support")
+        errs.append(np.linalg.norm(w - t.dequantize()))
+    # allow tiny non-monotonicity from the 8-bit alpha requantization
+    for a, b in zip(errs, errs[1:]):
+        assert a <= b * 1.02
+
+
+def test_paper_mode_prunes_harder_than_support():
+    """§3.1: RMS-as-threshold 'helps speed up weight pruning'."""
+    rng = np.random.default_rng(6)
+    w = rng.normal(0, 0.1, (3, 3, 32, 32)).astype(np.float32)
+    sp_paper = np.mean(Q.ternarize_layer(w, 4, mode="paper").wq == 0)
+    sp_support = np.mean(Q.ternarize_layer(w, 4, mode="support").wq == 0)
+    assert sp_paper > sp_support
+
+
+def test_fc_layer_2d_shapes():
+    rng = np.random.default_rng(7)
+    w = rng.normal(0, 0.1, (128, 10)).astype(np.float32)
+    t = Q.ternarize_layer(w, 4)
+    assert t.wq.shape == (128, 10)
+    d = Q.quantize_layer_dfp(w, 4, 4)
+    assert d.wq.shape == (128, 10)
+    assert np.max(np.abs(d.wq)) <= 7
+
+
+# ------------------------------------------------------------- k-bit DFP
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
+       n_cluster=st.sampled_from([1, 4, 16]))
+def test_dfp_layer_within_range_and_cluster_exp(seed, bits, n_cluster):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.2, (3, 3, 8, 16)).astype(np.float32)
+    d = Q.quantize_layer_dfp(w, bits, n_cluster)
+    assert np.max(np.abs(d.wq)) <= Q.qmax(bits)
+    # reconstruction error bounded by half-ulp of each cluster's exponent
+    w_hat = d.dequantize()
+    flat = w.reshape(-1, 16)
+    fh = w_hat.reshape(-1, 16)
+    for c in range(len(d.exp)):
+        lo, hi = c * n_cluster, min((c + 1) * n_cluster, 16)
+        assert np.max(np.abs(flat[:, lo:hi] - fh[:, lo:hi])) <= 2.0 ** (d.exp[c] - 1) + 1e-12
+
+
+def test_dfp_4bit_better_with_smaller_clusters():
+    rng = np.random.default_rng(9)
+    w = (rng.normal(0, 0.1, (3, 3, 16, 64)) * (1 + 10 * rng.random((1, 1, 1, 64)))).astype(np.float32)
+    e1 = np.linalg.norm(w - Q.quantize_layer_dfp(w, 4, 1).dequantize())
+    e64 = np.linalg.norm(w - Q.quantize_layer_dfp(w, 4, 64).dequantize())
+    assert e1 < e64
+
+
+# ------------------------------------------------------------- TWN baseline
+
+
+def test_twn_baseline_properties():
+    rng = np.random.default_rng(11)
+    w = rng.normal(0, 0.1, (3, 3, 8, 8)).astype(np.float32)
+    wq, alpha = Q.ternarize_twn(w)
+    assert set(np.unique(wq)).issubset({-1, 0, 1})
+    assert alpha > 0
+    # alpha is the mean |w| over the support
+    mask = wq != 0
+    np.testing.assert_allclose(alpha, np.mean(np.abs(w[mask])), rtol=1e-5)
+
+
+def test_sqnr_infinite_for_perfect():
+    w = np.ones((4, 4), np.float32)
+    assert Q.sqnr_db(w, w) == math.inf
+    assert Q.sqnr_db(w, np.zeros_like(w)) == pytest.approx(0.0)

@@ -1,0 +1,27 @@
+//! Bench E3 — regenerates the §3.3 table (who wins, by what factor) and
+//! times the analytic census itself.
+
+use dfp_infer::bench::Bencher;
+use dfp_infer::model;
+use dfp_infer::opcount;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== E3: §3.3 op-replacement tables ==");
+    for name in ["resnet-50", "resnet-101"] {
+        let net = model::by_name(name).unwrap();
+        println!("\n-- {name} --\n{}", opcount::table_3_3(&net, &[1, 2, 4, 8, 16, 32, 64]));
+        // paper anchors
+        let n4 = opcount::census_ternary(&net, 4).replaced_frac();
+        let n64 = opcount::census_ternary(&net, 64).replaced_frac();
+        println!("anchors: N=4 {:.1}% (paper ~85%), N=64 {:.1}% (paper ~98%)", 100.0 * n4, 100.0 * n64);
+    }
+    println!("\n== census throughput ==");
+    let net = model::resnet101();
+    b.bench("census_ternary(resnet-101, N=4)", 1.0, || {
+        opcount::census_ternary(&net, 4)
+    });
+    b.bench("energy_projection(resnet-101, N=64)", 1.0, || {
+        opcount::project_energy(&opcount::census_ternary(&net, 64))
+    });
+}

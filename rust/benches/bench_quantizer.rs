@@ -1,0 +1,57 @@
+//! Bench E8 — Algorithm 1 vs the TWN baseline (Li et al. [7]): quality
+//! (SQNR/sparsity on trained-weight statistics) + quantizer throughput.
+
+use dfp_infer::bench::Bencher;
+use dfp_infer::quant::{self, TernaryMode};
+use dfp_infer::util::SplitMix64;
+
+fn main() {
+    let mut b = Bencher::new();
+    // synthetic "trained conv layer": heavy-tailed per-filter scales
+    let (epf, nf) = (3 * 3 * 64, 128);
+    let mut rng = SplitMix64::new(3);
+    let mut w = vec![0.0f32; epf * nf];
+    for f in 0..nf {
+        let sigma = 0.02 + 0.1 * rng.next_f32();
+        let col = rng.normal(epf);
+        for e in 0..epf {
+            w[e * nf + f] = col[e] * sigma;
+        }
+    }
+
+    println!("== E8: quantization quality (SQNR dB / sparsity) ==");
+    for (label, mode, n) in [
+        ("alg1 support N=1", TernaryMode::Support, 1),
+        ("alg1 support N=4", TernaryMode::Support, 4),
+        ("alg1 support N=64", TernaryMode::Support, 64),
+        ("alg1 paper   N=4", TernaryMode::Paper, 4),
+    ] {
+        let t = quant::ternarize_layer(&w, epf, nf, n, mode);
+        let back = t.dequantize();
+        println!(
+            "{label:<20} sqnr {:>6.2} dB   sparsity {:>5.1}%",
+            quant::sqnr_db(&w, &back),
+            100.0 * t.sparsity()
+        );
+    }
+    let (codes, alpha) = quant::ternarize_twn(&w);
+    let back: Vec<f32> = codes.iter().map(|&c| f32::from(c) * alpha as f32).collect();
+    let sp = codes.iter().filter(|&&c| c == 0).count() as f64 / codes.len() as f64;
+    println!(
+        "{:<20} sqnr {:>6.2} dB   sparsity {:>5.1}%   (per-layer single scale)",
+        "TWN baseline [7]",
+        quant::sqnr_db(&w, &back),
+        100.0 * sp
+    );
+
+    println!("\n== quantizer throughput (weights/s) ==");
+    let units = (epf * nf) as f64;
+    b.bench("ternarize support N=4", units, || {
+        quant::ternarize_layer(&w, epf, nf, 4, TernaryMode::Support)
+    });
+    b.bench("ternarize paper N=4", units, || {
+        quant::ternarize_layer(&w, epf, nf, 4, TernaryMode::Paper)
+    });
+    b.bench("ternarize TWN", units, || quant::ternarize_twn(&w));
+    b.bench("dfp 4-bit N=4", units, || quant::quantize_layer_dfp(&w, epf, nf, 4, 4));
+}

@@ -1,0 +1,72 @@
+//! Bench E7 — end-to-end serving latency/throughput per precision class
+//! against the real AOT artifacts (skips gracefully if absent).
+
+use std::collections::BTreeMap;
+
+use dfp_infer::coordinator::{
+    Coordinator, CoordinatorConfig, ExecutorFactory, PjrtExecutor, PrecisionClass, Request, Router,
+};
+use dfp_infer::data;
+use dfp_infer::runtime::Manifest;
+use dfp_infer::util::{Summary, Timer};
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench_serving: run `make artifacts` first");
+        return;
+    }
+    let n: usize = std::env::var("BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(96);
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let router = Router::from_manifest(&manifest).unwrap();
+    let sizes: BTreeMap<String, Vec<usize>> = manifest
+        .variants
+        .iter()
+        .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
+        .collect();
+    let factories: Vec<ExecutorFactory> = vec![PjrtExecutor::factory(dir, true)];
+    let coord = Coordinator::start(
+        factories,
+        router,
+        &sizes,
+        manifest.img,
+        CoordinatorConfig { max_wait_us: 3_000, ..Default::default() },
+    )
+    .unwrap();
+
+    let protos = data::prototypes();
+    println!("== E7: closed-loop serving, {n} requests per precision class ==");
+    for (name, class) in [
+        ("fast (ternary N=64)", PrecisionClass::Fast),
+        ("balanced (4-bit)", PrecisionClass::Balanced),
+        ("accurate (fp32)", PrecisionClass::Accurate),
+    ] {
+        let mut lat = Summary::new();
+        let t = Timer::new();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let (img, _) = data::sample(&protos, 5, i as u64, 1.0);
+            loop {
+                match coord.submit(Request { image: img.clone(), class }) {
+                    Ok(rx) => {
+                        rxs.push(rx);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(std::time::Duration::from_micros(100)),
+                }
+            }
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            lat.add(r.e2e_us / 1e3);
+        }
+        let wall = t.elapsed_s();
+        println!(
+            "{name:<22} {:>7.1} req/s   latency(ms) {}",
+            n as f64 / wall,
+            lat.report("ms")
+        );
+    }
+    println!("\n== coordinator metrics ==\n{}", coord.metrics().report());
+    coord.shutdown();
+}

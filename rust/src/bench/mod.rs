@@ -1,0 +1,157 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, does a
+//! warmup phase, and reports mean / p50 / p95 with throughput derivation.
+//! Benches live in `rust/benches/*.rs` with `harness = false`.
+
+use std::time::Instant;
+
+use crate::util::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// user-supplied work units per iteration (elements, MACs, requests...)
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Work units per second.
+    pub fn throughput(&self) -> f64 {
+        self.units_per_iter / (self.mean_ns * 1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10.3} us/iter  (p50 {:>8.3}, p95 {:>8.3}, n={})",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p95_ns / 1e3,
+            self.iters,
+        );
+        if self.units_per_iter > 0.0 {
+            let t = self.throughput();
+            if t > 1e9 {
+                s.push_str(&format!("  {:.2} G/s", t / 1e9));
+            } else if t > 1e6 {
+                s.push_str(&format!("  {:.2} M/s", t / 1e6));
+            } else {
+                s.push_str(&format!("  {:.1} /s", t));
+            }
+        }
+        s
+    }
+}
+
+/// Benchmark runner with calibrated iteration counts.
+pub struct Bencher {
+    /// target total measurement time per case (seconds)
+    pub target_s: f64,
+    /// number of measured batches (percentile resolution)
+    pub batches: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // honor a quick mode for CI-style runs
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Self { target_s: if quick { 0.2 } else { 1.0 }, batches: 10, results: Vec::new() }
+    }
+
+    /// Run one case: `f()` is a single iteration returning a value that must
+    /// not be optimized away (its result is black-boxed here).
+    pub fn bench<R>(&mut self, name: &str, units_per_iter: f64, mut f: impl FnMut() -> R) -> &BenchResult {
+        // warmup + calibration: find iters such that one batch ~ target/batches
+        let mut iters_per_batch = 1u64;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            let dt = t.elapsed().as_secs_f64();
+            if dt > self.target_s / self.batches as f64 || iters_per_batch > 1 << 30 {
+                break;
+            }
+            let scale = ((self.target_s / self.batches as f64) / dt.max(1e-9)).min(16.0);
+            iters_per_batch = ((iters_per_batch as f64 * scale).ceil() as u64).max(iters_per_batch + 1);
+        }
+        // measurement
+        let mut per_iter = Summary::new();
+        let mut total_iters = 0u64;
+        for _ in 0..self.batches {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            let ns = t.elapsed().as_nanos() as f64 / iters_per_batch as f64;
+            per_iter.add(ns);
+            total_iters += iters_per_batch;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: per_iter.mean(),
+            p50_ns: per_iter.percentile(50.0),
+            p95_ns: per_iter.percentile(95.0),
+            units_per_iter,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Ratio of two completed cases' mean times (a/b).
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?;
+        let fb = self.results.iter().find(|r| r.name == b)?;
+        Some(fa.mean_ns / fb.mean_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_bench_runs_and_reports() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.target_s = 0.02;
+        let r = b.bench("noop-ish", 10.0, || std::hint::black_box(1 + 1)).clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.throughput() > 0.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn test_ratio() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.target_s = 0.02;
+        b.bench("fast", 0.0, || 1);
+        b.bench("slow", 0.0, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        let r = b.ratio("slow", "fast").unwrap();
+        assert!(r > 1.0, "slow/fast = {r}");
+        assert!(b.ratio("nope", "fast").is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `binary <subcommand> [--key value] [--flag] [positional...]`,
+//! typed getters with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `expect_subcommand` controls whether the first bare word is treated
+    /// as a subcommand or as a positional argument.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I, expect_subcommand: bool) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` separator: rest is positional
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if expect_subcommand && out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(expect_subcommand: bool) -> Result<Self> {
+        Self::parse_from(std::env::args().skip(1), expect_subcommand)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get_str(name).unwrap_or(default)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("--{name}={v}: {e}"),
+            },
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get_str(name).with_context(|| format!("missing required option --{name}"))
+    }
+
+    /// Comma-separated list option, e.g. `--variants a,b,c`.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get_str(name)
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], sub: bool) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()), sub).unwrap()
+    }
+
+    #[test]
+    fn test_subcommand_and_options() {
+        // NB: a bare word right after `--name` becomes its value; boolean
+        // flags go last or before `--` (documented parser semantics).
+        let a = parse(&["serve", "--port", "8080", "file.txt", "--verbose"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get::<u16>("port").unwrap(), Some(8080));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn test_equals_syntax() {
+        let a = parse(&["--batch=32", "--mode=fast"], false);
+        assert_eq!(a.get_or("batch", 0usize).unwrap(), 32);
+        assert_eq!(a.str_or("mode", "slow"), "fast");
+    }
+
+    #[test]
+    fn test_flag_followed_by_flag() {
+        let a = parse(&["--dry-run", "--force"], false);
+        assert!(a.has_flag("dry-run") && a.has_flag("force"));
+    }
+
+    #[test]
+    fn test_double_dash_separator() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"], false);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn test_typed_errors_and_defaults() {
+        let a = parse(&["--n", "abc"], false);
+        assert!(a.get::<u32>("n").is_err());
+        assert_eq!(a.get_or("missing", 7u32).unwrap(), 7);
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn test_list_option() {
+        let a = parse(&["--variants", "fp32, 8a2w_n4,,8a4w_n4"], false);
+        assert_eq!(a.get_list("variants"), vec!["fp32", "8a2w_n4", "8a4w_n4"]);
+        assert!(a.get_list("nothing").is_empty());
+    }
+
+    #[test]
+    fn test_no_subcommand_mode() {
+        let a = parse(&["input.dft", "--out", "x"], false);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["input.dft"]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Typed configuration for the launcher: defaults <- JSON file <- CLI flags.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::json::{parse, Json};
+
+/// Top-level server / tool configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// directory holding manifest.json + *.hlo.txt
+    pub artifacts_dir: PathBuf,
+    /// worker threads (each owns a PJRT engine)
+    pub workers: usize,
+    /// admission queue bound (backpressure)
+    pub max_queue: usize,
+    /// dynamic batching deadline (us)
+    pub max_wait_us: u64,
+    /// load generator: requests to issue / concurrency / noise
+    pub requests: usize,
+    pub seed: u64,
+    pub noise: f32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            workers: 1,
+            max_queue: 1024,
+            max_wait_us: 2_000,
+            requests: 256,
+            seed: 0,
+            noise: crate::data::DEFAULT_NOISE,
+        }
+    }
+}
+
+impl Config {
+    /// Merge a JSON config file over the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let j = parse(&text)?;
+        let mut c = Self::default();
+        c.apply_json(&j);
+        Ok(c)
+    }
+
+    fn apply_json(&mut self, j: &Json) {
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("workers").and_then(Json::as_i64) {
+            self.workers = v as usize;
+        }
+        if let Some(v) = j.get("max_queue").and_then(Json::as_i64) {
+            self.max_queue = v as usize;
+        }
+        if let Some(v) = j.get("max_wait_us").and_then(Json::as_i64) {
+            self.max_wait_us = v as u64;
+        }
+        if let Some(v) = j.get("requests").and_then(Json::as_i64) {
+            self.requests = v as usize;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("noise").and_then(Json::as_f64) {
+            self.noise = v as f32;
+        }
+    }
+
+    /// Apply CLI overrides (flags win over file values).
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.get_str("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        self.workers = a.get_or("workers", self.workers)?;
+        self.max_queue = a.get_or("max-queue", self.max_queue)?;
+        self.max_wait_us = a.get_or("max-wait-us", self.max_wait_us)?;
+        self.requests = a.get_or("requests", self.requests)?;
+        self.seed = a.get_or("seed", self.seed)?;
+        self.noise = a.get_or("noise", self.noise)?;
+        Ok(())
+    }
+
+    /// Resolve from optional `--config <file>` plus flag overrides.
+    pub fn resolve(a: &Args) -> Result<Self> {
+        let mut c = match a.get_str("config") {
+            Some(p) => Self::from_file(Path::new(p))?,
+            None => Self::default(),
+        };
+        c.apply_args(a)?;
+        Ok(c)
+    }
+
+    pub fn to_coordinator(&self) -> crate::coordinator::CoordinatorConfig {
+        crate::coordinator::CoordinatorConfig {
+            max_queue: self.max_queue,
+            max_wait_us: self.max_wait_us,
+            tick_us: 200,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_defaults() {
+        let c = Config::default();
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.max_wait_us, 2_000);
+    }
+
+    #[test]
+    fn test_file_merge() {
+        let p = std::env::temp_dir().join(format!("dfp_cfg_{}.json", std::process::id()));
+        std::fs::write(&p, r#"{"workers": 3, "max_wait_us": 500, "artifacts_dir": "/x"}"#).unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.max_wait_us, 500);
+        assert_eq!(c.artifacts_dir, PathBuf::from("/x"));
+        assert_eq!(c.max_queue, 1024); // default preserved
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_cli_overrides() {
+        let a = Args::parse_from(
+            ["--workers", "2", "--max-wait-us", "99"].iter().map(|s| s.to_string()),
+            false,
+        )
+        .unwrap();
+        let c = Config::resolve(&a).unwrap();
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.max_wait_us, 99);
+    }
+
+    #[test]
+    fn test_bad_file() {
+        assert!(Config::from_file(Path::new("/nonexistent/x.json")).is_err());
+    }
+}

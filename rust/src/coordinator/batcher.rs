@@ -1,0 +1,119 @@
+//! Dynamic batching policy (pure logic — unit-testable without threads).
+//!
+//! The serving artifacts are compiled at fixed batch sizes (1/8/32 by
+//! default); the batcher decides *when* to flush a variant's pending queue
+//! and *which* artifact batch to run: flush when the queue can fill the
+//! largest artifact, or when the oldest request has waited `max_wait_us`
+//! (deadline-bounded batching, the vLLM-style latency/throughput knob).
+
+/// Batching policy configuration.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// available artifact batch sizes, ascending (e.g. [1, 8, 32])
+    pub sizes: Vec<usize>,
+    /// flush deadline for the oldest queued request
+    pub max_wait_us: u64,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>, max_wait_us: u64) -> Self {
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        Self { sizes, max_wait_us }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Decide whether to flush now. Returns the artifact batch size to run
+    /// (taking `min(pending, chosen)` requests, padding the rest).
+    ///
+    /// * queue can fill the largest artifact -> run it full (throughput);
+    /// * oldest request past deadline -> run the smallest artifact that
+    ///   covers the whole queue (latency), padding as needed.
+    pub fn plan(&self, pending: usize, oldest_age_us: u64) -> Option<usize> {
+        if pending == 0 {
+            return None;
+        }
+        if pending >= self.max_batch() {
+            return Some(self.max_batch());
+        }
+        if oldest_age_us >= self.max_wait_us {
+            return Some(self.best_fit(pending));
+        }
+        None
+    }
+
+    /// Smallest artifact batch >= n (or the largest available).
+    pub fn best_fit(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Padding waste if `n` requests run on the chosen artifact.
+    pub fn padding(&self, n: usize) -> usize {
+        let b = self.best_fit(n);
+        b.saturating_sub(n.min(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![8, 1, 32], 2_000)
+    }
+
+    #[test]
+    fn test_sizes_sorted_deduped() {
+        let p = BatchPolicy::new(vec![8, 8, 1], 100);
+        assert_eq!(p.sizes, vec![1, 8]);
+        assert_eq!(p.max_batch(), 8);
+    }
+
+    #[test]
+    fn test_no_flush_when_empty() {
+        assert_eq!(policy().plan(0, 999_999), None);
+    }
+
+    #[test]
+    fn test_flush_full_batch_immediately() {
+        let p = policy();
+        assert_eq!(p.plan(32, 0), Some(32));
+        assert_eq!(p.plan(100, 0), Some(32));
+    }
+
+    #[test]
+    fn test_deadline_flush_best_fit() {
+        let p = policy();
+        assert_eq!(p.plan(3, 1_999), None); // young queue: keep batching
+        assert_eq!(p.plan(3, 2_000), Some(8));
+        assert_eq!(p.plan(1, 5_000), Some(1));
+        assert_eq!(p.plan(9, 2_000), Some(32));
+    }
+
+    #[test]
+    fn test_best_fit_and_padding() {
+        let p = policy();
+        assert_eq!(p.best_fit(1), 1);
+        assert_eq!(p.best_fit(2), 8);
+        assert_eq!(p.best_fit(8), 8);
+        assert_eq!(p.best_fit(33), 32);
+        assert_eq!(p.padding(3), 5);
+        assert_eq!(p.padding(8), 0);
+        assert_eq!(p.padding(40), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn test_empty_sizes_rejected() {
+        BatchPolicy::new(vec![], 1);
+    }
+}

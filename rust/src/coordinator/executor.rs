@@ -1,0 +1,162 @@
+//! Executor abstraction: the coordinator drives anything that can run a
+//! fixed-batch forward pass. Production uses [`PjrtExecutor`] (AOT XLA
+//! artifacts); tests and benches use [`MockExecutor`] / the pure-Rust
+//! lpinfer pipeline so coordinator logic is testable without artifacts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Factory that builds an executor *on the worker's own thread* — PJRT
+/// handles are not `Send`, so only the factory crosses threads.
+pub type ExecutorFactory = Box<dyn FnOnce() -> Result<Box<dyn Executor>> + Send>;
+
+/// Anything that can run a (variant, fixed-batch) forward pass. Constructed
+/// and used on a single worker thread (see [`ExecutorFactory`]).
+pub trait Executor {
+    /// x: (batch, img, img, 3) f32 -> logits (batch, classes).
+    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>>;
+
+    /// Available artifact batch sizes for a variant (ascending).
+    fn batch_sizes(&self, variant: &str) -> Vec<usize>;
+
+    fn img(&self) -> usize;
+    fn classes(&self) -> usize;
+}
+
+/// PJRT-backed executor (the production path).
+pub struct PjrtExecutor {
+    engine: Engine,
+}
+
+impl PjrtExecutor {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        Ok(Self { engine: Engine::new(artifacts_dir)? })
+    }
+
+    /// Factory for [`crate::coordinator::Coordinator::start`]: builds the
+    /// engine on the worker thread and pre-compiles all artifacts.
+    pub fn factory(artifacts_dir: std::path::PathBuf, warmup: bool) -> ExecutorFactory {
+        Box::new(move || {
+            let mut e = PjrtExecutor::new(&artifacts_dir)?;
+            if warmup {
+                e.warmup()?;
+            }
+            Ok(Box::new(e) as Box<dyn Executor>)
+        })
+    }
+
+    /// Compile all artifacts up front (avoids first-request latency spikes).
+    pub fn warmup(&mut self) -> Result<usize> {
+        self.engine.load_all()
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.engine.manifest
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+        self.engine.load(variant, batch)?.run(x)
+    }
+
+    fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        self.engine.batch_sizes(variant)
+    }
+
+    fn img(&self) -> usize {
+        self.engine.manifest.img
+    }
+
+    fn classes(&self) -> usize {
+        self.engine.manifest.classes
+    }
+}
+
+/// Deterministic fake executor for coordinator tests: logits[i][c] =
+/// mean(image_i) + c, optionally with a configurable artificial delay.
+pub struct MockExecutor {
+    pub img: usize,
+    pub classes: usize,
+    pub sizes: BTreeMap<String, Vec<usize>>,
+    pub delay_us_per_image: u64,
+    /// (variant, batch) log of executed jobs
+    pub executed: Vec<(String, usize)>,
+}
+
+impl MockExecutor {
+    pub fn new(img: usize, classes: usize, variants: &[(&str, &[usize])]) -> Self {
+        Self {
+            img,
+            classes,
+            sizes: variants
+                .iter()
+                .map(|(v, s)| (v.to_string(), s.to_vec()))
+                .collect(),
+            delay_us_per_image: 0,
+            executed: Vec::new(),
+        }
+    }
+}
+
+impl Executor for MockExecutor {
+    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+        anyhow::ensure!(x.dim(0) == batch, "batch mismatch");
+        self.executed.push((variant.to_string(), batch));
+        if self.delay_us_per_image > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(
+                self.delay_us_per_image * batch as u64,
+            ));
+        }
+        let px = self.img * self.img * 3;
+        let mut out = Tensor::<f32>::zeros(&[batch, self.classes]);
+        for b in 0..batch {
+            let mean: f32 =
+                x.data()[b * px..(b + 1) * px].iter().sum::<f32>() / px as f32;
+            for c in 0..self.classes {
+                out.data_mut()[b * self.classes + c] = mean + c as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        self.sizes.get(variant).cloned().unwrap_or_default()
+    }
+
+    fn img(&self) -> usize {
+        self.img
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mock_executor_deterministic() {
+        let mut m = MockExecutor::new(4, 3, &[("v", &[1, 2])]);
+        let x = Tensor::new(&[1, 4, 4, 3], vec![2.0; 48]).unwrap();
+        let y = m.run_batch("v", 1, &x).unwrap();
+        assert_eq!(y.data(), &[2.0, 3.0, 4.0]);
+        assert_eq!(m.executed, vec![("v".to_string(), 1)]);
+        assert_eq!(m.batch_sizes("v"), vec![1, 2]);
+        assert!(m.batch_sizes("nope").is_empty());
+    }
+
+    #[test]
+    fn test_mock_rejects_bad_batch() {
+        let mut m = MockExecutor::new(4, 3, &[("v", &[1])]);
+        let x = Tensor::new(&[2, 4, 4, 3], vec![0.0; 96]).unwrap();
+        assert!(m.run_batch("v", 1, &x).is_err());
+    }
+}

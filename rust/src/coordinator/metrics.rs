@@ -1,0 +1,173 @@
+//! Serving metrics: per-stage latency summaries + counters, shared between
+//! the coordinator threads via a mutex (contention is negligible next to
+//! model execution).
+
+use std::sync::Mutex;
+
+use crate::util::Summary;
+
+/// Snapshot of the metrics at a point in time.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub occupied_slots: u64,
+    pub queue_us_p50: f64,
+    pub queue_us_p99: f64,
+    pub exec_us_p50: f64,
+    pub exec_us_p99: f64,
+    pub e2e_us_p50: f64,
+    pub e2e_us_p95: f64,
+    pub e2e_us_p99: f64,
+    pub e2e_us_mean: f64,
+}
+
+impl MetricsSnapshot {
+    /// Mean batch occupancy (occupied / (occupied + padding)).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.occupied_slots + self.padded_slots;
+        if total == 0 {
+            return 0.0;
+        }
+        self.occupied_slots as f64 / total as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} rejected={} batches={} occupancy={:.1}%\n\
+             queue  p50={:.0}us p99={:.0}us\n\
+             exec   p50={:.0}us p99={:.0}us\n\
+             e2e    mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us",
+            self.requests,
+            self.rejected,
+            self.batches,
+            100.0 * self.occupancy(),
+            self.queue_us_p50,
+            self.queue_us_p99,
+            self.exec_us_p50,
+            self.exec_us_p99,
+            self.e2e_us_mean,
+            self.e2e_us_p50,
+            self.e2e_us_p95,
+            self.e2e_us_p99,
+        )
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    rejected: u64,
+    batches: u64,
+    padded_slots: u64,
+    occupied_slots: u64,
+    queue_us: Summary,
+    exec_us: Summary,
+    e2e_us: Summary,
+}
+
+/// Thread-safe metrics collector.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_batch(&self, occupied: usize, padded: usize, exec_us: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.occupied_slots += occupied as u64;
+        m.padded_slots += padded as u64;
+        m.exec_us.add(exec_us);
+    }
+
+    pub fn on_response(&self, queue_us: f64, e2e_us: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.queue_us.add(queue_us);
+        m.e2e_us.add(e2e_us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: m.requests,
+            rejected: m.rejected,
+            batches: m.batches,
+            padded_slots: m.padded_slots,
+            occupied_slots: m.occupied_slots,
+            queue_us_p50: m.queue_us.percentile(50.0),
+            queue_us_p99: m.queue_us.percentile(99.0),
+            exec_us_p50: m.exec_us.percentile(50.0),
+            exec_us_p99: m.exec_us.percentile(99.0),
+            e2e_us_p50: m.e2e_us.percentile(50.0),
+            e2e_us_p95: m.e2e_us.percentile(95.0),
+            e2e_us_p99: m.e2e_us.percentile(99.0),
+            e2e_us_mean: m.e2e_us.mean(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_counters_and_occupancy() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_batch(6, 2, 100.0);
+        m.on_response(10.0, 150.0);
+        m.on_response(30.0, 250.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.occupancy() - 0.75).abs() < 1e-12);
+        assert!(s.e2e_us_p99 >= s.e2e_us_p50);
+        assert!(s.report().contains("occupancy=75.0%"));
+    }
+
+    #[test]
+    fn test_empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.occupancy(), 0.0);
+        assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn test_thread_safety() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.on_submit();
+                        m.on_response(1.0, 2.0);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().requests, 400);
+    }
+}

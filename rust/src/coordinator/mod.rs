@@ -1,0 +1,529 @@
+//! L3 coordinator — the serving system around the paper's quantized models:
+//! precision-class routing (§3.3's accuracy/perf trade-off as policy),
+//! deadline-bounded dynamic batching onto fixed-batch AOT artifacts,
+//! a worker pool over PJRT executables, bounded-queue backpressure and
+//! per-stage latency metrics. Python is never on this path.
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+pub mod router;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+pub use batcher::BatchPolicy;
+pub use executor::{Executor, ExecutorFactory, MockExecutor, PjrtExecutor};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{PrecisionClass, Router};
+
+use crate::tensor::Tensor;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// admission-control bound on in-flight requests (backpressure)
+    pub max_queue: usize,
+    /// dynamic-batching deadline for the oldest queued request
+    pub max_wait_us: u64,
+    /// dispatcher poll tick
+    pub tick_us: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { max_queue: 1024, max_wait_us: 2_000, tick_us: 200 }
+    }
+}
+
+/// An inference request.
+pub struct Request {
+    /// (img, img, 3) f32 image
+    pub image: Tensor<f32>,
+    pub class: PrecisionClass,
+}
+
+/// An inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    pub variant: String,
+    pub batch: usize,
+    pub queue_us: f64,
+    pub e2e_us: f64,
+}
+
+struct Pending {
+    image: Tensor<f32>,
+    reply: Sender<Response>,
+    submitted: Instant,
+}
+
+struct BatchJob {
+    variant: String,
+    artifact_batch: usize,
+    reqs: Vec<Pending>,
+}
+
+enum WorkerMsg {
+    Job(BatchJob),
+    Stop,
+}
+
+/// The running coordinator (owns dispatcher + worker threads).
+pub struct Coordinator {
+    submit_tx: SyncSender<(Request, Sender<Response>)>,
+    metrics: Arc<Metrics>,
+    router: Router,
+    stopping: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    img: usize,
+}
+
+/// Error returned when the admission queue is full.
+#[derive(Debug)]
+pub struct Busy;
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "coordinator queue full (backpressure)")
+    }
+}
+
+impl std::error::Error for Busy {}
+
+impl Coordinator {
+    /// Start with one executor factory per worker thread. PJRT state is not
+    /// `Send`, so each worker *constructs* its executor on its own thread;
+    /// the factory (config + paths) is what crosses the thread boundary.
+    ///
+    /// `sizes` maps each routable variant to its available artifact batch
+    /// sizes (from the manifest); `img` is the expected input side length.
+    pub fn start(
+        factories: Vec<ExecutorFactory>,
+        router: Router,
+        sizes: &BTreeMap<String, Vec<usize>>,
+        img: usize,
+        cfg: CoordinatorConfig,
+    ) -> Result<Self> {
+        if factories.is_empty() {
+            bail!("need at least one executor factory");
+        }
+
+        // per-variant batch policies from the manifest's artifact set
+        let mut policies: BTreeMap<String, BatchPolicy> = BTreeMap::new();
+        for v in router.active_variants() {
+            let s = sizes.get(v).cloned().unwrap_or_default();
+            if s.is_empty() {
+                bail!("variant '{v}' has no artifacts");
+            }
+            policies.insert(v.to_string(), BatchPolicy::new(s, cfg.max_wait_us));
+        }
+
+        let metrics = Arc::new(Metrics::new());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let (submit_tx, submit_rx) = mpsc::sync_channel::<(Request, Sender<Response>)>(cfg.max_queue);
+        let (job_tx, job_rx) = mpsc::channel::<WorkerMsg>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+
+        let mut threads = Vec::new();
+
+        // ---- worker pool --------------------------------------------------
+        let n_workers = factories.len();
+        for (wid, factory) in factories.into_iter().enumerate() {
+            let job_rx = Arc::clone(&job_rx);
+            let metrics = Arc::clone(&metrics);
+            let init_tx = init_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("dfp-worker-{wid}"))
+                    .spawn(move || {
+                        let mut exec = match factory() {
+                            Ok(e) => {
+                                let _ = init_tx.send(Ok(()));
+                                e
+                            }
+                            Err(e) => {
+                                let _ = init_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        worker_loop(&mut *exec, &job_rx, &metrics);
+                    })
+                    .context("spawning worker")?,
+            );
+        }
+        drop(init_tx);
+        for _ in 0..n_workers {
+            init_rx
+                .recv()
+                .context("worker init channel closed")?
+                .context("worker executor init failed")?;
+        }
+
+        // ---- dispatcher ---------------------------------------------------
+        {
+            let router = router.clone();
+            let metrics = Arc::clone(&metrics);
+            let stopping = Arc::clone(&stopping);
+            let tick = Duration::from_micros(cfg.tick_us);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dfp-dispatcher".into())
+                    .spawn(move || {
+                        dispatcher_loop(
+                            &submit_rx, &job_tx, &router, &policies, &metrics, &stopping, tick,
+                            n_workers,
+                        );
+                    })
+                    .context("spawning dispatcher")?,
+            );
+        }
+
+        Ok(Self { submit_tx, metrics, router, stopping, threads, img })
+    }
+
+    /// Submit a request; returns a channel that will receive the response.
+    /// Fails fast with [`Busy`] when the admission queue is full.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+        if req.image.shape() != [self.img, self.img, 3] {
+            bail!("image shape {:?} != ({i}, {i}, 3)", req.image.shape(), i = self.img);
+        }
+        let (tx, rx) = mpsc::channel();
+        self.metrics.on_submit();
+        match self.submit_tx.try_send((req, tx)) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.on_reject();
+                Err(Busy.into())
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("coordinator stopped"),
+        }
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, image: Tensor<f32>, class: PrecisionClass) -> Result<Response> {
+        let rx = self.submit(Request { image, class })?;
+        rx.recv().context("coordinator dropped request")
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    submit_rx: &Receiver<(Request, Sender<Response>)>,
+    job_tx: &Sender<WorkerMsg>,
+    router: &Router,
+    policies: &BTreeMap<String, BatchPolicy>,
+    _metrics: &Metrics,
+    stopping: &AtomicBool,
+    tick: Duration,
+    n_workers: usize,
+) {
+    let mut queues: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
+    loop {
+        // admit up to the tick deadline
+        match submit_rx.recv_timeout(tick) {
+            Ok((req, reply)) => {
+                let variant = router.route(req.class).to_string();
+                queues.entry(variant).or_default().push(Pending {
+                    image: req.image,
+                    reply,
+                    submitted: Instant::now(),
+                });
+                // keep draining whatever is immediately available
+                while let Ok((req, reply)) = submit_rx.try_recv() {
+                    let variant = router.route(req.class).to_string();
+                    queues.entry(variant).or_default().push(Pending {
+                        image: req.image,
+                        reply,
+                        submitted: Instant::now(),
+                    });
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+
+        // flush per-variant queues per policy
+        for (variant, q) in queues.iter_mut() {
+            let policy = &policies[variant];
+            loop {
+                let oldest_us = q
+                    .first()
+                    .map(|p| p.submitted.elapsed().as_micros() as u64)
+                    .unwrap_or(0);
+                let Some(bsz) = policy.plan(q.len(), oldest_us) else { break };
+                let take = q.len().min(bsz);
+                let reqs: Vec<Pending> = q.drain(..take).collect();
+                let _ = job_tx.send(WorkerMsg::Job(BatchJob {
+                    variant: variant.clone(),
+                    artifact_batch: bsz,
+                    reqs,
+                }));
+            }
+        }
+
+        if stopping.load(Ordering::SeqCst) {
+            // flush leftovers at their best-fit batch, then stop workers
+            for (variant, q) in queues.iter_mut() {
+                if q.is_empty() {
+                    continue;
+                }
+                let policy = &policies[variant];
+                while !q.is_empty() {
+                    let bsz = policy.best_fit(q.len());
+                    let take = q.len().min(bsz);
+                    let reqs: Vec<Pending> = q.drain(..take).collect();
+                    let _ = job_tx.send(WorkerMsg::Job(BatchJob {
+                        variant: variant.clone(),
+                        artifact_batch: bsz,
+                        reqs,
+                    }));
+                }
+            }
+            for _ in 0..n_workers {
+                let _ = job_tx.send(WorkerMsg::Stop);
+            }
+            break;
+        }
+    }
+}
+
+fn worker_loop(
+    exec: &mut dyn Executor,
+    job_rx: &Arc<Mutex<Receiver<WorkerMsg>>>,
+    metrics: &Metrics,
+) {
+    let img = exec.img();
+    let classes = exec.classes();
+    let px = img * img * 3;
+    loop {
+        let msg = {
+            let rx = job_rx.lock().unwrap();
+            rx.recv()
+        };
+        let job = match msg {
+            Ok(WorkerMsg::Job(j)) => j,
+            Ok(WorkerMsg::Stop) | Err(_) => break,
+        };
+        let occupied = job.reqs.len();
+        let padded = job.artifact_batch - occupied;
+        // assemble the (possibly padded) input batch
+        let mut x = Tensor::<f32>::zeros(&[job.artifact_batch, img, img, 3]);
+        for (i, p) in job.reqs.iter().enumerate() {
+            x.data_mut()[i * px..(i + 1) * px].copy_from_slice(p.image.data());
+        }
+        let t_exec = Instant::now();
+        let result = exec.run_batch(&job.variant, job.artifact_batch, &x);
+        let exec_us = t_exec.elapsed().as_micros() as f64;
+        metrics.on_batch(occupied, padded, exec_us);
+        match result {
+            Ok(logits) => {
+                let ld = logits.data();
+                for (i, p) in job.reqs.into_iter().enumerate() {
+                    let row = &ld[i * classes..(i + 1) * classes];
+                    let predicted = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap_or(0);
+                    let e2e_us = p.submitted.elapsed().as_micros() as f64;
+                    let queue_us = e2e_us - exec_us;
+                    metrics.on_response(queue_us.max(0.0), e2e_us);
+                    let _ = p.reply.send(Response {
+                        logits: row.to_vec(),
+                        predicted,
+                        variant: job.variant.clone(),
+                        batch: job.artifact_batch,
+                        queue_us: queue_us.max(0.0),
+                        e2e_us,
+                    });
+                }
+            }
+            Err(_) => {
+                // drop the reply senders: clients see a disconnected channel
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    const MANIFEST: &str = r#"{
+      "img": 8, "classes": 4, "batch_sizes": [1, 4],
+      "variants": {
+        "fp32":    {"files": {"1": "a", "4": "b"}, "eval_acc": 0.9, "w_bits": 32, "cluster": 0},
+        "8a2w_n4": {"files": {"1": "c", "4": "d"}, "eval_acc": 0.8, "w_bits": 2,  "cluster": 4}
+      }
+    }"#;
+
+    fn mock_sizes() -> BTreeMap<String, Vec<usize>> {
+        [("fp32".to_string(), vec![1, 4]), ("8a2w_n4".to_string(), vec![1, 4])]
+            .into_iter()
+            .collect()
+    }
+
+    fn start_mock(n_workers: usize, cfg: CoordinatorConfig) -> Coordinator {
+        let m = Manifest::from_json_text(MANIFEST).unwrap();
+        let router = Router::from_manifest(&m).unwrap();
+        let factories: Vec<ExecutorFactory> = (0..n_workers)
+            .map(|_| {
+                Box::new(|| {
+                    Ok(Box::new(MockExecutor::new(8, 4, &[("fp32", &[1, 4]), ("8a2w_n4", &[1, 4])]))
+                        as Box<dyn Executor>)
+                }) as ExecutorFactory
+            })
+            .collect();
+        Coordinator::start(factories, router, &mock_sizes(), 8, cfg).unwrap()
+    }
+
+    fn image(v: f32) -> Tensor<f32> {
+        Tensor::new(&[8, 8, 3], vec![v; 192]).unwrap()
+    }
+
+    #[test]
+    fn test_single_request_roundtrip() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        let r = c.infer(image(1.0), PrecisionClass::Accurate).unwrap();
+        // mock logits = mean + class index -> argmax = last class
+        assert_eq!(r.predicted, 3);
+        assert_eq!(r.variant, "fp32");
+        assert!((r.logits[0] - 1.0).abs() < 1e-6);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_routing_by_class() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        let fast = c.infer(image(0.5), PrecisionClass::Fast).unwrap();
+        assert_eq!(fast.variant, "8a2w_n4");
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_batching_aggregates() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 50_000, ..Default::default() });
+        // submit 4 concurrently: should form one full batch of 4
+        let rxs: Vec<_> = (0..4)
+            .map(|i| c.submit(Request { image: image(i as f32), class: PrecisionClass::Fast }).unwrap())
+            .collect();
+        let resps: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert!(resps.iter().all(|r| r.batch == 4), "batches: {:?}", resps.iter().map(|r| r.batch).collect::<Vec<_>>());
+        let m = c.metrics();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.padded_slots, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_deadline_flush_with_padding() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 1_000, ..Default::default() });
+        let r = c.infer(image(2.0), PrecisionClass::Fast).unwrap();
+        assert_eq!(r.batch, 1); // single request -> best-fit artifact of 1
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_shape_validation() {
+        let c = start_mock(1, Default::default());
+        let bad = Tensor::<f32>::zeros(&[4, 4, 3]);
+        assert!(c.submit(Request { image: bad, class: PrecisionClass::Fast }).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_backpressure_rejects() {
+        // tiny queue + slow mock => try_send must eventually reject
+        let m = Manifest::from_json_text(MANIFEST).unwrap();
+        let router = Router::from_manifest(&m).unwrap();
+        let factory: ExecutorFactory = Box::new(|| {
+            let mut slow = MockExecutor::new(8, 4, &[("fp32", &[1, 4]), ("8a2w_n4", &[1, 4])]);
+            slow.delay_us_per_image = 20_000;
+            Ok(Box::new(slow) as Box<dyn Executor>)
+        });
+        let c = Coordinator::start(
+            vec![factory],
+            router,
+            &mock_sizes(),
+            8,
+            CoordinatorConfig { max_queue: 2, max_wait_us: 100, tick_us: 100 },
+        )
+        .unwrap();
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..50 {
+            match c.submit(Request { image: image(1.0), class: PrecisionClass::Accurate }) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        assert_eq!(c.metrics().rejected, rejected);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_multi_worker() {
+        let c = start_mock(2, CoordinatorConfig { max_wait_us: 200, ..Default::default() });
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                c.submit(Request {
+                    image: image(i as f32),
+                    class: if i % 2 == 0 { PrecisionClass::Fast } else { PrecisionClass::Accurate },
+                })
+                .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.predicted, 3);
+        }
+        assert_eq!(c.metrics().requests, 16);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_shutdown_flushes_pending() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 10_000_000, ..Default::default() });
+        // these can't hit the deadline before shutdown; shutdown must flush
+        let rxs: Vec<_> = (0..2)
+            .map(|_| c.submit(Request { image: image(1.0), class: PrecisionClass::Fast }).unwrap())
+            .collect();
+        std::thread::sleep(Duration::from_millis(5));
+        c.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().is_ok(), "pending request dropped at shutdown");
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Precision router — the paper's accuracy/performance trade-off (§3.3 /
+//! §5 "tailoring solutions ... based on the accuracy and performance
+//! requirements") exposed as a serving policy: a request declares a
+//! precision class and the router picks the model variant.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+/// Client-facing precision classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrecisionClass {
+    /// cheapest variant: lowest weight bits, largest cluster (max op replacement)
+    Fast,
+    /// middle ground (4-bit if available)
+    Balanced,
+    /// highest available precision
+    Accurate,
+}
+
+impl std::str::FromStr for PrecisionClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fast" => Ok(Self::Fast),
+            "balanced" => Ok(Self::Balanced),
+            "accurate" => Ok(Self::Accurate),
+            other => bail!("unknown precision class '{other}'"),
+        }
+    }
+}
+
+/// Routing decision table computed once from the manifest.
+#[derive(Debug, Clone)]
+pub struct Router {
+    table: BTreeMap<PrecisionClass, String>,
+}
+
+impl Router {
+    /// Build from a manifest:
+    /// * Accurate -> max w_bits (ties: smallest cluster);
+    /// * Fast     -> min w_bits (ties: largest cluster);
+    /// * Balanced -> the 4-bit variant if present, else closest-to-middle.
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        if m.variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        let mut vs: Vec<(&String, u32, usize)> = m
+            .variants
+            .iter()
+            .map(|(n, v)| (n, v.w_bits, v.cluster))
+            .collect();
+        vs.sort_by_key(|&(_, bits, cluster)| (bits, std::cmp::Reverse(cluster)));
+        let fast = vs.first().unwrap().0.clone();
+        let accurate = {
+            let mut acc = vs.clone();
+            acc.sort_by_key(|&(_, bits, cluster)| (std::cmp::Reverse(bits), cluster));
+            acc.first().unwrap().0.clone()
+        };
+        let balanced = vs
+            .iter()
+            .find(|&&(_, bits, _)| bits == 4)
+            .map(|&(n, _, _)| n.clone())
+            .unwrap_or_else(|| {
+                // closest to 4 bits
+                vs.iter()
+                    .min_by_key(|&&(_, bits, _)| (i64::from(bits) - 4).abs())
+                    .unwrap()
+                    .0
+                    .clone()
+            });
+        let mut table = BTreeMap::new();
+        table.insert(PrecisionClass::Fast, fast);
+        table.insert(PrecisionClass::Balanced, balanced);
+        table.insert(PrecisionClass::Accurate, accurate);
+        Ok(Self { table })
+    }
+
+    pub fn route(&self, class: PrecisionClass) -> &str {
+        &self.table[&class]
+    }
+
+    /// All distinct variants the router can send traffic to.
+    pub fn active_variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.table.values().map(String::as_str).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+// Ord needed for BTreeMap key
+impl PartialOrd for PrecisionClass {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PrecisionClass {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        fn rank(c: &PrecisionClass) -> u8 {
+            match c {
+                PrecisionClass::Fast => 0,
+                PrecisionClass::Balanced => 1,
+                PrecisionClass::Accurate => 2,
+            }
+        }
+        rank(self).cmp(&rank(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "img": 24, "classes": 10, "batch_sizes": [1],
+      "variants": {
+        "fp32":     {"files": {"1": "a"}, "eval_acc": 0.90, "w_bits": 32, "cluster": 0},
+        "8a8w_n4":  {"files": {"1": "b"}, "eval_acc": 0.90, "w_bits": 8,  "cluster": 4},
+        "8a4w_n4":  {"files": {"1": "c"}, "eval_acc": 0.90, "w_bits": 4,  "cluster": 4},
+        "8a2w_n4":  {"files": {"1": "d"}, "eval_acc": 0.85, "w_bits": 2,  "cluster": 4},
+        "8a2w_n64": {"files": {"1": "e"}, "eval_acc": 0.84, "w_bits": 2,  "cluster": 64}
+      }
+    }"#;
+
+    fn router() -> Router {
+        Router::from_manifest(&Manifest::from_json_text(SAMPLE).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn test_routes() {
+        let r = router();
+        assert_eq!(r.route(PrecisionClass::Fast), "8a2w_n64"); // 2-bit, biggest cluster
+        assert_eq!(r.route(PrecisionClass::Balanced), "8a4w_n4");
+        assert_eq!(r.route(PrecisionClass::Accurate), "fp32");
+    }
+
+    #[test]
+    fn test_active_variants_deduped() {
+        let r = router();
+        assert_eq!(r.active_variants().len(), 3);
+    }
+
+    #[test]
+    fn test_single_variant_manifest() {
+        let one = r#"{"img": 24, "classes": 10, "batch_sizes": [1],
+          "variants": {"only": {"files": {"1": "a"}, "eval_acc": 0.5, "w_bits": 8, "cluster": 4}}}"#;
+        let r = Router::from_manifest(&Manifest::from_json_text(one).unwrap()).unwrap();
+        for c in [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate] {
+            assert_eq!(r.route(c), "only");
+        }
+    }
+
+    #[test]
+    fn test_class_parsing() {
+        assert_eq!("fast".parse::<PrecisionClass>().unwrap(), PrecisionClass::Fast);
+        assert!("turbo".parse::<PrecisionClass>().is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! ShapeSet — Rust mirror of the procedural dataset generator
+//! (`python/compile/data.py`). The PRNG stream (SplitMix64 + Box-Muller)
+//! is bit-exact; prototype textures use the same formulas evaluated in f64
+//! then cast, so images match the python export to ~1e-5 (the integration
+//! test checks against `artifacts/eval_data.dft`). Used by the serving
+//! load generator and the end-to-end examples.
+
+use crate::tensor::Tensor;
+use crate::util::SplitMix64;
+
+pub const IMG: usize = 24;
+pub const CH: usize = 3;
+pub const CLASSES: usize = 10;
+pub const DEFAULT_NOISE: f32 = 1.0;
+
+fn class_texture(cls: usize, xx: &[f64], yy: &[f64]) -> Vec<f64> {
+    // (IMG, IMG, CH) row-major
+    let mut out = vec![0.0f64; IMG * IMG * CH];
+    for c in 0..CH {
+        let fx = 1.0 + ((cls * 3 + c * 5) % 7) as f64 * 0.5;
+        let fy = 1.0 + ((cls * 5 + c * 3) % 5) as f64 * 0.7;
+        let ph = (cls as f64 * 1.7 + c as f64 * 0.9) % (2.0 * std::f64::consts::PI);
+        for i in 0..IMG {
+            for j in 0..IMG {
+                let v = (fx * xx[i * IMG + j] + ph).sin() * (fy * yy[i * IMG + j] - ph).cos();
+                out[(i * IMG + j) * CH + c] = v;
+            }
+        }
+    }
+    out
+}
+
+fn class_mask(cls: usize, xx: &[f64], yy: &[f64]) -> Vec<f64> {
+    let k = cls / 5;
+    (0..IMG * IMG)
+        .map(|i| {
+            let (x, y) = (xx[i], yy[i]);
+            let r2 = x * x + y * y;
+            let m = match cls % 5 {
+                0 => r2 < (1.0 + 0.2 * k as f64).powi(2),
+                1 => r2 > 0.8 && r2 < 2.2 + 0.4 * k as f64,
+                2 => y.abs() < 0.5 + 0.2 * k as f64,
+                3 => ((x * (1.5 + k as f64)).floor() + (y * 1.5).floor()).rem_euclid(2.0) == 0.0,
+                _ => x > 0.0 && y.abs() < x * (0.8 + 0.3 * k as f64),
+            };
+            if m {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// All class prototypes, (CLASSES, IMG, IMG, CH) in [-1, 1].
+pub fn prototypes() -> Vec<Vec<f32>> {
+    // linspace(-pi, pi, IMG), meshgrid(indexing="ij"): yy varies over rows,
+    // xx over... python uses meshgrid(lin, lin, indexing="ij") -> (yy, xx)
+    // with yy[i,j] = lin[i], xx[i,j] = lin[j].
+    let lin: Vec<f64> = (0..IMG)
+        .map(|i| -std::f64::consts::PI + 2.0 * std::f64::consts::PI * i as f64 / (IMG - 1) as f64)
+        .collect();
+    let mut yy = vec![0.0f64; IMG * IMG];
+    let mut xx = vec![0.0f64; IMG * IMG];
+    for i in 0..IMG {
+        for j in 0..IMG {
+            yy[i * IMG + j] = lin[i];
+            xx[i * IMG + j] = lin[j];
+        }
+    }
+    (0..CLASSES)
+        .map(|cls| {
+            let tex = class_texture(cls, &xx, &yy);
+            let mask = class_mask(cls, &xx, &yy);
+            (0..IMG * IMG * CH)
+                .map(|i| (tex[i] * (0.4 + 0.6 * mask[i / CH])) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Deterministic (image, label) sample — same stream as python `sample()`.
+pub fn sample(protos: &[Vec<f32>], seed: u64, index: u64, noise: f32) -> (Tensor<f32>, usize) {
+    let mut rng = SplitMix64::for_sample(seed, index);
+    let label = rng.next_below(CLASSES as u64) as usize;
+    let proto = &protos[label];
+    let dx = rng.next_below(9) as isize - 4;
+    let dy = rng.next_below(9) as isize - 4;
+    // np.roll over (rows, cols) by (dy, dx)
+    let mut img = vec![0.0f32; IMG * IMG * CH];
+    for i in 0..IMG {
+        let si = (i as isize - dy).rem_euclid(IMG as isize) as usize;
+        for j in 0..IMG {
+            let sj = (j as isize - dx).rem_euclid(IMG as isize) as usize;
+            for c in 0..CH {
+                img[(i * IMG + j) * CH + c] = proto[(si * IMG + sj) * CH + c];
+            }
+        }
+    }
+    if rng.next_below(2) == 1 {
+        // horizontal flip (reverse column order)
+        for i in 0..IMG {
+            for j in 0..IMG / 2 {
+                for c in 0..CH {
+                    let a = (i * IMG + j) * CH + c;
+                    let b = (i * IMG + (IMG - 1 - j)) * CH + c;
+                    img.swap(a, b);
+                }
+            }
+        }
+    }
+    let bright = 0.8 + 0.4 * rng.next_f32();
+    for v in img.iter_mut() {
+        *v *= bright;
+    }
+    if noise > 0.0 {
+        let g = rng.normal(IMG * IMG * CH);
+        for (v, n) in img.iter_mut().zip(g) {
+            *v += noise * n;
+        }
+    }
+    (Tensor::new(&[IMG, IMG, CH], img).expect("image shape"), label)
+}
+
+/// Batch generation: (images (n,IMG,IMG,CH), labels).
+pub fn make_split(n: usize, seed: u64, noise: f32) -> (Tensor<f32>, Vec<usize>) {
+    let protos = prototypes();
+    let mut xs = Tensor::<f32>::zeros(&[n, IMG, IMG, CH]);
+    let mut ys = Vec::with_capacity(n);
+    let stride = IMG * IMG * CH;
+    for i in 0..n {
+        let (img, label) = sample(&protos, seed, i as u64, noise);
+        xs.data_mut()[i * stride..(i + 1) * stride].copy_from_slice(img.data());
+        ys.push(label);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_deterministic() {
+        let protos = prototypes();
+        let (a, la) = sample(&protos, 7, 13, DEFAULT_NOISE);
+        let (b, lb) = sample(&protos, 7, 13, DEFAULT_NOISE);
+        assert_eq!(la, lb);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn test_varies_with_index() {
+        let protos = prototypes();
+        let (a, _) = sample(&protos, 7, 13, DEFAULT_NOISE);
+        let (b, _) = sample(&protos, 7, 14, DEFAULT_NOISE);
+        assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn test_labels_roughly_balanced() {
+        let (_, ys) = make_split(500, 0, 0.0);
+        let mut counts = [0usize; CLASSES];
+        for &y in &ys {
+            counts[y] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 20), "{counts:?}");
+    }
+
+    #[test]
+    fn test_clean_sample_bounded() {
+        let protos = prototypes();
+        let (img, _) = sample(&protos, 1, 2, 0.0);
+        assert!(img.max_abs() <= 1.2 * 1.3);
+    }
+
+    #[test]
+    fn test_prototypes_in_range() {
+        for p in prototypes() {
+            assert!(p.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        }
+    }
+}

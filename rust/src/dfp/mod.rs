@@ -1,0 +1,189 @@
+//! Dynamic fixed point numerics (the paper's §3 substrate).
+//!
+//! A DFP tensor is a vector of `bits`-wide signed integers sharing one
+//! power-of-two exponent: `value = q * 2^exp`. Scaling factors (the cluster
+//! α̂ of Algorithm 1) are stored as an 8-bit mantissa + exponent so *no*
+//! datum in the pipeline is wider than 8 bits; accumulators are i32.
+//!
+//! Mirrors `python/compile/quantize.py` bit-for-bit (round-half-even),
+//! which the cross-language integration test checks on real weights.
+
+pub mod packing;
+
+use crate::tensor::Tensor;
+
+/// Largest magnitude representable in a signed `bits`-bit integer (symmetric).
+#[inline]
+pub fn qmax(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Smallest exponent `e` with `max_abs <= qmax(bits) * 2^e`.
+pub fn choose_exp(max_abs: f32, bits: u32) -> i32 {
+    if max_abs <= 0.0 {
+        return 0;
+    }
+    (f64::from(max_abs) / f64::from(qmax(bits))).log2().ceil() as i32
+}
+
+/// Round half to even (banker's rounding) — matches numpy's `np.rint`.
+#[inline]
+pub fn round_half_even(x: f64) -> f64 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // exactly halfway: round to the even neighbour
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Quantize `x` to `bits`-bit DFP. Returns (codes, exp).
+pub fn quantize(x: &[f32], bits: u32, exp: Option<i32>) -> (Vec<i8>, i32) {
+    let max_abs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let e = exp.unwrap_or_else(|| choose_exp(max_abs, bits));
+    let scale = 2f64.powi(-e);
+    let q = f64::from(qmax(bits));
+    let codes = x
+        .iter()
+        .map(|&v| round_half_even(f64::from(v) * scale).clamp(-q, q) as i8)
+        .collect();
+    (codes, e)
+}
+
+/// Dequantize DFP codes back to f32.
+pub fn dequantize(q: &[i8], exp: i32) -> Vec<f32> {
+    let s = 2f32.powi(exp);
+    q.iter().map(|&v| f32::from(v) * s).collect()
+}
+
+/// An 8-bit quantized positive scale: `alpha ≈ mant * 2^exp`, mant in [0,255]
+/// normalized into [128, 255] (paper §3.1: scaling factors are re-quantized
+/// to 8 bits so the pipeline never needs a wider multiplier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleU8 {
+    pub mant: u8,
+    pub exp: i32,
+}
+
+impl ScaleU8 {
+    pub fn quantize(alpha: f64) -> Self {
+        if alpha <= 0.0 {
+            return Self { mant: 0, exp: 0 };
+        }
+        let mut e = alpha.log2().floor() as i32 - 7; // mant in [128, 255]
+        let mut m = (alpha / 2f64.powi(e)).round() as u32;
+        if m > 255 {
+            m /= 2;
+            e += 1;
+        }
+        Self { mant: m as u8, exp: e }
+    }
+
+    pub fn dequantize(self) -> f64 {
+        f64::from(self.mant) * 2f64.powi(self.exp)
+    }
+}
+
+/// A whole DFP tensor (codes + shared exponent).
+#[derive(Debug, Clone)]
+pub struct DfpTensor {
+    pub codes: Tensor<i8>,
+    pub exp: i32,
+    pub bits: u32,
+}
+
+impl DfpTensor {
+    pub fn from_f32(t: &Tensor<f32>, bits: u32, exp: Option<i32>) -> Self {
+        let (codes, e) = quantize(t.data(), bits, exp);
+        Self { codes: Tensor::new(t.shape(), codes).expect("same shape"), exp: e, bits }
+    }
+
+    pub fn to_f32(&self) -> Tensor<f32> {
+        let data = dequantize(self.codes.data(), self.exp);
+        Tensor::new(self.codes.shape(), data).expect("same shape")
+    }
+
+    /// Max elementwise |roundtrip error| bound: half a ULP of the grid.
+    pub fn ulp(&self) -> f32 {
+        2f32.powi(self.exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_qmax_values() {
+        assert_eq!(qmax(2), 1);
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(8), 127);
+    }
+
+    #[test]
+    fn test_choose_exp_fits() {
+        for &v in &[0.001f32, 0.5, 1.0, 100.0, 12345.0] {
+            for bits in [2u32, 4, 8] {
+                let e = choose_exp(v, bits);
+                assert!(f64::from(v) <= f64::from(qmax(bits)) * 2f64.powi(e) + 1e-9);
+                assert!(f64::from(v) > f64::from(qmax(bits)) * 2f64.powi(e - 1) * 0.999);
+            }
+        }
+        assert_eq!(choose_exp(0.0, 8), 0);
+    }
+
+    #[test]
+    fn test_round_half_even() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.2), 1.0);
+        assert_eq!(round_half_even(-1.7), -2.0);
+    }
+
+    #[test]
+    fn test_quantize_roundtrip_bound() {
+        let xs: Vec<f32> = (0..1000).map(|i| ((i * 37) % 401) as f32 / 100.0 - 2.0).collect();
+        for bits in [4u32, 8] {
+            let (q, e) = quantize(&xs, bits, None);
+            let back = dequantize(&q, e);
+            for (a, b) in xs.iter().zip(&back) {
+                assert!((a - b).abs() <= 2f32.powi(e - 1) + 1e-9, "{a} vs {b} (e={e})");
+            }
+        }
+    }
+
+    #[test]
+    fn test_quantize_saturates_with_forced_exp() {
+        let (q, _) = quantize(&[1000.0, -1000.0], 8, Some(0));
+        assert_eq!(q, vec![127, -127]);
+    }
+
+    #[test]
+    fn test_scale_u8_precision() {
+        for &a in &[1e-4f64, 0.03, 0.5, 1.0, 77.7, 1e5] {
+            let s = ScaleU8::quantize(a);
+            let back = s.dequantize();
+            assert!((back - a).abs() / a < 1.0 / 128.0, "{a} -> {back}");
+            assert!(s.mant >= 128 || s.mant == 0);
+        }
+        assert_eq!(ScaleU8::quantize(0.0), ScaleU8 { mant: 0, exp: 0 });
+    }
+
+    #[test]
+    fn test_dfp_tensor_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![0.1f32, -0.2, 0.3, 1.5, -1.0, 0.0]).unwrap();
+        let d = DfpTensor::from_f32(&t, 8, None);
+        let back = d.to_f32();
+        assert!(t.max_abs_diff(&back) <= d.ulp() / 2.0 + 1e-9);
+        assert_eq!(back.shape(), t.shape());
+    }
+}

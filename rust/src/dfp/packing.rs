@@ -1,0 +1,106 @@
+//! Sub-byte weight packing — the storage format the paper's "sub 8-bit"
+//! claim implies: ternary weights at 2 bits each (4 per byte), 4-bit
+//! weights at 2 per byte. Used by the lpinfer pipeline's memory-footprint
+//! accounting and exercised by the compression benches.
+
+/// Pack ternary codes {-1, 0, +1} at 2 bits each (00=0, 01=+1, 10=-1).
+pub fn pack_ternary(codes: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    for (i, &c) in codes.iter().enumerate() {
+        let bits: u8 = match c {
+            0 => 0b00,
+            1 => 0b01,
+            -1 => 0b10,
+            _ => panic!("non-ternary code {c}"),
+        };
+        out[i / 4] |= bits << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Unpack ternary codes (inverse of [`pack_ternary`]); `n` = element count.
+pub fn unpack_ternary(packed: &[u8], n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|i| match (packed[i / 4] >> ((i % 4) * 2)) & 0b11 {
+            0b00 => 0,
+            0b01 => 1,
+            0b10 => -1,
+            _ => 0, // 0b11 unused
+        })
+        .collect()
+}
+
+/// Pack 4-bit signed codes [-7, 7] two per byte (low nibble first).
+pub fn pack_i4(codes: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (i, &c) in codes.iter().enumerate() {
+        assert!((-8..=7).contains(&c), "non-4-bit code {c}");
+        let nib = (c as u8) & 0x0F;
+        out[i / 2] |= nib << ((i % 2) * 4);
+    }
+    out
+}
+
+/// Unpack 4-bit signed codes (inverse of [`pack_i4`]).
+pub fn unpack_i4(packed: &[u8], n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|i| {
+            let nib = (packed[i / 2] >> ((i % 2) * 4)) & 0x0F;
+            // sign-extend the nibble
+            ((nib << 4) as i8) >> 4
+        })
+        .collect()
+}
+
+/// Bytes needed to store `n` weights at `bits` precision (+ per-cluster
+/// scale overhead: one u8 mantissa + one i8 exponent per cluster).
+pub fn storage_bytes(n: usize, bits: u32, n_clusters: usize) -> usize {
+    let payload = match bits {
+        2 => n.div_ceil(4),
+        4 => n.div_ceil(2),
+        8 => n,
+        32 => n * 4,
+        _ => (n * bits as usize).div_ceil(8),
+    };
+    payload + 2 * n_clusters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn test_ternary_roundtrip() {
+        let mut rng = SplitMix64::new(1);
+        let codes: Vec<i8> = (0..1001).map(|_| rng.next_below(3) as i8 - 1).collect();
+        let packed = pack_ternary(&codes);
+        assert_eq!(packed.len(), 251);
+        assert_eq!(unpack_ternary(&packed, codes.len()), codes);
+    }
+
+    #[test]
+    fn test_i4_roundtrip() {
+        let mut rng = SplitMix64::new(2);
+        let codes: Vec<i8> = (0..777).map(|_| rng.next_below(15) as i8 - 7).collect();
+        let packed = pack_i4(&codes);
+        assert_eq!(packed.len(), 389);
+        assert_eq!(unpack_i4(&packed, codes.len()), codes);
+    }
+
+    #[test]
+    #[should_panic]
+    fn test_ternary_rejects_out_of_range() {
+        pack_ternary(&[2]);
+    }
+
+    #[test]
+    fn test_storage_accounting() {
+        // 16x compression headline: 2-bit vs 32-bit, modulo scale overhead
+        let fp32 = storage_bytes(1_000_000, 32, 0);
+        let tern = storage_bytes(1_000_000, 2, 1_000_000 / 4 / 64); // N=4 filters, 64 elems each
+        assert!(fp32 as f64 / tern as f64 > 15.0);
+        assert_eq!(storage_bytes(8, 2, 1), 4);
+        assert_eq!(storage_bytes(8, 4, 1), 6);
+    }
+}

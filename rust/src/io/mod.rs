@@ -1,0 +1,273 @@
+//! DFT binary tensor container — Rust side of the python<->rust interchange.
+//!
+//! Format (little endian), mirrored in `python/compile/dft.py`:
+//! ```text
+//! magic  b"DFT1"
+//! u32    tensor count
+//! per tensor:
+//!   u16  name length + utf-8 name
+//!   u8   dtype tag (0=f32 1=i8 2=i32 3=u8 4=i64)
+//!   u8   ndim
+//!   u32* dims
+//!   u64  payload length + raw row-major bytes
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, Element, Tensor};
+
+const MAGIC: &[u8; 4] = b"DFT1";
+
+/// A dtype-erased tensor as stored in a DFT file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyTensor {
+    F32(Tensor<f32>),
+    I8(Tensor<i8>),
+    I32(Tensor<i32>),
+    U8(Tensor<u8>),
+    I64(Tensor<i64>),
+}
+
+impl AnyTensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            AnyTensor::F32(_) => DType::F32,
+            AnyTensor::I8(_) => DType::I8,
+            AnyTensor::I32(_) => DType::I32,
+            AnyTensor::U8(_) => DType::U8,
+            AnyTensor::I64(_) => DType::I64,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(t) => t.shape(),
+            AnyTensor::I8(t) => t.shape(),
+            AnyTensor::I32(t) => t.shape(),
+            AnyTensor::U8(t) => t.shape(),
+            AnyTensor::I64(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor<f32>> {
+        match self {
+            AnyTensor::F32(t) => Ok(t),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&Tensor<i8>> {
+        match self {
+            AnyTensor::I8(t) => Ok(t),
+            other => bail!("expected i8 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&Tensor<i32>> {
+        match self {
+            AnyTensor::I32(t) => Ok(t),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+}
+
+/// Name -> tensor mapping (ordered, for deterministic writes).
+pub type TensorMap = BTreeMap<String, AnyTensor>;
+
+// ---------------------------------------------------------------- writing
+
+fn put_bytes<T: Element>(out: &mut Vec<u8>, t: &Tensor<T>) {
+    // all supported element types are plain-old-data; serialize natively LE
+    let bytes = unsafe {
+        std::slice::from_raw_parts(
+            t.data().as_ptr().cast::<u8>(),
+            t.len() * std::mem::size_of::<T>(),
+        )
+    };
+    out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn encode_tensor(out: &mut Vec<u8>, name: &str, t: &AnyTensor) {
+    let nb = name.as_bytes();
+    out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+    out.extend_from_slice(nb);
+    out.push(t.dtype() as u8);
+    let shape = t.shape();
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    match t {
+        AnyTensor::F32(t) => put_bytes(out, t),
+        AnyTensor::I8(t) => put_bytes(out, t),
+        AnyTensor::I32(t) => put_bytes(out, t),
+        AnyTensor::U8(t) => put_bytes(out, t),
+        AnyTensor::I64(t) => put_bytes(out, t),
+    }
+}
+
+/// Write a DFT file.
+pub fn write_dft(path: &Path, tensors: &TensorMap) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        encode_tensor(&mut buf, name, t);
+    }
+    std::fs::File::create(path)
+        .and_then(|mut f| f.write_all(&buf))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+// ---------------------------------------------------------------- reading
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated DFT file at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+fn decode_vec<T: Element>(raw: &[u8]) -> Vec<T> {
+    let n = raw.len() / std::mem::size_of::<T>();
+    let mut out = vec![T::default(); n];
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            raw.as_ptr(),
+            out.as_mut_ptr().cast::<u8>(),
+            n * std::mem::size_of::<T>(),
+        );
+    }
+    out
+}
+
+/// Read a DFT file into a [`TensorMap`].
+pub fn read_dft(path: &Path) -> Result<TensorMap> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut raw))
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut c = Cursor { buf: &raw, pos: 0 };
+    if c.take(4)? != MAGIC {
+        bail!("{}: bad magic", path.display());
+    }
+    let count = c.u32()?;
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let nlen = c.u16()? as usize;
+        let name = String::from_utf8(c.take(nlen)?.to_vec()).context("tensor name utf8")?;
+        let dtype = DType::from_tag(c.u8()?)?;
+        let ndim = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u32()? as usize);
+        }
+        let blen = c.u64()? as usize;
+        let payload = c.take(blen)?;
+        let expected: usize = shape.iter().product::<usize>() * dtype.size_of();
+        if blen != expected {
+            bail!("{name}: payload {blen} bytes != shape {shape:?} * dtype");
+        }
+        let t = match dtype {
+            DType::F32 => AnyTensor::F32(Tensor::new(&shape, decode_vec(payload))?),
+            DType::I8 => AnyTensor::I8(Tensor::new(&shape, decode_vec(payload))?),
+            DType::I32 => AnyTensor::I32(Tensor::new(&shape, decode_vec(payload))?),
+            DType::U8 => AnyTensor::U8(Tensor::new(&shape, decode_vec(payload))?),
+            DType::I64 => AnyTensor::I64(Tensor::new(&shape, decode_vec(payload))?),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dfp_infer_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn test_roundtrip_all_dtypes() {
+        let mut m = TensorMap::new();
+        m.insert("a".into(), AnyTensor::F32(Tensor::new(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]).unwrap()));
+        m.insert("b".into(), AnyTensor::I8(Tensor::new(&[3], vec![-128i8, 0, 127]).unwrap()));
+        m.insert("c".into(), AnyTensor::I32(Tensor::new(&[1], vec![-70000]).unwrap()));
+        m.insert("d".into(), AnyTensor::U8(Tensor::new(&[2], vec![0u8, 255]).unwrap()));
+        m.insert("e".into(), AnyTensor::I64(Tensor::new(&[1], vec![1i64 << 40]).unwrap()));
+        let p = tmpfile("roundtrip.dft");
+        write_dft(&p, &m).unwrap();
+        let back = read_dft(&p).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_empty_map() {
+        let p = tmpfile("empty.dft");
+        write_dft(&p, &TensorMap::new()).unwrap();
+        assert!(read_dft(&p).unwrap().is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_bad_magic_rejected() {
+        let p = tmpfile("bad.dft");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(read_dft(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_truncated_rejected() {
+        let mut m = TensorMap::new();
+        m.insert("x".into(), AnyTensor::F32(Tensor::new(&[4], vec![1.0; 4]).unwrap()));
+        let p = tmpfile("trunc.dft");
+        write_dft(&p, &m).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &raw[..raw.len() - 3]).unwrap();
+        assert!(read_dft(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_accessors() {
+        let t = AnyTensor::F32(Tensor::new(&[2], vec![1.0, 2.0]).unwrap());
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i8().is_err());
+        assert_eq!(t.shape(), &[2]);
+    }
+}

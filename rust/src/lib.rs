@@ -1,0 +1,38 @@
+//! # dfp-infer
+//!
+//! Production-shaped reproduction of *"Mixed Low-precision Deep Learning
+//! Inference using Dynamic Fixed Point"* (Mellempudi et al., 2017):
+//! cluster-based ternary / 4-bit weight quantization with 8-bit dynamic
+//! fixed point activations, served by a Rust coordinator over AOT-compiled
+//! XLA artifacts (JAX + Pallas at build time, PJRT at run time).
+//!
+//! Layer map (see DESIGN.md):
+//! * [`coordinator`] — request router, dynamic batcher, worker pool (L3).
+//! * [`runtime`]     — PJRT client wrapper: load HLO text artifacts, execute.
+//! * [`quant`]       — paper Algorithms 1 & 2 (mirrors `python/compile/quantize.py`).
+//! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8).
+//! * [`lpinfer`]     — pure-Rust integer inference pipeline (cross-check + bench).
+//! * [`nn`]          — pure-Rust f32 reference pipeline (baseline).
+//! * [`opcount`]     — analytic op-count / energy model (§3.3, 16× claim).
+//! * [`model`]       — network descriptions incl. exact ResNet-18/50/101 tables.
+//! * everything else — substrates built from scratch for the offline target
+//!   (tensors, DFT container IO, JSON, CLI, PRNG/stats, bench + property
+//!   testing harnesses).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dfp;
+pub mod io;
+pub mod json;
+pub mod lpinfer;
+pub mod model;
+pub mod nn;
+pub mod opcount;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;

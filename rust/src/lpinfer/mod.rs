@@ -1,0 +1,419 @@
+//! Low-precision integer inference pipeline — the paper's "full 8-bit
+//! compute pipeline" in pure Rust.
+//!
+//! Replicates `python/compile/model.py::forward_quant(engine="sim")`
+//! op-for-op: int8 DFP activations, int8/ternary weights, i32 accumulation,
+//! per-filter scale (cluster α̂ · 2^exp_in), folded re-estimated BatchNorm,
+//! round-half-even requantization. The integration tests check rust-vs-jax
+//! agreement on the exported quantized model; the benches use this pipeline
+//! to measure the realizable ternary-vs-fp32 CPU speedup (E5).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dfp::round_half_even;
+use crate::io::TensorMap;
+use crate::model::{ConvLayer, Network};
+use crate::nn::im2col;
+use crate::tensor::Tensor;
+
+/// Quantized parameters for one conv layer.
+#[derive(Debug, Clone)]
+pub struct QConvParams {
+    /// int8 codes, HWIO ({-1,0,1} for ternary layers).
+    pub wq: Tensor<i8>,
+    /// per-output-filter dequantization scale (α̂ or 2^exp).
+    pub w_scale: Vec<f32>,
+    pub bn_scale: Vec<f32>,
+    pub bn_shift: Vec<f32>,
+    /// DFP exponent of this layer's output activations.
+    pub act_exp: i32,
+    pub w_bits: u32,
+}
+
+/// Whole quantized model (mirrors the python `QModel` export).
+#[derive(Debug, Clone)]
+pub struct QModelParams {
+    pub convs: BTreeMap<String, QConvParams>,
+    pub fc_wq: Tensor<i8>,
+    pub fc_scale: Vec<f32>,
+    pub fc_b: Vec<f32>,
+    pub in_exp: i32,
+    pub feat_exp: i32,
+    pub cluster: usize,
+    pub w_bits: u32,
+}
+
+impl QModelParams {
+    /// Load from a `qweights_<tag>.dft` produced by `python -m compile.aot`.
+    pub fn from_tensors(map: &TensorMap, net: &Network) -> Result<Self> {
+        let f32v = |name: &str| -> Result<Vec<f32>> {
+            Ok(map
+                .get(name)
+                .with_context(|| format!("missing {name}"))?
+                .as_f32()?
+                .data()
+                .to_vec())
+        };
+        let i32s = |name: &str| -> Result<i32> {
+            Ok(map
+                .get(name)
+                .with_context(|| format!("missing {name}"))?
+                .as_i32()?
+                .data()[0])
+        };
+        let mut convs = BTreeMap::new();
+        for l in &net.layers {
+            let n = &l.name;
+            convs.insert(
+                n.clone(),
+                QConvParams {
+                    wq: map
+                        .get(&format!("{n}.wq"))
+                        .with_context(|| format!("missing {n}.wq"))?
+                        .as_i8()?
+                        .clone(),
+                    w_scale: f32v(&format!("{n}.w_scale"))?,
+                    bn_scale: f32v(&format!("{n}.bn_scale"))?,
+                    bn_shift: f32v(&format!("{n}.bn_shift"))?,
+                    act_exp: i32s(&format!("{n}.act_exp"))?,
+                    w_bits: i32s(&format!("{n}.w_bits"))? as u32,
+                },
+            );
+        }
+        Ok(Self {
+            convs,
+            fc_wq: map.get("fc.wq").context("missing fc.wq")?.as_i8()?.clone(),
+            fc_scale: f32v("fc.scale")?,
+            fc_b: f32v("fc.b")?,
+            in_exp: i32s("meta.in_exp")?,
+            feat_exp: i32s("meta.feat_exp")?,
+            cluster: i32s("meta.cluster")? as usize,
+            w_bits: i32s("meta.w_bits")? as u32,
+        })
+    }
+
+    /// Sanity-check layer shapes against the network description.
+    pub fn validate(&self, net: &Network) -> Result<()> {
+        for l in &net.layers {
+            let p = self.convs.get(&l.name).with_context(|| format!("no params for {}", l.name))?;
+            let want = [l.kh, l.kw, l.cin, l.cout];
+            if p.wq.shape() != want {
+                bail!("{}: weight shape {:?} != {:?}", l.name, p.wq.shape(), want);
+            }
+            if p.w_scale.len() != l.cout || p.bn_scale.len() != l.cout {
+                bail!("{}: scale length mismatch", l.name);
+            }
+        }
+        if self.fc_wq.dim(0) != net.fc_in || self.fc_wq.dim(1) != net.fc_out {
+            bail!("fc shape mismatch");
+        }
+        Ok(())
+    }
+}
+
+/// int8 x int8 -> i32 GEMM: (M,K) x (K,F) -> (M,F).
+///
+/// PERF (§Perf L3): the `av == 0` skip exploits post-ReLU activation
+/// sparsity (~40-60 % zeros in the real pipeline). For dense operands the
+/// branch costs ~15 %; `gemm_i8_dense` below is the branch-free variant —
+/// the bench harness quantifies both (EXPERIMENTS.md §Perf).
+pub fn gemm_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, f) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * f..(i + 1) * f];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = i32::from(av);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
+            }
+        }
+    }
+    out
+}
+
+/// Branch-free dense variant of [`gemm_i8`]: widens the activation once
+/// per (row, k) and lets LLVM vectorize the inner f-loop.
+pub fn gemm_i8_dense(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, f) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * f..(i + 1) * f];
+        for (kk, &av) in arow.iter().enumerate() {
+            let av = i32::from(av);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
+            }
+        }
+    }
+    out
+}
+
+/// f32 -> int8 DFP requantization (round-half-even, symmetric clip).
+pub fn requant(x: &[f32], exp: i32) -> Vec<i8> {
+    let scale = 2f64.powi(-exp);
+    x.iter()
+        .map(|&v| round_half_even(f64::from(v) * scale).clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+struct ConvOut {
+    /// int8 requantized activations (next layer input)
+    q: Tensor<i8>,
+    /// f32 pre-requant activations (residual path), only kept when needed
+    z: Option<Tensor<f32>>,
+}
+
+fn qconv(
+    x: &Tensor<i8>,
+    exp_in: i32,
+    l: &ConvLayer,
+    p: &QConvParams,
+    relu: bool,
+    skip: Option<&Tensor<f32>>,
+    keep_f32: bool,
+) -> ConvOut {
+    let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
+    let wflat = p
+        .wq
+        .clone()
+        .reshape(&[l.kh * l.kw * l.cin, l.cout])
+        .expect("weight reshape");
+    let acc = gemm_i8(&cols, &wflat);
+    let cout = l.cout;
+    let exp_scale = 2f32.powi(exp_in);
+    let mut z = vec![0.0f32; acc.len()];
+    let accd = acc.data();
+    let skipd = skip.map(Tensor::data);
+    for row in 0..n * ho * wo {
+        for c in 0..cout {
+            let i = row * cout + c;
+            let y = accd[i] as f32 * (p.w_scale[c] * exp_scale);
+            let mut v = y * p.bn_scale[c] + p.bn_shift[c];
+            if let Some(s) = skipd {
+                v += s[i];
+            }
+            if relu {
+                v = v.max(0.0);
+            }
+            z[i] = v;
+        }
+    }
+    let q = Tensor::new(&[n, ho, wo, cout], requant(&z, p.act_exp)).expect("requant shape");
+    let zt = keep_f32.then(|| Tensor::new(&[n, ho, wo, cout], z).expect("z shape"));
+    ConvOut { q, z: zt }
+}
+
+/// Forward a f32 image batch through the integer pipeline. Returns logits.
+pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
+    let layers: BTreeMap<&str, &ConvLayer> =
+        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+
+    // quantize input image to int8 DFP
+    let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
+
+    let stem = qconv(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, false);
+    let mut hq = stem.q;
+    let mut exp_h = params.convs["stem"].act_exp;
+
+    let mut i = 1;
+    while i < net.layers.len() {
+        let c1 = &net.layers[i];
+        let c2 = &net.layers[i + 1];
+        let has_proj = net
+            .layers
+            .get(i + 2)
+            .map(|l| l.name.ends_with("proj"))
+            .unwrap_or(false);
+        // skip path in f32 (mirrors the python sim exactly)
+        let skip_f = if has_proj {
+            let proj = &net.layers[i + 2];
+            qconv(&hq, exp_h, proj, &params.convs[&proj.name], false, None, true)
+                .z
+                .expect("proj keeps f32")
+        } else {
+            let s = 2f32.powi(exp_h);
+            hq.map(|v| f32::from(v) * s)
+        };
+        let h1 = qconv(&hq, exp_h, c1, &params.convs[&c1.name], true, None, false);
+        let exp1 = params.convs[&c1.name].act_exp;
+        let h2 = qconv(&h1.q, exp1, c2, &params.convs[&c2.name], true, Some(&skip_f), false);
+        exp_h = params.convs[&c2.name].act_exp;
+        hq = h2.q;
+        i += if has_proj { 3 } else { 2 };
+    }
+
+    // global average pool (dequantized), requant features, integer FC
+    let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
+    let s = 2f32.powi(exp_h);
+    let mut feat = vec![0.0f32; n * c];
+    {
+        let hd = hq.data();
+        for b in 0..n {
+            for y in 0..ho {
+                for xx in 0..wo {
+                    let base = ((b * ho + y) * wo + xx) * c;
+                    for ch in 0..c {
+                        feat[b * c + ch] += f32::from(hd[base + ch]);
+                    }
+                }
+            }
+        }
+        let inv = s / (ho * wo) as f32;
+        for v in feat.iter_mut() {
+            *v *= inv;
+        }
+    }
+    let fq = Tensor::new(&[n, c], requant(&feat, params.feat_exp)).expect("feat shape");
+    let acc = gemm_i8(&fq, &params.fc_wq);
+    let ncls = params.fc_b.len();
+    let fs = 2f32.powi(params.feat_exp);
+    let mut logits = Tensor::<f32>::zeros(&[n, ncls]);
+    {
+        let ld = logits.data_mut();
+        let ad = acc.data();
+        for b in 0..n {
+            for k in 0..ncls {
+                ld[b * ncls + k] =
+                    ad[b * ncls + k] as f32 * (params.fc_scale[k] * fs) + params.fc_b[k];
+            }
+        }
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn test_gemm_i8_exact() {
+        let a = Tensor::new(&[2, 3], vec![1i8, -2, 3, 0, 5, -6]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![1i8, 2, 3, 4, 5, 6]).unwrap();
+        let c = gemm_i8(&a, &b);
+        assert_eq!(c.data(), &[10, 12, -15, -16]);
+    }
+
+    #[test]
+    fn test_gemm_i8_saturation_free() {
+        // worst case |acc| = K * 127 * 127 must not overflow i32
+        let k = 2048;
+        let a = Tensor::new(&[1, k], vec![127i8; k]).unwrap();
+        let b = Tensor::new(&[k, 1], vec![127i8; k]).unwrap();
+        let c = gemm_i8(&a, &b);
+        assert_eq!(c.data()[0], 127 * 127 * k as i32);
+    }
+
+    #[test]
+    fn test_requant_half_even_and_clip() {
+        let q = requant(&[0.5, 1.5, 2.5, -0.5, 1000.0, -1000.0], 0);
+        assert_eq!(q, vec![0, 2, 2, 0, 127, -127]);
+        let q = requant(&[1.0], -2); // 1.0 * 4 = 4
+        assert_eq!(q, vec![4]);
+    }
+
+    #[test]
+    fn test_qconv_1x1_identity() {
+        // identity 1x1 ternary conv with unit scales: output == clipped input
+        let l = ConvLayer {
+            name: "t".into(),
+            kh: 1,
+            kw: 1,
+            cin: 2,
+            cout: 2,
+            stride: 1,
+            pad: 0,
+            out_hw: 2,
+            residual: false,
+            relu: false,
+        };
+        let p = QConvParams {
+            wq: Tensor::new(&[1, 1, 2, 2], vec![1i8, 0, 0, 1]).unwrap(),
+            w_scale: vec![1.0; 2],
+            bn_scale: vec![1.0; 2],
+            bn_shift: vec![0.0; 2],
+            act_exp: 0,
+            w_bits: 2,
+        };
+        let x = Tensor::new(&[1, 2, 2, 2], vec![1i8, -2, 3, -4, 5, -6, 7, -8]).unwrap();
+        let out = qconv(&x, 0, &l, &p, false, None, false);
+        assert_eq!(out.q.data(), x.data());
+    }
+
+    #[test]
+    fn test_forward_quant_tiny_net_finite() {
+        // build a minimal 1-block net with random ternary weights and run it
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let mut rng = SplitMix64::new(11);
+        let mut convs = BTreeMap::new();
+        for l in &net.layers {
+            let n = l.kh * l.kw * l.cin * l.cout;
+            let wq: Vec<i8> = (0..n).map(|_| rng.next_below(3) as i8 - 1).collect();
+            convs.insert(
+                l.name.clone(),
+                QConvParams {
+                    wq: Tensor::new(&[l.kh, l.kw, l.cin, l.cout], wq).unwrap(),
+                    w_scale: vec![0.1; l.cout],
+                    bn_scale: vec![1.0; l.cout],
+                    bn_shift: vec![0.0; l.cout],
+                    act_exp: -4,
+                    w_bits: 2,
+                },
+            );
+        }
+        let fcn = net.fc_in * net.fc_out;
+        let params = QModelParams {
+            convs,
+            fc_wq: Tensor::new(
+                &[net.fc_in, net.fc_out],
+                (0..fcn).map(|_| rng.next_below(3) as i8 - 1).collect(),
+            )
+            .unwrap(),
+            fc_scale: vec![0.1; net.fc_out],
+            fc_b: vec![0.0; net.fc_out],
+            in_exp: -5,
+            feat_exp: -5,
+            cluster: 4,
+            w_bits: 2,
+        };
+        params.validate(&net).unwrap();
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        let logits = forward_quant(&params, &net, &x);
+        assert_eq!(logits.shape(), &[2, 3]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn test_validate_catches_bad_shapes() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let params = QModelParams {
+            convs: BTreeMap::new(),
+            fc_wq: Tensor::<i8>::zeros(&[1, 1]),
+            fc_scale: vec![],
+            fc_b: vec![],
+            in_exp: 0,
+            feat_exp: 0,
+            cluster: 4,
+            w_bits: 2,
+        };
+        assert!(params.validate(&net).is_err());
+    }
+}

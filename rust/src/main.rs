@@ -1,0 +1,265 @@
+//! dfp-infer — launcher CLI.
+//!
+//! Subcommands:
+//!   serve      run the serving coordinator against AOT artifacts and a
+//!              synthetic ShapeSet load, reporting latency/throughput
+//!   eval       evaluate artifact variants on the exported eval set
+//!   opcount    print the §3.3 op-replacement table for a network
+//!   quantize   ternarize a DFT weight file (rust-native Algorithm 1)
+//!   info       show the artifact manifest
+//!
+//! Examples:
+//!   dfp-infer opcount --network resnet-101
+//!   dfp-infer serve --artifacts artifacts --requests 512 --workers 1
+//!   dfp-infer eval --artifacts artifacts --variants fp32,8a2w_n4
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use dfp_infer::cli::Args;
+use dfp_infer::config::Config;
+use dfp_infer::coordinator::{
+    Coordinator, ExecutorFactory, PjrtExecutor, PrecisionClass, Request, Router,
+};
+use dfp_infer::io::read_dft;
+use dfp_infer::model;
+use dfp_infer::opcount;
+use dfp_infer::quant::{self, TernaryMode};
+use dfp_infer::tensor::Tensor;
+use dfp_infer::util::Timer;
+use dfp_infer::{data, runtime};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(true)?;
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("opcount") => cmd_opcount(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (try serve|eval|opcount|quantize|info)"),
+        None => {
+            println!(
+                "dfp-infer — mixed low-precision inference with dynamic fixed point\n\
+                 usage: dfp-infer <serve|eval|opcount|quantize|info> [options]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let m = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+    println!("image: {0}x{0}x3, classes: {1}", m.img, m.classes);
+    println!("batch sizes: {:?}", m.batch_sizes);
+    println!("{:<12} {:>6} {:>8} {:>10}", "variant", "bits", "cluster", "eval_acc");
+    for (name, v) in &m.variants {
+        println!("{:<12} {:>6} {:>8} {:>10.4}", name, v.w_bits, v.cluster, v.eval_acc);
+    }
+    Ok(())
+}
+
+fn cmd_opcount(args: &Args) -> Result<()> {
+    let name = args.str_or("network", "resnet-101");
+    let net = model::by_name(name).with_context(|| format!("unknown network '{name}'"))?;
+    let clusters: Vec<usize> = {
+        let l = args.get_list("clusters");
+        if l.is_empty() {
+            vec![1, 2, 4, 8, 16, 32, 64]
+        } else {
+            l.iter().map(|s| s.parse()).collect::<Result<_, _>>()?
+        }
+    };
+    println!(
+        "{} — {:.2} GMACs, {:.1} M weights, {:.0}% of conv MACs in 3x3+ layers",
+        net.name,
+        net.total_macs() as f64 / 1e9,
+        net.total_weights() as f64 / 1e6,
+        100.0 * net.frac_macs_3x3()
+    );
+    println!("{}", opcount::table_3_3(&net, &clusters));
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let input = args.require("weights")?;
+    let cluster: usize = args.get_or("cluster", 4)?;
+    let mode: TernaryMode = args.str_or("mode", "support").parse()?;
+    let map = read_dft(Path::new(input))?;
+    println!("{:<12} {:>10} {:>10} {:>9} {:>9}", "layer", "elems", "sqnr(dB)", "sparsity", "clusters");
+    for (name, t) in &map {
+        if !name.ends_with(".w") {
+            continue;
+        }
+        let f32t = match t.as_f32() {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        let shape = f32t.shape();
+        if shape.len() < 2 {
+            continue;
+        }
+        let n_filters = *shape.last().unwrap();
+        let epf = f32t.len() / n_filters;
+        let tern = quant::ternarize_layer(f32t.data(), epf, n_filters, cluster, mode);
+        let back = tern.dequantize();
+        let sqnr = quant::sqnr_db(f32t.data(), &back);
+        println!(
+            "{:<12} {:>10} {:>10.2} {:>8.1}% {:>9}",
+            name,
+            f32t.len(),
+            sqnr,
+            100.0 * tern.sparsity(),
+            tern.scales.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let mut engine = runtime::Engine::new(&cfg.artifacts_dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let eval = read_dft(&cfg.artifacts_dir.join("eval_data.dft"))?;
+    let images = eval.get("images").context("eval images")?.as_f32()?.clone();
+    let labels = eval.get("labels").context("eval labels")?.as_i32()?.clone();
+    let n = images.dim(0);
+    let img = images.dim(1);
+    let px = img * img * 3;
+
+    let mut variants = args.get_list("variants");
+    if variants.is_empty() {
+        variants = engine.manifest.variants.keys().cloned().collect();
+    }
+    let batch = *engine
+        .manifest
+        .batch_sizes
+        .iter()
+        .max()
+        .context("no batch sizes")?;
+
+    for variant in &variants {
+        let t = Timer::new();
+        let exe = engine.load(variant, batch)?;
+        let compile_ms = t.elapsed_ms();
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let t = Timer::new();
+        for chunk in (0..n).step_by(batch) {
+            let take = batch.min(n - chunk);
+            let mut x = Tensor::<f32>::zeros(&[batch, img, img, 3]);
+            x.data_mut()[..take * px]
+                .copy_from_slice(&images.data()[chunk * px..(chunk + take) * px]);
+            let logits = exe.run(&x)?;
+            for i in 0..take {
+                let row = &logits.data()[i * 10..(i + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if pred == labels.data()[chunk + i] as usize {
+                    correct += 1;
+                }
+                seen += 1;
+            }
+        }
+        let dt = t.elapsed_s();
+        println!(
+            "{:<12} acc {:.4} ({}/{})  compile {:.0} ms  exec {:.1} img/s",
+            variant,
+            correct as f64 / seen as f64,
+            correct,
+            seen,
+            compile_ms,
+            seen as f64 / dt
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
+    let manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+    let router = Router::from_manifest(&manifest)?;
+    let sizes: std::collections::BTreeMap<String, Vec<usize>> = manifest
+        .variants
+        .iter()
+        .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
+        .collect();
+    let t = Timer::new();
+    let factories: Vec<ExecutorFactory> = (0..cfg.workers.max(1))
+        .map(|_| PjrtExecutor::factory(cfg.artifacts_dir.clone(), true))
+        .collect();
+    println!(
+        "routes: fast->{} balanced->{} accurate->{}",
+        router.route(PrecisionClass::Fast),
+        router.route(PrecisionClass::Balanced),
+        router.route(PrecisionClass::Accurate)
+    );
+    let coord = Coordinator::start(factories, router.clone(), &sizes, manifest.img, cfg.to_coordinator())?;
+    println!("coordinator up ({} workers, warmup {:.1}s)", cfg.workers.max(1), t.elapsed_s());
+
+    // synthetic closed-loop load: round-robin precision classes
+    let n = cfg.requests;
+    println!("issuing {n} requests (ShapeSet noise={}) ...", cfg.noise);
+    let protos = data::prototypes();
+    let classes = [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate];
+    let t = Timer::new();
+    let mut inflight = Vec::new();
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    for i in 0..n {
+        let (img, label) = data::sample(&protos, cfg.seed, i as u64, cfg.noise);
+        let class = classes[i % classes.len()];
+        loop {
+            match coord.submit(Request { image: img.clone(), class }) {
+                Ok(rx) => {
+                    inflight.push((rx, label));
+                    break;
+                }
+                Err(_) => {
+                    // backpressure: drain one response and retry
+                    if let Some((rx, lab)) = inflight.pop() {
+                        if let Ok(r) = rx.recv() {
+                            correct += usize::from(r.predicted == lab);
+                            done += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for (rx, lab) in inflight {
+        if let Ok(r) = rx.recv() {
+            correct += usize::from(r.predicted == lab);
+            done += 1;
+        }
+    }
+    let wall = t.elapsed_s();
+    let m = coord.metrics();
+    println!("\n== serving summary ==");
+    println!("{}", m.report());
+    println!(
+        "completed {}/{} ({} correct, acc {:.3})  wall {:.2}s  throughput {:.1} req/s",
+        done,
+        n,
+        correct,
+        correct as f64 / done.max(1) as f64,
+        wall,
+        done as f64 / wall
+    );
+    coord.shutdown();
+    Ok(())
+}

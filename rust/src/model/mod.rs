@@ -1,0 +1,255 @@
+//! Network architecture descriptions.
+//!
+//! Two families:
+//! * [`resnet_mini`] — the trained substitute model (mirrors
+//!   `python/compile/model.py::ModelSpec`), used by the nn / lpinfer
+//!   pipelines and the serving artifacts.
+//! * [`resnet18`] / [`resnet50`] / [`resnet101`] — exact layer tables of
+//!   the paper's evaluation networks. The §3.3 op-count claims (85 % of
+//!   multiplies replaced at N=4, ≈98 % at N=64) are *analytic* facts about
+//!   these shapes, so we reproduce them on the real architectures.
+
+/// One convolution (or FC, as a 1x1 conv over a 1x1 map) layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Output spatial size (square) — input map is derived as out*stride.
+    pub out_hw: usize,
+    /// Residual-add into this layer's output (before ReLU)?
+    pub residual: bool,
+    /// ReLU after BN?
+    pub relu: bool,
+}
+
+impl ConvLayer {
+    /// Multiply-accumulates for one inference of this layer.
+    pub fn macs(&self) -> u64 {
+        (self.kh * self.kw * self.cin * self.cout * self.out_hw * self.out_hw) as u64
+    }
+
+    /// Weights in this layer.
+    pub fn n_weights(&self) -> u64 {
+        (self.kh * self.kw * self.cin * self.cout) as u64
+    }
+}
+
+/// A network: ordered conv layers + a final FC.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub input_hw: usize,
+    pub layers: Vec<ConvLayer>,
+    pub fc_in: usize,
+    pub fc_out: usize,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(ConvLayer::macs).sum::<u64>() + (self.fc_in * self.fc_out) as u64
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(ConvLayer::n_weights).sum::<u64>()
+            + (self.fc_in * self.fc_out) as u64
+    }
+
+    /// Fraction of conv MACs that live in KxK (K>1) layers.
+    pub fn frac_macs_3x3(&self) -> f64 {
+        let k3: u64 = self.layers.iter().filter(|l| l.kh > 1).map(ConvLayer::macs).sum();
+        let total: u64 = self.layers.iter().map(ConvLayer::macs).sum();
+        k3 as f64 / total as f64
+    }
+}
+
+fn conv(name: &str, k: usize, cin: usize, cout: usize, stride: usize, out_hw: usize) -> ConvLayer {
+    ConvLayer {
+        name: name.into(),
+        kh: k,
+        kw: k,
+        cin,
+        cout,
+        stride,
+        pad: k / 2,
+        out_hw,
+        residual: false,
+        relu: true,
+    }
+}
+
+/// The trained substitute model (must match `python/compile/model.py`).
+pub fn resnet_mini(img: usize, channels: &[usize], blocks_per_stage: usize, classes: usize) -> Network {
+    let mut layers = vec![conv("stem", 3, 3, channels[0], 1, img)];
+    let mut cin = channels[0];
+    let mut hw = img;
+    for (s, &ch) in channels.iter().enumerate() {
+        for b in 0..blocks_per_stage {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            if stride == 2 {
+                hw /= 2;
+            }
+            let pre = format!("s{s}b{b}");
+            layers.push(conv(&format!("{pre}c1"), 3, cin, ch, stride, hw));
+            let mut c2 = conv(&format!("{pre}c2"), 3, ch, ch, 1, hw);
+            c2.residual = true;
+            layers.push(c2);
+            if stride != 1 || cin != ch {
+                let mut p = conv(&format!("{pre}proj"), 1, cin, ch, stride, hw);
+                p.relu = false;
+                layers.push(p);
+            }
+            cin = ch;
+        }
+    }
+    Network {
+        name: "resnet-mini".into(),
+        input_hw: img,
+        layers,
+        fc_in: *channels.last().unwrap(),
+        fc_out: classes,
+    }
+}
+
+/// Default resnet-mini matching the python `ModelSpec()` defaults.
+pub fn resnet_mini_default() -> Network {
+    resnet_mini(24, &[32, 64, 128], 1, 10)
+}
+
+// ---------------------------------------------------------------------------
+// Exact ImageNet ResNets (He et al. 2015 layer tables, 224x224 input)
+// ---------------------------------------------------------------------------
+
+/// Basic-block ResNet-18.
+pub fn resnet18() -> Network {
+    let mut layers = vec![conv("conv1", 7, 3, 64, 2, 112)];
+    let cfg: &[(usize, usize, usize)] = &[(64, 2, 56), (128, 2, 28), (256, 2, 14), (512, 2, 7)];
+    let mut cin = 64;
+    for (si, &(ch, blocks, hw)) in cfg.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let pre = format!("s{si}b{b}");
+            layers.push(conv(&format!("{pre}c1"), 3, cin, ch, stride, hw));
+            let mut c2 = conv(&format!("{pre}c2"), 3, ch, ch, 1, hw);
+            c2.residual = true;
+            layers.push(c2);
+            if stride != 1 || cin != ch {
+                let mut p = conv(&format!("{pre}proj"), 1, cin, ch, stride, hw);
+                p.relu = false;
+                layers.push(p);
+            }
+            cin = ch;
+        }
+    }
+    Network { name: "resnet-18".into(), input_hw: 224, layers, fc_in: 512, fc_out: 1000 }
+}
+
+/// Bottleneck ResNet: blocks of (1x1 reduce, 3x3, 1x1 expand).
+fn resnet_bottleneck(name: &str, stage_blocks: [usize; 4]) -> Network {
+    let mut layers = vec![conv("conv1", 7, 3, 64, 2, 112)];
+    let stage_cfg: [(usize, usize); 4] = [(64, 56), (128, 28), (256, 14), (512, 7)];
+    let mut cin = 64; // after maxpool
+    for (si, (&nblocks, &(width, hw))) in stage_blocks.iter().zip(stage_cfg.iter()).enumerate() {
+        let cout = width * 4;
+        for b in 0..nblocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let pre = format!("s{si}b{b}");
+            layers.push(conv(&format!("{pre}a"), 1, cin, width, stride, hw));
+            layers.push(conv(&format!("{pre}b"), 3, width, width, 1, hw));
+            let mut c = conv(&format!("{pre}c"), 1, width, cout, 1, hw);
+            c.residual = true;
+            c.relu = true;
+            layers.push(c);
+            if cin != cout || stride != 1 {
+                let mut p = conv(&format!("{pre}proj"), 1, cin, cout, stride, hw);
+                p.relu = false;
+                layers.push(p);
+            }
+            cin = cout;
+        }
+    }
+    Network { name: name.into(), input_hw: 224, layers, fc_in: 2048, fc_out: 1000 }
+}
+
+/// ResNet-50 (3-4-6-3 bottleneck blocks).
+pub fn resnet50() -> Network {
+    resnet_bottleneck("resnet-50", [3, 4, 6, 3])
+}
+
+/// ResNet-101 (3-4-23-3 bottleneck blocks) — the paper's headline network.
+pub fn resnet101() -> Network {
+    resnet_bottleneck("resnet-101", [3, 4, 23, 3])
+}
+
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "resnet-mini" | "mini" => Some(resnet_mini_default()),
+        "resnet-18" | "resnet18" => Some(resnet18()),
+        "resnet-50" | "resnet50" => Some(resnet50()),
+        "resnet-101" | "resnet101" => Some(resnet101()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_resnet50_shape_facts() {
+        let n = resnet50();
+        // 1 stem + 16 blocks * 3 convs + 4 projections = 53 convs; +fc = "50" trainable main path
+        assert_eq!(n.layers.len(), 1 + 16 * 3 + 4);
+        // ~25.5M params (conv ~23.5M + fc 2M); MACs ~4.1 GMACs (3.8G conv + pool/fc)
+        let w = n.total_weights();
+        assert!((23_000_000..27_000_000).contains(&w), "{w}");
+        let m = n.total_macs();
+        assert!((3_600_000_000..4_300_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn test_resnet101_shape_facts() {
+        let n = resnet101();
+        assert_eq!(n.layers.len(), 1 + 33 * 3 + 4);
+        let w = n.total_weights();
+        assert!((42_000_000..46_500_000).contains(&w), "{w}"); // ~44.5M
+        let m = n.total_macs();
+        assert!((7_000_000_000..8_200_000_000).contains(&m), "{m}"); // ~7.8 GMACs
+    }
+
+    #[test]
+    fn test_resnet18_macs() {
+        let m = resnet18().total_macs();
+        assert!((1_600_000_000..1_950_000_000).contains(&m), "{m}"); // ~1.8 GMACs
+    }
+
+    #[test]
+    fn test_resnet101_op_mix_roughly_half_3x3() {
+        // §3.3: "roughly 50% of the convolutions are 3x3 and the rest 1x1"
+        let f = resnet101().frac_macs_3x3();
+        assert!((0.35..0.75).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn test_mini_matches_python_spec() {
+        let n = resnet_mini_default();
+        let names: Vec<&str> = n.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["stem", "s0b0c1", "s0b0c2", "s1b0c1", "s1b0c2", "s1b0proj", "s2b0c1", "s2b0c2", "s2b0proj"]
+        );
+        assert_eq!(n.layers[3].out_hw, 12); // stride-2 stage
+        assert_eq!(n.layers[6].out_hw, 6);
+        assert_eq!(n.fc_in, 128);
+    }
+
+    #[test]
+    fn test_by_name() {
+        assert!(by_name("resnet-101").is_some());
+        assert!(by_name("vgg").is_none());
+    }
+}

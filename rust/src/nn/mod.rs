@@ -1,0 +1,318 @@
+//! Pure-Rust f32 reference inference pipeline (the FP32 baseline the paper
+//! compares against), plus the shared im2col used by the integer pipeline.
+//!
+//! Operates on the resnet-mini family from [`crate::model`] with weights
+//! loaded from a DFT file produced by `python -m compile.train`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::io::TensorMap;
+use crate::model::{ConvLayer, Network};
+use crate::tensor::{Element, Tensor};
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// im2col: NHWC input -> (N*Ho*Wo, kh*kw*C) patch matrix (zero padded).
+/// Patch index varies (kh, kw, C) fastest-last — matches the python
+/// `kernels/ref.py::im2col` layout so GEMM operands line up.
+pub fn im2col<T: Element>(
+    x: &Tensor<T>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Tensor<T>, (usize, usize, usize)) {
+    let (n, h, w, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut out = Tensor::<T>::zeros(&[n * ho * wo, k]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((b * ho) + oy) * wo + ox;
+                let base = row * k;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding (already zeroed)
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                        let dst = base + (ky * kw + kx) * c;
+                        od[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, (n, ho, wo))
+}
+
+/// f32 GEMM: (M,K) x (K,F) -> (M,F). Row-major, k-inner loop ordered for
+/// cache-friendly access on the (K,F) weight matrix.
+pub fn gemm_f32(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, f) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::<f32>::zeros(&[m, f]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * f..(i + 1) * f];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// FP32 parameters for one conv layer (weights HWIO + BN).
+#[derive(Debug, Clone)]
+pub struct ConvParams {
+    pub w: Tensor<f32>,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// Whole-model FP32 parameters keyed by layer name.
+#[derive(Debug, Clone)]
+pub struct FpParams {
+    pub convs: BTreeMap<String, ConvParams>,
+    pub fc_w: Tensor<f32>,
+    pub fc_b: Vec<f32>,
+}
+
+impl FpParams {
+    /// Load from a DFT map using the python naming convention
+    /// (`{layer}.w`, `{layer}.gamma`, ..., `fc.w`, `fc.b`).
+    pub fn from_tensors(map: &TensorMap, net: &Network) -> Result<Self> {
+        let get_f32 = |name: &str| -> Result<Tensor<f32>> {
+            Ok(map
+                .get(name)
+                .with_context(|| format!("missing tensor {name}"))?
+                .as_f32()?
+                .clone())
+        };
+        let mut convs = BTreeMap::new();
+        for l in &net.layers {
+            let n = &l.name;
+            convs.insert(
+                n.clone(),
+                ConvParams {
+                    w: get_f32(&format!("{n}.w"))?,
+                    gamma: get_f32(&format!("{n}.gamma"))?.into_data(),
+                    beta: get_f32(&format!("{n}.beta"))?.into_data(),
+                    mean: get_f32(&format!("{n}.mean"))?.into_data(),
+                    var: get_f32(&format!("{n}.var"))?.into_data(),
+                },
+            );
+        }
+        Ok(Self { convs, fc_w: get_f32("fc.w")?, fc_b: get_f32("fc.b")?.into_data() })
+    }
+}
+
+fn conv_bn(x: &Tensor<f32>, l: &ConvLayer, p: &ConvParams, relu: bool) -> Tensor<f32> {
+    let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
+    let wflat = p
+        .w
+        .clone()
+        .reshape(&[l.kh * l.kw * l.cin, l.cout])
+        .expect("weight reshape");
+    let mut y = gemm_f32(&cols, &wflat);
+    let cout = l.cout;
+    let yd = y.data_mut();
+    for row in 0..n * ho * wo {
+        for c in 0..cout {
+            let inv = 1.0 / (p.var[c] + BN_EPS).sqrt();
+            let mut v = (yd[row * cout + c] - p.mean[c]) * inv * p.gamma[c] + p.beta[c];
+            if relu {
+                v = v.max(0.0);
+            }
+            yd[row * cout + c] = v;
+        }
+    }
+    y.reshape(&[n, ho, wo, cout]).expect("conv output reshape")
+}
+
+/// Forward a batch (NHWC f32) through the fp32 resnet-mini. Returns logits.
+pub fn forward_fp(params: &FpParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
+    let layers: BTreeMap<&str, &ConvLayer> =
+        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+    let conv = |name: &str, h: &Tensor<f32>, relu: bool| -> Tensor<f32> {
+        conv_bn(h, layers[name], &params.convs[name], relu)
+    };
+
+    let mut h = conv("stem", x, true);
+    // walk blocks in layer order: the model family is stem + (c1, c2[, proj])*
+    let mut i = 1;
+    while i < net.layers.len() {
+        let c1 = &net.layers[i];
+        let c2 = &net.layers[i + 1];
+        let has_proj = net
+            .layers
+            .get(i + 2)
+            .map(|l| l.name.ends_with("proj"))
+            .unwrap_or(false);
+        let skip = if has_proj {
+            conv(&net.layers[i + 2].name, &h, false)
+        } else {
+            h.clone()
+        };
+        let h1 = conv(&c1.name, &h, true);
+        let mut h2 = conv(&c2.name, &h1, false);
+        {
+            let hd = h2.data_mut();
+            for (v, &s) in hd.iter_mut().zip(skip.data()) {
+                *v = (*v + s).max(0.0);
+            }
+        }
+        h = h2;
+        i += if has_proj { 3 } else { 2 };
+    }
+
+    // global average pool + fc
+    let (n, ho, wo, c) = (h.dim(0), h.dim(1), h.dim(2), h.dim(3));
+    let mut feat = Tensor::<f32>::zeros(&[n, c]);
+    {
+        let hd = h.data();
+        let fd = feat.data_mut();
+        for b in 0..n {
+            for y in 0..ho {
+                for xx in 0..wo {
+                    let base = ((b * ho + y) * wo + xx) * c;
+                    for ch in 0..c {
+                        fd[b * c + ch] += hd[base + ch];
+                    }
+                }
+            }
+        }
+        let inv = 1.0 / (ho * wo) as f32;
+        for v in fd.iter_mut() {
+            *v *= inv;
+        }
+    }
+    let mut logits = gemm_f32(&feat, &params.fc_w);
+    let ld = logits.data_mut();
+    let ncls = params.fc_b.len();
+    for b in 0..n {
+        for k in 0..ncls {
+            ld[b * ncls + k] += params.fc_b[k];
+        }
+    }
+    logits
+}
+
+/// Argmax per row.
+pub fn argmax_rows(logits: &Tensor<f32>) -> Vec<usize> {
+    let (n, c) = (logits.dim(0), logits.dim(1));
+    let d = logits.data();
+    (0..n)
+        .map(|i| {
+            let row = &d[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn rand_tensor(shape: &[usize], seed: u64) -> Tensor<f32> {
+        let mut rng = SplitMix64::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, rng.normal(n)).unwrap()
+    }
+
+    #[test]
+    fn test_im2col_identity_1x1() {
+        let x = rand_tensor(&[2, 4, 4, 3], 1);
+        let (cols, (n, ho, wo)) = im2col(&x, 1, 1, 1, 0);
+        assert_eq!((n, ho, wo), (2, 4, 4));
+        assert_eq!(cols.shape(), &[32, 3]);
+        assert_eq!(cols.data(), x.data()); // 1x1/s1/p0 is a reshape
+    }
+
+    #[test]
+    fn test_im2col_3x3_padding_zeroes() {
+        let x = Tensor::new(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let (cols, (_, ho, wo)) = im2col(&x, 3, 3, 1, 1);
+        assert_eq!((ho, wo), (2, 2));
+        // top-left output pixel: only the bottom-right 2x2 of the kernel hits data
+        let row0 = &cols.data()[0..9];
+        assert_eq!(row0, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn test_im2col_stride2() {
+        let x = rand_tensor(&[1, 4, 4, 2], 2);
+        let (_, (_, ho, wo)) = im2col(&x, 3, 3, 2, 1);
+        assert_eq!((ho, wo), (2, 2));
+    }
+
+    #[test]
+    fn test_gemm_small_exact() {
+        let a = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]).unwrap();
+        let c = gemm_f32(&a, &b);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn test_conv_equals_direct_computation() {
+        // 1x1 conv with identity BN == per-pixel matmul
+        let x = rand_tensor(&[1, 3, 3, 2], 3);
+        let l = ConvLayer {
+            name: "t".into(),
+            kh: 1,
+            kw: 1,
+            cin: 2,
+            cout: 2,
+            stride: 1,
+            pad: 0,
+            out_hw: 3,
+            residual: false,
+            relu: false,
+        };
+        let p = ConvParams {
+            w: Tensor::new(&[1, 1, 2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+            gamma: vec![1.0; 2],
+            beta: vec![0.0; 2],
+            mean: vec![0.0; 2],
+            var: vec![1.0 - BN_EPS; 2],
+        };
+        let y = conv_bn(&x, &l, &p, false);
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn test_argmax() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 0.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+}

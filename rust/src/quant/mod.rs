@@ -1,0 +1,462 @@
+//! Paper Algorithms 1 & 2 — cluster-based ternary quantization (Rust side).
+//!
+//! Bit-for-bit mirror of `python/compile/quantize.py` (checked by
+//! `rust/tests/integration_quant.rs` on weights exported from the trained
+//! model): the serving artifacts are produced by the python pipeline, and
+//! this implementation powers the rust-native analysis tools, the lpinfer
+//! cross-check pipeline and the quantizer benches.
+
+use crate::dfp::{self, ScaleU8};
+
+/// Ternarization search mode (see DESIGN.md §2 and python docstring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TernaryMode {
+    /// Algorithm 1 verbatim: the RMS scale doubles as the pruning threshold.
+    Paper,
+    /// Decoupled: support chosen by count (cluster-level Algorithm 2),
+    /// alpha = RMS over the support.
+    Support,
+}
+
+impl std::str::FromStr for TernaryMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "paper" => Ok(Self::Paper),
+            "support" => Ok(Self::Support),
+            other => anyhow::bail!("unknown ternary mode '{other}'"),
+        }
+    }
+}
+
+/// Result of ternarizing one layer: codes in {-1,0,1} plus per-cluster α̂.
+#[derive(Debug, Clone)]
+pub struct TernaryLayer {
+    /// Flattened (elems_per_filter, n_filters) codes, filter-major columns.
+    pub codes: Vec<i8>,
+    pub elems_per_filter: usize,
+    pub n_filters: usize,
+    /// Dequantized α̂ per filter (cluster value broadcast).
+    pub alpha: Vec<f32>,
+    /// 8-bit quantized scale per cluster.
+    pub scales: Vec<ScaleU8>,
+    pub cluster_size: usize,
+}
+
+impl TernaryLayer {
+    /// Fraction of zero weights.
+    pub fn sparsity(&self) -> f64 {
+        self.codes.iter().filter(|&&c| c == 0).count() as f64 / self.codes.len() as f64
+    }
+
+    /// Dequantize back to f32 (same flattened layout).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.codes.len()];
+        for f in 0..self.n_filters {
+            let a = self.alpha[f];
+            for e in 0..self.elems_per_filter {
+                out[e * self.n_filters + f] = f32::from(self.codes[e * self.n_filters + f]) * a;
+            }
+        }
+        out
+    }
+}
+
+/// Paper Algorithm 2: best RMS alpha over sorted-magnitude prefixes.
+///
+/// For support = top-t |w|, alpha_t = sqrt(sum w^2 / t); the error with
+/// sign weights on that support is `E(t) = Σw² − 2·α_t·S1(t) + α_t²·t`.
+pub fn threshold_select(w: &[f32]) -> f64 {
+    let mut mags: Vec<f64> = w.iter().map(|&x| f64::from(x).abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    if mags.is_empty() || mags[0] == 0.0 {
+        return 0.0;
+    }
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    let total: f64 = mags.iter().map(|m| m * m).sum();
+    let mut best = (f64::INFINITY, 0.0f64);
+    for (i, &m) in mags.iter().enumerate() {
+        s1 += m;
+        s2 += m * m;
+        let t = (i + 1) as f64;
+        let alpha = (s2 / t).sqrt();
+        let err = total - 2.0 * alpha * s1 + alpha * alpha * t;
+        if err < best.0 {
+            best = (err, alpha);
+        }
+    }
+    best.1
+}
+
+/// Ternarize one cluster (columns `filters` of the flattened layer).
+///
+/// `wc` is (elems_per_filter x n) column-major-by-filter slice view packed
+/// as row-major (elem, filter). Returns (codes, alpha) pre-quantization.
+fn ternarize_cluster(wc: &[f32], n: usize, mode: TernaryMode) -> (Vec<i8>, f64) {
+    let total: f64 = wc.iter().map(|&x| f64::from(x) * f64::from(x)).sum();
+    let alpha = match mode {
+        TernaryMode::Support => {
+            let mut mags: Vec<f64> = wc.iter().map(|&x| f64::from(x).abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            if mags.is_empty() || mags[0] == 0.0 {
+                return (vec![0; wc.len()], 0.0);
+            }
+            let (mut s1, mut s2) = (0.0, 0.0);
+            let mut best = (f64::INFINITY, 0.0, 0.0); // (err, alpha, thresh)
+            for (i, &m) in mags.iter().enumerate() {
+                s1 += m;
+                s2 += m * m;
+                let t = (i + 1) as f64;
+                let a = (s2 / t).sqrt();
+                let err = total - 2.0 * a * s1 + a * a * t;
+                if err < best.0 {
+                    best = (err, a, m);
+                }
+            }
+            // support = |w| >= threshold (by count in python; >= matches)
+            let thresh = best.2;
+            let codes = wc
+                .iter()
+                .map(|&x| {
+                    if f64::from(x).abs() >= thresh {
+                        if x > 0.0 {
+                            1
+                        } else {
+                            -1
+                        }
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            return (codes, best.1);
+        }
+        TernaryMode::Paper => {
+            // per-filter Algorithm 2 thresholds
+            let epf = wc.len() / n;
+            let mut alphas: Vec<f64> = (0..n)
+                .map(|f| {
+                    let col: Vec<f32> = (0..epf).map(|e| wc[e * n + f]).collect();
+                    threshold_select(&col)
+                })
+                .collect();
+            alphas.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut best = (f64::INFINITY, 0.0f64);
+            let mut acc = 0.0;
+            for (t, &a_t) in alphas.iter().enumerate() {
+                acc += a_t * a_t;
+                let alpha = (acc / (t + 1) as f64).sqrt();
+                let (mut s1, mut cnt) = (0.0f64, 0.0f64);
+                for &x in wc {
+                    let m = f64::from(x).abs();
+                    if m >= alpha {
+                        s1 += m;
+                        cnt += 1.0;
+                    }
+                }
+                let err = total - 2.0 * alpha * s1 + alpha * alpha * cnt;
+                if err < best.0 {
+                    best = (err, alpha);
+                }
+            }
+            best.1
+        }
+    };
+    let codes = wc
+        .iter()
+        .map(|&x| {
+            if f64::from(x).abs() >= alpha {
+                if x > 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            }
+        })
+        .collect();
+    (codes, alpha)
+}
+
+/// Paper Algorithm 1 over a flattened (elems_per_filter, n_filters) layer.
+///
+/// Output filters are grouped into static clusters of `cluster_size`
+/// consecutive filters; each cluster gets one α̂ (8-bit re-quantized).
+pub fn ternarize_layer(
+    w: &[f32],
+    elems_per_filter: usize,
+    n_filters: usize,
+    cluster_size: usize,
+    mode: TernaryMode,
+) -> TernaryLayer {
+    assert_eq!(w.len(), elems_per_filter * n_filters);
+    let n_clusters = n_filters.div_ceil(cluster_size);
+    let mut codes = vec![0i8; w.len()];
+    let mut alpha = vec![0.0f32; n_filters];
+    let mut scales = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        let lo = c * cluster_size;
+        let hi = ((c + 1) * cluster_size).min(n_filters);
+        let width = hi - lo;
+        // gather the cluster as (elem, filter-within-cluster)
+        let mut wc = Vec::with_capacity(elems_per_filter * width);
+        for e in 0..elems_per_filter {
+            for f in lo..hi {
+                wc.push(w[e * n_filters + f]);
+            }
+        }
+        let (cc, a) = ternarize_cluster(&wc, width, mode);
+        let s = ScaleU8::quantize(a);
+        let a_hat = s.dequantize() as f32;
+        scales.push(s);
+        for e in 0..elems_per_filter {
+            for (j, f) in (lo..hi).enumerate() {
+                codes[e * n_filters + f] = cc[e * width + j];
+                alpha[f] = a_hat;
+            }
+        }
+    }
+    TernaryLayer { codes, elems_per_filter, n_filters, alpha, scales, cluster_size }
+}
+
+/// TWN baseline (Li et al. [7]): Δ = 0.7·E|w|, α = mean|w| over support.
+pub fn ternarize_twn(w: &[f32]) -> (Vec<i8>, f64) {
+    let n = w.len() as f64;
+    let mean_abs: f64 = w.iter().map(|&x| f64::from(x).abs()).sum::<f64>() / n;
+    let delta = 0.7 * mean_abs;
+    let mut s = 0.0f64;
+    let mut cnt = 0.0f64;
+    let codes: Vec<i8> = w
+        .iter()
+        .map(|&x| {
+            let m = f64::from(x).abs();
+            if m > delta {
+                s += m;
+                cnt += 1.0;
+                if x > 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            }
+        })
+        .collect();
+    let alpha = if cnt > 0.0 { s / cnt } else { 0.0 };
+    (codes, alpha)
+}
+
+/// k-bit clustered DFP weights: one power-of-two exponent per cluster.
+#[derive(Debug, Clone)]
+pub struct DfpLayer {
+    pub codes: Vec<i8>,
+    pub elems_per_filter: usize,
+    pub n_filters: usize,
+    pub exps: Vec<i32>,
+    pub bits: u32,
+    pub cluster_size: usize,
+}
+
+impl DfpLayer {
+    pub fn scale_of_filter(&self, f: usize) -> f32 {
+        2f32.powi(self.exps[f / self.cluster_size])
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.codes.len()];
+        for f in 0..self.n_filters {
+            let s = self.scale_of_filter(f);
+            for e in 0..self.elems_per_filter {
+                out[e * self.n_filters + f] = f32::from(self.codes[e * self.n_filters + f]) * s;
+            }
+        }
+        out
+    }
+}
+
+/// Quantize a flattened layer to `bits`-bit DFP with per-cluster exponents.
+pub fn quantize_layer_dfp(
+    w: &[f32],
+    elems_per_filter: usize,
+    n_filters: usize,
+    bits: u32,
+    cluster_size: usize,
+) -> DfpLayer {
+    assert_eq!(w.len(), elems_per_filter * n_filters);
+    let n_clusters = n_filters.div_ceil(cluster_size);
+    let mut codes = vec![0i8; w.len()];
+    let mut exps = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        let lo = c * cluster_size;
+        let hi = ((c + 1) * cluster_size).min(n_filters);
+        let mut max_abs = 0.0f32;
+        for e in 0..elems_per_filter {
+            for f in lo..hi {
+                max_abs = max_abs.max(w[e * n_filters + f].abs());
+            }
+        }
+        let exp = dfp::choose_exp(max_abs, bits);
+        let scale = 2f64.powi(-exp);
+        let q = f64::from(dfp::qmax(bits));
+        for e in 0..elems_per_filter {
+            for f in lo..hi {
+                let v = dfp::round_half_even(f64::from(w[e * n_filters + f]) * scale).clamp(-q, q);
+                codes[e * n_filters + f] = v as i8;
+            }
+        }
+        exps.push(exp);
+    }
+    DfpLayer { codes, elems_per_filter, n_filters, exps, bits, cluster_size }
+}
+
+/// Signal-to-quantization-noise ratio in dB between `w` and `w_hat`.
+pub fn sqnr_db(w: &[f32], w_hat: &[f32]) -> f64 {
+    let sig: f64 = w.iter().map(|&x| f64::from(x) * f64::from(x)).sum();
+    let noise: f64 = w
+        .iter()
+        .zip(w_hat)
+        .map(|(&a, &b)| (f64::from(a) - f64::from(b)).powi(2))
+        .sum();
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn gaussian(n: usize, seed: u64, sigma: f32) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        rng.normal(n).into_iter().map(|x| x * sigma).collect()
+    }
+
+    #[test]
+    fn test_threshold_select_is_prefix_rms() {
+        let w = gaussian(200, 1, 0.1);
+        let a = threshold_select(&w);
+        let mut mags: Vec<f64> = w.iter().map(|&x| f64::from(x).abs()).collect();
+        mags.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let mut s2 = 0.0;
+        let mut found = false;
+        for (i, &m) in mags.iter().enumerate() {
+            s2 += m * m;
+            if ((s2 / (i + 1) as f64).sqrt() - a).abs() < 1e-12 {
+                found = true;
+            }
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn test_exact_ternary_recovery_both_modes() {
+        let mut rng = SplitMix64::new(3);
+        let codes: Vec<i8> = (0..16 * 9).map(|_| rng.next_below(3) as i8 - 1).collect();
+        let w: Vec<f32> = codes.iter().map(|&c| f32::from(c) * 0.37).collect();
+        for mode in [TernaryMode::Paper, TernaryMode::Support] {
+            let t = ternarize_layer(&w, 9, 16, 4, mode);
+            let back = t.dequantize();
+            let rel = {
+                let num: f64 = w.iter().zip(&back).map(|(&a, &b)| (f64::from(a) - f64::from(b)).powi(2)).sum::<f64>();
+                let den: f64 = w.iter().map(|&a| f64::from(a).powi(2)).sum::<f64>();
+                (num / den).sqrt()
+            };
+            assert!(rel < 0.01, "{mode:?}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn test_ternary_codes_are_ternary_and_cluster_shared() {
+        let w = gaussian(9 * 24, 5, 0.1);
+        let t = ternarize_layer(&w, 9, 24, 8, TernaryMode::Support);
+        assert!(t.codes.iter().all(|&c| (-1..=1).contains(&c)));
+        assert_eq!(t.scales.len(), 3);
+        for f in 0..24 {
+            assert_eq!(t.alpha[f], t.alpha[(f / 8) * 8]);
+        }
+    }
+
+    #[test]
+    fn test_paper_mode_sparser_than_support() {
+        let w = gaussian(9 * 32 * 32, 6, 0.1);
+        let p = ternarize_layer(&w, 9 * 32, 32, 4, TernaryMode::Paper);
+        let s = ternarize_layer(&w, 9 * 32, 32, 4, TernaryMode::Support);
+        assert!(p.sparsity() > s.sparsity(), "{} vs {}", p.sparsity(), s.sparsity());
+    }
+
+    #[test]
+    fn test_smaller_clusters_not_worse() {
+        let w = gaussian(9 * 16 * 64, 7, 0.1);
+        let mut errs = Vec::new();
+        for n in [1usize, 4, 16, 64] {
+            let t = ternarize_layer(&w, 9 * 16, 64, n, TernaryMode::Support);
+            let back = t.dequantize();
+            let e: f64 = w.iter().zip(&back).map(|(&a, &b)| (f64::from(a) - f64::from(b)).powi(2)).sum();
+            errs.push(e);
+        }
+        for win in errs.windows(2) {
+            assert!(win[0] <= win[1] * 1.02, "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn test_twn_properties() {
+        let w = gaussian(1000, 8, 0.1);
+        let (codes, alpha) = ternarize_twn(&w);
+        assert!(alpha > 0.0);
+        let kept: Vec<f64> = w
+            .iter()
+            .zip(&codes)
+            .filter(|(_, &c)| c != 0)
+            .map(|(&x, _)| f64::from(x).abs())
+            .collect();
+        let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+        assert!((mean - alpha).abs() < 1e-9);
+    }
+
+    #[test]
+    fn test_dfp_layer_range_and_error() {
+        let w = gaussian(9 * 16, 9, 0.2);
+        for bits in [4u32, 8] {
+            let d = quantize_layer_dfp(&w, 9, 16, bits, 4);
+            assert!(d.codes.iter().all(|&c| i32::from(c).abs() <= dfp::qmax(bits)));
+            let back = d.dequantize();
+            for f in 0..16 {
+                let ulp = 2f32.powi(d.exps[f / 4]);
+                for e in 0..9 {
+                    let i = e * 16 + f;
+                    assert!((w[i] - back[i]).abs() <= ulp / 2.0 + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_sqnr() {
+        let w = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(sqnr_db(&w, &w), f64::INFINITY);
+        assert!((sqnr_db(&w, &[0.0, 0.0, 0.0]) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn test_uneven_last_cluster() {
+        let w = gaussian(9 * 10, 10, 0.1);
+        let t = ternarize_layer(&w, 9, 10, 4, TernaryMode::Support);
+        assert_eq!(t.scales.len(), 3); // 4 + 4 + 2
+        let d = quantize_layer_dfp(&w, 9, 10, 4, 4);
+        assert_eq!(d.exps.len(), 3);
+    }
+
+    #[test]
+    fn test_zero_weights() {
+        let w = vec![0.0f32; 9 * 4];
+        let t = ternarize_layer(&w, 9, 4, 4, TernaryMode::Support);
+        assert!(t.codes.iter().all(|&c| c == 0));
+        assert_eq!(threshold_select(&w), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Artifact manifest (`artifacts/manifest.json`) — written by
+//! `python -m compile.aot`, read by the runtime and coordinator.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::{parse, Json};
+
+/// One serving variant (a quantization configuration).
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    /// batch size -> artifact filename
+    pub files: BTreeMap<usize, String>,
+    /// offline eval accuracy recorded at export time
+    pub eval_acc: f64,
+    pub w_bits: u32,
+    pub cluster: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub img: usize,
+    pub classes: usize,
+    pub batch_sizes: Vec<usize>,
+    pub variants: BTreeMap<String, VariantInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = parse(text)?;
+        let img = j.get("img").and_then(Json::as_i64).context("manifest: img")? as usize;
+        let classes = j.get("classes").and_then(Json::as_i64).context("manifest: classes")? as usize;
+        let batch_sizes = j
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .context("manifest: batch_sizes")?
+            .iter()
+            .filter_map(Json::as_i64)
+            .map(|b| b as usize)
+            .collect();
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants").and_then(Json::as_obj).context("manifest: variants")? {
+            let mut files = BTreeMap::new();
+            for (b, f) in v.get("files").and_then(Json::as_obj).context("variant files")? {
+                files.insert(
+                    b.parse::<usize>().context("batch key")?,
+                    f.as_str().context("file name")?.to_string(),
+                );
+            }
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    files,
+                    eval_acc: v.get("eval_acc").and_then(Json::as_f64).unwrap_or(0.0),
+                    w_bits: v.get("w_bits").and_then(Json::as_i64).unwrap_or(32) as u32,
+                    cluster: v.get("cluster").and_then(Json::as_i64).unwrap_or(0) as usize,
+                },
+            );
+        }
+        Ok(Self { img, classes, batch_sizes, variants })
+    }
+
+    /// Variant names sorted by weight precision descending (fp32 first).
+    pub fn variants_by_precision(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.variants.keys().map(String::as_str).collect();
+        names.sort_by_key(|n| std::cmp::Reverse(self.variants[*n].w_bits));
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "img": 24, "channels": [32, 64, 128], "classes": 10,
+      "batch_sizes": [1, 8, 32],
+      "variants": {
+        "fp32": {"files": {"1": "model_fp32_b1.hlo.txt"}, "eval_acc": 0.9, "w_bits": 32, "cluster": 0},
+        "8a2w_n4": {"files": {"1": "a.hlo.txt", "8": "b.hlo.txt"}, "eval_acc": 0.85, "w_bits": 2, "cluster": 4}
+      }
+    }"#;
+
+    #[test]
+    fn test_parse_manifest() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.img, 24);
+        assert_eq!(m.classes, 10);
+        assert_eq!(m.batch_sizes, vec![1, 8, 32]);
+        assert_eq!(m.variants.len(), 2);
+        let v = &m.variants["8a2w_n4"];
+        assert_eq!(v.files[&8], "b.hlo.txt");
+        assert_eq!(v.w_bits, 2);
+        assert!((v.eval_acc - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn test_precision_ordering() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.variants_by_precision(), vec!["fp32", "8a2w_n4"]);
+    }
+
+    #[test]
+    fn test_rejects_incomplete() {
+        assert!(Manifest::from_json_text("{}").is_err());
+        assert!(Manifest::from_json_text("not json").is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! PJRT runtime — loads AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): one
+//! [`Engine`] per process, one compiled executable per
+//! (variant, batch size). The interchange is HLO *text* (see
+//! `python/compile/aot.py` for why not serialized protos).
+
+pub mod manifest;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{Manifest, VariantInfo};
+
+use crate::tensor::Tensor;
+
+/// A compiled model executable with a fixed batch size.
+pub struct Executable {
+    pub variant: String,
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+    img: usize,
+    classes: usize,
+}
+
+impl Executable {
+    /// Run one batch. `x` must be (batch, img, img, 3) f32; returns logits.
+    pub fn run(&self, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+        let want = [self.batch, self.img, self.img, 3];
+        if x.shape() != want {
+            bail!("input shape {:?} != executable batch shape {:?}", x.shape(), want);
+        }
+        let lit = xla::Literal::vec1(x.data()).reshape(
+            &[self.batch as i64, self.img as i64, self.img as i64, 3],
+        )?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // lowered with return_tuple=True
+        let vals = out.to_vec::<f32>()?;
+        Tensor::new(&[self.batch, self.classes], vals)
+    }
+}
+
+/// The PJRT engine: client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    cache: BTreeMap<(String, usize), Executable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::from)?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for (variant, batch).
+    pub fn load(&mut self, variant: &str, batch: usize) -> Result<&Executable> {
+        let key = (variant.to_string(), batch);
+        if !self.cache.contains_key(&key) {
+            let info = self
+                .manifest
+                .variants
+                .get(variant)
+                .with_context(|| format!("unknown variant '{variant}'"))?;
+            let file = info
+                .files
+                .get(&batch)
+                .with_context(|| format!("variant '{variant}' has no batch-{batch} artifact"))?;
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(anyhow::Error::from)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(anyhow::Error::from)?;
+            self.cache.insert(
+                key.clone(),
+                Executable {
+                    variant: variant.to_string(),
+                    batch,
+                    exe,
+                    img: self.manifest.img,
+                    classes: self.manifest.classes,
+                },
+            );
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Preload every (variant, batch) pair in the manifest.
+    pub fn load_all(&mut self) -> Result<usize> {
+        let pairs: Vec<(String, usize)> = self
+            .manifest
+            .variants
+            .iter()
+            .flat_map(|(v, info)| info.files.keys().map(move |&b| (v.clone(), b)))
+            .collect();
+        for (v, b) in &pairs {
+            self.load(v, *b)?;
+        }
+        Ok(pairs.len())
+    }
+
+    /// Batch sizes available for a variant (ascending).
+    pub fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        self.manifest
+            .variants
+            .get(variant)
+            .map(|i| i.files.keys().copied().collect())
+            .unwrap_or_default()
+    }
+}

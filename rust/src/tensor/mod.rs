@@ -1,0 +1,252 @@
+//! Minimal dense tensor library (row-major, CPU) — ndarray is not available
+//! offline, and the inference pipelines only need contiguous NHWC/HWIO
+//! buffers with cheap indexing.
+
+use anyhow::{bail, Result};
+
+/// Element types storable in a [`Tensor`] / DFT container.
+pub trait Element: Copy + Default + std::fmt::Debug + 'static {
+    const DTYPE: DType;
+}
+
+/// On-disk / wire dtype tags (shared with `python/compile/dft.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I8 = 1,
+    I32 = 2,
+    U8 = 3,
+    I64 = 4,
+}
+
+impl DType {
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            3 => DType::U8,
+            4 => DType::I64,
+            _ => bail!("unknown dtype tag {tag}"),
+        })
+    }
+
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+}
+
+impl Element for f32 {
+    const DTYPE: DType = DType::F32;
+}
+impl Element for i8 {
+    const DTYPE: DType = DType::I8;
+}
+impl Element for i32 {
+    const DTYPE: DType = DType::I32;
+}
+impl Element for u8 {
+    const DTYPE: DType = DType::U8;
+}
+impl Element for i64 {
+    const DTYPE: DType = DType::I64;
+}
+
+/// Dense row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T: Element> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Element> Tensor<T> {
+    pub fn new(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Dimension i, or 1 if the axis doesn't exist (broadcast-friendly).
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape.get(i).copied().unwrap_or(1)
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.data.len(), shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flat offset of a multi-index (debug-checked).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        let mut stride = 1;
+        for i in (0..self.shape.len()).rev() {
+            debug_assert!(idx[i] < self.shape[i], "index {idx:?} out of {:?}", self.shape);
+            off += idx[i] * stride;
+            stride *= self.shape[i];
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    pub fn map<U: Element>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+}
+
+impl Tensor<f32> {
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius / L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&x| f64::from(x) * f64::from(x)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max |a - b| between two equal-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_new_checks_shape() {
+        assert!(Tensor::<f32>::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::<f32>::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn test_indexing_row_major() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.strides(), vec![3, 1]);
+    }
+
+    #[test]
+    fn test_reshape() {
+        let t = Tensor::new(&[2, 3], vec![1i32; 6]).unwrap();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert!(r.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn test_set_get_4d() {
+        let mut t = Tensor::<i8>::zeros(&[2, 4, 4, 3]);
+        t.set(&[1, 2, 3, 1], 42);
+        assert_eq!(t.at(&[1, 2, 3, 1]), 42);
+        assert_eq!(t.at(&[1, 2, 3, 0]), 0);
+    }
+
+    #[test]
+    fn test_map_and_norms() {
+        let t = Tensor::new(&[3], vec![3.0f32, -4.0, 0.0]).unwrap();
+        assert_eq!(t.max_abs(), 4.0);
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+        let q = t.map(|x| x as i32);
+        assert_eq!(q.data(), &[3, -4, 0]);
+    }
+
+    #[test]
+    fn test_scalar_and_dim() {
+        let s = Tensor::scalar(7i32);
+        assert_eq!(s.ndim(), 0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.dim(3), 1);
+    }
+
+    #[test]
+    fn test_max_abs_diff() {
+        let a = Tensor::new(&[2], vec![1.0f32, 2.0]).unwrap();
+        let b = Tensor::new(&[2], vec![1.5f32, 1.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn test_dtype_tags_roundtrip() {
+        for d in [DType::F32, DType::I8, DType::I32, DType::U8, DType::I64] {
+            assert_eq!(DType::from_tag(d as u8).unwrap(), d);
+        }
+        assert!(DType::from_tag(99).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Mini property-testing framework (proptest is not available offline).
+//!
+//! `check(n, gen, prop)` runs `prop` on `n` generated cases and, on
+//! failure, greedily shrinks the failing case via the generator's `shrink`
+//! before panicking with a reproducible seed. Used by
+//! `rust/tests/proptests.rs` on the coordinator/quantizer invariants.
+
+use crate::util::SplitMix64;
+
+/// A value generator with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value;
+
+    /// Candidate smaller versions of a failing value (simplest first).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `n` random cases (seeded deterministically unless
+/// `PROPTEST_SEED` is set). Panics with the shrunk counterexample.
+pub fn check<G: Gen>(n: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let seed = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE_u64);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..n {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // greedy shrink
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}): {best_msg}\ncounterexample: {best:?}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ generators
+
+/// Uniform usize in [lo, hi].
+pub struct RangeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for RangeGen {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut SplitMix64) -> usize {
+        self.lo + rng.next_below((self.hi - self.lo + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of f32 ~ N(0, sigma), length in [min_len, max_len].
+pub struct VecF32Gen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub sigma: f32,
+}
+
+impl Gen for VecF32Gen {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut SplitMix64) -> Vec<f32> {
+        let n = self.min_len + rng.next_below((self.max_len - self.min_len + 1) as u64) as usize;
+        rng.normal(n).into_iter().map(|x| x * self.sigma).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // zero out elements (simpler values)
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_passing_property() {
+        check(100, &RangeGen { lo: 1, hi: 50 }, |&n| {
+            if n >= 1 && n <= 50 {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn test_failing_property_shrinks() {
+        check(100, &RangeGen { lo: 0, hi: 1000 }, |&n| {
+            if n < 500 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn test_vec_gen_bounds() {
+        let g = VecF32Gen { min_len: 2, max_len: 9, sigma: 1.0 };
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!((2..=9).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn test_pair_gen() {
+        let g = PairGen(RangeGen { lo: 1, hi: 4 }, RangeGen { lo: 10, hi: 20 });
+        check(50, &g, |&(a, b)| {
+            if a <= 4 && b >= 10 {
+                Ok(())
+            } else {
+                Err("bounds".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: PRNG, statistics, timing.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::SplitMix64;
+pub use stats::Summary;
+pub use timer::Timer;

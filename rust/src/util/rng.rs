@@ -1,0 +1,157 @@
+//! SplitMix64 PRNG — bit-exact mirror of `python/compile/data.py`.
+//!
+//! The serving-side load generator must reproduce the exact sample stream
+//! the python training/eval pipeline produced, so both sides implement the
+//! same SplitMix64 + Box-Muller construction (pinned by reference vectors
+//! in the tests below and in `python/tests/test_data_dft.py`).
+
+/// SplitMix64 (Steele et al.) — tiny, fast, good-enough statistical quality
+/// for synthetic data and property-test generation.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(state: u64) -> Self {
+        Self { state }
+    }
+
+    /// Seed identical to the python sample stream: `(seed << 32) ^ (index * GAMMA)`.
+    pub fn for_sample(seed: u64, index: u64) -> Self {
+        Self::new((seed << 32) ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in `[0, n)`. Matches python's `next_u64() % n`
+    /// (modulo bias is irrelevant for our n << 2^64 and must match python).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform f32 in `[0, 1)` with 24 bits of mantissa (matches python).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+
+    /// `n` standard normals via Box-Muller over `next_f32` pairs — the exact
+    /// sequence `python/compile/data.py::_SplitMix64.normal` produces.
+    pub fn normal(&mut self, n: usize) -> Vec<f32> {
+        let m = n.div_ceil(2);
+        let mut u1 = Vec::with_capacity(m);
+        let mut u2 = Vec::with_capacity(m);
+        for _ in 0..m {
+            u1.push(f64::from(self.next_f32()).max(1e-7));
+        }
+        for _ in 0..m {
+            u2.push(f64::from(self.next_f32()));
+        }
+        let mut out = Vec::with_capacity(2 * m);
+        // python: concat(r*cos(2πu2), r*sin(2πu2)) then truncate
+        for i in 0..m {
+            let r = (-2.0 * u1[i].ln()).sqrt();
+            out.push((r * (2.0 * std::f64::consts::PI * u2[i]).cos()) as f32);
+        }
+        for i in 0..m {
+            let r = (-2.0 * u1[i].ln()).sqrt();
+            out.push((r * (2.0 * std::f64::consts::PI * u2[i]).sin()) as f32);
+        }
+        out.truncate(n);
+        out
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_reference_vector() {
+        // Pinned against python/tests/test_data_dft.py::test_splitmix64_reference_vector
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(r.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn test_next_below_in_range() {
+        let mut r = SplitMix64::new(42);
+        for _ in 0..1000 {
+            assert!(r.next_below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn test_f32_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn test_normal_moments() {
+        let mut r = SplitMix64::new(3);
+        let xs = r.normal(20_000);
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn test_normal_odd_count() {
+        let mut r = SplitMix64::new(5);
+        assert_eq!(r.normal(7).len(), 7);
+    }
+
+    #[test]
+    fn test_shuffle_permutes() {
+        let mut r = SplitMix64::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn test_deterministic_for_sample() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::for_sample(3, 17);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::for_sample(3, 17);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

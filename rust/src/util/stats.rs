@@ -1,0 +1,135 @@
+//! Streaming summary statistics (count/mean/min/max/percentiles).
+//!
+//! Used by the coordinator's metrics and the bench harness — we keep raw
+//! samples (bounded) so percentiles are exact, which matters when reporting
+//! p99 latency over a few thousand requests.
+
+/// Collects f64 samples and reports summary statistics.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Exact percentile by nearest-rank (q in [0, 100]).
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let rank = ((q / 100.0) * (self.samples.len() as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    /// One-line report: `n=.. mean=.. p50=.. p95=.. p99=.. max=..`.
+    pub fn report(&mut self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max(),
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_empty() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn test_basic_moments() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn test_percentiles_monotone() {
+        let mut s = Summary::new();
+        for i in 0..1000 {
+            s.add(f64::from(i));
+        }
+        let mut last = f64::NEG_INFINITY;
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let p = s.percentile(q);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn test_add_after_percentile_resorts() {
+        let mut s = Summary::new();
+        s.add(10.0);
+        assert_eq!(s.percentile(50.0), 10.0);
+        s.add(0.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Wall-clock timing helper.
+
+use std::time::Instant;
+
+/// Simple scope timer reporting elapsed milliseconds.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_timer_advances() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+        assert!(t.elapsed_us() >= 4000.0);
+    }
+
+    #[test]
+    fn test_reset() {
+        let mut t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        t.reset();
+        assert!(t.elapsed_ms() < 3.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Shared helpers for integration tests.
+
+use std::path::PathBuf;
+
+/// Repo-root relative path (tests run from the crate root).
+pub fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// Skip (return true) when build artifacts are absent — integration tests
+/// need `make artifacts` to have run; unit tests never depend on it.
+pub fn missing(rel: &str) -> bool {
+    let p = repo_path(rel);
+    if p.exists() {
+        false
+    } else {
+        eprintln!("SKIP: {} not found (run `make artifacts`)", p.display());
+        true
+    }
+}

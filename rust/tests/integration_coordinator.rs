@@ -1,0 +1,97 @@
+//! Full-stack serving test: coordinator + PJRT executors + real artifacts
+//! + the rust ShapeSet load generator (the E7 validation path).
+
+mod common;
+
+use common::{missing, repo_path};
+use dfp_infer::coordinator::{
+    Coordinator, CoordinatorConfig, ExecutorFactory, PjrtExecutor, PrecisionClass, Request, Router,
+};
+use dfp_infer::data;
+use dfp_infer::runtime::Manifest;
+
+fn start_real() -> Option<Coordinator> {
+    if missing("artifacts/manifest.json") {
+        return None;
+    }
+    let dir = repo_path("artifacts");
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let router = Router::from_manifest(&manifest).unwrap();
+    let sizes = manifest
+        .variants
+        .iter()
+        .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
+        .collect();
+    let factories: Vec<ExecutorFactory> = vec![PjrtExecutor::factory(dir, false)];
+    Some(
+        Coordinator::start(
+            factories,
+            router,
+            &sizes,
+            manifest.img,
+            CoordinatorConfig { max_wait_us: 3_000, ..Default::default() },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn serves_mixed_precision_load_end_to_end() {
+    let Some(coord) = start_real() else { return };
+    let protos = data::prototypes();
+    let classes = [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate];
+    let n = 24;
+    let mut rxs = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let (img, label) = data::sample(&protos, 0, i as u64, 1.0);
+        labels.push(label);
+        rxs.push(
+            coord
+                .submit(Request { image: img, class: classes[i % 3] })
+                .unwrap(),
+        );
+    }
+    let mut correct = 0;
+    let mut variants_seen = std::collections::BTreeSet::new();
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let r = rx.recv().expect("response");
+        assert_eq!(r.logits.len(), 10);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+        variants_seen.insert(r.variant.clone());
+        correct += usize::from(r.predicted == label);
+    }
+    let m = coord.metrics();
+    eprintln!(
+        "e2e: {}/{} correct, variants {:?}, occupancy {:.2}, batches {}",
+        correct,
+        n,
+        variants_seen,
+        m.occupancy(),
+        m.batches
+    );
+    assert!(variants_seen.len() >= 2, "router should spread classes over variants");
+    assert!(correct as f64 / n as f64 > 0.5, "mixed-precision accuracy above chance");
+    assert_eq!(m.requests as usize, n);
+    assert!(m.batches >= 1 && m.batches <= n as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_latency_ordering_holds_under_load() {
+    let Some(coord) = start_real() else { return };
+    let protos = data::prototypes();
+    let mut rxs = Vec::new();
+    for i in 0..16 {
+        let (img, _) = data::sample(&protos, 1, i as u64, 1.0);
+        rxs.push(coord.submit(Request { image: img, class: PrecisionClass::Accurate }).unwrap());
+    }
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.e2e_us >= r.queue_us, "e2e {} < queue {}", r.e2e_us, r.queue_us);
+    }
+    let m = coord.metrics();
+    assert!(m.e2e_us_p99 >= m.e2e_us_p50);
+    assert!(m.exec_us_p99 >= m.exec_us_p50);
+    coord.shutdown();
+}

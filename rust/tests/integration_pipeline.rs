@@ -1,0 +1,90 @@
+//! End-to-end agreement of the pure-Rust pipelines with the trained model:
+//! * `nn` (f32) reproduces the FP32 baseline accuracy;
+//! * `lpinfer` (integer) reproduces the quantized accuracy of the exported
+//!   model — the same numbers the jax "sim" path and the served artifacts
+//!   produce.
+
+mod common;
+
+use common::{missing, repo_path};
+use dfp_infer::io::read_dft;
+use dfp_infer::lpinfer::{forward_quant, QModelParams};
+use dfp_infer::model::resnet_mini_default;
+use dfp_infer::nn::{argmax_rows, forward_fp, FpParams};
+use dfp_infer::tensor::Tensor;
+
+const N_EVAL: usize = 128; // scalar rust conv on 1 core — keep it modest
+
+fn eval_subset() -> Option<(Tensor<f32>, Vec<i32>)> {
+    if missing("artifacts/eval_data.dft") {
+        return None;
+    }
+    let eval = read_dft(&repo_path("artifacts/eval_data.dft")).unwrap();
+    let images = eval["images"].as_f32().unwrap();
+    let labels = eval["labels"].as_i32().unwrap();
+    let img = images.dim(1);
+    let px = img * img * 3;
+    let n = N_EVAL.min(images.dim(0));
+    let x = Tensor::new(&[n, img, img, 3], images.data()[..n * px].to_vec()).unwrap();
+    Some((x, labels.data()[..n].to_vec()))
+}
+
+#[test]
+fn rust_fp32_pipeline_matches_baseline_accuracy() {
+    if missing("models/weights_fp32.dft") {
+        return;
+    }
+    let Some((x, labels)) = eval_subset() else { return };
+    let net = resnet_mini_default();
+    let weights = read_dft(&repo_path("models/weights_fp32.dft")).unwrap();
+    let params = FpParams::from_tensors(&weights, &net).unwrap();
+    let logits = forward_fp(&params, &net, &x);
+    let preds = argmax_rows(&logits);
+    let correct = preds.iter().zip(&labels).filter(|(p, l)| **p == **l as usize).count();
+    let acc = correct as f64 / labels.len() as f64;
+    eprintln!("rust nn fp32 accuracy on {} images: {acc:.4}", labels.len());
+    // trained baseline is ~0.90; this subset measured 0.8945 via PJRT
+    assert!(acc > 0.82, "fp32 rust pipeline accuracy {acc}");
+}
+
+#[test]
+fn rust_integer_pipeline_matches_quantized_accuracy() {
+    if missing("artifacts/qweights_8a2w_n4.dft") {
+        return;
+    }
+    let Some((x, labels)) = eval_subset() else { return };
+    let net = resnet_mini_default();
+    let qmap = read_dft(&repo_path("artifacts/qweights_8a2w_n4.dft")).unwrap();
+    let params = QModelParams::from_tensors(&qmap, &net).unwrap();
+    params.validate(&net).unwrap();
+    let logits = forward_quant(&params, &net, &x);
+    let preds = argmax_rows(&logits);
+    let correct = preds.iter().zip(&labels).filter(|(p, l)| **p == **l as usize).count();
+    let acc = correct as f64 / labels.len() as f64;
+    eprintln!("rust lpinfer 8a2w_n4 accuracy on {} images: {acc:.4}", labels.len());
+    // python sim / served artifact measured 0.7891 on the 256-subset
+    assert!(acc > 0.70, "integer pipeline accuracy {acc}");
+    assert!(acc < 0.92, "integer pipeline suspiciously high: {acc}");
+}
+
+#[test]
+fn integer_pipeline_tracks_fp_pipeline_on_same_inputs() {
+    // quantized and fp32 logits should agree on most argmaxes
+    if missing("models/weights_fp32.dft") || missing("artifacts/qweights_8a2w_n4.dft") {
+        return;
+    }
+    let Some((x, _)) = eval_subset() else { return };
+    let net = resnet_mini_default();
+    let weights = read_dft(&repo_path("models/weights_fp32.dft")).unwrap();
+    let fp = FpParams::from_tensors(&weights, &net).unwrap();
+    let qmap = read_dft(&repo_path("artifacts/qweights_8a2w_n4.dft")).unwrap();
+    let qp = QModelParams::from_tensors(&qmap, &net).unwrap();
+    let n = 64.min(x.dim(0));
+    let img = x.dim(1);
+    let xs = Tensor::new(&[n, img, img, 3], x.data()[..n * img * img * 3].to_vec()).unwrap();
+    let fp_preds = argmax_rows(&forward_fp(&fp, &net, &xs));
+    let q_preds = argmax_rows(&forward_quant(&qp, &net, &xs));
+    let agree = fp_preds.iter().zip(&q_preds).filter(|(a, b)| a == b).count();
+    eprintln!("fp-vs-ternary argmax agreement: {agree}/{n}");
+    assert!(agree as f64 / n as f64 > 0.7);
+}

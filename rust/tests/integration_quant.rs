@@ -1,0 +1,129 @@
+//! Cross-language quantizer agreement: the Rust Algorithm 1/2 must match
+//! the python implementation on the *trained* weights (the artifacts the
+//! server actually runs were produced by the python side; the rust side
+//! powers analysis and the lpinfer cross-check — they must agree).
+
+mod common;
+
+use common::{missing, repo_path};
+use dfp_infer::io::read_dft;
+use dfp_infer::quant::{self, TernaryMode};
+
+#[test]
+fn rust_ternarizer_matches_python_export() {
+    if missing("models/weights_fp32.dft") || missing("artifacts/qweights_8a2w_n4.dft") {
+        return;
+    }
+    let weights = read_dft(&repo_path("models/weights_fp32.dft")).unwrap();
+    let qexport = read_dft(&repo_path("artifacts/qweights_8a2w_n4.dft")).unwrap();
+    let cluster = qexport["meta.cluster"].as_i32().unwrap().data()[0] as usize;
+    assert_eq!(cluster, 4);
+
+    let mut layers_checked = 0;
+    let mut total = 0usize;
+    let mut mismatched = 0usize;
+    for (name, t) in &weights {
+        let Some(layer) = name.strip_suffix(".w") else { continue };
+        if layer == "stem" || layer == "fc" {
+            continue; // stem is 8-bit in this config; fc layout is 2-D
+        }
+        let w = t.as_f32().unwrap();
+        let shape = w.shape();
+        let n_filters = *shape.last().unwrap();
+        let epf = w.len() / n_filters;
+        let ours = quant::ternarize_layer(w.data(), epf, n_filters, cluster, TernaryMode::Support);
+
+        let theirs_codes = qexport[&format!("{layer}.wq")].as_i8().unwrap();
+        let theirs_scale = qexport[&format!("{layer}.w_scale")].as_f32().unwrap();
+        assert_eq!(theirs_codes.len(), ours.codes.len(), "{layer}: size");
+
+        // codes: allow a tiny mismatch rate from f64 tie-breaking at the
+        // exact threshold boundary (sort order of equal values)
+        let diff = theirs_codes
+            .data()
+            .iter()
+            .zip(&ours.codes)
+            .filter(|(a, b)| a != b)
+            .count();
+        total += ours.codes.len();
+        mismatched += diff;
+        assert!(
+            (diff as f64) <= 0.001 * ours.codes.len() as f64,
+            "{layer}: {diff}/{} ternary codes differ",
+            ours.codes.len()
+        );
+
+        // per-filter alpha within one 8-bit-mantissa ulp
+        for f in 0..n_filters {
+            let a = theirs_scale.data()[f];
+            let b = ours.alpha[f];
+            assert!(
+                (a - b).abs() <= a.abs().max(b.abs()) / 64.0 + 1e-9,
+                "{layer}: alpha[{f}] {a} vs {b}"
+            );
+        }
+        layers_checked += 1;
+    }
+    assert!(layers_checked >= 8, "only {layers_checked} layers checked");
+    eprintln!("cross-language ternary agreement: {mismatched}/{total} codes differ");
+}
+
+#[test]
+fn rust_dfp_quantizer_matches_python_stem() {
+    if missing("models/weights_fp32.dft") || missing("artifacts/qweights_8a2w_n4.dft") {
+        return;
+    }
+    let weights = read_dft(&repo_path("models/weights_fp32.dft")).unwrap();
+    let qexport = read_dft(&repo_path("artifacts/qweights_8a2w_n4.dft")).unwrap();
+    let cluster = qexport["meta.cluster"].as_i32().unwrap().data()[0] as usize;
+
+    let w = weights["stem.w"].as_f32().unwrap();
+    let n_filters = *w.shape().last().unwrap();
+    let epf = w.len() / n_filters;
+    let ours = quant::quantize_layer_dfp(w.data(), epf, n_filters, 8, cluster);
+    let theirs = qexport["stem.wq"].as_i8().unwrap();
+    // round-half-even in numpy vs rust must agree exactly
+    let diff = theirs.data().iter().zip(&ours.codes).filter(|(a, b)| a != b).count();
+    assert_eq!(diff, 0, "stem 8-bit codes differ in {diff} places");
+}
+
+#[test]
+fn ternary_export_metadata_consistent() {
+    if missing("artifacts/qweights_8a2w_n4.dft") {
+        return;
+    }
+    let qexport = read_dft(&repo_path("artifacts/qweights_8a2w_n4.dft")).unwrap();
+    assert_eq!(qexport["meta.w_bits"].as_i32().unwrap().data()[0], 2);
+    for (name, t) in &qexport {
+        let Some(layer) = name.strip_suffix(".wq") else { continue };
+        if layer == "stem" {
+            continue;
+        }
+        let codes = t.as_i8().unwrap();
+        assert!(
+            codes.data().iter().all(|&c| (-1..=1).contains(&c)),
+            "{layer}: non-ternary code"
+        );
+    }
+}
+
+#[test]
+fn twn_baseline_worse_sqnr_than_clustered() {
+    // E8 shape: per-layer single-scale TWN must not beat clustered alphas.
+    if missing("models/weights_fp32.dft") {
+        return;
+    }
+    let weights = read_dft(&repo_path("models/weights_fp32.dft")).unwrap();
+    let w = weights["s2b0c1.w"].as_f32().unwrap();
+    let n_filters = *w.shape().last().unwrap();
+    let epf = w.len() / n_filters;
+
+    let clustered = quant::ternarize_layer(w.data(), epf, n_filters, 4, TernaryMode::Support);
+    let ours = quant::sqnr_db(w.data(), &clustered.dequantize());
+
+    let (codes, alpha) = quant::ternarize_twn(w.data());
+    let twn_back: Vec<f32> = codes.iter().map(|&c| f32::from(c) * alpha as f32).collect();
+    let twn = quant::sqnr_db(w.data(), &twn_back);
+    eprintln!("sqnr clustered N=4: {ours:.2} dB vs TWN single-scale: {twn:.2} dB");
+    assert!(ours > twn - 0.3, "clustered {ours} should be >= TWN {twn}");
+}

@@ -1,0 +1,131 @@
+//! PJRT runtime integration: load real artifacts, execute, cross-check the
+//! served numbers against the exported eval set, and validate the rust
+//! ShapeSet generator against the python export.
+
+mod common;
+
+use common::{missing, repo_path};
+use dfp_infer::data;
+use dfp_infer::io::read_dft;
+use dfp_infer::runtime::Engine;
+use dfp_infer::tensor::Tensor;
+
+#[test]
+fn engine_loads_and_serves_fp32() {
+    if missing("artifacts/manifest.json") {
+        return;
+    }
+    let mut engine = Engine::new(&repo_path("artifacts")).unwrap();
+    assert_eq!(engine.platform(), "cpu");
+    let eval = read_dft(&repo_path("artifacts/eval_data.dft")).unwrap();
+    let images = eval["images"].as_f32().unwrap();
+    let labels = eval["labels"].as_i32().unwrap();
+    let img = images.dim(1);
+    let px = img * img * 3;
+
+    let batch = 8;
+    let exe = engine.load("fp32", batch).unwrap();
+    let mut correct = 0;
+    let n = 64;
+    for chunk in (0..n).step_by(batch) {
+        let x = Tensor::new(
+            &[batch, img, img, 3],
+            images.data()[chunk * px..(chunk + batch) * px].to_vec(),
+        )
+        .unwrap();
+        let logits = exe.run(&x).unwrap();
+        assert_eq!(logits.shape(), &[batch, 10]);
+        for i in 0..batch {
+            let row = &logits.data()[i * 10..(i + 1) * 10];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == labels.data()[chunk + i] as usize);
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    eprintln!("PJRT fp32 accuracy on {n}: {acc}");
+    assert!(acc > 0.8, "served fp32 accuracy {acc}");
+}
+
+#[test]
+fn engine_rejects_wrong_shapes_and_unknown_variants() {
+    if missing("artifacts/manifest.json") {
+        return;
+    }
+    let mut engine = Engine::new(&repo_path("artifacts")).unwrap();
+    assert!(engine.load("nope", 1).is_err());
+    assert!(engine.load("fp32", 7).is_err()); // only 1/8/32 compiled
+    let exe = engine.load("fp32", 1).unwrap();
+    let bad = Tensor::<f32>::zeros(&[2, 24, 24, 3]);
+    assert!(exe.run(&bad).is_err());
+}
+
+#[test]
+fn quantized_variant_beats_chance_and_fp32_stays_better() {
+    if missing("artifacts/manifest.json") {
+        return;
+    }
+    let mut engine = Engine::new(&repo_path("artifacts")).unwrap();
+    let eval = read_dft(&repo_path("artifacts/eval_data.dft")).unwrap();
+    let images = eval["images"].as_f32().unwrap();
+    let labels = eval["labels"].as_i32().unwrap();
+    let img = images.dim(1);
+    let px = img * img * 3;
+    let batch = 32;
+    let n = 96;
+    let mut accs = Vec::new();
+    for variant in ["fp32", "8a2w_n64"] {
+        let exe = engine.load(variant, batch).unwrap();
+        let mut correct = 0;
+        for chunk in (0..n).step_by(batch) {
+            let x = Tensor::new(
+                &[batch, img, img, 3],
+                images.data()[chunk * px..(chunk + batch) * px].to_vec(),
+            )
+            .unwrap();
+            let logits = exe.run(&x).unwrap();
+            for i in 0..batch {
+                let row = &logits.data()[i * 10..(i + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += usize::from(pred == labels.data()[chunk + i] as usize);
+            }
+        }
+        accs.push(correct as f64 / n as f64);
+    }
+    eprintln!("fp32 {} vs 8a2w_n64 {}", accs[0], accs[1]);
+    assert!(accs[1] > 0.5, "ternary n64 above chance");
+    assert!(accs[0] >= accs[1] - 0.02, "fp32 should not lose to ternary");
+}
+
+#[test]
+fn rust_shapeset_matches_python_export() {
+    if missing("artifacts/eval_data.dft") {
+        return;
+    }
+    let eval = read_dft(&repo_path("artifacts/eval_data.dft")).unwrap();
+    let images = eval["images"].as_f32().unwrap();
+    let labels = eval["labels"].as_i32().unwrap();
+    let n = 32.min(images.dim(0));
+    // eval split uses seed=2 and the module default noise (1.0)
+    let (xs, ys) = data::make_split(n, 2, 1.0);
+    for i in 0..n {
+        assert_eq!(ys[i] as i32, labels.data()[i], "label {i}");
+    }
+    let px = data::IMG * data::IMG * data::CH;
+    let mut max_diff = 0.0f32;
+    for i in 0..n * px {
+        max_diff = max_diff.max((xs.data()[i] - images.data()[i]).abs());
+    }
+    eprintln!("rust-vs-python ShapeSet max abs diff over {n} images: {max_diff}");
+    // PRNG stream is bit-exact; only libm sin/cos rounding differs
+    assert!(max_diff < 1e-3, "generators diverged: {max_diff}");
+}

@@ -1,0 +1,245 @@
+//! Property-based tests (own mini-framework, `dfp_infer::testing`) on the
+//! numeric and coordinator invariants.
+
+use dfp_infer::coordinator::BatchPolicy;
+use dfp_infer::dfp;
+use dfp_infer::json;
+use dfp_infer::quant::{self, TernaryMode};
+use dfp_infer::testing::{check, Gen, PairGen, RangeGen, VecF32Gen};
+use dfp_infer::util::SplitMix64;
+
+#[test]
+fn prop_dfp_roundtrip_error_bounded() {
+    // |x - dq(q(x))| <= half ulp of the chosen exponent, all bit widths
+    let gen = VecF32Gen { min_len: 1, max_len: 300, sigma: 5.0 };
+    check(150, &gen, |v| {
+        for bits in [2u32, 4, 8] {
+            let (q, e) = dfp::quantize(v, bits, None);
+            let back = dfp::dequantize(&q, e);
+            for (a, b) in v.iter().zip(&back) {
+                let bound = 2f32.powi(e - 1) + 1e-9;
+                if (a - b).abs() > bound {
+                    return Err(format!("bits={bits} e={e}: |{a}-{b}| > {bound}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dfp_codes_in_range() {
+    let gen = VecF32Gen { min_len: 1, max_len: 200, sigma: 100.0 };
+    check(100, &gen, |v| {
+        for bits in [2u32, 4, 8] {
+            let (q, _) = dfp::quantize(v, bits, None);
+            let m = dfp::qmax(bits) as i8;
+            if q.iter().any(|&c| c.abs() > m) {
+                return Err(format!("code out of {bits}-bit range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scale_u8_relative_error() {
+    struct PosGen;
+    impl Gen for PosGen {
+        type Value = f64;
+        fn generate(&self, rng: &mut SplitMix64) -> f64 {
+            let mag = rng.range_f32(-12.0, 12.0);
+            f64::from(rng.next_f32() + 0.001) * 10f64.powf(f64::from(mag) / 4.0)
+        }
+    }
+    check(300, &PosGen, |&a| {
+        let s = dfp::ScaleU8::quantize(a);
+        let back = s.dequantize();
+        if (back - a).abs() / a > 1.0 / 128.0 {
+            return Err(format!("alpha {a} -> {back}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ternary_layer_invariants() {
+    // codes ternary; alpha shared per cluster; error never above all-zero
+    let gen = PairGen(
+        VecF32Gen { min_len: 9 * 8, max_len: 9 * 8, sigma: 0.2 },
+        RangeGen { lo: 1, hi: 8 },
+    );
+    check(60, &gen, |(w, n)| {
+        for mode in [TernaryMode::Paper, TernaryMode::Support] {
+            let t = quant::ternarize_layer(w, 9, 8, *n, mode);
+            if t.codes.iter().any(|&c| !(-1..=1).contains(&c)) {
+                return Err("non-ternary code".into());
+            }
+            for f in 0..8 {
+                if t.alpha[f] != t.alpha[(f / n) * n] {
+                    return Err(format!("{mode:?}: alpha not shared in cluster (f={f})"));
+                }
+            }
+            let back = t.dequantize();
+            let err: f64 = w
+                .iter()
+                .zip(&back)
+                .map(|(&a, &b)| (f64::from(a) - f64::from(b)).powi(2))
+                .sum();
+            let zero_err: f64 = w.iter().map(|&a| f64::from(a).powi(2)).sum();
+            if err > zero_err * (1.0 + 1e-9) + 1e-9 {
+                return Err(format!("{mode:?}: err {err} worse than all-zero {zero_err}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threshold_select_minimizes_over_prefixes() {
+    // returned alpha must achieve the minimal prefix error (brute force)
+    let gen = VecF32Gen { min_len: 2, max_len: 120, sigma: 1.0 };
+    check(80, &gen, |w| {
+        if w.iter().all(|&x| x == 0.0) {
+            return Ok(());
+        }
+        let alpha = quant::threshold_select(w);
+        let mut mags: Vec<f64> = w.iter().map(|&x| f64::from(x).abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total: f64 = mags.iter().map(|m| m * m).sum();
+        // brute-force: the returned alpha must be the prefix-RMS achieving
+        // the minimal prefix error E(t) = total - 2*a*S1(t) + a^2*t
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        let mut best = (f64::INFINITY, 0.0f64);
+        for (i, &m) in mags.iter().enumerate() {
+            s1 += m;
+            s2 += m * m;
+            let t = (i + 1) as f64;
+            let a = (s2 / t).sqrt();
+            let err = total - 2.0 * a * s1 + a * a * t;
+            if err < best.0 {
+                best = (err, a);
+            }
+        }
+        if (alpha - best.1).abs() > 1e-12 * best.1.max(1.0) {
+            return Err(format!("alpha {alpha} != argmin prefix alpha {}", best.1));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_policy_invariants() {
+    // plan() result always an available size; padding < smallest cover;
+    // deadline flush guaranteed for non-empty queues
+    struct PolicyGen;
+    impl Gen for PolicyGen {
+        type Value = (Vec<usize>, usize, u64);
+        fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+            let n_sizes = 1 + rng.next_below(4) as usize;
+            let sizes: Vec<usize> = (0..n_sizes).map(|_| 1 + rng.next_below(64) as usize).collect();
+            let pending = rng.next_below(100) as usize;
+            let age = rng.next_below(10_000);
+            (sizes, pending, age)
+        }
+    }
+    check(300, &PolicyGen, |(sizes, pending, age)| {
+        let p = BatchPolicy::new(sizes.clone(), 2_000);
+        match p.plan(*pending, *age) {
+            None => {
+                if *pending >= p.max_batch() {
+                    return Err("full queue not flushed".into());
+                }
+                if *pending > 0 && *age >= 2_000 {
+                    return Err("deadline expired but no flush".into());
+                }
+            }
+            Some(b) => {
+                if !p.sizes.contains(&b) {
+                    return Err(format!("planned batch {b} not an artifact size"));
+                }
+                if *pending == 0 {
+                    return Err("flushed an empty queue".into());
+                }
+            }
+        }
+        // best_fit covers n (or is the max)
+        let bf = p.best_fit(*pending.max(&1));
+        if bf < *pending.max(&1) && bf != p.max_batch() {
+            return Err(format!("best_fit {bf} covers neither {pending} nor max"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // random JSON trees survive serialize -> parse
+    struct JsonGen;
+    fn gen_value(rng: &mut SplitMix64, depth: usize) -> json::Json {
+        match if depth > 3 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.next_below(2) == 1),
+            2 => json::Json::Num((rng.next_below(2_000_001) as f64 - 1e6) / 64.0),
+            3 => {
+                let n = rng.next_below(8) as usize;
+                json::Json::Str((0..n).map(|_| (b'a' + rng.next_below(26) as u8) as char).collect())
+            }
+            4 => {
+                let n = rng.next_below(5) as usize;
+                json::Json::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.next_below(5) as usize;
+                json::Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    impl Gen for JsonGen {
+        type Value = json::Json;
+        fn generate(&self, rng: &mut SplitMix64) -> json::Json {
+            gen_value(rng, 0)
+        }
+    }
+    check(200, &JsonGen, |j| {
+        let text = j.to_string();
+        let back = json::parse(&text).map_err(|e| e.to_string())?;
+        if &back != j {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        let pretty = json::parse(&j.to_string_pretty()).map_err(|e| e.to_string())?;
+        if &pretty != j {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packing_roundtrip() {
+    use dfp_infer::dfp::packing;
+    struct CodesGen;
+    impl Gen for CodesGen {
+        type Value = Vec<i8>;
+        fn generate(&self, rng: &mut SplitMix64) -> Vec<i8> {
+            let n = 1 + rng.next_below(600) as usize;
+            (0..n).map(|_| rng.next_below(3) as i8 - 1).collect()
+        }
+    }
+    check(150, &CodesGen, |codes| {
+        let packed = packing::pack_ternary(codes);
+        if packing::unpack_ternary(&packed, codes.len()) != *codes {
+            return Err("ternary pack mismatch".into());
+        }
+        let nibbles: Vec<i8> = codes.iter().map(|&c| c * 5).collect();
+        let p4 = packing::pack_i4(&nibbles);
+        if packing::unpack_i4(&p4, nibbles.len()) != nibbles {
+            return Err("i4 pack mismatch".into());
+        }
+        Ok(())
+    });
+}
