@@ -1,17 +1,44 @@
-//! Bench E5 — the §5 "16x performance-power benefit" claim, measured three
+//! Bench E5 — the §5 "16x performance-power benefit" claim, measured four
 //! ways on this testbed:
 //!   1. analytic MAC-energy model (the paper's own argument),
 //!   2. storage compression of ternary packing (memory-bound proxy),
-//!   3. realizable CPU speedup of the rust integer conv vs the f32 conv.
+//!   3. realizable CPU speedup of the rust integer conv vs the f32 conv,
+//!   4. the kernels/ packed engines vs the dense i8 kernels — per
+//!      resnet-mini layer shape, dense and post-ReLU-sparse activations,
+//!      single- and multi-thread.
+//!
+//! Emits a machine-readable `BENCH_kernels.json` (override the path with
+//! `BENCH_JSON_OUT`) so later PRs have a perf trajectory baseline.
+//! `BENCH_QUICK=1` shortens every measurement for CI-style runs.
 
 use dfp_infer::bench::Bencher;
 use dfp_infer::dfp::packing;
+use dfp_infer::json::Json;
+use dfp_infer::kernels::{
+    gemm_packed_i4, gemm_packed_ternary, PackedI4Matrix, PackedTernaryMatrix, ThreadPool,
+};
 use dfp_infer::lpinfer::{gemm_i8, gemm_i8_dense};
-use dfp_infer::model::resnet101;
+use dfp_infer::model::{resnet101, resnet_mini_default};
 use dfp_infer::nn::gemm_f32;
 use dfp_infer::opcount;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::util::SplitMix64;
+
+fn rand_i8(shape: &[usize], rng: &mut SplitMix64) -> Tensor<i8> {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| (rng.next_below(255) as i16 - 127) as i8).collect()).unwrap()
+}
+
+fn rand_ternary(shape: &[usize], rng: &mut SplitMix64) -> Tensor<i8> {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.next_below(3) as i8 - 1).collect()).unwrap()
+}
+
+/// Post-ReLU reality: ~50% zeros (negative activations clipped).
+fn relu_like(a: &Tensor<i8>) -> Tensor<i8> {
+    Tensor::new(a.shape(), a.data().iter().map(|&v| if v > 0 { v } else { 0 }).collect::<Vec<i8>>())
+        .unwrap()
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -40,24 +67,79 @@ fn main() {
     let mut rng = SplitMix64::new(1);
     let a_f32 = Tensor::new(&[m, k], rng.normal(m * k)).unwrap();
     let w_f32 = Tensor::new(&[k, f], rng.normal(k * f)).unwrap();
-    let a_i8 = Tensor::new(&[m, k], (0..m * k).map(|_| (rng.next_below(255) as i16 - 127) as i8).collect()).unwrap();
-    let w_tern = Tensor::new(&[k, f], (0..k * f).map(|_| rng.next_below(3) as i8 - 1).collect()).unwrap();
-    let w_i8 = Tensor::new(&[k, f], (0..k * f).map(|_| (rng.next_below(255) as i16 - 127) as i8).collect()).unwrap();
+    let a_i8 = rand_i8(&[m, k], &mut rng);
+    let w_tern = rand_ternary(&[k, f], &mut rng);
+    let w_i8 = rand_i8(&[k, f], &mut rng);
     let macs = (m * k * f) as f64;
     b.bench("gemm f32 (fp32 baseline)", macs, || gemm_f32(&a_f32, &w_f32));
     b.bench("gemm i8 x ternary (zero-skip path)", macs, || gemm_i8(&a_i8, &w_tern));
     b.bench("gemm i8 x i8 (dense int path)", macs, || gemm_i8(&a_i8, &w_i8));
     b.bench("gemm i8 dense branch-free", macs, || gemm_i8_dense(&a_i8, &w_i8));
-    // sparse activations (post-ReLU reality: ~50% zeros) — zero-skip wins here
-    let a_sparse = Tensor::new(
-        &[m, k],
-        a_i8.data().iter().map(|&v| if v > 0 { v } else { 0 }).collect::<Vec<i8>>(),
-    )
-    .unwrap();
+    let a_sparse = relu_like(&a_i8);
     b.bench("gemm i8 sparse-act zero-skip", macs, || gemm_i8(&a_sparse, &w_tern));
     b.bench("gemm i8 sparse-act branch-free", macs, || gemm_i8_dense(&a_sparse, &w_tern));
     if let Some(r) = b.ratio("gemm f32 (fp32 baseline)", "gemm i8 x ternary (zero-skip path)") {
         println!("\nmeasured ternary-vs-fp32 CPU GEMM speedup: {r:.2}x");
         println!("(scalar CPU ~bandwidth-bound; the 16x figure is the integer-MAC energy projection above)");
+    }
+
+    println!("\n== E5.4: packed engines on the same shape (kernels/) ==");
+    let w_packed = PackedTernaryMatrix::from_hwio(&w_tern).unwrap();
+    let w_packed_i4 = PackedI4Matrix::from_hwio(&rand_i8(&[k, f], &mut rng).map(|v| v / 17)).unwrap();
+    let pool1 = ThreadPool::new(1);
+    let pool4 = ThreadPool::new(4);
+    b.bench("gemm packed-ternary dense-act 1t", macs, || {
+        gemm_packed_ternary(&a_i8, &w_packed, &pool1)
+    });
+    b.bench("gemm packed-ternary sparse-act 1t", macs, || {
+        gemm_packed_ternary(&a_sparse, &w_packed, &pool1)
+    });
+    b.bench("gemm packed-ternary sparse-act 4t", macs, || {
+        gemm_packed_ternary(&a_sparse, &w_packed, &pool4)
+    });
+    b.bench("gemm packed-i4 sparse-act 1t", macs, || {
+        gemm_packed_i4(&a_sparse, &w_packed_i4, &pool1)
+    });
+    let thread_scaling = b
+        .ratio("gemm packed-ternary sparse-act 1t", "gemm packed-ternary sparse-act 4t")
+        .unwrap_or(0.0);
+    println!("packed-ternary 1t -> 4t scaling: {thread_scaling:.2}x");
+
+    println!("\n== E5.5: packed-ternary vs dense i8 on resnet-mini layer shapes ==");
+    let mini = resnet_mini_default();
+    let mut layer_rows = Vec::new();
+    for l in &mini.layers {
+        if !["stem", "s0b0c2", "s1b0c2", "s2b0c2"].contains(&l.name.as_str()) {
+            continue; // one representative shape per stage
+        }
+        let (lm, lk, lf) = (l.out_hw * l.out_hw, l.kh * l.kw * l.cin, l.cout);
+        let lmacs = (lm * lk * lf) as f64;
+        let a = relu_like(&rand_i8(&[lm, lk], &mut rng));
+        let wt = rand_ternary(&[lk, lf], &mut rng);
+        let wp = PackedTernaryMatrix::from_hwio(&wt).unwrap();
+        let dense_name = format!("{} i8-dense ({lm}x{lk}x{lf})", l.name);
+        let packed_name = format!("{} packed-ternary ({lm}x{lk}x{lf})", l.name);
+        b.bench(&dense_name, lmacs, || gemm_i8_dense(&a, &wt));
+        b.bench(&packed_name, lmacs, || gemm_packed_ternary(&a, &wp, &pool1));
+        let speedup = b.ratio(&dense_name, &packed_name).unwrap_or(0.0);
+        println!("  {:<8} packed-ternary vs i8-dense: {speedup:.2}x", l.name);
+        layer_rows.push(Json::obj(vec![
+            ("layer", Json::str(l.name.clone())),
+            ("m", Json::num(lm as f64)),
+            ("k", Json::num(lk as f64)),
+            ("f", Json::num(lf as f64)),
+            ("speedup_packed_vs_i8_dense", Json::num(speedup)),
+        ]));
+    }
+
+    let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let extras = vec![
+        ("bench", Json::str("bench_kernels")),
+        ("packed_thread_scaling_4t", Json::num(thread_scaling)),
+        ("resnet_mini_layers", Json::Arr(layer_rows)),
+    ];
+    match b.write_json(std::path::Path::new(&out), extras) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
     }
 }

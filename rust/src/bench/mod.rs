@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use crate::json::Json;
 use crate::util::Summary;
 
 /// Result of one benchmark case.
@@ -119,6 +120,36 @@ impl Bencher {
         let fb = self.results.iter().find(|r| r.name == b)?;
         Some(fa.mean_ns / fb.mean_ns)
     }
+
+    /// Machine-readable dump of all completed cases plus caller-supplied
+    /// summary fields — the perf-trajectory baseline subsequent PRs diff
+    /// against (e.g. `BENCH_kernels.json`).
+    pub fn to_json(&self, extra: Vec<(&str, Json)>) -> Json {
+        let cases = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("iters", Json::num(r.iters as f64)),
+                        ("mean_ns", Json::num(r.mean_ns)),
+                        ("p50_ns", Json::num(r.p50_ns)),
+                        ("p95_ns", Json::num(r.p95_ns)),
+                        ("units_per_iter", Json::num(r.units_per_iter)),
+                        ("throughput_per_s", Json::num(r.throughput())),
+                    ])
+                })
+                .collect(),
+        );
+        let mut fields = vec![("cases", cases)];
+        fields.extend(extra);
+        Json::obj(fields)
+    }
+
+    /// Write [`Self::to_json`] to a file (pretty-printed).
+    pub fn write_json(&self, path: &std::path::Path, extra: Vec<(&str, Json)>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(extra).to_string_pretty())
+    }
 }
 
 #[cfg(test)]
@@ -153,5 +184,20 @@ mod tests {
         let r = b.ratio("slow", "fast").unwrap();
         assert!(r > 1.0, "slow/fast = {r}");
         assert!(b.ratio("nope", "fast").is_none());
+    }
+
+    #[test]
+    fn test_json_dump_roundtrips() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.target_s = 0.02;
+        b.bench("case-a", 100.0, || 1);
+        let j = b.to_json(vec![("speedup", Json::num(2.5))]);
+        let back = crate::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("speedup").and_then(Json::as_f64), Some(2.5));
+        let cases = back.get("cases").and_then(Json::as_arr).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").and_then(Json::as_str), Some("case-a"));
+        assert!(cases[0].get("mean_ns").and_then(Json::as_f64).is_some());
     }
 }

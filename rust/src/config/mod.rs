@@ -22,6 +22,11 @@ pub struct Config {
     pub requests: usize,
     pub seed: u64,
     pub noise: f32,
+    /// GEMM threads per executor (kernels/ thread pool; 0 = all cores)
+    pub threads: usize,
+    /// kernel override for the registry: "auto" | "i8" | "i8-dense" |
+    /// "ternary" | "i4" (see `kernels::KernelKind`)
+    pub kernel: String,
 }
 
 impl Default for Config {
@@ -34,6 +39,8 @@ impl Default for Config {
             requests: 256,
             seed: 0,
             noise: crate::data::DEFAULT_NOISE,
+            threads: 1,
+            kernel: "auto".to_string(),
         }
     }
 }
@@ -71,6 +78,12 @@ impl Config {
         if let Some(v) = j.get("noise").and_then(Json::as_f64) {
             self.noise = v as f32;
         }
+        if let Some(v) = j.get("threads").and_then(Json::as_i64) {
+            self.threads = v as usize;
+        }
+        if let Some(v) = j.get("kernel").and_then(Json::as_str) {
+            self.kernel = v.to_string();
+        }
     }
 
     /// Apply CLI overrides (flags win over file values).
@@ -84,6 +97,10 @@ impl Config {
         self.requests = a.get_or("requests", self.requests)?;
         self.seed = a.get_or("seed", self.seed)?;
         self.noise = a.get_or("noise", self.noise)?;
+        self.threads = a.get_or("threads", self.threads)?;
+        if let Some(v) = a.get_str("kernel") {
+            self.kernel = v.to_string();
+        }
         Ok(())
     }
 
@@ -95,6 +112,12 @@ impl Config {
         };
         c.apply_args(a)?;
         Ok(c)
+    }
+
+    /// Build the kernel registry this config describes (`kernel` choice +
+    /// `threads`-wide pool). Fails on an unknown kernel name.
+    pub fn kernel_registry(&self) -> Result<crate::kernels::KernelRegistry> {
+        crate::kernels::KernelRegistry::parse(&self.kernel, self.threads)
     }
 
     pub fn to_coordinator(&self) -> crate::coordinator::CoordinatorConfig {
@@ -144,5 +167,28 @@ mod tests {
     #[test]
     fn test_bad_file() {
         assert!(Config::from_file(Path::new("/nonexistent/x.json")).is_err());
+    }
+
+    #[test]
+    fn test_kernel_and_threads_resolution() {
+        let a = Args::parse_from(
+            ["--kernel", "ternary", "--threads", "4"].iter().map(|s| s.to_string()),
+            false,
+        )
+        .unwrap();
+        let c = Config::resolve(&a).unwrap();
+        assert_eq!(c.kernel, "ternary");
+        assert_eq!(c.threads, 4);
+        let reg = c.kernel_registry().unwrap();
+        assert_eq!(reg.choice(), Some(crate::kernels::KernelKind::PackedTernary));
+        assert_eq!(reg.pool().threads(), 4);
+
+        let bad = Config { kernel: "warp".into(), ..Config::default() };
+        assert!(bad.kernel_registry().is_err());
+
+        // defaults: auto kernel, single thread
+        let d = Config::default();
+        assert!(d.kernel_registry().unwrap().choice().is_none());
+        assert_eq!(d.kernel_registry().unwrap().pool().threads(), 1);
     }
 }

@@ -1,13 +1,18 @@
 //! Executor abstraction: the coordinator drives anything that can run a
-//! fixed-batch forward pass. Production uses [`PjrtExecutor`] (AOT XLA
-//! artifacts); tests and benches use [`MockExecutor`] / the pure-Rust
-//! lpinfer pipeline so coordinator logic is testable without artifacts.
+//! fixed-batch forward pass. Production paths are [`PjrtExecutor`] (AOT XLA
+//! artifacts, `pjrt` feature) and [`LpExecutor`] — the pure-Rust quantized
+//! pipeline over the `kernels/` packed GEMMs, which needs only a
+//! `qweights_*.dft` export (no HLO artifacts, no PJRT). Tests and benches
+//! also use [`MockExecutor`] so coordinator logic is testable standalone.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
+use crate::kernels::KernelRegistry;
+use crate::lpinfer::{forward_quant_with, QModelParams};
+use crate::model::Network;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 
@@ -75,6 +80,132 @@ impl Executor for PjrtExecutor {
 
     fn classes(&self) -> usize {
         self.engine.manifest.classes
+    }
+}
+
+/// Pure-Rust quantized executor: runs `lpinfer::forward_quant` through the
+/// `kernels/` registry for every variant it holds. Unlike [`PjrtExecutor`]
+/// it accepts any batch size, so the advertised `batch_sizes` are purely a
+/// batching-policy knob.
+pub struct LpExecutor {
+    net: Network,
+    variants: BTreeMap<String, QModelParams>,
+    registry: KernelRegistry,
+    sizes: Vec<usize>,
+    img: usize,
+    classes: usize,
+}
+
+impl LpExecutor {
+    /// Build from in-memory params (tests, synthetic serving).
+    pub fn new(
+        net: Network,
+        variants: BTreeMap<String, QModelParams>,
+        registry: KernelRegistry,
+        mut sizes: Vec<usize>,
+    ) -> Result<Self> {
+        if variants.is_empty() {
+            bail!("LpExecutor needs at least one variant");
+        }
+        for (name, p) in &variants {
+            p.validate(&net).with_context(|| format!("variant '{name}'"))?;
+        }
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.is_empty() {
+            sizes = vec![1, 8, 32];
+        }
+        let (img, classes) = (net.input_hw, net.fc_out);
+        Ok(Self { net, variants, registry, sizes, img, classes })
+    }
+
+    /// The manifest variants this executor could serve from `dir`: sub-8-bit
+    /// weights with a `qweights_<variant>.dft` export present. The single
+    /// source of the lp-eligibility rule — `from_artifacts` and the CLI
+    /// executor selection both consult it (fp32 needs the f32 pipeline /
+    /// PJRT, so it is never lp-servable).
+    pub fn servable(dir: &Path, manifest: &crate::runtime::Manifest) -> Vec<String> {
+        manifest
+            .variants
+            .iter()
+            .filter(|(name, info)| {
+                info.w_bits < 32 && dir.join(format!("qweights_{name}.dft")).exists()
+            })
+            .map(|(name, _)| name.to_string())
+            .collect()
+    }
+
+    /// Load every quantized variant the manifest lists for which a
+    /// `qweights_<variant>.dft` export exists next to it.
+    pub fn from_artifacts(dir: &Path, registry: KernelRegistry) -> Result<Self> {
+        let manifest = crate::runtime::Manifest::load(&dir.join("manifest.json"))?;
+        let net = crate::model::resnet_mini_default();
+        if manifest.img != net.input_hw || manifest.classes != net.fc_out {
+            bail!(
+                "manifest geometry {}x{} (c={}) != resnet-mini {}x{} (c={})",
+                manifest.img,
+                manifest.img,
+                manifest.classes,
+                net.input_hw,
+                net.input_hw,
+                net.fc_out
+            );
+        }
+        let mut variants = BTreeMap::new();
+        for name in Self::servable(dir, &manifest) {
+            let path = dir.join(format!("qweights_{name}.dft"));
+            let map = crate::io::read_dft(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            variants.insert(name.clone(), QModelParams::from_tensors(&map, &net)?);
+        }
+        if variants.is_empty() {
+            bail!("no qweights_<variant>.dft exports found in {}", dir.display());
+        }
+        Self::new(net, variants, registry, manifest.batch_sizes.clone())
+    }
+
+    /// Factory for [`crate::coordinator::Coordinator::start`].
+    pub fn factory(dir: std::path::PathBuf, registry: KernelRegistry) -> ExecutorFactory {
+        Box::new(move || {
+            Ok(Box::new(LpExecutor::from_artifacts(&dir, registry)?) as Box<dyn Executor>)
+        })
+    }
+
+    /// Names of the variants this executor can serve.
+    pub fn variants(&self) -> Vec<&str> {
+        self.variants.keys().map(String::as_str).collect()
+    }
+}
+
+impl Executor for LpExecutor {
+    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+        let params = self
+            .variants
+            .get(variant)
+            .with_context(|| format!("LpExecutor has no variant '{variant}'"))?;
+        anyhow::ensure!(
+            x.shape() == [batch, self.img, self.img, 3],
+            "batch shape {:?} != ({batch}, {i}, {i}, 3)",
+            x.shape(),
+            i = self.img
+        );
+        Ok(forward_quant_with(params, &self.net, x, &self.registry))
+    }
+
+    fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        if self.variants.contains_key(variant) {
+            self.sizes.clone()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn img(&self) -> usize {
+        self.img
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
     }
 }
 
@@ -158,5 +289,54 @@ mod tests {
         let mut m = MockExecutor::new(4, 3, &[("v", &[1])]);
         let x = Tensor::new(&[2, 4, 4, 3], vec![0.0; 96]).unwrap();
         assert!(m.run_batch("v", 1, &x).is_err());
+    }
+
+    fn lp_executor() -> LpExecutor {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let variants: BTreeMap<String, QModelParams> = [
+            ("8a2w_n4".to_string(), QModelParams::synthetic(&net, 3, 2, 4)),
+            ("8a4w_n4".to_string(), QModelParams::synthetic(&net, 4, 4, 4)),
+        ]
+        .into_iter()
+        .collect();
+        LpExecutor::new(net, variants, KernelRegistry::auto(), vec![1, 4]).unwrap()
+    }
+
+    #[test]
+    fn test_lp_executor_serves_without_artifacts() {
+        let mut e = lp_executor();
+        assert_eq!(e.img(), 8);
+        assert_eq!(e.classes(), 3);
+        assert_eq!(e.batch_sizes("8a2w_n4"), vec![1, 4]);
+        assert!(e.batch_sizes("nope").is_empty());
+        assert_eq!(e.variants().len(), 2);
+        let mut rng = crate::util::SplitMix64::new(9);
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        let y = e.run_batch("8a2w_n4", 2, &x).unwrap();
+        assert_eq!(y.shape(), &[2, 3]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        assert!(e.run_batch("missing", 2, &x).is_err());
+        assert!(e.run_batch("8a2w_n4", 4, &x).is_err()); // batch mismatch
+    }
+
+    #[test]
+    fn test_lp_executor_matches_direct_forward_for_all_kernels() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let params = QModelParams::synthetic(&net, 3, 2, 4);
+        let mut rng = crate::util::SplitMix64::new(10);
+        let x = Tensor::new(&[1, 8, 8, 3], rng.normal(8 * 8 * 3)).unwrap();
+        let want = crate::lpinfer::forward_quant(&params, &net, &x);
+        for kind in crate::kernels::ALL_KERNELS {
+            let reg = KernelRegistry::new(Some(kind), 2);
+            let mut e = LpExecutor::new(
+                net.clone(),
+                [("v".to_string(), params.clone())].into_iter().collect(),
+                reg,
+                vec![1],
+            )
+            .unwrap();
+            let y = e.run_batch("v", 1, &x).unwrap();
+            assert_eq!(y.data(), want.data(), "kernel {kind}");
+        }
     }
 }

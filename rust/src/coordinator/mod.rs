@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 pub use batcher::BatchPolicy;
-pub use executor::{Executor, ExecutorFactory, MockExecutor, PjrtExecutor};
+pub use executor::{Executor, ExecutorFactory, LpExecutor, MockExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{PrecisionClass, Router};
 
@@ -232,6 +232,7 @@ impl Coordinator {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     submit_rx: &Receiver<(Request, Sender<Response>)>,
     job_tx: &Sender<WorkerMsg>,

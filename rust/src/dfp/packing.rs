@@ -19,13 +19,32 @@ pub fn pack_ternary(codes: &[i8]) -> Vec<u8> {
 }
 
 /// Unpack ternary codes (inverse of [`pack_ternary`]); `n` = element count.
+///
+/// The `0b11` bit pattern is not produced by any encoder, so hitting one
+/// means the stream is corrupt (truncated file, bad offset, bit flips).
+/// Decoding it must fail loudly instead of silently yielding 0: this is
+/// the deserialization guard for any on-disk/wire packed-weight path —
+/// the `kernels/` matrices use the same 2-bit encoding but re-pack from
+/// validated dense codes, and their GEMM mask decode would neutralize a
+/// `0b11` to a 0 contribution rather than detect it, so corruption has to
+/// be caught here at unpack time. This panics; use [`try_unpack_ternary`]
+/// for a recoverable error.
 pub fn unpack_ternary(packed: &[u8], n: usize) -> Vec<i8> {
+    try_unpack_ternary(packed, n).expect("corrupt ternary stream")
+}
+
+/// Fallible variant of [`unpack_ternary`]: `Err` on the invalid `0b11`
+/// pattern (with the element index) instead of panicking.
+pub fn try_unpack_ternary(packed: &[u8], n: usize) -> anyhow::Result<Vec<i8>> {
     (0..n)
         .map(|i| match (packed[i / 4] >> ((i % 4) * 2)) & 0b11 {
-            0b00 => 0,
-            0b01 => 1,
-            0b10 => -1,
-            _ => 0, // 0b11 unused
+            0b00 => Ok(0),
+            0b01 => Ok(1),
+            0b10 => Ok(-1),
+            _ => anyhow::bail!(
+                "corrupt ternary stream: invalid bit pattern 0b11 at element {i} (byte {})",
+                i / 4
+            ),
         })
         .collect()
 }
@@ -92,6 +111,24 @@ mod tests {
     #[should_panic]
     fn test_ternary_rejects_out_of_range() {
         pack_ternary(&[2]);
+    }
+
+    #[test]
+    fn test_corruption_detected() {
+        // flip a packed byte to the invalid 0b11 pattern: decode must fail
+        let mut packed = pack_ternary(&[1, -1, 0, 1, 0, 0]);
+        assert!(try_unpack_ternary(&packed, 6).is_ok());
+        packed[1] |= 0b0011; // element 4 becomes 0b11
+        let err = try_unpack_ternary(&packed, 6).unwrap_err();
+        assert!(format!("{err}").contains("element 4"), "{err}");
+        // elements before the corruption stay decodable
+        assert_eq!(try_unpack_ternary(&packed, 4).unwrap(), vec![1, -1, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "corrupt ternary stream")]
+    fn test_corruption_panics_on_infallible_path() {
+        unpack_ternary(&[0b1111_1111], 4);
     }
 
     #[test]

@@ -91,6 +91,7 @@ impl Json {
 
     // ----------------------------------------------------------- serializer
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);

@@ -1,0 +1,281 @@
+//! Integer GEMM kernels: the dense i8 pair (moved here from `lpinfer`) and
+//! the packed multiply-free engines that are this subsystem's point.
+//!
+//! All kernels compute bit-identical `i32` accumulators for the same
+//! operands — integer addition is exact and order-insensitive — which is
+//! what lets the registry swap them freely under `forward_quant` (checked
+//! by `rust/tests/kernels_equivalence.rs`).
+
+use crate::tensor::Tensor;
+
+use super::packed::{PackedI4Matrix, PackedTernaryMatrix, PANEL_F};
+use super::threadpool::ThreadPool;
+
+/// Don't split a GEMM across threads below this many output rows per block:
+/// a block this size already amortizes spawn cost ~100x.
+const MIN_ROWS_PER_BLOCK: usize = 16;
+
+/// int8 x int8 -> i32 GEMM: (M,K) x (K,F) -> (M,F).
+///
+/// PERF (§Perf L3): the `av == 0` skip exploits post-ReLU activation
+/// sparsity (~40-60 % zeros in the real pipeline). For dense operands the
+/// branch costs ~15 %; [`gemm_i8_dense`] below is the branch-free variant —
+/// `rust/benches/bench_kernels.rs` quantifies both, and the packed kernels
+/// below beat either on sub-8-bit weights.
+pub fn gemm_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, f) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * f..(i + 1) * f];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = i32::from(av);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
+            }
+        }
+    }
+    out
+}
+
+/// Branch-free dense variant of [`gemm_i8`]: widens the activation once
+/// per (row, k) and lets LLVM vectorize the inner f-loop.
+pub fn gemm_i8_dense(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, f) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * f..(i + 1) * f];
+        for (kk, &av) in arow.iter().enumerate() {
+            let av = i32::from(av);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// packed-ternary: multiply-free cluster GEMM
+// ---------------------------------------------------------------------------
+
+/// Decode one packed k-row of a panel (PANEL_F 2-bit codes) into +1 / -1
+/// lane masks: `pos[j]` is all-ones iff code j is `+1`, `neg[j]` all-ones
+/// iff `-1`. The masks turn the ternary accumulate into the branch- and
+/// multiply-free `acc += (a & pos) - (a & neg)`.
+#[inline]
+fn tern_decode_row(row: &[u8], pos: &mut [i32; PANEL_F], neg: &mut [i32; PANEL_F]) {
+    for (bi, &b) in row.iter().enumerate() {
+        let b = b as usize;
+        for t in 0..4 {
+            let c = (b >> (2 * t)) & 3;
+            pos[bi * 4 + t] = -((c & 1) as i32); // 0b01 -> 0xFFFF_FFFF
+            neg[bi * 4 + t] = -(((c >> 1) & 1) as i32); // 0b10 -> 0xFFFF_FFFF
+        }
+    }
+}
+
+/// Accumulate one panel over a block of activation rows.
+///
+/// Loop order is (k outer, rows inner): the mask decode of a packed k-row
+/// happens *once* per row block (amortized over all M rows), and the inner
+/// lane loop `acc[j] += (a & pos[j]) - (a & neg[j])` is a straight-line
+/// and/sub/add stream over stride-1 i32 slices — LLVM vectorizes it, and
+/// there is no multiply anywhere (the paper's "replace multiplications
+/// with 8-bit accumulations"). `k`-steps with a zero activation skip the
+/// whole panel row (post-ReLU sparsity, ~40-60 % zeros).
+///
+/// Working set per block: the A rows (rows × K i8) and the out tile
+/// (rows × F i32) stay L1-resident while the panel bytes stream once.
+fn tern_row_block(ad: &[i8], k: usize, row0: usize, rows: usize, w: &PackedTernaryMatrix, out: &mut [i32]) {
+    const BPR: usize = PANEL_F / 4;
+    let f = w.f;
+    let mut pos = [0i32; PANEL_F];
+    let mut neg = [0i32; PANEL_F];
+    for p in 0..w.n_panels() {
+        let panel = w.panel(p);
+        let f0 = p * PANEL_F;
+        let fw = PANEL_F.min(f - f0);
+        for kk in 0..k {
+            tern_decode_row(&panel[kk * BPR..kk * BPR + BPR], &mut pos, &mut neg);
+            for r in 0..rows {
+                let av = i32::from(ad[(row0 + r) * k + kk]);
+                if av == 0 {
+                    continue;
+                }
+                let orow = &mut out[r * f + f0..r * f + f0 + fw];
+                for ((o, &pj), &nj) in orow.iter_mut().zip(&pos[..fw]).zip(&neg[..fw]) {
+                    *o += (av & pj) - (av & nj);
+                }
+            }
+        }
+    }
+}
+
+/// Multiply-free ternary GEMM over packed 2-bit weights:
+/// (M,K) i8 activations x packed (K,F) -> (M,F) i32, parallel over output
+/// row blocks. Bit-exact vs [`gemm_i8_dense`] on the unpacked codes.
+pub fn gemm_packed_ternary(a: &Tensor<i8>, w: &PackedTernaryMatrix, pool: &ThreadPool) -> Tensor<i32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    assert_eq!(k, w.k, "gemm_packed_ternary: A is (.., {k}) but W is ({}, ..)", w.k);
+    let f = w.f;
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    let ad = a.data();
+    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
+        tern_row_block(ad, k, row0, rows, w, block);
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// packed-i4
+// ---------------------------------------------------------------------------
+
+/// Sign-extension table for a 4-bit nibble.
+const SEXT4: [i8; 16] = [0, 1, 2, 3, 4, 5, 6, 7, -8, -7, -6, -5, -4, -3, -2, -1];
+
+fn i4_row_block(ad: &[i8], k: usize, row0: usize, rows: usize, w: &PackedI4Matrix, out: &mut [i32]) {
+    const BPR: usize = PANEL_F / 2;
+    let f = w.f;
+    let mut wrow = [0i32; PANEL_F];
+    for p in 0..w.n_panels() {
+        let panel = w.panel(p);
+        let f0 = p * PANEL_F;
+        let fw = PANEL_F.min(f - f0);
+        for kk in 0..k {
+            // hoisted nibble decode: once per k-row, amortized over rows
+            for (bi, &b) in panel[kk * BPR..kk * BPR + BPR].iter().enumerate() {
+                wrow[bi * 2] = i32::from(SEXT4[(b & 0x0F) as usize]);
+                wrow[bi * 2 + 1] = i32::from(SEXT4[(b >> 4) as usize]);
+            }
+            for r in 0..rows {
+                let av = i32::from(ad[(row0 + r) * k + kk]);
+                if av == 0 {
+                    continue;
+                }
+                let orow = &mut out[r * f + f0..r * f + f0 + fw];
+                for (o, &wv) in orow.iter_mut().zip(&wrow[..fw]) {
+                    *o += av * wv;
+                }
+            }
+        }
+    }
+}
+
+/// Packed 4-bit GEMM: (M,K) i8 x packed-i4 (K,F) -> (M,F) i32, parallel
+/// over output row blocks. 4-bit weights keep real multiplies (codes up to
+/// ±7) but halve the weight traffic vs dense i8. Bit-exact vs
+/// [`gemm_i8_dense`] on the unpacked codes.
+pub fn gemm_packed_i4(a: &Tensor<i8>, w: &PackedI4Matrix, pool: &ThreadPool) -> Tensor<i32> {
+    let (m, k) = (a.dim(0), a.dim(1));
+    assert_eq!(k, w.k, "gemm_packed_i4: A is (.., {k}) but W is ({}, ..)", w.k);
+    let f = w.f;
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    let ad = a.data();
+    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
+        i4_row_block(ad, k, row0, rows, w, block);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn rand_i8(shape: &[usize], lo: i64, hi: i64, seed: u64) -> Tensor<i8> {
+        let mut rng = SplitMix64::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(
+            shape,
+            (0..n).map(|_| (rng.next_below((hi - lo + 1) as u64) as i64 + lo) as i8).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn test_gemm_i8_exact() {
+        let a = Tensor::new(&[2, 3], vec![1i8, -2, 3, 0, 5, -6]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![1i8, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(gemm_i8(&a, &b).data(), &[10, 12, -15, -16]);
+        assert_eq!(gemm_i8_dense(&a, &b).data(), &[10, 12, -15, -16]);
+    }
+
+    #[test]
+    fn test_gemm_i8_saturation_free() {
+        // worst case |acc| = K * 127 * 127 must not overflow i32
+        let k = 2048;
+        let a = Tensor::new(&[1, k], vec![127i8; k]).unwrap();
+        let b = Tensor::new(&[k, 1], vec![127i8; k]).unwrap();
+        assert_eq!(gemm_i8(&a, &b).data()[0], 127 * 127 * k as i32);
+    }
+
+    #[test]
+    fn test_packed_ternary_matches_dense_small() {
+        let pool = ThreadPool::new(1);
+        for (m, k, f, seed) in [(1, 1, 1, 1u64), (3, 5, 7, 2), (4, 9, 16, 3), (5, 8, 33, 4)] {
+            let a = rand_i8(&[m, k], -127, 127, seed);
+            let wd = rand_i8(&[k, f], -1, 1, seed + 100);
+            let wp = crate::kernels::PackedTernaryMatrix::from_hwio(&wd).unwrap();
+            let want = gemm_i8_dense(&a, &wd);
+            let got = gemm_packed_ternary(&a, &wp, &pool);
+            assert_eq!(got.data(), want.data(), "m={m} k={k} f={f}");
+            assert_eq!(got.shape(), &[m, f]);
+        }
+    }
+
+    #[test]
+    fn test_packed_i4_matches_dense_small() {
+        let pool = ThreadPool::new(1);
+        for (m, k, f, seed) in [(2, 3, 2, 5u64), (4, 10, 17, 6), (7, 4, 16, 7)] {
+            let a = rand_i8(&[m, k], -127, 127, seed);
+            let wd = rand_i8(&[k, f], -8, 7, seed + 100);
+            let wp = crate::kernels::PackedI4Matrix::from_hwio(&wd).unwrap();
+            assert_eq!(gemm_packed_i4(&a, &wp, &pool).data(), gemm_i8_dense(&a, &wd).data());
+        }
+    }
+
+    #[test]
+    fn test_threaded_matches_single_thread() {
+        let (m, k, f) = (37, 29, 21);
+        let a = rand_i8(&[m, k], -127, 127, 11);
+        let wd = rand_i8(&[k, f], -1, 1, 12);
+        let wp = crate::kernels::PackedTernaryMatrix::from_hwio(&wd).unwrap();
+        let want = gemm_packed_ternary(&a, &wp, &ThreadPool::new(1));
+        for threads in [2, 3, 4, 8] {
+            let got = gemm_packed_ternary(&a, &wp, &ThreadPool::new(threads));
+            assert_eq!(got.data(), want.data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn test_sparse_activations_exact() {
+        // zeros in A exercise the skip path without changing results
+        let (m, k, f) = (6, 40, 19);
+        let mut a = rand_i8(&[m, k], -127, 127, 21);
+        let mask = rand_i8(&[m, k], 0, 1, 22);
+        for (v, &keep) in a.data_mut().iter_mut().zip(mask.data()) {
+            if keep == 0 {
+                *v = 0;
+            }
+        }
+        let wd = rand_i8(&[k, f], -1, 1, 23);
+        let wp = crate::kernels::PackedTernaryMatrix::from_hwio(&wd).unwrap();
+        let pool = ThreadPool::new(2);
+        assert_eq!(gemm_packed_ternary(&a, &wp, &pool).data(), gemm_i8_dense(&a, &wd).data());
+    }
+}

@@ -1,0 +1,31 @@
+//! Packed-ternary execution engine — the hot path of the "full sub-8-bit
+//! compute pipeline" (paper §3.3/§5), operating *directly* on the 2-bit
+//! packed weight format instead of unpacking to dense i8.
+//!
+//! Modules:
+//! * [`packed`] — column-blocked [`PackedTernaryMatrix`] / [`PackedI4Matrix`]
+//!   layouts with per-cluster `(α̂, exp)` scale metadata;
+//! * [`gemm`] — the dense i8 kernels plus the multiply-free packed-ternary
+//!   GEMM (2-bit codes decoded to ±1 lane masks, accumulated branch-free
+//!   as `(a & pos) - (a & neg)`) and the packed-i4 GEMM, cache-blocked
+//!   over (M, K, F) tiles;
+//! * [`threadpool`] — scoped worker pool parallelizing over output-row
+//!   blocks, sized from [`crate::config::Config`];
+//! * [`registry`] — [`KernelRegistry`]: runtime selection among the
+//!   kernels by weight encoding, with a `--kernel` CLI override.
+//!
+//! All kernels produce bit-identical `i32` accumulators, so the registry
+//! can swap them per layer purely on performance grounds; `lpinfer`
+//! dispatches every conv/FC GEMM through here, and
+//! [`crate::coordinator::LpExecutor`] turns that pipeline into a serving
+//! backend that needs no PJRT artifacts.
+
+pub mod gemm;
+pub mod packed;
+pub mod registry;
+pub mod threadpool;
+
+pub use gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
+pub use packed::{PackedI4Matrix, PackedLayer, PackedTernaryMatrix, PANEL_F};
+pub use registry::{KernelKind, KernelRegistry, ALL_KERNELS};
+pub use threadpool::ThreadPool;

@@ -1,0 +1,368 @@
+//! Packed weight layouts for the execution engine.
+//!
+//! Weights are stored *column-blocked*: filters (output channels) are
+//! grouped into panels of [`PANEL_F`] columns, and within a panel the codes
+//! are laid out row-major over (k, filter-within-panel) so the GEMM inner
+//! loop reads one small contiguous byte row per `k` step. A whole panel of
+//! a resnet-mini layer is a few KB — it stays L1-resident while the
+//! activation rows stream past (see DESIGN.md §kernels).
+//!
+//! Two element encodings, both inherited from [`crate::dfp::packing`]:
+//! * ternary, 2 bits/code (`00`=0, `01`=+1, `10`=-1, `11` invalid) — 4
+//!   codes per byte, consumed multiply-free by the ternary GEMM;
+//! * i4, 4 bits/code in [-8, 7], low nibble first — 2 codes per byte.
+//!
+//! Per-cluster `(α̂ mantissa, exponent)` scales ride along as metadata so a
+//! packed matrix is a complete serving artifact (the paper's §3.1 8-bit
+//! scale constraint), and `storage_bytes()` reports the real footprint the
+//! 16× compression claim is about.
+
+use anyhow::{bail, Result};
+
+use crate::dfp::ScaleU8;
+use crate::tensor::Tensor;
+
+/// Filters per column panel. Multiple of 4 (ternary codes per byte) and of
+/// 2 (i4 codes per byte); 32 keeps the per-k decode masks tiny (256 B)
+/// while the GEMM inner lane loop is long enough to vectorize well — one
+/// panel byte-row is a single 8- or 16-byte load.
+pub const PANEL_F: usize = 32;
+
+const TERN_BYTES_PER_ROW: usize = PANEL_F / 4;
+const I4_BYTES_PER_ROW: usize = PANEL_F / 2;
+
+fn attach_scales(alpha_per_filter: &[f32], cluster: usize) -> Vec<ScaleU8> {
+    if cluster == 0 || alpha_per_filter.is_empty() {
+        return Vec::new();
+    }
+    let n_clusters = alpha_per_filter.len().div_ceil(cluster);
+    (0..n_clusters)
+        .map(|c| ScaleU8::quantize(f64::from(alpha_per_filter[c * cluster])))
+        .collect()
+}
+
+/// Ternary weight matrix (K rows × F filter columns) packed at 2 bits per
+/// code in column panels, plus per-cluster quantized scales.
+#[derive(Debug, Clone)]
+pub struct PackedTernaryMatrix {
+    pub k: usize,
+    pub f: usize,
+    /// per-cluster 8-bit scales (α̂ mantissa + exponent), may be empty
+    pub scales: Vec<ScaleU8>,
+    /// filters per scale cluster (0 = no cluster metadata)
+    pub cluster: usize,
+    data: Vec<u8>,
+}
+
+impl PackedTernaryMatrix {
+    /// Pack row-major (K, F) codes; every code must be in {-1, 0, +1}.
+    pub fn from_codes(codes: &[i8], k: usize, f: usize) -> Result<Self> {
+        if k == 0 || f == 0 {
+            bail!("packed ternary: degenerate shape {k}x{f}");
+        }
+        if codes.len() != k * f {
+            bail!("packed ternary: {} codes != {k}x{f}", codes.len());
+        }
+        let n_panels = f.div_ceil(PANEL_F);
+        let stride = k * TERN_BYTES_PER_ROW;
+        let mut data = vec![0u8; n_panels * stride];
+        for p in 0..n_panels {
+            let f0 = p * PANEL_F;
+            let fw = PANEL_F.min(f - f0);
+            for kk in 0..k {
+                let base = p * stride + kk * TERN_BYTES_PER_ROW;
+                for j in 0..fw {
+                    let c = codes[kk * f + f0 + j];
+                    let bits: u8 = match c {
+                        0 => 0b00,
+                        1 => 0b01,
+                        -1 => 0b10,
+                        other => bail!("packed ternary: non-ternary code {other} at ({kk},{})", f0 + j),
+                    };
+                    data[base + j / 4] |= bits << ((j % 4) * 2);
+                }
+            }
+        }
+        Ok(Self { k, f, scales: Vec::new(), cluster: 0, data })
+    }
+
+    /// Pack an HWIO (or any row-major ..×F) weight tensor: the last axis is
+    /// the filter axis, everything before it flattens into K.
+    pub fn from_hwio(wq: &Tensor<i8>) -> Result<Self> {
+        let f = *wq.shape().last().unwrap_or(&1);
+        if f == 0 || wq.is_empty() {
+            bail!("packed ternary: empty weight tensor");
+        }
+        Self::from_codes(wq.data(), wq.len() / f, f)
+    }
+
+    /// Attach per-cluster scale metadata (one α̂ per `cluster` filters).
+    pub fn set_cluster_scales(&mut self, alpha_per_filter: &[f32], cluster: usize) {
+        self.scales = attach_scales(alpha_per_filter, cluster);
+        self.cluster = if self.scales.is_empty() { 0 } else { cluster };
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.data.len() / self.panel_stride()
+    }
+
+    pub(crate) fn panel_stride(&self) -> usize {
+        self.k * TERN_BYTES_PER_ROW
+    }
+
+    /// Raw bytes of panel `p`: K rows × `PANEL_F/4` bytes.
+    pub(crate) fn panel(&self, p: usize) -> &[u8] {
+        let s = self.panel_stride();
+        &self.data[p * s..(p + 1) * s]
+    }
+
+    /// Packed payload + scale metadata footprint in bytes.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() + 2 * self.scales.len()
+    }
+
+    /// Dequantization scale of filter `fi` (1.0 when no scale metadata).
+    pub fn filter_scale(&self, fi: usize) -> f32 {
+        if self.cluster == 0 {
+            return 1.0;
+        }
+        self.scales[fi / self.cluster].dequantize() as f32
+    }
+
+    /// Unpack back to dense row-major (K, F) codes (test / fallback path).
+    pub fn to_dense(&self) -> Tensor<i8> {
+        let mut out = Tensor::<i8>::zeros(&[self.k, self.f]);
+        let od = out.data_mut();
+        for p in 0..self.n_panels() {
+            let f0 = p * PANEL_F;
+            let fw = PANEL_F.min(self.f - f0);
+            let panel = self.panel(p);
+            for kk in 0..self.k {
+                let row = &panel[kk * TERN_BYTES_PER_ROW..(kk + 1) * TERN_BYTES_PER_ROW];
+                for j in 0..fw {
+                    let bits = (row[j / 4] >> ((j % 4) * 2)) & 0b11;
+                    od[kk * self.f + f0 + j] = match bits {
+                        0b00 => 0,
+                        0b01 => 1,
+                        0b10 => -1,
+                        _ => unreachable!("from_codes never emits 0b11"),
+                    };
+                }
+            }
+        }
+        out
+    }
+}
+
+/// 4-bit weight matrix (K × F) packed two codes per byte in column panels.
+#[derive(Debug, Clone)]
+pub struct PackedI4Matrix {
+    pub k: usize,
+    pub f: usize,
+    pub scales: Vec<ScaleU8>,
+    pub cluster: usize,
+    data: Vec<u8>,
+}
+
+impl PackedI4Matrix {
+    /// Pack row-major (K, F) codes; every code must be in [-8, 7].
+    pub fn from_codes(codes: &[i8], k: usize, f: usize) -> Result<Self> {
+        if k == 0 || f == 0 {
+            bail!("packed i4: degenerate shape {k}x{f}");
+        }
+        if codes.len() != k * f {
+            bail!("packed i4: {} codes != {k}x{f}", codes.len());
+        }
+        let n_panels = f.div_ceil(PANEL_F);
+        let stride = k * I4_BYTES_PER_ROW;
+        let mut data = vec![0u8; n_panels * stride];
+        for p in 0..n_panels {
+            let f0 = p * PANEL_F;
+            let fw = PANEL_F.min(f - f0);
+            for kk in 0..k {
+                let base = p * stride + kk * I4_BYTES_PER_ROW;
+                for j in 0..fw {
+                    let c = codes[kk * f + f0 + j];
+                    if !(-8..=7).contains(&c) {
+                        bail!("packed i4: code {c} out of range at ({kk},{})", f0 + j);
+                    }
+                    let nib = (c as u8) & 0x0F;
+                    data[base + j / 2] |= nib << ((j % 2) * 4);
+                }
+            }
+        }
+        Ok(Self { k, f, scales: Vec::new(), cluster: 0, data })
+    }
+
+    /// Pack an HWIO weight tensor (last axis = filters).
+    pub fn from_hwio(wq: &Tensor<i8>) -> Result<Self> {
+        let f = *wq.shape().last().unwrap_or(&1);
+        if f == 0 || wq.is_empty() {
+            bail!("packed i4: empty weight tensor");
+        }
+        Self::from_codes(wq.data(), wq.len() / f, f)
+    }
+
+    pub fn set_cluster_scales(&mut self, alpha_per_filter: &[f32], cluster: usize) {
+        self.scales = attach_scales(alpha_per_filter, cluster);
+        self.cluster = if self.scales.is_empty() { 0 } else { cluster };
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.data.len() / self.panel_stride()
+    }
+
+    pub(crate) fn panel_stride(&self) -> usize {
+        self.k * I4_BYTES_PER_ROW
+    }
+
+    pub(crate) fn panel(&self, p: usize) -> &[u8] {
+        let s = self.panel_stride();
+        &self.data[p * s..(p + 1) * s]
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() + 2 * self.scales.len()
+    }
+
+    /// Unpack back to dense row-major (K, F) codes.
+    pub fn to_dense(&self) -> Tensor<i8> {
+        let mut out = Tensor::<i8>::zeros(&[self.k, self.f]);
+        let od = out.data_mut();
+        for p in 0..self.n_panels() {
+            let f0 = p * PANEL_F;
+            let fw = PANEL_F.min(self.f - f0);
+            let panel = self.panel(p);
+            for kk in 0..self.k {
+                let row = &panel[kk * I4_BYTES_PER_ROW..(kk + 1) * I4_BYTES_PER_ROW];
+                for j in 0..fw {
+                    let nib = (row[j / 2] >> ((j % 2) * 4)) & 0x0F;
+                    od[kk * self.f + f0 + j] = ((nib << 4) as i8) >> 4; // sign-extend
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Every packing of one layer's weights the dispatcher can choose from.
+/// Built once at model-load time; layers whose codes don't fit an encoding
+/// simply leave that slot empty (e.g. an 8-bit stem has neither).
+#[derive(Debug, Clone, Default)]
+pub struct PackedLayer {
+    pub ternary: Option<PackedTernaryMatrix>,
+    pub i4: Option<PackedI4Matrix>,
+}
+
+impl PackedLayer {
+    /// Pack whatever encodings the codes actually fit. `alpha_per_filter` /
+    /// `cluster` attach scale metadata when known (pass `&[], 0` to skip).
+    pub fn build(wq: &Tensor<i8>, alpha_per_filter: &[f32], cluster: usize) -> Self {
+        let mut out = Self::default();
+        if wq.is_empty() {
+            return out;
+        }
+        let codes = wq.data();
+        if codes.iter().all(|&c| (-1..=1).contains(&c)) {
+            let mut t = PackedTernaryMatrix::from_hwio(wq).expect("validated ternary codes");
+            t.set_cluster_scales(alpha_per_filter, cluster);
+            out.ternary = Some(t);
+        }
+        if codes.iter().all(|&c| (-8..=7).contains(&c)) {
+            let mut q = PackedI4Matrix::from_hwio(wq).expect("validated i4 codes");
+            q.set_cluster_scales(alpha_per_filter, cluster);
+            out.i4 = Some(q);
+        }
+        out
+    }
+
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_ternary(k: usize, f: usize, seed: u64) -> Tensor<i8> {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::new(&[k, f], (0..k * f).map(|_| rng.next_below(3) as i8 - 1).collect()).unwrap()
+    }
+
+    #[test]
+    fn test_ternary_roundtrip_awkward_shapes() {
+        for (k, f) in [(1, 1), (3, 5), (7, 16), (9, 17), (5, 33), (2, 64)] {
+            let w = random_ternary(k, f, (k * 100 + f) as u64);
+            let p = PackedTernaryMatrix::from_hwio(&w).unwrap();
+            assert_eq!(p.n_panels(), f.div_ceil(PANEL_F));
+            assert_eq!(p.to_dense().data(), w.data(), "k={k} f={f}");
+        }
+    }
+
+    #[test]
+    fn test_i4_roundtrip() {
+        let mut rng = SplitMix64::new(3);
+        let (k, f) = (6, 21);
+        let w = Tensor::new(&[k, f], (0..k * f).map(|_| rng.next_below(16) as i8 - 8).collect())
+            .unwrap();
+        let p = PackedI4Matrix::from_hwio(&w).unwrap();
+        assert_eq!(p.to_dense().data(), w.data());
+    }
+
+    #[test]
+    fn test_rejects_out_of_range_codes() {
+        assert!(PackedTernaryMatrix::from_codes(&[0, 2], 1, 2).is_err());
+        assert!(PackedI4Matrix::from_codes(&[0, 9], 1, 2).is_err());
+        assert!(PackedTernaryMatrix::from_codes(&[0; 3], 2, 2).is_err()); // length
+    }
+
+    #[test]
+    fn test_hwio_flattening_matches_reshape() {
+        // 4-D HWIO tensor packs identically to its (K, F) reshape
+        let w4 = {
+            let mut rng = SplitMix64::new(9);
+            Tensor::new(&[3, 3, 2, 5], (0..90).map(|_| rng.next_below(3) as i8 - 1).collect())
+                .unwrap()
+        };
+        let flat = w4.clone().reshape(&[18, 5]).unwrap();
+        let a = PackedTernaryMatrix::from_hwio(&w4).unwrap();
+        let b = PackedTernaryMatrix::from_hwio(&flat).unwrap();
+        assert_eq!(a.to_dense().data(), b.to_dense().data());
+        assert_eq!(a.k, 18);
+        assert_eq!(a.f, 5);
+    }
+
+    #[test]
+    fn test_storage_and_scales() {
+        let w = random_ternary(36, 32, 1);
+        let mut p = PackedTernaryMatrix::from_hwio(&w).unwrap();
+        // 1 panel x 36 rows x (32 codes / 4 per byte)
+        assert_eq!(p.storage_bytes(), 36 * 8);
+        let alphas: Vec<f32> = (0..32).map(|f| 0.5 + (f / 4) as f32).collect();
+        p.set_cluster_scales(&alphas, 4);
+        assert_eq!(p.scales.len(), 8);
+        assert_eq!(p.storage_bytes(), 2 * 36 * 4 + 16);
+        for fi in 0..32 {
+            let want = alphas[fi];
+            let got = p.filter_scale(fi);
+            assert!((got - want).abs() / want < 1.0 / 128.0, "filter {fi}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn test_packed_layer_build_selects_encodings() {
+        let tern = random_ternary(4, 4, 7);
+        let l = PackedLayer::build(&tern, &[], 0);
+        assert!(l.ternary.is_some() && l.i4.is_some()); // ternary fits both
+
+        let i4only = Tensor::new(&[2, 2], vec![7i8, -8, 3, 0]).unwrap();
+        let l = PackedLayer::build(&i4only, &[], 0);
+        assert!(l.ternary.is_none() && l.i4.is_some());
+
+        let wide = Tensor::new(&[2, 2], vec![127i8, -127, 3, 0]).unwrap();
+        let l = PackedLayer::build(&wide, &[], 0);
+        assert!(l.ternary.is_none() && l.i4.is_none());
+    }
+}

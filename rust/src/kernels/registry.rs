@@ -1,0 +1,217 @@
+//! Kernel selection: which GEMM runs a given layer.
+//!
+//! Dispatch rules (see DESIGN.md §kernels):
+//! * an explicit choice (`--kernel`, `Config.kernel`) wins whenever the
+//!   layer has the encoding it needs; a layer that can't satisfy it (e.g.
+//!   an 8-bit stem under `--kernel ternary`) falls back to the auto rule so
+//!   a forced run never aborts mid-network;
+//! * auto prefers the cheapest encoding the layer supports:
+//!   packed-ternary > packed-i4 > dense i8 zero-skip.
+//!
+//! Every kernel yields bit-identical `i32` accumulators, so selection is a
+//! pure performance decision — `forward_quant` logits are invariant under
+//! any choice (property-tested in `rust/tests/kernels_equivalence.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
+use super::packed::PackedLayer;
+use super::threadpool::ThreadPool;
+
+/// The GEMM implementations the registry can dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// dense i8 x i8 with the activation zero-skip branch
+    I8ZeroSkip,
+    /// dense i8 x i8, branch-free (LLVM-vectorized inner loop)
+    I8Dense,
+    /// multiply-free 2-bit packed ternary engine
+    PackedTernary,
+    /// packed 4-bit engine
+    PackedI4,
+}
+
+/// All kernels, in auto-preference order for sub-8-bit weights.
+pub const ALL_KERNELS: [KernelKind; 4] =
+    [KernelKind::PackedTernary, KernelKind::PackedI4, KernelKind::I8ZeroSkip, KernelKind::I8Dense];
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelKind::I8ZeroSkip => "i8",
+            KernelKind::I8Dense => "i8-dense",
+            KernelKind::PackedTernary => "ternary",
+            KernelKind::PackedI4 => "i4",
+        })
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "i8" | "i8-zero-skip" => KernelKind::I8ZeroSkip,
+            "i8-dense" | "dense" => KernelKind::I8Dense,
+            "ternary" | "packed-ternary" => KernelKind::PackedTernary,
+            "i4" | "packed-i4" => KernelKind::PackedI4,
+            other => bail!("unknown kernel '{other}' (try auto|i8|i8-dense|ternary|i4)"),
+        })
+    }
+}
+
+/// Runtime kernel dispatcher: an optional forced choice plus the thread
+/// pool the packed kernels parallelize on.
+#[derive(Debug, Clone)]
+pub struct KernelRegistry {
+    choice: Option<KernelKind>,
+    pool: ThreadPool,
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+impl KernelRegistry {
+    pub fn new(choice: Option<KernelKind>, threads: usize) -> Self {
+        Self { choice, pool: ThreadPool::new(threads) }
+    }
+
+    /// Auto selection, single-threaded (the library default — callers that
+    /// want parallel GEMMs size the pool from `Config::kernel_registry`).
+    pub fn auto() -> Self {
+        Self::new(None, 1)
+    }
+
+    /// Parse a CLI/config kernel name; `"auto"` (or empty) means no force.
+    pub fn parse(name: &str, threads: usize) -> Result<Self> {
+        let choice = match name {
+            "" | "auto" => None,
+            other => Some(other.parse()?),
+        };
+        Ok(Self::new(choice, threads))
+    }
+
+    pub fn choice(&self) -> Option<KernelKind> {
+        self.choice
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Resolve the kernel that will actually run for a layer with the given
+    /// packed encodings available.
+    pub fn select(&self, packed: &PackedLayer) -> KernelKind {
+        match self.choice {
+            Some(KernelKind::PackedTernary) if packed.ternary.is_some() => KernelKind::PackedTernary,
+            Some(KernelKind::PackedI4) if packed.i4.is_some() => KernelKind::PackedI4,
+            Some(k @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense)) => k,
+            _ => {
+                // auto rule (also the fallback for an unsatisfiable force)
+                if packed.ternary.is_some() {
+                    KernelKind::PackedTernary
+                } else if packed.i4.is_some() {
+                    KernelKind::PackedI4
+                } else {
+                    KernelKind::I8ZeroSkip
+                }
+            }
+        }
+    }
+
+    /// Dispatch one GEMM: `a` (M,K) i8 activations, `dense` the (K,F) i8
+    /// codes, `packed` the layer's packed encodings. Returns (M,F) i32.
+    pub fn gemm(&self, a: &Tensor<i8>, dense: &Tensor<i8>, packed: &PackedLayer) -> Tensor<i32> {
+        self.gemm_with(a, packed, || dense.clone())
+    }
+
+    /// Like [`Self::gemm`] but the dense (K,F) operand is produced lazily —
+    /// the packed kernels never touch it, so callers that keep weights
+    /// packed (the lpinfer hot path) skip the dense materialization.
+    pub fn gemm_with(
+        &self,
+        a: &Tensor<i8>,
+        packed: &PackedLayer,
+        dense: impl FnOnce() -> Tensor<i8>,
+    ) -> Tensor<i32> {
+        match self.select(packed) {
+            KernelKind::I8ZeroSkip => gemm_i8(a, &dense()),
+            KernelKind::I8Dense => gemm_i8_dense(a, &dense()),
+            KernelKind::PackedTernary => {
+                gemm_packed_ternary(a, packed.ternary.as_ref().expect("selected"), &self.pool)
+            }
+            KernelKind::PackedI4 => {
+                gemm_packed_i4(a, packed.i4.as_ref().expect("selected"), &self.pool)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn tern_layer(k: usize, f: usize, seed: u64) -> (Tensor<i8>, PackedLayer) {
+        let mut rng = SplitMix64::new(seed);
+        let wd =
+            Tensor::new(&[k, f], (0..k * f).map(|_| rng.next_below(3) as i8 - 1).collect()).unwrap();
+        let packed = PackedLayer::build(&wd, &[], 0);
+        (wd, packed)
+    }
+
+    #[test]
+    fn test_parse_and_display() {
+        for k in ALL_KERNELS {
+            assert_eq!(k.to_string().parse::<KernelKind>().unwrap(), k);
+        }
+        assert_eq!("packed-ternary".parse::<KernelKind>().unwrap(), KernelKind::PackedTernary);
+        assert!("warp".parse::<KernelKind>().is_err());
+        assert!(KernelRegistry::parse("auto", 1).unwrap().choice().is_none());
+        assert!(KernelRegistry::parse("warp", 1).is_err());
+    }
+
+    #[test]
+    fn test_auto_prefers_cheapest_encoding() {
+        let (_, tern) = tern_layer(4, 4, 1);
+        let reg = KernelRegistry::auto();
+        assert_eq!(reg.select(&tern), KernelKind::PackedTernary);
+
+        let mut no_tern = tern.clone();
+        no_tern.ternary = None;
+        assert_eq!(reg.select(&no_tern), KernelKind::PackedI4);
+        assert_eq!(reg.select(&PackedLayer::none()), KernelKind::I8ZeroSkip);
+    }
+
+    #[test]
+    fn test_forced_choice_with_fallback() {
+        let (_, tern) = tern_layer(4, 4, 2);
+        let reg = KernelRegistry::new(Some(KernelKind::I8Dense), 1);
+        assert_eq!(reg.select(&tern), KernelKind::I8Dense);
+        // forcing ternary on a layer with no ternary encoding falls back
+        let reg = KernelRegistry::new(Some(KernelKind::PackedTernary), 1);
+        assert_eq!(reg.select(&PackedLayer::none()), KernelKind::I8ZeroSkip);
+    }
+
+    #[test]
+    fn test_dispatch_is_bit_exact_across_kernels() {
+        let (k, f, m) = (27, 18, 5);
+        let (wd, packed) = tern_layer(k, f, 3);
+        let mut rng = SplitMix64::new(4);
+        let a = Tensor::new(
+            &[m, k],
+            (0..m * k).map(|_| (rng.next_below(255) as i16 - 127) as i8).collect(),
+        )
+        .unwrap();
+        let want = KernelRegistry::new(Some(KernelKind::I8Dense), 1).gemm(&a, &wd, &packed);
+        for kind in ALL_KERNELS {
+            let reg = KernelRegistry::new(Some(kind), 2);
+            assert_eq!(reg.gemm(&a, &wd, &packed).data(), want.data(), "kernel {kind}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Scoped worker pool for data-parallel kernels.
+//!
+//! Deliberately tiny: GEMM calls parallelize over disjoint output-row
+//! blocks, so each "job" is a `(row range, &mut output chunk)` pair and
+//! `std::thread::scope` gives us borrow-checked access to the shared
+//! operands without `Arc` or channels. Threads are spawned per call — a
+//! conv-layer GEMM runs for hundreds of microseconds to milliseconds, so
+//! spawn cost (~10 µs) is noise, and there are no idle workers burning CPU
+//! between requests on the serving path.
+
+/// A fixed-width scoped thread pool.
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl ThreadPool {
+    /// `threads == 0` means "use all available cores".
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(usize::from).unwrap_or(1)
+        } else {
+            threads
+        };
+        Self { threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split a row-major `(rows, cols)` output buffer into contiguous row
+    /// blocks and run `body(first_row, n_rows, block)` on each, in parallel
+    /// across up to `threads` scoped threads. Blocks never shrink below
+    /// `min_rows` rows (small problems stay single-threaded), and the body
+    /// must fill its block independently of every other block.
+    pub fn run_row_blocks<T: Send>(
+        &self,
+        out: &mut [T],
+        rows: usize,
+        cols: usize,
+        min_rows: usize,
+        body: impl Fn(usize, usize, &mut [T]) + Sync,
+    ) {
+        assert_eq!(out.len(), rows * cols, "output buffer shape mismatch");
+        if rows == 0 {
+            return;
+        }
+        // floor division keeps every block >= min_rows (the doc contract)
+        let blocks = self.threads.min((rows / min_rows.max(1)).max(1));
+        if blocks == 1 {
+            body(0, rows, out);
+            return;
+        }
+        let rows_per = rows.div_ceil(blocks);
+        std::thread::scope(|s| {
+            let body = &body;
+            let mut rest = out;
+            let mut row0 = 0;
+            while row0 < rows {
+                let take = rows_per.min(rows - row0);
+                let tail = std::mem::take(&mut rest);
+                let (block, tail) = tail.split_at_mut(take * cols);
+                rest = tail;
+                let first = row0;
+                s.spawn(move || body(first, take, block));
+                row0 += take;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn test_zero_means_all_cores() {
+        assert!(ThreadPool::new(0).threads() >= 1);
+        assert_eq!(ThreadPool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn test_blocks_cover_exactly_once() {
+        for threads in [1, 2, 4, 7] {
+            for rows in [1usize, 2, 5, 16, 33] {
+                let cols = 3;
+                let mut out = vec![0u32; rows * cols];
+                ThreadPool::new(threads).run_row_blocks(&mut out, rows, cols, 1, |r0, n, block| {
+                    assert_eq!(block.len(), n * cols);
+                    for (i, v) in block.iter_mut().enumerate() {
+                        *v += (r0 * cols + i) as u32 + 1;
+                    }
+                });
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(*v, i as u32 + 1, "threads={threads} rows={rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_min_rows_limits_parallelism() {
+        let calls = AtomicUsize::new(0);
+        let mut out = vec![0u8; 8 * 2];
+        ThreadPool::new(8).run_row_blocks(&mut out, 8, 2, 8, |_, _, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1); // 8 rows / min 8 => one block
+    }
+}

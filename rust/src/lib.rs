@@ -7,11 +7,18 @@
 //! XLA artifacts (JAX + Pallas at build time, PJRT at run time).
 //!
 //! Layer map (see DESIGN.md):
-//! * [`coordinator`] — request router, dynamic batcher, worker pool (L3).
-//! * [`runtime`]     — PJRT client wrapper: load HLO text artifacts, execute.
+//! * [`coordinator`] — request router, dynamic batcher, worker pool (L3);
+//!   executors: PJRT (`pjrt` feature) or the pure-Rust `LpExecutor`.
+//! * [`runtime`]     — PJRT client wrapper: load HLO text artifacts, execute
+//!   (stubbed without the `pjrt` feature — the `xla` crate is not vendorable).
+//! * [`kernels`]     — packed-ternary execution engine: column-blocked 2-bit /
+//!   i4 weight layouts, multiply-free cluster GEMM, scoped thread pool, and
+//!   the `KernelRegistry` runtime dispatch (`--kernel` override).
 //! * [`quant`]       — paper Algorithms 1 & 2 (mirrors `python/compile/quantize.py`).
-//! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8).
-//! * [`lpinfer`]     — pure-Rust integer inference pipeline (cross-check + bench).
+//! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8)
+//!   + the 2-bit/4-bit storage packing the kernels consume.
+//! * [`lpinfer`]     — pure-Rust integer inference pipeline, dispatching every
+//!   conv/FC GEMM through the kernel registry (cross-check + bench + serving).
 //! * [`nn`]          — pure-Rust f32 reference pipeline (baseline).
 //! * [`opcount`]     — analytic op-count / energy model (§3.3, 16× claim).
 //! * [`model`]       — network descriptions incl. exact ResNet-18/50/101 tables.
@@ -27,6 +34,7 @@ pub mod data;
 pub mod dfp;
 pub mod io;
 pub mod json;
+pub mod kernels;
 pub mod lpinfer;
 pub mod model;
 pub mod nn;

@@ -4,9 +4,13 @@
 //! Replicates `python/compile/model.py::forward_quant(engine="sim")`
 //! op-for-op: int8 DFP activations, int8/ternary weights, i32 accumulation,
 //! per-filter scale (cluster α̂ · 2^exp_in), folded re-estimated BatchNorm,
-//! round-half-even requantization. The integration tests check rust-vs-jax
-//! agreement on the exported quantized model; the benches use this pipeline
-//! to measure the realizable ternary-vs-fp32 CPU speedup (E5).
+//! round-half-even requantization. Every conv/FC GEMM dispatches through
+//! [`crate::kernels::KernelRegistry`], so sub-8-bit layers run on the
+//! packed multiply-free engines while staying bit-exact with the dense i8
+//! kernels (see `rust/tests/kernels_equivalence.rs`). The integration tests
+//! check rust-vs-jax agreement on the exported quantized model; the benches
+//! use this pipeline to measure the realizable ternary-vs-fp32 CPU speedup
+//! (E5).
 
 use std::collections::BTreeMap;
 
@@ -14,9 +18,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::dfp::round_half_even;
 use crate::io::TensorMap;
+use crate::kernels::{KernelRegistry, PackedLayer};
 use crate::model::{ConvLayer, Network};
 use crate::nn::im2col;
 use crate::tensor::Tensor;
+
+pub use crate::kernels::{gemm_i8, gemm_i8_dense};
 
 /// Quantized parameters for one conv layer.
 #[derive(Debug, Clone)]
@@ -30,6 +37,27 @@ pub struct QConvParams {
     /// DFP exponent of this layer's output activations.
     pub act_exp: i32,
     pub w_bits: u32,
+    /// packed encodings of `wq` for the kernels/ dispatch (built once here,
+    /// so the hot path never re-derives or unpacks weights).
+    pub packed: PackedLayer,
+}
+
+impl QConvParams {
+    /// Build layer params, packing `wq` into every encoding it fits.
+    /// `cluster` (filters per α̂ cluster, 0 = unknown) only attaches scale
+    /// metadata to the packed matrices.
+    pub fn new(
+        wq: Tensor<i8>,
+        w_scale: Vec<f32>,
+        bn_scale: Vec<f32>,
+        bn_shift: Vec<f32>,
+        act_exp: i32,
+        w_bits: u32,
+        cluster: usize,
+    ) -> Self {
+        let packed = PackedLayer::build(&wq, &w_scale, cluster);
+        Self { wq, w_scale, bn_scale, bn_shift, act_exp, w_bits, packed }
+    }
 }
 
 /// Whole quantized model (mirrors the python `QModel` export).
@@ -43,6 +71,8 @@ pub struct QModelParams {
     pub feat_exp: i32,
     pub cluster: usize,
     pub w_bits: u32,
+    /// packed encodings of `fc_wq` (same dispatch as the conv layers).
+    pub fc_packed: PackedLayer,
 }
 
 impl QModelParams {
@@ -63,35 +93,84 @@ impl QModelParams {
                 .as_i32()?
                 .data()[0])
         };
+        let cluster = i32s("meta.cluster")? as usize;
         let mut convs = BTreeMap::new();
         for l in &net.layers {
             let n = &l.name;
             convs.insert(
                 n.clone(),
-                QConvParams {
-                    wq: map
-                        .get(&format!("{n}.wq"))
+                QConvParams::new(
+                    map.get(&format!("{n}.wq"))
                         .with_context(|| format!("missing {n}.wq"))?
                         .as_i8()?
                         .clone(),
-                    w_scale: f32v(&format!("{n}.w_scale"))?,
-                    bn_scale: f32v(&format!("{n}.bn_scale"))?,
-                    bn_shift: f32v(&format!("{n}.bn_shift"))?,
-                    act_exp: i32s(&format!("{n}.act_exp"))?,
-                    w_bits: i32s(&format!("{n}.w_bits"))? as u32,
-                },
+                    f32v(&format!("{n}.w_scale"))?,
+                    f32v(&format!("{n}.bn_scale"))?,
+                    f32v(&format!("{n}.bn_shift"))?,
+                    i32s(&format!("{n}.act_exp"))?,
+                    i32s(&format!("{n}.w_bits"))? as u32,
+                    cluster,
+                ),
             );
         }
+        let fc_wq = map.get("fc.wq").context("missing fc.wq")?.as_i8()?.clone();
+        let fc_scale = f32v("fc.scale")?;
+        let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, cluster);
         Ok(Self {
             convs,
-            fc_wq: map.get("fc.wq").context("missing fc.wq")?.as_i8()?.clone(),
-            fc_scale: f32v("fc.scale")?,
+            fc_wq,
+            fc_scale,
             fc_b: f32v("fc.b")?,
             in_exp: i32s("meta.in_exp")?,
             feat_exp: i32s("meta.feat_exp")?,
-            cluster: i32s("meta.cluster")? as usize,
+            cluster,
             w_bits: i32s("meta.w_bits")? as u32,
+            fc_packed,
         })
+    }
+
+    /// Deterministic synthetic model (random codes, benign scales) for
+    /// tests, benches and the artifact-free serving demo: `w_bits` bounds
+    /// the code range (2 -> ternary, 4 -> [-7,7], 8 -> [-127,127]).
+    pub fn synthetic(net: &Network, seed: u64, w_bits: u32, cluster: usize) -> Self {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(seed);
+        let qmax = crate::dfp::qmax(w_bits).min(127) as i64;
+        let mut code = move |n: usize| -> Vec<i8> {
+            (0..n).map(|_| (rng.next_below((2 * qmax + 1) as u64) as i64 - qmax) as i8).collect()
+        };
+        let w_scale = 0.1 / qmax as f32;
+        let mut convs = BTreeMap::new();
+        for l in &net.layers {
+            convs.insert(
+                l.name.clone(),
+                QConvParams::new(
+                    Tensor::new(&[l.kh, l.kw, l.cin, l.cout], code(l.kh * l.kw * l.cin * l.cout))
+                        .expect("conv shape"),
+                    vec![w_scale; l.cout],
+                    vec![1.0; l.cout],
+                    vec![0.0; l.cout],
+                    -4,
+                    w_bits,
+                    cluster,
+                ),
+            );
+        }
+        let fc_wq =
+            Tensor::new(&[net.fc_in, net.fc_out], code(net.fc_in * net.fc_out)).expect("fc shape");
+        let fc_scale = vec![w_scale; net.fc_out];
+        let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, cluster);
+        Self {
+            convs,
+            fc_wq,
+            fc_scale,
+            fc_b: vec![0.0; net.fc_out],
+            in_exp: -5,
+            feat_exp: -5,
+            cluster,
+            w_bits,
+            fc_packed,
+        }
     }
 
     /// Sanity-check layer shapes against the network description.
@@ -113,59 +192,6 @@ impl QModelParams {
     }
 }
 
-/// int8 x int8 -> i32 GEMM: (M,K) x (K,F) -> (M,F).
-///
-/// PERF (§Perf L3): the `av == 0` skip exploits post-ReLU activation
-/// sparsity (~40-60 % zeros in the real pipeline). For dense operands the
-/// branch costs ~15 %; `gemm_i8_dense` below is the branch-free variant —
-/// the bench harness quantifies both (EXPERIMENTS.md §Perf).
-pub fn gemm_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
-    let (m, k) = (a.dim(0), a.dim(1));
-    let (k2, f) = (b.dim(0), b.dim(1));
-    assert_eq!(k, k2);
-    let mut out = Tensor::<i32>::zeros(&[m, f]);
-    let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut od[i * f..(i + 1) * f];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let av = i32::from(av);
-            let brow = &bd[kk * f..(kk + 1) * f];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * i32::from(bv);
-            }
-        }
-    }
-    out
-}
-
-/// Branch-free dense variant of [`gemm_i8`]: widens the activation once
-/// per (row, k) and lets LLVM vectorize the inner f-loop.
-pub fn gemm_i8_dense(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
-    let (m, k) = (a.dim(0), a.dim(1));
-    let (k2, f) = (b.dim(0), b.dim(1));
-    assert_eq!(k, k2);
-    let mut out = Tensor::<i32>::zeros(&[m, f]);
-    let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut od[i * f..(i + 1) * f];
-        for (kk, &av) in arow.iter().enumerate() {
-            let av = i32::from(av);
-            let brow = &bd[kk * f..(kk + 1) * f];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * i32::from(bv);
-            }
-        }
-    }
-    out
-}
-
 /// f32 -> int8 DFP requantization (round-half-even, symmetric clip).
 pub fn requant(x: &[f32], exp: i32) -> Vec<i8> {
     let scale = 2f64.powi(-exp);
@@ -181,6 +207,7 @@ struct ConvOut {
     z: Option<Tensor<f32>>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn qconv(
     x: &Tensor<i8>,
     exp_in: i32,
@@ -189,14 +216,12 @@ fn qconv(
     relu: bool,
     skip: Option<&Tensor<f32>>,
     keep_f32: bool,
+    reg: &KernelRegistry,
 ) -> ConvOut {
     let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
-    let wflat = p
-        .wq
-        .clone()
-        .reshape(&[l.kh * l.kw * l.cin, l.cout])
-        .expect("weight reshape");
-    let acc = gemm_i8(&cols, &wflat);
+    let acc = reg.gemm_with(&cols, &p.packed, || {
+        p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape")
+    });
     let cout = l.cout;
     let exp_scale = 2f32.powi(exp_in);
     let mut z = vec![0.0f32; acc.len()];
@@ -221,15 +246,28 @@ fn qconv(
     ConvOut { q, z: zt }
 }
 
-/// Forward a f32 image batch through the integer pipeline. Returns logits.
+/// Forward a f32 image batch through the integer pipeline with the default
+/// (auto, single-thread) kernel registry. Returns logits.
 pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
+    forward_quant_with(params, net, x, &KernelRegistry::auto())
+}
+
+/// Forward pass with an explicit kernel registry (kernel choice + threads).
+/// Logits are bit-identical for every registry configuration.
+pub fn forward_quant_with(
+    params: &QModelParams,
+    net: &Network,
+    x: &Tensor<f32>,
+    reg: &KernelRegistry,
+) -> Tensor<f32> {
     let layers: BTreeMap<&str, &ConvLayer> =
         net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
 
     // quantize input image to int8 DFP
     let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
 
-    let stem = qconv(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, false);
+    let stem =
+        qconv(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, false, reg);
     let mut hq = stem.q;
     let mut exp_h = params.convs["stem"].act_exp;
 
@@ -245,16 +283,16 @@ pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> T
         // skip path in f32 (mirrors the python sim exactly)
         let skip_f = if has_proj {
             let proj = &net.layers[i + 2];
-            qconv(&hq, exp_h, proj, &params.convs[&proj.name], false, None, true)
+            qconv(&hq, exp_h, proj, &params.convs[&proj.name], false, None, true, reg)
                 .z
                 .expect("proj keeps f32")
         } else {
             let s = 2f32.powi(exp_h);
             hq.map(|v| f32::from(v) * s)
         };
-        let h1 = qconv(&hq, exp_h, c1, &params.convs[&c1.name], true, None, false);
+        let h1 = qconv(&hq, exp_h, c1, &params.convs[&c1.name], true, None, false, reg);
         let exp1 = params.convs[&c1.name].act_exp;
-        let h2 = qconv(&h1.q, exp1, c2, &params.convs[&c2.name], true, Some(&skip_f), false);
+        let h2 = qconv(&h1.q, exp1, c2, &params.convs[&c2.name], true, Some(&skip_f), false, reg);
         exp_h = params.convs[&c2.name].act_exp;
         hq = h2.q;
         i += if has_proj { 3 } else { 2 };
@@ -282,7 +320,7 @@ pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> T
         }
     }
     let fq = Tensor::new(&[n, c], requant(&feat, params.feat_exp)).expect("feat shape");
-    let acc = gemm_i8(&fq, &params.fc_wq);
+    let acc = reg.gemm(&fq, &params.fc_wq, &params.fc_packed);
     let ncls = params.fc_b.len();
     let fs = 2f32.powi(params.feat_exp);
     let mut logits = Tensor::<f32>::zeros(&[n, ncls]);
@@ -305,21 +343,11 @@ mod tests {
     use crate::util::SplitMix64;
 
     #[test]
-    fn test_gemm_i8_exact() {
+    fn test_gemm_i8_reexport_exact() {
         let a = Tensor::new(&[2, 3], vec![1i8, -2, 3, 0, 5, -6]).unwrap();
         let b = Tensor::new(&[3, 2], vec![1i8, 2, 3, 4, 5, 6]).unwrap();
         let c = gemm_i8(&a, &b);
         assert_eq!(c.data(), &[10, 12, -15, -16]);
-    }
-
-    #[test]
-    fn test_gemm_i8_saturation_free() {
-        // worst case |acc| = K * 127 * 127 must not overflow i32
-        let k = 2048;
-        let a = Tensor::new(&[1, k], vec![127i8; k]).unwrap();
-        let b = Tensor::new(&[k, 1], vec![127i8; k]).unwrap();
-        let c = gemm_i8(&a, &b);
-        assert_eq!(c.data()[0], 127 * 127 * k as i32);
     }
 
     #[test]
@@ -345,16 +373,18 @@ mod tests {
             residual: false,
             relu: false,
         };
-        let p = QConvParams {
-            wq: Tensor::new(&[1, 1, 2, 2], vec![1i8, 0, 0, 1]).unwrap(),
-            w_scale: vec![1.0; 2],
-            bn_scale: vec![1.0; 2],
-            bn_shift: vec![0.0; 2],
-            act_exp: 0,
-            w_bits: 2,
-        };
+        let p = QConvParams::new(
+            Tensor::new(&[1, 1, 2, 2], vec![1i8, 0, 0, 1]).unwrap(),
+            vec![1.0; 2],
+            vec![1.0; 2],
+            vec![0.0; 2],
+            0,
+            2,
+            2,
+        );
+        assert!(p.packed.ternary.is_some(), "ternary codes must pack");
         let x = Tensor::new(&[1, 2, 2, 2], vec![1i8, -2, 3, -4, 5, -6, 7, -8]).unwrap();
-        let out = qconv(&x, 0, &l, &p, false, None, false);
+        let out = qconv(&x, 0, &l, &p, false, None, false, &KernelRegistry::auto());
         assert_eq!(out.q.data(), x.data());
     }
 
@@ -362,43 +392,40 @@ mod tests {
     fn test_forward_quant_tiny_net_finite() {
         // build a minimal 1-block net with random ternary weights and run it
         let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
-        let mut rng = SplitMix64::new(11);
-        let mut convs = BTreeMap::new();
-        for l in &net.layers {
-            let n = l.kh * l.kw * l.cin * l.cout;
-            let wq: Vec<i8> = (0..n).map(|_| rng.next_below(3) as i8 - 1).collect();
-            convs.insert(
-                l.name.clone(),
-                QConvParams {
-                    wq: Tensor::new(&[l.kh, l.kw, l.cin, l.cout], wq).unwrap(),
-                    w_scale: vec![0.1; l.cout],
-                    bn_scale: vec![1.0; l.cout],
-                    bn_shift: vec![0.0; l.cout],
-                    act_exp: -4,
-                    w_bits: 2,
-                },
-            );
-        }
-        let fcn = net.fc_in * net.fc_out;
-        let params = QModelParams {
-            convs,
-            fc_wq: Tensor::new(
-                &[net.fc_in, net.fc_out],
-                (0..fcn).map(|_| rng.next_below(3) as i8 - 1).collect(),
-            )
-            .unwrap(),
-            fc_scale: vec![0.1; net.fc_out],
-            fc_b: vec![0.0; net.fc_out],
-            in_exp: -5,
-            feat_exp: -5,
-            cluster: 4,
-            w_bits: 2,
-        };
+        let params = QModelParams::synthetic(&net, 11, 2, 4);
         params.validate(&net).unwrap();
+        let mut rng = SplitMix64::new(11);
         let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
         let logits = forward_quant(&params, &net, &x);
         assert_eq!(logits.shape(), &[2, 3]);
         assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn test_forward_quant_invariant_under_kernel_choice() {
+        let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
+        let params = QModelParams::synthetic(&net, 5, 2, 4);
+        let mut rng = SplitMix64::new(6);
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
+        for kind in crate::kernels::ALL_KERNELS {
+            let reg = KernelRegistry::new(Some(kind), 2);
+            let got = forward_quant_with(&params, &net, &x, &reg);
+            assert_eq!(got.data(), want.data(), "kernel {kind}");
+        }
+    }
+
+    #[test]
+    fn test_synthetic_packs_expected_encodings() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let tern = QModelParams::synthetic(&net, 1, 2, 4);
+        assert!(tern.convs.values().all(|p| p.packed.ternary.is_some()));
+        assert!(tern.fc_packed.ternary.is_some());
+        let i4 = QModelParams::synthetic(&net, 1, 4, 4);
+        assert!(i4.convs.values().all(|p| p.packed.i4.is_some()));
+        let i8m = QModelParams::synthetic(&net, 1, 8, 4);
+        // full i8 codes fit neither sub-8-bit encoding
+        assert!(i8m.convs.values().any(|p| p.packed.ternary.is_none() && p.packed.i4.is_none()));
     }
 
     #[test]
@@ -413,6 +440,7 @@ mod tests {
             feat_exp: 0,
             cluster: 4,
             w_bits: 2,
+            fc_packed: PackedLayer::none(),
         };
         assert!(params.validate(&net).is_err());
     }

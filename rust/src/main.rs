@@ -2,8 +2,14 @@
 //!
 //! Subcommands:
 //!   serve      run the serving coordinator against AOT artifacts and a
-//!              synthetic ShapeSet load, reporting latency/throughput
+//!              synthetic ShapeSet load, reporting latency/throughput.
+//!              `--executor auto|lp|pjrt` picks the backend: `lp` is the
+//!              pure-Rust quantized pipeline (kernels/ packed GEMMs, needs
+//!              only qweights exports), `pjrt` the XLA artifacts; `auto`
+//!              prefers lp when qweights are present. `--kernel` forces a
+//!              GEMM implementation, `--threads` sizes its pool.
 //!   eval       evaluate artifact variants on the exported eval set
+//!              (same --executor/--kernel/--threads knobs as serve)
 //!   opcount    print the §3.3 op-replacement table for a network
 //!   quantize   ternarize a DFT weight file (rust-native Algorithm 1)
 //!   info       show the artifact manifest
@@ -11,6 +17,7 @@
 //! Examples:
 //!   dfp-infer opcount --network resnet-101
 //!   dfp-infer serve --artifacts artifacts --requests 512 --workers 1
+//!   dfp-infer serve --executor lp --kernel ternary --threads 4
 //!   dfp-infer eval --artifacts artifacts --variants fp32,8a2w_n4
 
 use std::path::Path;
@@ -20,7 +27,7 @@ use anyhow::{bail, Context, Result};
 use dfp_infer::cli::Args;
 use dfp_infer::config::Config;
 use dfp_infer::coordinator::{
-    Coordinator, ExecutorFactory, PjrtExecutor, PrecisionClass, Request, Router,
+    Coordinator, Executor, ExecutorFactory, LpExecutor, PjrtExecutor, PrecisionClass, Request, Router,
 };
 use dfp_infer::io::read_dft;
 use dfp_infer::model;
@@ -127,30 +134,46 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let mut engine = runtime::Engine::new(&cfg.artifacts_dir)?;
-    println!("PJRT platform: {}", engine.platform());
+    let registry = cfg.kernel_registry()?;
+    let manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+    // auto mirrors cmd_serve: pjrt-enabled builds keep evaluating every
+    // variant (incl. the fp32 baseline); the offline build uses lp
+    let use_lp = match args.str_or("executor", "auto") {
+        "lp" => true,
+        "pjrt" => false,
+        "auto" => {
+            !cfg!(feature = "pjrt") && !LpExecutor::servable(&cfg.artifacts_dir, &manifest).is_empty()
+        }
+        other => bail!("unknown executor '{other}' (try auto|lp|pjrt)"),
+    };
+    let mut exec: Box<dyn Executor> = if use_lp {
+        println!("executor: lpinfer (kernel {}, {} GEMM threads)", cfg.kernel, registry.pool().threads());
+        Box::new(LpExecutor::from_artifacts(&cfg.artifacts_dir, registry)?)
+    } else {
+        let engine = PjrtExecutor::new(&cfg.artifacts_dir)?;
+        println!("executor: pjrt");
+        Box::new(engine)
+    };
+
     let eval = read_dft(&cfg.artifacts_dir.join("eval_data.dft"))?;
     let images = eval.get("images").context("eval images")?.as_f32()?.clone();
     let labels = eval.get("labels").context("eval labels")?.as_i32()?.clone();
     let n = images.dim(0);
     let img = images.dim(1);
     let px = img * img * 3;
+    let ncls = manifest.classes;
 
     let mut variants = args.get_list("variants");
     if variants.is_empty() {
-        variants = engine.manifest.variants.keys().cloned().collect();
+        variants = manifest.variants.keys().cloned().collect();
     }
-    let batch = *engine
-        .manifest
-        .batch_sizes
-        .iter()
-        .max()
-        .context("no batch sizes")?;
+    let batch = *manifest.batch_sizes.iter().max().context("no batch sizes")?;
 
     for variant in &variants {
-        let t = Timer::new();
-        let exe = engine.load(variant, batch)?;
-        let compile_ms = t.elapsed_ms();
+        if exec.batch_sizes(variant).is_empty() {
+            println!("{variant:<12} SKIP (executor cannot serve this variant)");
+            continue;
+        }
         let mut correct = 0usize;
         let mut seen = 0usize;
         let t = Timer::new();
@@ -159,9 +182,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
             let mut x = Tensor::<f32>::zeros(&[batch, img, img, 3]);
             x.data_mut()[..take * px]
                 .copy_from_slice(&images.data()[chunk * px..(chunk + take) * px]);
-            let logits = exe.run(&x)?;
+            let logits = exec.run_batch(variant, batch, &x)?;
             for i in 0..take {
-                let row = &logits.data()[i * 10..(i + 1) * 10];
+                let row = &logits.data()[i * ncls..(i + 1) * ncls];
                 let pred = row
                     .iter()
                     .enumerate()
@@ -176,12 +199,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
         }
         let dt = t.elapsed_s();
         println!(
-            "{:<12} acc {:.4} ({}/{})  compile {:.0} ms  exec {:.1} img/s",
+            "{:<12} acc {:.4} ({}/{})  exec {:.1} img/s",
             variant,
             correct as f64 / seen as f64,
             correct,
             seen,
-            compile_ms,
             seen as f64 / dt
         );
     }
@@ -192,16 +214,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
     let manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
-    let router = Router::from_manifest(&manifest)?;
-    let sizes: std::collections::BTreeMap<String, Vec<usize>> = manifest
-        .variants
-        .iter()
-        .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
-        .collect();
+    let servable = LpExecutor::servable(&cfg.artifacts_dir, &manifest);
+    // auto: a pjrt-enabled build keeps the old (full-variant) behavior;
+    // the offline build falls back to lp whenever it can serve anything
+    let use_lp = match args.str_or("executor", "auto") {
+        "lp" => true,
+        "pjrt" => false,
+        "auto" => !cfg!(feature = "pjrt") && !servable.is_empty(),
+        other => bail!("unknown executor '{other}' (try auto|lp|pjrt)"),
+    };
+    // validate --kernel/--threads up front so a typo'd kernel name errors
+    // on every executor path, not just lp
+    let registry = cfg.kernel_registry()?;
     let t = Timer::new();
-    let factories: Vec<ExecutorFactory> = (0..cfg.workers.max(1))
-        .map(|_| PjrtExecutor::factory(cfg.artifacts_dir.clone(), true))
-        .collect();
+    let (router, sizes, factories): (
+        Router,
+        std::collections::BTreeMap<String, Vec<usize>>,
+        Vec<ExecutorFactory>,
+    ) = if use_lp {
+        // pure-Rust path: serve the variants with a qweights export
+        let mut m = manifest.clone();
+        m.variants.retain(|n, _| servable.contains(n));
+        println!(
+            "executor: lpinfer (kernel {}, {} GEMM threads) over {:?}",
+            cfg.kernel,
+            registry.pool().threads(),
+            m.variants.keys().collect::<Vec<_>>()
+        );
+        let router = Router::from_manifest(&m)?;
+        let sizes = m
+            .variants
+            .keys()
+            .map(|v| (v.clone(), m.batch_sizes.clone()))
+            .collect();
+        let factories = (0..cfg.workers.max(1))
+            .map(|_| LpExecutor::factory(cfg.artifacts_dir.clone(), registry.clone()))
+            .collect();
+        (router, sizes, factories)
+    } else {
+        println!("executor: pjrt");
+        let router = Router::from_manifest(&manifest)?;
+        let sizes = manifest
+            .variants
+            .iter()
+            .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
+            .collect();
+        let factories = (0..cfg.workers.max(1))
+            .map(|_| PjrtExecutor::factory(cfg.artifacts_dir.clone(), true))
+            .collect();
+        (router, sizes, factories)
+    };
     println!(
         "routes: fast->{} balanced->{} accurate->{}",
         router.route(PrecisionClass::Fast),

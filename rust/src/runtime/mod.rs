@@ -1,9 +1,13 @@
 //! PJRT runtime — loads AOT HLO-text artifacts and executes them.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): one
-//! [`Engine`] per process, one compiled executable per
-//! (variant, batch size). The interchange is HLO *text* (see
-//! `python/compile/aot.py` for why not serialized protos).
+//! The real backend wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT):
+//! one [`Engine`] per process, one compiled executable per (variant, batch
+//! size), interchanging HLO *text* (see `python/compile/aot.py` for why not
+//! serialized protos). The `xla` crate cannot be vendored into this offline
+//! build, so it is gated behind the `pjrt` cargo feature: without it this
+//! module compiles a stub [`Engine`] that still reads manifests (so `info`
+//! and routing work) but refuses to execute — serving then uses the
+//! pure-Rust [`crate::coordinator::LpExecutor`] over the `kernels/` GEMMs.
 
 pub mod manifest;
 
@@ -16,10 +20,16 @@ pub use manifest::{Manifest, VariantInfo};
 
 use crate::tensor::Tensor;
 
+/// Error message returned by every execution entry point of the stub.
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "PJRT backend unavailable: built without the `pjrt` feature \
+     (use the pure-Rust executor: `dfp-infer serve --executor lp`)";
+
 /// A compiled model executable with a fixed batch size.
 pub struct Executable {
     pub variant: String,
     pub batch: usize,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     img: usize,
     classes: usize,
@@ -32,18 +42,30 @@ impl Executable {
         if x.shape() != want {
             bail!("input shape {:?} != executable batch shape {:?}", x.shape(), want);
         }
-        let lit = xla::Literal::vec1(x.data()).reshape(
-            &[self.batch as i64, self.img as i64, self.img as i64, 3],
-        )?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?; // lowered with return_tuple=True
-        let vals = out.to_vec::<f32>()?;
-        Tensor::new(&[self.batch, self.classes], vals)
+        #[cfg(feature = "pjrt")]
+        {
+            let lit = xla::Literal::vec1(x.data()).reshape(&[
+                self.batch as i64,
+                self.img as i64,
+                self.img as i64,
+                3,
+            ])?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?; // lowered with return_tuple=True
+            let vals = out.to_vec::<f32>()?;
+            Tensor::new(&[self.batch, self.classes], vals)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = self.classes;
+            bail!("{NO_PJRT}")
+        }
     }
 }
 
-/// The PJRT engine: client + executable cache.
+/// The PJRT engine: client + executable cache (stubbed without `pjrt`).
 pub struct Engine {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     pub manifest: Manifest,
@@ -51,16 +73,28 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Create a CPU PJRT client and read the artifact manifest.
+    /// Create a PJRT client (when built with `pjrt`) and read the manifest.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
             .context("loading artifact manifest")?;
-        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::from)?;
-        Ok(Self { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest, cache: BTreeMap::new() })
+        Ok(Self {
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu().map_err(anyhow::Error::from)?,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: BTreeMap::new(),
+        })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "unavailable (built without `pjrt`)".to_string()
+        }
     }
 
     /// Compile (or fetch cached) the executable for (variant, batch).
@@ -77,22 +111,29 @@ impl Engine {
                 .get(&batch)
                 .with_context(|| format!("variant '{variant}' has no batch-{batch} artifact"))?;
             let path = self.artifacts_dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .map_err(anyhow::Error::from)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(anyhow::Error::from)?;
-            self.cache.insert(
-                key.clone(),
-                Executable {
-                    variant: variant.to_string(),
-                    batch,
-                    exe,
-                    img: self.manifest.img,
-                    classes: self.manifest.classes,
-                },
-            );
+            #[cfg(feature = "pjrt")]
+            {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .map_err(anyhow::Error::from)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp).map_err(anyhow::Error::from)?;
+                self.cache.insert(
+                    key.clone(),
+                    Executable {
+                        variant: variant.to_string(),
+                        batch,
+                        exe,
+                        img: self.manifest.img,
+                        classes: self.manifest.classes,
+                    },
+                );
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                bail!("cannot compile {}: {NO_PJRT}", path.display());
+            }
         }
         Ok(&self.cache[&key])
     }
@@ -118,5 +159,30 @@ impl Engine {
             .get(variant)
             .map(|i| i.files.keys().copied().collect())
             .unwrap_or_default()
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_stub_engine_reads_manifest_but_refuses_to_execute() {
+        let dir = std::env::temp_dir().join(format!("dfp_rt_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"img": 8, "classes": 4, "batch_sizes": [1],
+                "variants": {"fp32": {"files": {"1": "a.hlo.txt"},
+                             "eval_acc": 0.9, "w_bits": 32, "cluster": 0}}}"#,
+        )
+        .unwrap();
+        let mut e = Engine::new(&dir).unwrap();
+        assert_eq!(e.batch_sizes("fp32"), vec![1]);
+        assert!(e.platform().contains("unavailable"));
+        let err = format!("{:#}", e.load("fp32", 1).unwrap_err());
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(e.load_all().is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

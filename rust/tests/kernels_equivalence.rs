@@ -1,0 +1,167 @@
+//! Kernel-equivalence property tests (mini-framework from
+//! `dfp_infer::testing`): every GEMM in the registry must produce bit-exact
+//! `i32` accumulators for the same operands, across random shapes, cluster
+//! sizes and thread counts — and therefore `forward_quant` logits must be
+//! invariant under every registry choice.
+
+use dfp_infer::kernels::{
+    gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary, KernelRegistry, PackedI4Matrix,
+    PackedTernaryMatrix, ThreadPool, ALL_KERNELS,
+};
+use dfp_infer::lpinfer::{forward_quant_with, QModelParams};
+use dfp_infer::model::resnet_mini;
+use dfp_infer::tensor::Tensor;
+use dfp_infer::testing::{check, Gen};
+use dfp_infer::util::SplitMix64;
+
+/// Random GEMM case: (m, k, f, activation sparsity, seed).
+#[derive(Debug, Clone)]
+struct GemmCase {
+    m: usize,
+    k: usize,
+    f: usize,
+    sparse: bool,
+    seed: u64,
+}
+
+struct GemmCaseGen;
+
+impl Gen for GemmCaseGen {
+    type Value = GemmCase;
+
+    fn generate(&self, rng: &mut SplitMix64) -> GemmCase {
+        GemmCase {
+            m: 1 + rng.next_below(24) as usize,
+            k: 1 + rng.next_below(96) as usize,
+            f: 1 + rng.next_below(80) as usize,
+            sparse: rng.next_below(2) == 1,
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &GemmCase) -> Vec<GemmCase> {
+        let mut out = Vec::new();
+        for (m, k, f) in [(1, v.k, v.f), (v.m, 1, v.f), (v.m, v.k, 1)] {
+            if (m, k, f) != (v.m, v.k, v.f) {
+                out.push(GemmCase { m, k, f, ..v.clone() });
+            }
+        }
+        out
+    }
+}
+
+fn activations(c: &GemmCase) -> Tensor<i8> {
+    let mut rng = SplitMix64::new(c.seed);
+    let data: Vec<i8> = (0..c.m * c.k)
+        .map(|_| {
+            let v = (rng.next_below(255) as i16 - 127) as i8;
+            if c.sparse && v < 0 {
+                0
+            } else {
+                v
+            }
+        })
+        .collect();
+    Tensor::new(&[c.m, c.k], data).unwrap()
+}
+
+#[test]
+fn prop_packed_ternary_bit_exact_vs_dense() {
+    check(120, &GemmCaseGen, |c| {
+        let a = activations(c);
+        let mut rng = SplitMix64::new(c.seed ^ 0xABCD);
+        let wd = Tensor::new(
+            &[c.k, c.f],
+            (0..c.k * c.f).map(|_| rng.next_below(3) as i8 - 1).collect::<Vec<i8>>(),
+        )
+        .unwrap();
+        let wp = PackedTernaryMatrix::from_hwio(&wd).map_err(|e| e.to_string())?;
+        let want = gemm_i8_dense(&a, &wd);
+        for threads in [1usize, 2, 4] {
+            let got = gemm_packed_ternary(&a, &wp, &ThreadPool::new(threads));
+            if got.data() != want.data() {
+                return Err(format!("ternary mismatch at {c:?} threads={threads}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_i4_bit_exact_vs_dense() {
+    check(120, &GemmCaseGen, |c| {
+        let a = activations(c);
+        let mut rng = SplitMix64::new(c.seed ^ 0x1234);
+        let wd = Tensor::new(
+            &[c.k, c.f],
+            (0..c.k * c.f).map(|_| rng.next_below(16) as i8 - 8).collect::<Vec<i8>>(),
+        )
+        .unwrap();
+        let wp = PackedI4Matrix::from_hwio(&wd).map_err(|e| e.to_string())?;
+        let want = gemm_i8_dense(&a, &wd);
+        for threads in [1usize, 2, 4] {
+            let got = gemm_packed_i4(&a, &wp, &ThreadPool::new(threads));
+            if got.data() != want.data() {
+                return Err(format!("i4 mismatch at {c:?} threads={threads}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_roundtrip_preserves_codes_across_cluster_sizes() {
+    // the packed layout is cluster-agnostic; scales are pure metadata
+    for cluster in [4usize, 16, 64] {
+        let mut rng = SplitMix64::new(cluster as u64);
+        let (k, f) = (18, 64);
+        let codes: Vec<i8> = (0..k * f).map(|_| rng.next_below(3) as i8 - 1).collect();
+        let mut p = PackedTernaryMatrix::from_codes(&codes, k, f).unwrap();
+        let alphas: Vec<f32> = (0..f).map(|i| 0.01 * (1 + i / cluster) as f32).collect();
+        p.set_cluster_scales(&alphas, cluster);
+        assert_eq!(p.scales.len(), f.div_ceil(cluster));
+        assert_eq!(p.to_dense().data(), &codes[..], "cluster={cluster}");
+    }
+}
+
+#[test]
+fn forward_quant_invariant_under_registry_choice_and_threads() {
+    // logits bit-identical for every kernel choice x thread count, for
+    // ternary (N in {4,16,64}) and 4-bit models
+    let net = resnet_mini(8, &[8, 16, 16], 1, 5);
+    let mut rng = SplitMix64::new(77);
+    let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+    for (w_bits, cluster) in [(2u32, 4usize), (2, 16), (2, 64), (4, 4)] {
+        let params = QModelParams::synthetic(&net, 1000 + cluster as u64, w_bits, cluster);
+        params.validate(&net).unwrap();
+        let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
+        assert!(want.data().iter().all(|v| v.is_finite()));
+        for kind in ALL_KERNELS {
+            for threads in [1usize, 2, 4] {
+                let reg = KernelRegistry::new(Some(kind), threads);
+                let got = forward_quant_with(&params, &net, &x, &reg);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "w_bits={w_bits} N={cluster} kernel={kind} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn registry_auto_uses_packed_engines_when_available() {
+    let net = resnet_mini(8, &[4, 4, 4], 1, 3);
+    let tern = QModelParams::synthetic(&net, 9, 2, 4);
+    let reg = KernelRegistry::auto();
+    for p in tern.convs.values() {
+        assert_eq!(reg.select(&p.packed), dfp_infer::kernels::KernelKind::PackedTernary);
+    }
+    let i4 = QModelParams::synthetic(&net, 9, 4, 4);
+    // 4-bit codes almost surely exceed ternary range somewhere
+    assert!(i4
+        .convs
+        .values()
+        .any(|p| reg.select(&p.packed) == dfp_infer::kernels::KernelKind::PackedI4));
+}
