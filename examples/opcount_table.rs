@@ -17,7 +17,9 @@ fn main() {
             net.total_weights() as f64 / 1e6,
             100.0 * net.frac_macs_3x3()
         );
-        println!("{}", opcount::table_3_3(&net, &[1, 2, 4, 8, 16, 32, 64]));
+        let schemes: Vec<_> =
+            [1, 2, 4, 8, 16, 32, 64].iter().map(|&n| opcount::ternary_scheme(&net, n)).collect();
+        println!("{}", opcount::table_3_3(&net, &schemes));
         let os4 = opcount::census_ternary_output_stationary(&net, 4);
         println!(
             "(output-stationary ablation, N=4: {:.1}% replaced — the α-scale\n\

@@ -10,7 +10,9 @@ fn main() {
     println!("== E3: §3.3 op-replacement tables ==");
     for name in ["resnet-50", "resnet-101"] {
         let net = model::by_name(name).unwrap();
-        println!("\n-- {name} --\n{}", opcount::table_3_3(&net, &[1, 2, 4, 8, 16, 32, 64]));
+        let schemes: Vec<_> =
+            [1, 2, 4, 8, 16, 32, 64].iter().map(|&n| opcount::ternary_scheme(&net, n)).collect();
+        println!("\n-- {name} --\n{}", opcount::table_3_3(&net, &schemes));
         // paper anchors
         let n4 = opcount::census_ternary(&net, 4).replaced_frac();
         let n64 = opcount::census_ternary(&net, 64).replaced_frac();

@@ -26,7 +26,7 @@ fn main() {
         ("alg1 support N=64", TernaryMode::Support, 64),
         ("alg1 paper   N=4", TernaryMode::Paper, 4),
     ] {
-        let t = quant::ternarize_layer(&w, epf, nf, n, mode);
+        let t = quant::ternarize_layer(&w, epf, nf, n, mode).unwrap();
         let back = t.dequantize();
         println!(
             "{label:<20} sqnr {:>6.2} dB   sparsity {:>5.1}%",
@@ -47,11 +47,11 @@ fn main() {
     println!("\n== quantizer throughput (weights/s) ==");
     let units = (epf * nf) as f64;
     b.bench("ternarize support N=4", units, || {
-        quant::ternarize_layer(&w, epf, nf, 4, TernaryMode::Support)
+        quant::ternarize_layer(&w, epf, nf, 4, TernaryMode::Support).unwrap()
     });
     b.bench("ternarize paper N=4", units, || {
-        quant::ternarize_layer(&w, epf, nf, 4, TernaryMode::Paper)
+        quant::ternarize_layer(&w, epf, nf, 4, TernaryMode::Paper).unwrap()
     });
     b.bench("ternarize TWN", units, || quant::ternarize_twn(&w));
-    b.bench("dfp 4-bit N=4", units, || quant::quantize_layer_dfp(&w, epf, nf, 4, 4));
+    b.bench("dfp 4-bit N=4", units, || quant::quantize_layer_dfp(&w, epf, nf, 4, 4).unwrap());
 }

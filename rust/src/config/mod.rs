@@ -1,4 +1,9 @@
 //! Typed configuration for the launcher: defaults <- JSON file <- CLI flags.
+//!
+//! Precision and kernel knobs are *typed* at the edge: `kernel` resolves to
+//! a [`KernelChoice`] and `scheme` to a parsed [`Scheme`] while the config
+//! is built, so invalid names fail in `Config::resolve` (with the valid
+//! alternatives in the error) instead of deep inside serving.
 
 use std::path::{Path, PathBuf};
 
@@ -6,6 +11,8 @@ use anyhow::{Context, Result};
 
 use crate::cli::Args;
 use crate::json::{parse, Json};
+use crate::kernels::KernelChoice;
+use crate::scheme::Scheme;
 
 /// Top-level server / tool configuration.
 #[derive(Debug, Clone)]
@@ -24,9 +31,11 @@ pub struct Config {
     pub noise: f32,
     /// GEMM threads per executor (kernels/ thread pool; 0 = all cores)
     pub threads: usize,
-    /// kernel override for the registry: "auto" | "i8" | "i8-dense" |
-    /// "ternary" | "i4" (see `kernels::KernelKind`)
-    pub kernel: String,
+    /// kernel selection for the registry (`--kernel auto|i8|i8-dense|ternary|i4`)
+    pub kernel: KernelChoice,
+    /// precision scheme to serve/eval/quantize (`--scheme 8a2w_n4@stem=i8`);
+    /// `None` means "all exported variants"
+    pub scheme: Option<Scheme>,
 }
 
 impl Default for Config {
@@ -40,7 +49,8 @@ impl Default for Config {
             seed: 0,
             noise: crate::data::DEFAULT_NOISE,
             threads: 1,
-            kernel: "auto".to_string(),
+            kernel: KernelChoice::Auto,
+            scheme: None,
         }
     }
 }
@@ -52,11 +62,11 @@ impl Config {
             std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
         let j = parse(&text)?;
         let mut c = Self::default();
-        c.apply_json(&j);
+        c.apply_json(&j)?;
         Ok(c)
     }
 
-    fn apply_json(&mut self, j: &Json) {
+    fn apply_json(&mut self, j: &Json) -> Result<()> {
         if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
             self.artifacts_dir = PathBuf::from(v);
         }
@@ -82,8 +92,16 @@ impl Config {
             self.threads = v as usize;
         }
         if let Some(v) = j.get("kernel").and_then(Json::as_str) {
-            self.kernel = v.to_string();
+            self.kernel = v.parse().context("config: kernel")?;
         }
+        if let Some(v) = j.get("scheme") {
+            // accept both the compact string and the full object form
+            self.scheme = Some(match v.as_str() {
+                Some(s) => Scheme::parse(s).context("config: scheme")?,
+                None => Scheme::from_json(v).context("config: scheme")?,
+            });
+        }
+        Ok(())
     }
 
     /// Apply CLI overrides (flags win over file values).
@@ -99,7 +117,10 @@ impl Config {
         self.noise = a.get_or("noise", self.noise)?;
         self.threads = a.get_or("threads", self.threads)?;
         if let Some(v) = a.get_str("kernel") {
-            self.kernel = v.to_string();
+            self.kernel = v.parse()?;
+        }
+        if let Some(v) = a.get_str("scheme") {
+            self.scheme = Some(Scheme::parse(v)?);
         }
         Ok(())
     }
@@ -115,9 +136,10 @@ impl Config {
     }
 
     /// Build the kernel registry this config describes (`kernel` choice +
-    /// `threads`-wide pool). Fails on an unknown kernel name.
-    pub fn kernel_registry(&self) -> Result<crate::kernels::KernelRegistry> {
-        crate::kernels::KernelRegistry::parse(&self.kernel, self.threads)
+    /// `threads`-wide pool). Infallible: the kernel name was validated when
+    /// the config was resolved.
+    pub fn kernel_registry(&self) -> crate::kernels::KernelRegistry {
+        crate::kernels::KernelRegistry::with_choice(self.kernel, self.threads)
     }
 
     pub fn to_coordinator(&self) -> crate::coordinator::CoordinatorConfig {
@@ -138,6 +160,8 @@ mod tests {
         let c = Config::default();
         assert_eq!(c.workers, 1);
         assert_eq!(c.max_wait_us, 2_000);
+        assert_eq!(c.kernel, KernelChoice::Auto);
+        assert!(c.scheme.is_none());
     }
 
     #[test]
@@ -177,18 +201,49 @@ mod tests {
         )
         .unwrap();
         let c = Config::resolve(&a).unwrap();
-        assert_eq!(c.kernel, "ternary");
+        assert_eq!(c.kernel, KernelChoice::Forced(crate::kernels::KernelKind::PackedTernary));
         assert_eq!(c.threads, 4);
-        let reg = c.kernel_registry().unwrap();
+        let reg = c.kernel_registry();
         assert_eq!(reg.choice(), Some(crate::kernels::KernelKind::PackedTernary));
         assert_eq!(reg.pool().threads(), 4);
 
-        let bad = Config { kernel: "warp".into(), ..Config::default() };
-        assert!(bad.kernel_registry().is_err());
-
         // defaults: auto kernel, single thread
         let d = Config::default();
-        assert!(d.kernel_registry().unwrap().choice().is_none());
-        assert_eq!(d.kernel_registry().unwrap().pool().threads(), 1);
+        assert!(d.kernel_registry().choice().is_none());
+        assert_eq!(d.kernel_registry().pool().threads(), 1);
+    }
+
+    #[test]
+    fn test_bad_kernel_name_fails_at_resolve() {
+        let a = Args::parse_from(["--kernel", "warp"].iter().map(|s| s.to_string()), false).unwrap();
+        let err = Config::resolve(&a).unwrap_err().to_string();
+        assert!(err.contains("auto|i8|i8-dense|ternary|i4"), "{err}");
+    }
+
+    #[test]
+    fn test_scheme_resolution_file_and_cli() {
+        let p = std::env::temp_dir().join(format!("dfp_cfg_scheme_{}.json", std::process::id()));
+        std::fs::write(&p, r#"{"scheme": "8a2w_n4@stem=i8", "kernel": "i4"}"#).unwrap();
+        let a = Args::parse_from(
+            ["--config", p.to_str().unwrap()].iter().map(|s| s.to_string()),
+            false,
+        )
+        .unwrap();
+        let c = Config::resolve(&a).unwrap();
+        assert_eq!(c.scheme.as_ref().unwrap().to_string(), "8a2w_n4@stem=i8");
+        assert_eq!(c.kernel, KernelChoice::Forced(crate::kernels::KernelKind::PackedI4));
+
+        // CLI wins over the file
+        let a = Args::parse_from(
+            ["--config", p.to_str().unwrap(), "--scheme", "8a4w_n16"].iter().map(|s| s.to_string()),
+            false,
+        )
+        .unwrap();
+        let c = Config::resolve(&a).unwrap();
+        assert_eq!(c.scheme.as_ref().unwrap().to_string(), "8a4w_n16");
+        std::fs::remove_file(&p).ok();
+
+        let bad = Args::parse_from(["--scheme", "fp32"].iter().map(|s| s.to_string()), false).unwrap();
+        assert!(Config::resolve(&bad).is_err());
     }
 }

@@ -156,7 +156,24 @@ impl LpExecutor {
             let path = dir.join(format!("qweights_{name}.dft"));
             let map = crate::io::read_dft(&path)
                 .with_context(|| format!("reading {}", path.display()))?;
-            variants.insert(name.clone(), QModelParams::from_tensors(&map, &net)?);
+            let params = QModelParams::from_tensors(&map, &net)?;
+            // a scheme-named variant must be consistent end to end: the
+            // manifest metadata must agree with the name, and the qweights
+            // export must realize the same default policy
+            if let Ok(declared) = crate::scheme::Scheme::parse(&name) {
+                anyhow::ensure!(
+                    manifest.scheme_of(&name).is_some(),
+                    "variant '{name}': manifest w_bits/cluster disagree with the scheme its name declares"
+                );
+                let got = params.scheme.default_policy();
+                let want = declared.default_policy();
+                anyhow::ensure!(
+                    got.w_bits() == want.w_bits() && got.cluster == want.cluster,
+                    "variant '{name}': qweights export realizes scheme '{}' but the manifest declares '{declared}'",
+                    params.scheme
+                );
+            }
+            variants.insert(name.clone(), params);
         }
         if variants.is_empty() {
             bail!("no qweights_<variant>.dft exports found in {}", dir.display());
@@ -292,12 +309,14 @@ mod tests {
     }
 
     fn lp_executor() -> LpExecutor {
+        use crate::scheme::Scheme;
         let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
         let variants: BTreeMap<String, QModelParams> = [
-            ("8a2w_n4".to_string(), QModelParams::synthetic(&net, 3, 2, 4)),
-            ("8a4w_n4".to_string(), QModelParams::synthetic(&net, 4, 4, 4)),
+            ("8a2w_n4", QModelParams::synthetic(&net, 3, &Scheme::parse("8a2w_n4").unwrap())),
+            ("8a4w_n4", QModelParams::synthetic(&net, 4, &Scheme::parse("8a4w_n4").unwrap())),
         ]
         .into_iter()
+        .map(|(n, p)| (n.to_string(), p))
         .collect();
         LpExecutor::new(net, variants, KernelRegistry::auto(), vec![1, 4]).unwrap()
     }
@@ -322,7 +341,8 @@ mod tests {
     #[test]
     fn test_lp_executor_matches_direct_forward_for_all_kernels() {
         let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
-        let params = QModelParams::synthetic(&net, 3, 2, 4);
+        let params =
+            QModelParams::synthetic(&net, 3, &crate::scheme::Scheme::parse("8a2w_n4").unwrap());
         let mut rng = crate::util::SplitMix64::new(10);
         let x = Tensor::new(&[1, 8, 8, 3], rng.normal(8 * 8 * 3)).unwrap();
         let want = crate::lpinfer::forward_quant(&params, &net, &x);

@@ -89,6 +89,10 @@ impl Json {
         Json::Str(s.into())
     }
 
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
     // ----------------------------------------------------------- serializer
 
     #[allow(clippy::inherent_to_string)]

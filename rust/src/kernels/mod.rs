@@ -27,5 +27,5 @@ pub mod threadpool;
 
 pub use gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
 pub use packed::{PackedI4Matrix, PackedLayer, PackedTernaryMatrix, PANEL_F};
-pub use registry::{KernelKind, KernelRegistry, ALL_KERNELS};
+pub use registry::{KernelChoice, KernelKind, KernelRegistry, ALL_KERNELS};
 pub use threadpool::ThreadPool;

@@ -62,6 +62,49 @@ impl std::str::FromStr for KernelKind {
     }
 }
 
+/// A resolved `--kernel` / `Config.kernel` setting: automatic per-layer
+/// dispatch or one forced kernel. Parsing happens once, at config-resolve
+/// time, so a typo'd kernel name fails fast with the valid names instead of
+/// surviving as an arbitrary string until dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// per-layer auto rule (cheapest encoding the layer supports)
+    #[default]
+    Auto,
+    /// force one kernel wherever its encoding exists (auto elsewhere)
+    Forced(KernelKind),
+}
+
+impl KernelChoice {
+    /// The forced kind, if any.
+    pub fn kind(self) -> Option<KernelKind> {
+        match self {
+            KernelChoice::Auto => None,
+            KernelChoice::Forced(k) => Some(k),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelChoice::Auto => f.write_str("auto"),
+            KernelChoice::Forced(k) => write!(f, "{k}"),
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "" | "auto" => KernelChoice::Auto,
+            other => KernelChoice::Forced(other.parse()?),
+        })
+    }
+}
+
 /// Runtime kernel dispatcher: an optional forced choice plus the thread
 /// pool the packed kernels parallelize on.
 #[derive(Debug, Clone)]
@@ -87,13 +130,14 @@ impl KernelRegistry {
         Self::new(None, 1)
     }
 
+    /// Build from a typed [`KernelChoice`] (the `Config.kernel` field).
+    pub fn with_choice(choice: KernelChoice, threads: usize) -> Self {
+        Self::new(choice.kind(), threads)
+    }
+
     /// Parse a CLI/config kernel name; `"auto"` (or empty) means no force.
     pub fn parse(name: &str, threads: usize) -> Result<Self> {
-        let choice = match name {
-            "" | "auto" => None,
-            other => Some(other.parse()?),
-        };
-        Ok(Self::new(choice, threads))
+        Ok(Self::with_choice(name.parse()?, threads))
     }
 
     pub fn choice(&self) -> Option<KernelKind> {
@@ -174,6 +218,22 @@ mod tests {
         assert!("warp".parse::<KernelKind>().is_err());
         assert!(KernelRegistry::parse("auto", 1).unwrap().choice().is_none());
         assert!(KernelRegistry::parse("warp", 1).is_err());
+    }
+
+    #[test]
+    fn test_kernel_choice_parse_display_roundtrip() {
+        assert_eq!("auto".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
+        assert_eq!("".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+        assert_eq!(KernelChoice::Auto.kind(), None);
+        for k in ALL_KERNELS {
+            let c: KernelChoice = k.to_string().parse().unwrap();
+            assert_eq!(c, KernelChoice::Forced(k));
+            assert_eq!(c.kind(), Some(k));
+            assert_eq!(c.to_string().parse::<KernelChoice>().unwrap(), c);
+        }
+        let err = "warp".parse::<KernelChoice>().unwrap_err().to_string();
+        assert!(err.contains("auto|i8|i8-dense|ternary|i4"), "{err}");
     }
 
     #[test]

@@ -14,7 +14,12 @@
 //! * [`kernels`]     — packed-ternary execution engine: column-blocked 2-bit /
 //!   i4 weight layouts, multiply-free cluster GEMM, scoped thread pool, and
 //!   the `KernelRegistry` runtime dispatch (`--kernel` override).
-//! * [`quant`]       — paper Algorithms 1 & 2 (mirrors `python/compile/quantize.py`).
+//! * [`scheme`]      — typed per-layer precision schemes: `WeightCodec` /
+//!   `LayerPolicy` / `Scheme` with the compact `8a2w_n4@stem=i8` grammar;
+//!   every precision decision (quantizer, loader, dispatch, opcount,
+//!   serving) is parameterized by a `Scheme`.
+//! * [`quant`]       — paper Algorithms 1 & 2 (mirrors `python/compile/quantize.py`),
+//!   plus `quantize_model(&Scheme, …)` — per-layer codec dispatch.
 //! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8)
 //!   + the 2-bit/4-bit storage packing the kernels consume.
 //! * [`lpinfer`]     — pure-Rust integer inference pipeline, dispatching every
@@ -41,6 +46,7 @@ pub mod nn;
 pub mod opcount;
 pub mod quant;
 pub mod runtime;
+pub mod scheme;
 pub mod tensor;
 pub mod testing;
 pub mod util;

@@ -21,6 +21,7 @@ use crate::io::TensorMap;
 use crate::kernels::{KernelRegistry, PackedLayer};
 use crate::model::{ConvLayer, Network};
 use crate::nn::im2col;
+use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
 use crate::tensor::Tensor;
 
 pub use crate::kernels::{gemm_i8, gemm_i8_dense};
@@ -36,31 +37,33 @@ pub struct QConvParams {
     pub bn_shift: Vec<f32>,
     /// DFP exponent of this layer's output activations.
     pub act_exp: i32,
-    pub w_bits: u32,
+    /// this layer's precision policy (codec + α̂/exp cluster size).
+    pub policy: LayerPolicy,
     /// packed encodings of `wq` for the kernels/ dispatch (built once here,
     /// so the hot path never re-derives or unpacks weights).
     pub packed: PackedLayer,
 }
 
 impl QConvParams {
-    /// Build layer params, packing `wq` into every encoding it fits.
-    /// `cluster` (filters per α̂ cluster, 0 = unknown) only attaches scale
-    /// metadata to the packed matrices.
+    /// Build layer params, packing `wq` into every encoding it fits; the
+    /// policy's cluster size attaches scale metadata to the packed matrices.
     pub fn new(
         wq: Tensor<i8>,
         w_scale: Vec<f32>,
         bn_scale: Vec<f32>,
         bn_shift: Vec<f32>,
         act_exp: i32,
-        w_bits: u32,
-        cluster: usize,
+        policy: LayerPolicy,
     ) -> Self {
-        let packed = PackedLayer::build(&wq, &w_scale, cluster);
-        Self { wq, w_scale, bn_scale, bn_shift, act_exp, w_bits, packed }
+        let packed = PackedLayer::build(&wq, &w_scale, policy.cluster);
+        Self { wq, w_scale, bn_scale, bn_shift, act_exp, policy, packed }
     }
 }
 
-/// Whole quantized model (mirrors the python `QModel` export).
+/// Whole quantized model (mirrors the python `QModel` export). Precision is
+/// carried by `scheme` — one [`LayerPolicy`] per layer instead of global
+/// bits/cluster scalars, so mixed models (i8 stem, ternary interior,
+/// i4 tail) are first-class.
 #[derive(Debug, Clone)]
 pub struct QModelParams {
     pub convs: BTreeMap<String, QConvParams>,
@@ -69,8 +72,9 @@ pub struct QModelParams {
     pub fc_b: Vec<f32>,
     pub in_exp: i32,
     pub feat_exp: i32,
-    pub cluster: usize,
-    pub w_bits: u32,
+    /// the mixed-precision scheme these params realize (`convs[*].policy`
+    /// and the FC policy are resolved from it).
+    pub scheme: Scheme,
     /// packed encodings of `fc_wq` (same dispatch as the conv layers).
     pub fc_packed: PackedLayer,
 }
@@ -94,9 +98,22 @@ impl QModelParams {
                 .data()[0])
         };
         let cluster = i32s("meta.cluster")? as usize;
+        let model_bits = i32s("meta.w_bits")? as u32;
+        let default_policy = LayerPolicy::new(WeightCodec::from_w_bits(model_bits)?, cluster)?;
+        // reconstruct the scheme the export realizes: the model-wide policy
+        // plus a named override for every layer whose recorded w_bits differ
+        let mut scheme = Scheme::uniform(8, default_policy.clone())?;
         let mut convs = BTreeMap::new();
         for l in &net.layers {
             let n = &l.name;
+            let layer_bits = i32s(&format!("{n}.w_bits"))? as u32;
+            let policy = if layer_bits == model_bits {
+                default_policy.clone()
+            } else {
+                let p = LayerPolicy::new(WeightCodec::from_w_bits(layer_bits)?, cluster)?;
+                scheme = scheme.with_override(n, p.clone())?;
+                p
+            };
             convs.insert(
                 n.clone(),
                 QConvParams::new(
@@ -108,58 +125,71 @@ impl QModelParams {
                     f32v(&format!("{n}.bn_scale"))?,
                     f32v(&format!("{n}.bn_shift"))?,
                     i32s(&format!("{n}.act_exp"))?,
-                    i32s(&format!("{n}.w_bits"))? as u32,
-                    cluster,
+                    policy,
                 ),
             );
         }
+        // exports may record a distinct FC precision (QuantConfig.fc_bits);
+        // without the optional fc.w_bits entry the FC follows the default
+        if let Some(t) = map.get("fc.w_bits") {
+            let fc_bits = t.as_i32()?.data()[0] as u32;
+            if fc_bits != model_bits {
+                let p = LayerPolicy::new(WeightCodec::from_w_bits(fc_bits)?, cluster)?;
+                scheme = scheme.with_override("fc", p)?;
+            }
+        }
         let fc_wq = map.get("fc.wq").context("missing fc.wq")?.as_i8()?.clone();
         let fc_scale = f32v("fc.scale")?;
-        let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, cluster);
-        Ok(Self {
+        let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, scheme.policy_for("fc").cluster);
+        let out = Self {
             convs,
             fc_wq,
             fc_scale,
             fc_b: f32v("fc.b")?,
             in_exp: i32s("meta.in_exp")?,
             feat_exp: i32s("meta.feat_exp")?,
-            cluster,
-            w_bits: i32s("meta.w_bits")? as u32,
+            scheme,
             fc_packed,
-        })
+        };
+        // loaded codes must actually fit the scheme the export declares
+        out.validate(net)?;
+        Ok(out)
     }
 
     /// Deterministic synthetic model (random codes, benign scales) for
-    /// tests, benches and the artifact-free serving demo: `w_bits` bounds
-    /// the code range (2 -> ternary, 4 -> [-7,7], 8 -> [-127,127]).
-    pub fn synthetic(net: &Network, seed: u64, w_bits: u32, cluster: usize) -> Self {
+    /// tests, benches and the artifact-free serving demo. Every layer's
+    /// code range follows its `scheme` policy (ternary -> {-1,0,1},
+    /// i4 -> [-7,7], i8 -> [-127,127]), so mixed schemes produce genuinely
+    /// mixed models.
+    pub fn synthetic(net: &Network, seed: u64, scheme: &Scheme) -> Self {
         use crate::util::SplitMix64;
         let mut rng = SplitMix64::new(seed);
-        let qmax = crate::dfp::qmax(w_bits).min(127) as i64;
-        let mut code = move |n: usize| -> Vec<i8> {
+        let mut code = move |n: usize, qmax: i64| -> Vec<i8> {
             (0..n).map(|_| (rng.next_below((2 * qmax + 1) as u64) as i64 - qmax) as i8).collect()
         };
-        let w_scale = 0.1 / qmax as f32;
         let mut convs = BTreeMap::new();
         for l in &net.layers {
+            let policy = scheme.policy_for(&l.name).clone();
+            let qmax = crate::dfp::qmax(policy.w_bits()).min(127) as i64;
             convs.insert(
                 l.name.clone(),
                 QConvParams::new(
-                    Tensor::new(&[l.kh, l.kw, l.cin, l.cout], code(l.kh * l.kw * l.cin * l.cout))
+                    Tensor::new(&[l.kh, l.kw, l.cin, l.cout], code(l.kh * l.kw * l.cin * l.cout, qmax))
                         .expect("conv shape"),
-                    vec![w_scale; l.cout],
+                    vec![0.1 / qmax as f32; l.cout],
                     vec![1.0; l.cout],
                     vec![0.0; l.cout],
                     -4,
-                    w_bits,
-                    cluster,
+                    policy,
                 ),
             );
         }
-        let fc_wq =
-            Tensor::new(&[net.fc_in, net.fc_out], code(net.fc_in * net.fc_out)).expect("fc shape");
-        let fc_scale = vec![w_scale; net.fc_out];
-        let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, cluster);
+        let fc_policy = scheme.policy_for("fc").clone();
+        let fc_qmax = crate::dfp::qmax(fc_policy.w_bits()).min(127) as i64;
+        let fc_wq = Tensor::new(&[net.fc_in, net.fc_out], code(net.fc_in * net.fc_out, fc_qmax))
+            .expect("fc shape");
+        let fc_scale = vec![0.1 / fc_qmax as f32; net.fc_out];
+        let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, fc_policy.cluster);
         Self {
             convs,
             fc_wq,
@@ -167,14 +197,26 @@ impl QModelParams {
             fc_b: vec![0.0; net.fc_out],
             in_exp: -5,
             feat_exp: -5,
-            cluster,
-            w_bits,
+            scheme: scheme.clone(),
             fc_packed,
         }
     }
 
-    /// Sanity-check layer shapes against the network description.
+    /// Sanity-check the params against the network description *and* the
+    /// declared scheme: layer shapes must match the net, and every layer's
+    /// codes must fit the range its [`LayerPolicy`] codec promises.
     pub fn validate(&self, net: &Network) -> Result<()> {
+        let check_codes = |name: &str, codes: &[i8], policy: &LayerPolicy| -> Result<()> {
+            let qmax = crate::dfp::qmax(policy.w_bits());
+            if let Some(&c) = codes.iter().find(|&&c| i32::from(c).abs() > qmax) {
+                bail!(
+                    "{name}: code {c} exceeds |code| <= {qmax} declared by codec '{}' of scheme '{}'",
+                    policy.codec,
+                    self.scheme
+                );
+            }
+            Ok(())
+        };
         for l in &net.layers {
             let p = self.convs.get(&l.name).with_context(|| format!("no params for {}", l.name))?;
             let want = [l.kh, l.kw, l.cin, l.cout];
@@ -184,10 +226,12 @@ impl QModelParams {
             if p.w_scale.len() != l.cout || p.bn_scale.len() != l.cout {
                 bail!("{}: scale length mismatch", l.name);
             }
+            check_codes(&l.name, p.wq.data(), &p.policy)?;
         }
         if self.fc_wq.dim(0) != net.fc_in || self.fc_wq.dim(1) != net.fc_out {
             bail!("fc shape mismatch");
         }
+        check_codes("fc", self.fc_wq.data(), self.scheme.policy_for("fc"))?;
         Ok(())
     }
 }
@@ -340,7 +384,12 @@ pub fn forward_quant_with(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::TernaryMode;
     use crate::util::SplitMix64;
+
+    fn scheme(s: &str) -> Scheme {
+        Scheme::parse(s).unwrap()
+    }
 
     #[test]
     fn test_gemm_i8_reexport_exact() {
@@ -379,8 +428,7 @@ mod tests {
             vec![1.0; 2],
             vec![0.0; 2],
             0,
-            2,
-            2,
+            LayerPolicy::new(WeightCodec::Ternary { mode: TernaryMode::Support }, 2).unwrap(),
         );
         assert!(p.packed.ternary.is_some(), "ternary codes must pack");
         let x = Tensor::new(&[1, 2, 2, 2], vec![1i8, -2, 3, -4, 5, -6, 7, -8]).unwrap();
@@ -392,7 +440,7 @@ mod tests {
     fn test_forward_quant_tiny_net_finite() {
         // build a minimal 1-block net with random ternary weights and run it
         let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
-        let params = QModelParams::synthetic(&net, 11, 2, 4);
+        let params = QModelParams::synthetic(&net, 11, &scheme("8a2w_n4"));
         params.validate(&net).unwrap();
         let mut rng = SplitMix64::new(11);
         let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
@@ -404,7 +452,7 @@ mod tests {
     #[test]
     fn test_forward_quant_invariant_under_kernel_choice() {
         let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
-        let params = QModelParams::synthetic(&net, 5, 2, 4);
+        let params = QModelParams::synthetic(&net, 5, &scheme("8a2w_n4"));
         let mut rng = SplitMix64::new(6);
         let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
         let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
@@ -418,12 +466,12 @@ mod tests {
     #[test]
     fn test_synthetic_packs_expected_encodings() {
         let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
-        let tern = QModelParams::synthetic(&net, 1, 2, 4);
+        let tern = QModelParams::synthetic(&net, 1, &scheme("8a2w_n4"));
         assert!(tern.convs.values().all(|p| p.packed.ternary.is_some()));
         assert!(tern.fc_packed.ternary.is_some());
-        let i4 = QModelParams::synthetic(&net, 1, 4, 4);
+        let i4 = QModelParams::synthetic(&net, 1, &scheme("8a4w_n4"));
         assert!(i4.convs.values().all(|p| p.packed.i4.is_some()));
-        let i8m = QModelParams::synthetic(&net, 1, 8, 4);
+        let i8m = QModelParams::synthetic(&net, 1, &scheme("8a8w_n4"));
         // full i8 codes fit neither sub-8-bit encoding
         assert!(i8m.convs.values().any(|p| p.packed.ternary.is_none() && p.packed.i4.is_none()));
     }
@@ -438,10 +486,35 @@ mod tests {
             fc_b: vec![],
             in_exp: 0,
             feat_exp: 0,
-            cluster: 4,
-            w_bits: 2,
+            scheme: scheme("8a2w_n4"),
             fc_packed: PackedLayer::none(),
         };
         assert!(params.validate(&net).is_err());
+    }
+
+    #[test]
+    fn test_mixed_scheme_assigns_per_layer_policies() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let s = scheme("8a2w_n4@stem=i8@fc=i8");
+        let params = QModelParams::synthetic(&net, 21, &s);
+        params.validate(&net).unwrap();
+        assert_eq!(params.convs["stem"].policy.codec, WeightCodec::I8);
+        for (name, p) in &params.convs {
+            if name != "stem" {
+                assert_eq!(p.policy.w_bits(), 2, "{name}");
+                assert!(p.packed.ternary.is_some(), "{name} must pack ternary");
+            }
+        }
+        assert_eq!(params.scheme.policy_for("fc").codec, WeightCodec::I8);
+    }
+
+    #[test]
+    fn test_validate_rejects_codes_outside_declared_codec() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        // weights drawn for an 8-bit model, but declared ternary
+        let wide = QModelParams::synthetic(&net, 2, &scheme("8a8w_n4"));
+        let lied = QModelParams { scheme: scheme("8a2w_n4"), ..wide };
+        let err = lied.validate(&net).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
     }
 }

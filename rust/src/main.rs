@@ -11,13 +11,23 @@
 //!   eval       evaluate artifact variants on the exported eval set
 //!              (same --executor/--kernel/--threads knobs as serve)
 //!   opcount    print the §3.3 op-replacement table for a network
-//!   quantize   ternarize a DFT weight file (rust-native Algorithm 1)
+//!   quantize   quantize a DFT weight file under a precision scheme
+//!              (rust-native Algorithms 1 & 2 + k-bit DFP)
 //!   info       show the artifact manifest
+//!
+//! Precision is selected with typed schemes (see `scheme::Scheme` and
+//! DESIGN.md §scheme): `--scheme 8a2w_n4` is the legacy ternary-N4 variant,
+//! `--scheme 8a2w_n4@stem=i8@fc=i8` the paper's mixed configuration with
+//! 8-bit boundary layers. serve/eval treat a scheme as the variant to run;
+//! quantize uses it to pick each layer's codec; opcount accepts a list via
+//! `--schemes` (or the legacy `--clusters` sweep).
 //!
 //! Examples:
 //!   dfp-infer opcount --network resnet-101
+//!   dfp-infer opcount --network resnet-101 --schemes 8a2w_n4@conv1=i8,8a4w_n4
+//!   dfp-infer quantize --weights models/weights_fp32.dft --scheme 8a2w_n4@stem=i8@fc=i8
 //!   dfp-infer serve --artifacts artifacts --requests 512 --workers 1
-//!   dfp-infer serve --executor lp --kernel ternary --threads 4
+//!   dfp-infer serve --executor lp --kernel ternary --threads 4 --scheme 8a2w_n4
 //!   dfp-infer eval --artifacts artifacts --variants fp32,8a2w_n4
 
 use std::path::Path;
@@ -33,6 +43,7 @@ use dfp_infer::io::read_dft;
 use dfp_infer::model;
 use dfp_infer::opcount;
 use dfp_infer::quant::{self, TernaryMode};
+use dfp_infer::scheme::{LayerPolicy, Scheme, WeightCodec};
 use dfp_infer::tensor::Tensor;
 use dfp_infer::util::Timer;
 use dfp_infer::{data, runtime};
@@ -68,9 +79,10 @@ fn cmd_info(args: &Args) -> Result<()> {
     let m = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
     println!("image: {0}x{0}x3, classes: {1}", m.img, m.classes);
     println!("batch sizes: {:?}", m.batch_sizes);
-    println!("{:<12} {:>6} {:>8} {:>10}", "variant", "bits", "cluster", "eval_acc");
+    println!("{:<12} {:>6} {:>8} {:>10}  {}", "variant", "bits", "cluster", "eval_acc", "scheme");
     for (name, v) in &m.variants {
-        println!("{:<12} {:>6} {:>8} {:>10.4}", name, v.w_bits, v.cluster, v.eval_acc);
+        let scheme = m.scheme_of(name).map(|s| s.to_string()).unwrap_or_else(|| "-".into());
+        println!("{:<12} {:>6} {:>8} {:>10.4}  {}", name, v.w_bits, v.cluster, v.eval_acc, scheme);
     }
     Ok(())
 }
@@ -78,12 +90,30 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_opcount(args: &Args) -> Result<()> {
     let name = args.str_or("network", "resnet-101");
     let net = model::by_name(name).with_context(|| format!("unknown network '{name}'"))?;
-    let clusters: Vec<usize> = {
-        let l = args.get_list("clusters");
-        if l.is_empty() {
-            vec![1, 2, 4, 8, 16, 32, 64]
+    // --schemes takes arbitrary mixed schemes; --clusters sweeps the
+    // paper's ternary-N configuration (8-bit first conv, ternary rest)
+    let schemes: Vec<Scheme> = {
+        let named = args.get_list("schemes");
+        if named.is_empty() {
+            let clusters: Vec<usize> = {
+                let l = args.get_list("clusters");
+                if l.is_empty() {
+                    vec![1, 2, 4, 8, 16, 32, 64]
+                } else {
+                    l.iter().map(|s| s.parse()).collect::<Result<_, _>>()?
+                }
+            };
+            anyhow::ensure!(
+                clusters.iter().all(|&n| n >= 1),
+                "--clusters: cluster sizes must be >= 1 (got {clusters:?})"
+            );
+            clusters.iter().map(|&n| opcount::ternary_scheme(&net, n)).collect()
         } else {
-            l.iter().map(|s| s.parse()).collect::<Result<_, _>>()?
+            let parsed: Vec<Scheme> = named.iter().map(|s| Scheme::parse(s)).collect::<Result<_>>()?;
+            for s in &parsed {
+                s.validate_for(&net)?;
+            }
+            parsed
         }
     };
     println!(
@@ -93,40 +123,52 @@ fn cmd_opcount(args: &Args) -> Result<()> {
         net.total_weights() as f64 / 1e6,
         100.0 * net.frac_macs_3x3()
     );
-    println!("{}", opcount::table_3_3(&net, &clusters));
+    println!("{}", opcount::table_3_3(&net, &schemes));
     Ok(())
 }
 
 fn cmd_quantize(args: &Args) -> Result<()> {
     let input = args.require("weights")?;
-    let cluster: usize = args.get_or("cluster", 4)?;
-    let mode: TernaryMode = args.str_or("mode", "support").parse()?;
+    // --scheme drives per-layer codecs; the legacy --cluster/--mode pair
+    // builds the equivalent uniform ternary scheme
+    let scheme = match args.get_str("scheme") {
+        Some(s) => Scheme::parse(s)?,
+        None => {
+            let cluster: usize = args.get_or("cluster", 4)?;
+            let mode: TernaryMode = args.str_or("mode", "support").parse()?;
+            Scheme::uniform(8, LayerPolicy::new(WeightCodec::Ternary { mode }, cluster)?)?
+        }
+    };
     let map = read_dft(Path::new(input))?;
-    println!("{:<12} {:>10} {:>10} {:>9} {:>9}", "layer", "elems", "sqnr(dB)", "sparsity", "clusters");
+    let mut layers: Vec<(&str, &[f32], usize, usize)> = Vec::new();
     for (name, t) in &map {
-        if !name.ends_with(".w") {
+        let Some(layer) = name.strip_suffix(".w") else { continue };
+        let Ok(f32t) = t.as_f32() else { continue };
+        if f32t.shape().len() < 2 {
             continue;
         }
-        let f32t = match t.as_f32() {
-            Ok(t) => t,
-            Err(_) => continue,
-        };
-        let shape = f32t.shape();
-        if shape.len() < 2 {
-            continue;
-        }
-        let n_filters = *shape.last().unwrap();
-        let epf = f32t.len() / n_filters;
-        let tern = quant::ternarize_layer(f32t.data(), epf, n_filters, cluster, mode);
-        let back = tern.dequantize();
-        let sqnr = quant::sqnr_db(f32t.data(), &back);
+        let n_filters = *f32t.shape().last().unwrap();
+        layers.push((layer, f32t.data(), f32t.len() / n_filters, n_filters));
+    }
+    // fail on typo'd override patterns before touching any weights
+    scheme.validate_layers(layers.iter().map(|&(n, ..)| n))?;
+    let quantized = quant::quantize_model(&scheme, layers.iter().copied())?;
+    println!("scheme: {scheme}");
+    println!(
+        "{:<12} {:>6} {:>10} {:>10} {:>9} {:>9}",
+        "layer", "codec", "elems", "sqnr(dB)", "sparsity", "clusters"
+    );
+    for ((name, q), &(_, w, _, _)) in quantized.iter().zip(&layers) {
+        let back = q.dequantize();
+        let codec = scheme.policy_for(name).codec.to_string();
         println!(
-            "{:<12} {:>10} {:>10.2} {:>8.1}% {:>9}",
+            "{:<12} {:>6} {:>10} {:>10.2} {:>8.1}% {:>9}",
             name,
-            f32t.len(),
-            sqnr,
-            100.0 * tern.sparsity(),
-            tern.scales.len()
+            codec,
+            w.len(),
+            quant::sqnr_db(w, &back),
+            100.0 * q.sparsity(),
+            q.n_scales()
         );
     }
     Ok(())
@@ -134,7 +176,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let registry = cfg.kernel_registry()?;
+    let registry = cfg.kernel_registry();
     let manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
     // auto mirrors cmd_serve: pjrt-enabled builds keep evaluating every
     // variant (incl. the fp32 baseline); the offline build uses lp
@@ -163,9 +205,21 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let px = img * img * 3;
     let ncls = manifest.classes;
 
+    // --variants wins; otherwise --scheme selects its variant; otherwise all
     let mut variants = args.get_list("variants");
     if variants.is_empty() {
-        variants = manifest.variants.keys().cloned().collect();
+        variants = match &cfg.scheme {
+            Some(s) => {
+                let name = s.name();
+                anyhow::ensure!(
+                    manifest.variants.contains_key(&name),
+                    "scheme '{name}' is not an exported variant (have {:?})",
+                    manifest.variants.keys().collect::<Vec<_>>()
+                );
+                vec![name]
+            }
+            None => manifest.variants.keys().cloned().collect(),
+        };
     }
     let batch = *manifest.batch_sizes.iter().max().context("no batch sizes")?;
 
@@ -213,7 +267,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
-    let manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+    let mut manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+    // --scheme pins serving to one precision scheme (all routes collapse)
+    if let Some(s) = &cfg.scheme {
+        let name = s.name();
+        anyhow::ensure!(
+            manifest.variants.contains_key(&name),
+            "scheme '{name}' is not an exported variant (have {:?})",
+            manifest.variants.keys().collect::<Vec<_>>()
+        );
+        println!("pinned to scheme {name}");
+        manifest.variants.retain(|n, _| *n == name);
+    }
     let servable = LpExecutor::servable(&cfg.artifacts_dir, &manifest);
     // auto: a pjrt-enabled build keeps the old (full-variant) behavior;
     // the offline build falls back to lp whenever it can serve anything
@@ -223,9 +288,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "auto" => !cfg!(feature = "pjrt") && !servable.is_empty(),
         other => bail!("unknown executor '{other}' (try auto|lp|pjrt)"),
     };
-    // validate --kernel/--threads up front so a typo'd kernel name errors
-    // on every executor path, not just lp
-    let registry = cfg.kernel_registry()?;
+    let registry = cfg.kernel_registry();
     let t = Timer::new();
     let (router, sizes, factories): (
         Router,

@@ -11,16 +11,19 @@
 //!   energy/area scaling.
 
 use crate::model::Network;
+use crate::quant::TernaryMode;
+use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
 
-/// Op census for one network under a quantization configuration.
+/// Op census for one network under a quantization scheme.
 #[derive(Debug, Clone)]
 pub struct OpCensus {
     pub network: String,
-    pub cluster: usize,
+    /// compact name of the scheme this census counts
+    pub scheme: String,
     /// total multiply-accumulates (the FP32 baseline's multiply count)
     pub total_macs: u64,
     /// multiplies remaining in the quantized pipeline
-    ///   = C1 layer MACs (8-bit mult) + one scale multiply per (cluster x output pixel)
+    ///   = non-ternary layer MACs (8-bit mult) + one scale multiply per weight block
     pub mults: u64,
     /// ternary accumulations (additions replacing multiplies)
     pub accums: u64,
@@ -38,37 +41,55 @@ impl OpCensus {
     }
 }
 
-/// Count ops for a ternary-clustered network with the paper's §3.3
-/// accounting: "one 8-bit multiplication for the entire cluster (N·K²) of
-/// ternary accumulations" — i.e. the scale multiply amortizes over each
-/// N·K² weight-block of MACs, `mults_layer = macs / (N·K²)`. With the
+/// The paper's §3.3 configuration as a [`Scheme`]: cluster-N ternary
+/// everywhere (including FC), except the first conv which stays full 8-bit
+/// (§3.2 keeps C1 high-precision).
+pub fn ternary_scheme(net: &Network, cluster: usize) -> Scheme {
+    let tern = LayerPolicy::new(WeightCodec::Ternary { mode: TernaryMode::Support }, cluster)
+        .expect("cluster >= 1");
+    let stem = LayerPolicy::new(WeightCodec::I8, cluster).expect("cluster >= 1");
+    Scheme::uniform(8, tern)
+        .and_then(|s| s.with_override(&net.layers[0].name, stem))
+        .expect("valid ternary scheme")
+}
+
+/// Count ops for a network under a mixed-precision scheme with the paper's
+/// §3.3 accounting: a ternary layer's MACs all become accumulations, and
+/// "one 8-bit multiplication for the entire cluster (N·K²) of ternary
+/// accumulations" — the scale multiply amortizes over each N·K²
+/// weight-block, `mults_layer = macs / (N·K²)`. Non-ternary layers (i8 /
+/// k-bit DFP) keep their MACs as multiplies. With [`ternary_scheme`] on the
 /// real ResNet-101 3x3/1x1 mix this reproduces the 85 % (N=4) and ≈98 %
-/// (N=64) replacement claims. C1 stays full 8-bit multiplies (§3.2).
-pub fn census_ternary(net: &Network, cluster: usize) -> OpCensus {
+/// (N=64) replacement claims.
+pub fn census(net: &Network, scheme: &Scheme) -> OpCensus {
     let mut mults = 0u64;
     let mut accums = 0u64;
-    for (i, l) in net.layers.iter().enumerate() {
-        let macs = l.macs();
-        if i == 0 {
-            mults += macs; // C1 stays 8-bit multiplies (§3.2)
-            continue;
+    let mut count = |macs: u64, kh: usize, kw: usize, policy: &LayerPolicy| match policy.codec {
+        WeightCodec::Ternary { .. } => {
+            let block = (policy.cluster * kh * kw) as u64; // N*K^2
+            mults += macs.div_ceil(block);
+            accums += macs;
         }
-        let block = (cluster * l.kh * l.kw) as u64; // N*K^2
-        mults += macs.div_ceil(block);
-        accums += macs;
+        WeightCodec::Dfp { .. } | WeightCodec::I8 => mults += macs,
+    };
+    for l in &net.layers {
+        count(l.macs(), l.kh, l.kw, scheme.policy_for(&l.name));
     }
-    // FC layer: ternary too (paper: "the rest of the layers including FC");
-    // K=1 for a fully connected "1x1" block.
-    let fc_macs = (net.fc_in * net.fc_out) as u64;
-    mults += fc_macs.div_ceil(cluster as u64);
-    accums += fc_macs;
+    // FC: K=1 for a fully connected "1x1" block.
+    count((net.fc_in * net.fc_out) as u64, 1, 1, scheme.policy_for("fc"));
     OpCensus {
         network: net.name.clone(),
-        cluster,
+        scheme: scheme.name(),
         total_macs: net.total_macs(),
         mults,
         accums,
     }
+}
+
+/// Convenience wrapper: [`census`] under [`ternary_scheme`] — the paper's
+/// ternary-N configuration with an 8-bit first conv.
+pub fn census_ternary(net: &Network, cluster: usize) -> OpCensus {
+    census(net, &ternary_scheme(net, cluster))
 }
 
 /// Alternative output-stationary accounting: one α̂ multiply per *output
@@ -91,7 +112,13 @@ pub fn census_ternary_output_stationary(net: &Network, cluster: usize) -> OpCens
     let fc_macs = (net.fc_in * net.fc_out) as u64;
     mults += net.fc_out.div_ceil(cluster) as u64;
     accums += fc_macs;
-    OpCensus { network: net.name.clone(), cluster, total_macs: net.total_macs(), mults, accums }
+    OpCensus {
+        network: net.name.clone(),
+        scheme: format!("{}-os", ternary_scheme(net, cluster)),
+        total_macs: net.total_macs(),
+        mults,
+        accums,
+    }
 }
 
 /// The paper's per-block statement: one 8-bit multiply per N·K² ternary
@@ -145,17 +172,19 @@ pub fn project_energy(census: &OpCensus) -> EnergyModel {
     EnergyModel { fp32, quant }
 }
 
-/// Markdown table of §3.3 for a set of cluster sizes (the E3 harness).
-pub fn table_3_3(net: &Network, clusters: &[usize]) -> String {
+/// Markdown table of §3.3 for a set of schemes (the E3 harness). Rows are
+/// labeled by scheme name; build the paper's cluster sweep with
+/// [`ternary_scheme`], or pass mixed schemes directly.
+pub fn table_3_3(net: &Network, schemes: &[Scheme]) -> String {
     let mut out = String::from(
-        "| N | mults remaining | accums | % replaced | accums/mult | est. speedup |\n|---|---|---|---|---|---|\n",
+        "| scheme | mults remaining | accums | % replaced | accums/mult | est. speedup |\n|---|---|---|---|---|---|\n",
     );
-    for &n in clusters {
-        let c = census_ternary(net, n);
+    for s in schemes {
+        let c = census(net, s);
         let e = project_energy(&c);
         out.push_str(&format!(
             "| {} | {} | {} | {:.1}% | {:.0} | {:.1}x |\n",
-            n,
+            c.scheme,
             c.mults,
             c.accums,
             100.0 * c.replaced_frac(),
@@ -240,7 +269,27 @@ mod tests {
 
     #[test]
     fn test_table_renders() {
-        let t = table_3_3(&resnet101(), &[4, 64]);
-        assert!(t.contains("| 4 |") && t.contains("| 64 |"));
+        let net = resnet101();
+        let schemes = [ternary_scheme(&net, 4), ternary_scheme(&net, 64)];
+        let t = table_3_3(&net, &schemes);
+        assert!(t.contains("| 8a2w_n4@conv1=i8 |") && t.contains("| 8a2w_n64@conv1=i8 |"), "{t}");
+    }
+
+    #[test]
+    fn test_census_accepts_mixed_schemes() {
+        let net = resnet101();
+        let paper = census_ternary(&net, 4);
+        // same scheme spelled explicitly gives identical numbers
+        let explicit = census(&net, &Scheme::parse("8a2w_n4@conv1=i8").unwrap());
+        assert_eq!(explicit.mults, paper.mults);
+        assert_eq!(explicit.accums, paper.accums);
+        // keeping a whole stage at i8 strictly lowers the replaced fraction
+        let partial = census(&net, &Scheme::parse("8a2w_n4@conv1=i8@s3*=i8").unwrap());
+        assert!(partial.mults > paper.mults);
+        assert!(partial.replaced_frac() < paper.replaced_frac());
+        // an all-i8 scheme replaces nothing
+        let none = census(&net, &Scheme::parse("8a8w_n4").unwrap());
+        assert_eq!(none.mults, none.total_macs);
+        assert_eq!(none.accums, 0);
     }
 }

@@ -6,7 +6,10 @@
 //! this implementation powers the rust-native analysis tools, the lpinfer
 //! cross-check pipeline and the quantizer benches.
 
+use anyhow::{ensure, Context, Result};
+
 use crate::dfp::{self, ScaleU8};
+use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
 
 /// Ternarization search mode (see DESIGN.md §2 and python docstring).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -190,8 +193,13 @@ pub fn ternarize_layer(
     n_filters: usize,
     cluster_size: usize,
     mode: TernaryMode,
-) -> TernaryLayer {
-    assert_eq!(w.len(), elems_per_filter * n_filters);
+) -> Result<TernaryLayer> {
+    ensure!(cluster_size >= 1, "ternarize_layer: cluster size must be >= 1 (got 0)");
+    ensure!(
+        w.len() == elems_per_filter * n_filters,
+        "ternarize_layer: {} weights != {elems_per_filter}x{n_filters}",
+        w.len()
+    );
     let n_clusters = n_filters.div_ceil(cluster_size);
     let mut codes = vec![0i8; w.len()];
     let mut alpha = vec![0.0f32; n_filters];
@@ -218,7 +226,7 @@ pub fn ternarize_layer(
             }
         }
     }
-    TernaryLayer { codes, elems_per_filter, n_filters, alpha, scales, cluster_size }
+    Ok(TernaryLayer { codes, elems_per_filter, n_filters, alpha, scales, cluster_size })
 }
 
 /// TWN baseline (Li et al. [7]): Δ = 0.7·E|w|, α = mean|w| over support.
@@ -284,8 +292,14 @@ pub fn quantize_layer_dfp(
     n_filters: usize,
     bits: u32,
     cluster_size: usize,
-) -> DfpLayer {
-    assert_eq!(w.len(), elems_per_filter * n_filters);
+) -> Result<DfpLayer> {
+    ensure!(cluster_size >= 1, "quantize_layer_dfp: cluster size must be >= 1 (got 0)");
+    ensure!((2..=8).contains(&bits), "quantize_layer_dfp: bits must be in 2..=8 (got {bits})");
+    ensure!(
+        w.len() == elems_per_filter * n_filters,
+        "quantize_layer_dfp: {} weights != {elems_per_filter}x{n_filters}",
+        w.len()
+    );
     let n_clusters = n_filters.div_ceil(cluster_size);
     let mut codes = vec![0i8; w.len()];
     let mut exps = Vec::with_capacity(n_clusters);
@@ -309,7 +323,96 @@ pub fn quantize_layer_dfp(
         }
         exps.push(exp);
     }
-    DfpLayer { codes, elems_per_filter, n_filters, exps, bits, cluster_size }
+    Ok(DfpLayer { codes, elems_per_filter, n_filters, exps, bits, cluster_size })
+}
+
+// ---------------------------------------------------------------------------
+// Scheme-driven model quantization (the typed mixed-precision entry point)
+// ---------------------------------------------------------------------------
+
+/// One layer quantized under some [`LayerPolicy`].
+#[derive(Debug, Clone)]
+pub enum QuantizedLayer {
+    Ternary(TernaryLayer),
+    Dfp(DfpLayer),
+}
+
+impl QuantizedLayer {
+    /// Integer codes, flattened (elems_per_filter, n_filters) filter-major.
+    pub fn codes(&self) -> &[i8] {
+        match self {
+            QuantizedLayer::Ternary(t) => &t.codes,
+            QuantizedLayer::Dfp(d) => &d.codes,
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        match self {
+            QuantizedLayer::Ternary(t) => t.dequantize(),
+            QuantizedLayer::Dfp(d) => d.dequantize(),
+        }
+    }
+
+    /// Fraction of zero codes.
+    pub fn sparsity(&self) -> f64 {
+        let codes = self.codes();
+        codes.iter().filter(|&&c| c == 0).count() as f64 / codes.len() as f64
+    }
+
+    /// Number of per-cluster scales (α̂ or exponents).
+    pub fn n_scales(&self) -> usize {
+        match self {
+            QuantizedLayer::Ternary(t) => t.scales.len(),
+            QuantizedLayer::Dfp(d) => d.exps.len(),
+        }
+    }
+
+    /// Storage bits per weight.
+    pub fn w_bits(&self) -> u32 {
+        match self {
+            QuantizedLayer::Ternary(_) => 2,
+            QuantizedLayer::Dfp(d) => d.bits,
+        }
+    }
+}
+
+/// Quantize one flattened layer under `policy` — the codec picks the
+/// algorithm (cluster ternary vs k-bit DFP), the policy's cluster the scale
+/// granularity.
+pub fn quantize_layer(
+    w: &[f32],
+    elems_per_filter: usize,
+    n_filters: usize,
+    policy: &LayerPolicy,
+) -> Result<QuantizedLayer> {
+    Ok(match policy.codec {
+        WeightCodec::Ternary { mode } => {
+            QuantizedLayer::Ternary(ternarize_layer(w, elems_per_filter, n_filters, policy.cluster, mode)?)
+        }
+        WeightCodec::Dfp { bits } => {
+            QuantizedLayer::Dfp(quantize_layer_dfp(w, elems_per_filter, n_filters, bits, policy.cluster)?)
+        }
+        WeightCodec::I8 => QuantizedLayer::Dfp(quantize_layer_dfp(w, elems_per_filter, n_filters, 8, policy.cluster)?),
+    })
+}
+
+/// Quantize a whole model under `scheme`: each `(name, weights,
+/// elems_per_filter, n_filters)` layer gets the codec + cluster its
+/// (glob-resolved) policy declares — 8-bit stem, ternary interior, 4-bit
+/// tail all in one pass. Returns the layers in input order.
+pub fn quantize_model<'a>(
+    scheme: &Scheme,
+    layers: impl IntoIterator<Item = (&'a str, &'a [f32], usize, usize)>,
+) -> Result<Vec<(String, QuantizedLayer)>> {
+    layers
+        .into_iter()
+        .map(|(name, w, elems_per_filter, n_filters)| {
+            let policy = scheme.policy_for(name);
+            let q = quantize_layer(w, elems_per_filter, n_filters, policy)
+                .with_context(|| format!("quantizing layer '{name}' under scheme '{scheme}'"))?;
+            Ok((name.to_string(), q))
+        })
+        .collect()
 }
 
 /// Signal-to-quantization-noise ratio in dB between `w` and `w_hat`.
@@ -359,7 +462,7 @@ mod tests {
         let codes: Vec<i8> = (0..16 * 9).map(|_| rng.next_below(3) as i8 - 1).collect();
         let w: Vec<f32> = codes.iter().map(|&c| f32::from(c) * 0.37).collect();
         for mode in [TernaryMode::Paper, TernaryMode::Support] {
-            let t = ternarize_layer(&w, 9, 16, 4, mode);
+            let t = ternarize_layer(&w, 9, 16, 4, mode).unwrap();
             let back = t.dequantize();
             let rel = {
                 let num: f64 = w.iter().zip(&back).map(|(&a, &b)| (f64::from(a) - f64::from(b)).powi(2)).sum::<f64>();
@@ -373,7 +476,7 @@ mod tests {
     #[test]
     fn test_ternary_codes_are_ternary_and_cluster_shared() {
         let w = gaussian(9 * 24, 5, 0.1);
-        let t = ternarize_layer(&w, 9, 24, 8, TernaryMode::Support);
+        let t = ternarize_layer(&w, 9, 24, 8, TernaryMode::Support).unwrap();
         assert!(t.codes.iter().all(|&c| (-1..=1).contains(&c)));
         assert_eq!(t.scales.len(), 3);
         for f in 0..24 {
@@ -384,8 +487,8 @@ mod tests {
     #[test]
     fn test_paper_mode_sparser_than_support() {
         let w = gaussian(9 * 32 * 32, 6, 0.1);
-        let p = ternarize_layer(&w, 9 * 32, 32, 4, TernaryMode::Paper);
-        let s = ternarize_layer(&w, 9 * 32, 32, 4, TernaryMode::Support);
+        let p = ternarize_layer(&w, 9 * 32, 32, 4, TernaryMode::Paper).unwrap();
+        let s = ternarize_layer(&w, 9 * 32, 32, 4, TernaryMode::Support).unwrap();
         assert!(p.sparsity() > s.sparsity(), "{} vs {}", p.sparsity(), s.sparsity());
     }
 
@@ -394,7 +497,7 @@ mod tests {
         let w = gaussian(9 * 16 * 64, 7, 0.1);
         let mut errs = Vec::new();
         for n in [1usize, 4, 16, 64] {
-            let t = ternarize_layer(&w, 9 * 16, 64, n, TernaryMode::Support);
+            let t = ternarize_layer(&w, 9 * 16, 64, n, TernaryMode::Support).unwrap();
             let back = t.dequantize();
             let e: f64 = w.iter().zip(&back).map(|(&a, &b)| (f64::from(a) - f64::from(b)).powi(2)).sum();
             errs.push(e);
@@ -423,7 +526,7 @@ mod tests {
     fn test_dfp_layer_range_and_error() {
         let w = gaussian(9 * 16, 9, 0.2);
         for bits in [4u32, 8] {
-            let d = quantize_layer_dfp(&w, 9, 16, bits, 4);
+            let d = quantize_layer_dfp(&w, 9, 16, bits, 4).unwrap();
             assert!(d.codes.iter().all(|&c| i32::from(c).abs() <= dfp::qmax(bits)));
             let back = d.dequantize();
             for f in 0..16 {
@@ -446,17 +549,61 @@ mod tests {
     #[test]
     fn test_uneven_last_cluster() {
         let w = gaussian(9 * 10, 10, 0.1);
-        let t = ternarize_layer(&w, 9, 10, 4, TernaryMode::Support);
+        let t = ternarize_layer(&w, 9, 10, 4, TernaryMode::Support).unwrap();
         assert_eq!(t.scales.len(), 3); // 4 + 4 + 2
-        let d = quantize_layer_dfp(&w, 9, 10, 4, 4);
+        let d = quantize_layer_dfp(&w, 9, 10, 4, 4).unwrap();
         assert_eq!(d.exps.len(), 3);
     }
 
     #[test]
     fn test_zero_weights() {
         let w = vec![0.0f32; 9 * 4];
-        let t = ternarize_layer(&w, 9, 4, 4, TernaryMode::Support);
+        let t = ternarize_layer(&w, 9, 4, 4, TernaryMode::Support).unwrap();
         assert!(t.codes.iter().all(|&c| c == 0));
         assert_eq!(threshold_select(&w), 0.0);
+    }
+
+    #[test]
+    fn test_cluster_zero_is_typed_error_not_panic() {
+        let w = gaussian(9 * 4, 12, 0.1);
+        for mode in [TernaryMode::Paper, TernaryMode::Support] {
+            let err = ternarize_layer(&w, 9, 4, 0, mode).unwrap_err().to_string();
+            assert!(err.contains("cluster"), "{err}");
+        }
+        assert!(quantize_layer_dfp(&w, 9, 4, 4, 0).is_err());
+        assert!(quantize_layer_dfp(&w, 9, 4, 9, 4).is_err()); // bad bits
+        assert!(ternarize_layer(&w, 9, 5, 4, TernaryMode::Support).is_err()); // len mismatch
+    }
+
+    #[test]
+    fn test_quantize_model_dispatches_per_layer_policy() {
+        use crate::scheme::Scheme;
+        let stem = gaussian(27 * 8, 13, 0.1);
+        let mid = gaussian(72 * 8, 14, 0.1);
+        let tail = gaussian(72 * 8, 15, 0.1);
+        let scheme = Scheme::parse("8a2w_n4@stem=i8@s1*=i4").unwrap();
+        let q = quantize_model(
+            &scheme,
+            [
+                ("stem", stem.as_slice(), 27usize, 8usize),
+                ("s0b0c1", mid.as_slice(), 72, 8),
+                ("s1b0c1", tail.as_slice(), 72, 8),
+            ],
+        )
+        .unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q[0].0, "stem");
+        assert_eq!(q[0].1.w_bits(), 8);
+        assert!(matches!(q[1].1, QuantizedLayer::Ternary(_)));
+        assert!(q[1].1.codes().iter().all(|&c| (-1..=1).contains(&c)));
+        assert_eq!(q[2].1.w_bits(), 4);
+        assert!(q[2].1.codes().iter().all(|&c| (-7..=7).contains(&c)));
+        // every layer: 8 filters, N=4 -> 2 scale clusters
+        assert!(q.iter().all(|(_, l)| l.n_scales() == 2));
+        // a failing layer reports its name and scheme
+        let err = quantize_model(&scheme, [("stem", stem.as_slice(), 27usize, 9usize)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stem"), "{err}");
     }
 }

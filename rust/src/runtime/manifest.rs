@@ -75,6 +75,17 @@ impl Manifest {
         names.sort_by_key(|n| std::cmp::Reverse(self.variants[*n].w_bits));
         names
     }
+
+    /// Parse a variant name as a precision [`Scheme`](crate::scheme::Scheme),
+    /// cross-checked against the bits/cluster the manifest records for it.
+    /// `None` for unknown variants, non-scheme names (`fp32`), or when the
+    /// name disagrees with the recorded metadata (a corrupt export).
+    pub fn scheme_of(&self, name: &str) -> Option<crate::scheme::Scheme> {
+        let v = self.variants.get(name)?;
+        let s = crate::scheme::Scheme::parse(name).ok()?;
+        let d = s.default_policy();
+        (d.w_bits() == v.w_bits && d.cluster == v.cluster).then_some(s)
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +118,23 @@ mod tests {
     fn test_precision_ordering() {
         let m = Manifest::from_json_text(SAMPLE).unwrap();
         assert_eq!(m.variants_by_precision(), vec!["fp32", "8a2w_n4"]);
+    }
+
+    #[test]
+    fn test_scheme_of() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        let s = m.scheme_of("8a2w_n4").unwrap();
+        assert_eq!(s.default_policy().w_bits(), 2);
+        assert_eq!(s.default_policy().cluster, 4);
+        assert!(m.scheme_of("fp32").is_none()); // not a scheme name
+        assert!(m.scheme_of("8a4w_n4").is_none()); // not in the manifest
+    }
+
+    #[test]
+    fn test_scheme_of_rejects_metadata_mismatch() {
+        let text = SAMPLE.replace(r#""w_bits": 2, "cluster": 4"#, r#""w_bits": 4, "cluster": 4"#);
+        let m = Manifest::from_json_text(&text).unwrap();
+        assert!(m.scheme_of("8a2w_n4").is_none());
     }
 
     #[test]

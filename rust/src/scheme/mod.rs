@@ -1,0 +1,493 @@
+//! Typed per-layer precision schemes — the single vocabulary for "how is
+//! this model quantized".
+//!
+//! The paper's core result is *mixed* precision: 8-bit first/last layers,
+//! ternary or 4-bit interior convs, accuracy traded against cluster size N
+//! (§3.2–3.3; TTQ and FGQ keep the boundary layers high-precision for the
+//! same reason). A [`Scheme`] makes that a first-class value instead of a
+//! `(w_bits, cluster, mode)` flag soup:
+//!
+//! * [`WeightCodec`] — how one layer's weights are encoded
+//!   (`Ternary { mode } | Dfp { bits } | I8`);
+//! * [`LayerPolicy`] — codec + scale-cluster size for one layer;
+//! * [`Scheme`] — a default policy plus ordered name/glob overrides
+//!   (`policy_for` resolves a layer name; the **last** matching override
+//!   wins, the default applies otherwise).
+//!
+//! The compact grammar round-trips the legacy variant names and extends
+//! them with per-layer exceptions (see DESIGN.md §scheme):
+//!
+//! ```text
+//! scheme   := <act>'a' <wspec> '_n' <N> ('@' pattern '=' codec (':n' N)?)*
+//! wspec    := '2w' | '2wp' | '3w'..'7w' | '8w'      (2wp = paper-mode ternary)
+//! codec    := 't' | 'tp' | 'i3'..'i7' | 'i8'
+//! ```
+//!
+//! `"8a2w_n4"` is the legacy ternary-N4 variant; `"8a2w_n4@stem=i8@fc=i8"`
+//! is the paper's mixed configuration with 8-bit boundary layers. A scheme
+//! flows quantizer ([`crate::quant::quantize_model`]) → packing/loading
+//! ([`crate::lpinfer::QModelParams`]) → kernel dispatch → op counting
+//! ([`crate::opcount`]) → serving, and (de)serializes as JSON for configs.
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::json::Json;
+use crate::quant::TernaryMode;
+
+/// How one layer's weights are encoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightCodec {
+    /// Cluster-ternary codes in {-1, 0, +1} with per-cluster α̂ (Algorithms 1 & 2).
+    Ternary { mode: TernaryMode },
+    /// k-bit dynamic fixed point with per-cluster power-of-two exponents, k in 3..=7.
+    Dfp { bits: u32 },
+    /// Full 8-bit DFP (the paper's first/last-layer precision).
+    I8,
+}
+
+impl WeightCodec {
+    /// Storage bits per weight under this codec.
+    pub fn w_bits(self) -> u32 {
+        match self {
+            WeightCodec::Ternary { .. } => 2,
+            WeightCodec::Dfp { bits } => bits,
+            WeightCodec::I8 => 8,
+        }
+    }
+
+    /// Map an exported `w_bits` scalar onto its canonical codec
+    /// (2 → support-mode ternary, 3..=7 → DFP, 8 → i8).
+    pub fn from_w_bits(bits: u32) -> Result<Self> {
+        Ok(match bits {
+            2 => WeightCodec::Ternary { mode: TernaryMode::Support },
+            b @ 3..=7 => WeightCodec::Dfp { bits: b },
+            8 => WeightCodec::I8,
+            other => bail!("no weight codec for w_bits={other} (valid: 2..=8)"),
+        })
+    }
+}
+
+impl fmt::Display for WeightCodec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WeightCodec::Ternary { mode: TernaryMode::Support } => f.write_str("t"),
+            WeightCodec::Ternary { mode: TernaryMode::Paper } => f.write_str("tp"),
+            WeightCodec::Dfp { bits } => write!(f, "i{bits}"),
+            WeightCodec::I8 => f.write_str("i8"),
+        }
+    }
+}
+
+impl std::str::FromStr for WeightCodec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "t" | "ternary" => WeightCodec::Ternary { mode: TernaryMode::Support },
+            "tp" | "ternary-paper" => WeightCodec::Ternary { mode: TernaryMode::Paper },
+            "i8" => WeightCodec::I8,
+            other => {
+                let bits: u32 = other
+                    .strip_prefix('i')
+                    .and_then(|b| b.parse().ok())
+                    .with_context(|| format!("unknown weight codec '{other}' (valid: t|tp|i3..i7|i8)"))?;
+                ensure!((3..=7).contains(&bits), "dfp codec bits must be in 3..=7 (got i{bits})");
+                WeightCodec::Dfp { bits }
+            }
+        })
+    }
+}
+
+/// The precision policy of one layer: weight codec + filters per α̂/exponent
+/// cluster. Constructed through [`LayerPolicy::new`], which rejects the
+/// degenerate `cluster == 0` up front (the quantizers would otherwise
+/// `div_ceil(0)`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPolicy {
+    pub codec: WeightCodec,
+    pub cluster: usize,
+}
+
+impl LayerPolicy {
+    pub fn new(codec: WeightCodec, cluster: usize) -> Result<Self> {
+        ensure!(cluster >= 1, "layer policy: cluster size must be >= 1 (got 0)");
+        if let WeightCodec::Dfp { bits } = codec {
+            ensure!((3..=7).contains(&bits), "layer policy: dfp bits must be in 3..=7 (got {bits})");
+        }
+        Ok(Self { codec, cluster })
+    }
+
+    /// Storage bits per weight.
+    pub fn w_bits(&self) -> u32 {
+        self.codec.w_bits()
+    }
+}
+
+/// Glob match with `*` as the only wildcard (matches any, possibly empty,
+/// substring). `s2*` matches every stage-2 layer, `*proj` every projection.
+fn glob_match(pat: &str, text: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    // dp[i][j]: p[..i] matches t[..j]
+    let mut dp = vec![vec![false; t.len() + 1]; p.len() + 1];
+    dp[0][0] = true;
+    for i in 1..=p.len() {
+        if p[i - 1] == '*' {
+            dp[i][0] = dp[i - 1][0];
+        }
+        for j in 1..=t.len() {
+            dp[i][j] = if p[i - 1] == '*' {
+                dp[i - 1][j] || dp[i][j - 1]
+            } else {
+                dp[i - 1][j - 1] && p[i - 1] == t[j - 1]
+            };
+        }
+    }
+    dp[p.len()][t.len()]
+}
+
+/// A named mixed-precision configuration: activation bits, a default
+/// [`LayerPolicy`], and an ordered list of `(pattern, policy)` overrides.
+///
+/// Resolution: [`Scheme::policy_for`] walks the overrides newest-first and
+/// returns the first whose pattern (exact name or `*`-glob) matches; the
+/// default applies when none does. The builder methods consume and return
+/// `self` so schemes read as literals:
+///
+/// ```ignore
+/// let s = Scheme::uniform(8, ternary_n4)?.with_override("stem", i8)?.with_override("fc", i8)?;
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scheme {
+    act_bits: u32,
+    default_policy: LayerPolicy,
+    overrides: Vec<(String, LayerPolicy)>,
+}
+
+impl Scheme {
+    /// A scheme applying one policy to every layer (the legacy variants).
+    pub fn uniform(act_bits: u32, default_policy: LayerPolicy) -> Result<Self> {
+        ensure!((2..=8).contains(&act_bits), "scheme: activation bits must be in 2..=8 (got {act_bits})");
+        Ok(Self { act_bits, default_policy, overrides: Vec::new() })
+    }
+
+    /// Builder: add a per-layer exception. `pattern` is an exact layer name
+    /// (`"stem"`, `"fc"`) or a `*`-glob (`"s2*"`, `"*proj"`). Later
+    /// overrides win over earlier ones.
+    pub fn with_override(mut self, pattern: &str, policy: LayerPolicy) -> Result<Self> {
+        ensure!(!pattern.is_empty(), "scheme override: empty layer pattern");
+        ensure!(
+            pattern.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.' | '*')),
+            "scheme override: invalid layer pattern '{pattern}' (allowed: [A-Za-z0-9_.*-])"
+        );
+        self.overrides.push((pattern.to_string(), policy));
+        Ok(self)
+    }
+
+    pub fn act_bits(&self) -> u32 {
+        self.act_bits
+    }
+
+    pub fn default_policy(&self) -> &LayerPolicy {
+        &self.default_policy
+    }
+
+    /// The ordered `(pattern, policy)` overrides (oldest first).
+    pub fn overrides(&self) -> &[(String, LayerPolicy)] {
+        &self.overrides
+    }
+
+    /// Resolve the policy of a layer: last matching override, else default.
+    pub fn policy_for(&self, layer: &str) -> &LayerPolicy {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|(pat, _)| glob_match(pat, layer))
+            .map(|(_, p)| p)
+            .unwrap_or(&self.default_policy)
+    }
+
+    /// Storage bits per weight for a layer.
+    pub fn w_bits_for(&self, layer: &str) -> u32 {
+        self.policy_for(layer).w_bits()
+    }
+
+    /// Check every override against the model's actual layer names: a
+    /// literal pattern must name a known layer, a glob must match at least
+    /// one. Catches typos like `@stme=i8` before weights are quantized.
+    pub fn validate_layers<'a>(&self, known: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        let known: Vec<&str> = known.into_iter().collect();
+        for (pat, _) in &self.overrides {
+            if pat.contains('*') {
+                ensure!(
+                    known.iter().any(|n| glob_match(pat, n)),
+                    "scheme override '@{pat}=' matches no layer (known layers: {known:?})"
+                );
+            } else {
+                ensure!(
+                    known.iter().any(|n| *n == pat),
+                    "scheme override names unknown layer '{pat}' (known layers: {known:?})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Scheme::validate_layers`] against a network's conv names + `"fc"`.
+    pub fn validate_for(&self, net: &crate::model::Network) -> Result<()> {
+        self.validate_layers(net.layers.iter().map(|l| l.name.as_str()).chain(std::iter::once("fc")))
+    }
+
+    /// The scheme's canonical compact name (same as `to_string()`).
+    pub fn name(&self) -> String {
+        self.to_string()
+    }
+
+    /// Parse the compact grammar (see module docs). Canonical strings
+    /// round-trip: `Scheme::parse(s)?.to_string() == s` whenever `s` uses
+    /// the canonical codec spellings and omits `:nN` equal to the default
+    /// cluster (non-canonical aliases like `@x=ternary` or a redundant
+    /// `:n4` parse fine but print canonically).
+    pub fn parse(s: &str) -> Result<Self> {
+        let syntax = || format!("scheme '{s}': expected <A>a<W>w_n<N>[@layer=codec[:nN]]* (e.g. 8a2w_n4@stem=i8)");
+        let mut parts = s.split('@');
+        let base = parts.next().unwrap_or_default();
+        let (act_s, rest) = base.split_once('a').with_context(syntax)?;
+        let act_bits: u32 = act_s.parse().ok().with_context(syntax)?;
+        let (wspec, n_s) = rest.split_once("_n").with_context(syntax)?;
+        let (bits_s, paper) = match wspec.strip_suffix("wp") {
+            Some(b) => (b, true),
+            None => (wspec.strip_suffix('w').with_context(syntax)?, false),
+        };
+        let w_bits: u32 = bits_s.parse().ok().with_context(syntax)?;
+        let cluster: usize = n_s.parse().ok().with_context(syntax)?;
+        let codec = match (w_bits, paper) {
+            (2, false) => WeightCodec::Ternary { mode: TernaryMode::Support },
+            (2, true) => WeightCodec::Ternary { mode: TernaryMode::Paper },
+            (8, false) => WeightCodec::I8,
+            (b @ 3..=7, false) => WeightCodec::Dfp { bits: b },
+            _ => bail!("scheme '{s}': unsupported weight spec '{wspec}' (valid: 2w|2wp|3w..7w|8w)"),
+        };
+        let mut scheme = Self::uniform(act_bits, LayerPolicy::new(codec, cluster)?)?;
+        for ov in parts {
+            let (pattern, policy_s) = ov
+                .split_once('=')
+                .with_context(|| format!("scheme '{s}': override '@{ov}' is not '@layer=codec[:nN]'"))?;
+            let (codec_s, ov_cluster) = match policy_s.split_once(":n") {
+                Some((c, n)) => {
+                    (c, n.parse().ok().with_context(|| format!("scheme '{s}': bad override cluster ':{n}'"))?)
+                }
+                None => (policy_s, cluster),
+            };
+            scheme = scheme.with_override(pattern, LayerPolicy::new(codec_s.parse()?, ov_cluster)?)?;
+        }
+        Ok(scheme)
+    }
+
+    /// JSON form (for config files and result metadata):
+    /// `{"name": "...", "act_bits": 8, "default": {...}, "overrides": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let policy_json = |p: &LayerPolicy| {
+            vec![("codec", Json::str(p.codec.to_string())), ("cluster", Json::num(p.cluster as u32))]
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.to_string())),
+            ("act_bits", Json::num(self.act_bits)),
+            ("default", Json::obj(policy_json(&self.default_policy))),
+            (
+                "overrides",
+                Json::arr(
+                    self.overrides
+                        .iter()
+                        .map(|(pat, p)| {
+                            let mut fields = vec![("layer", Json::str(pat.clone()))];
+                            fields.extend(policy_json(p));
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Inverse of [`Scheme::to_json`]. Accepts either the full object form
+    /// or any object carrying a parseable `"name"` (which wins when present).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(name) = j.get("name").and_then(Json::as_str) {
+            return Self::parse(name);
+        }
+        let policy = |o: &Json| -> Result<LayerPolicy> {
+            let codec: WeightCodec = o.get("codec").and_then(Json::as_str).context("scheme json: codec")?.parse()?;
+            let cluster = o.get("cluster").and_then(Json::as_i64).context("scheme json: cluster")?;
+            LayerPolicy::new(codec, cluster as usize)
+        };
+        let act_bits = j.get("act_bits").and_then(Json::as_i64).context("scheme json: act_bits")? as u32;
+        let mut scheme = Self::uniform(act_bits, policy(j.get("default").context("scheme json: default")?)?)?;
+        if let Some(arr) = j.get("overrides").and_then(Json::as_arr) {
+            for ov in arr {
+                let pat = ov.get("layer").and_then(Json::as_str).context("scheme json: override layer")?;
+                scheme = scheme.with_override(pat, policy(ov)?)?;
+            }
+        }
+        Ok(scheme)
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let d = &self.default_policy;
+        let wspec = match d.codec {
+            WeightCodec::Ternary { mode: TernaryMode::Support } => "2w".to_string(),
+            WeightCodec::Ternary { mode: TernaryMode::Paper } => "2wp".to_string(),
+            WeightCodec::Dfp { bits } => format!("{bits}w"),
+            WeightCodec::I8 => "8w".to_string(),
+        };
+        write!(f, "{}a{}_n{}", self.act_bits, wspec, d.cluster)?;
+        for (pat, p) in &self.overrides {
+            write!(f, "@{pat}={}", p.codec)?;
+            if p.cluster != d.cluster {
+                write!(f, ":n{}", p.cluster)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tern(cluster: usize) -> LayerPolicy {
+        LayerPolicy::new(WeightCodec::Ternary { mode: TernaryMode::Support }, cluster).unwrap()
+    }
+
+    fn i8p(cluster: usize) -> LayerPolicy {
+        LayerPolicy::new(WeightCodec::I8, cluster).unwrap()
+    }
+
+    #[test]
+    fn test_parse_legacy_variants() {
+        for (s, bits, cluster) in [("8a2w_n4", 2, 4), ("8a4w_n4", 4, 4), ("8a8w_n4", 8, 4), ("8a2w_n64", 2, 64)] {
+            let sch = Scheme::parse(s).unwrap();
+            assert_eq!(sch.act_bits(), 8, "{s}");
+            assert_eq!(sch.default_policy().w_bits(), bits, "{s}");
+            assert_eq!(sch.default_policy().cluster, cluster, "{s}");
+            assert!(sch.overrides().is_empty(), "{s}");
+            assert_eq!(sch.to_string(), s);
+        }
+        assert_eq!(
+            Scheme::parse("8a2wp_n4").unwrap().default_policy().codec,
+            WeightCodec::Ternary { mode: TernaryMode::Paper }
+        );
+    }
+
+    #[test]
+    fn test_parse_rejects_garbage() {
+        for s in ["fp32", "", "8a2w", "8a2w_n0", "8a9w_n4", "a2w_n4", "8a2w_n4@stem", "8a2w_n4@stem=i9",
+                  "8a2w_n4@=i8", "8a2wp_n4@x=tq", "9a2w_n4", "8a2w_nx"] {
+            assert!(Scheme::parse(s).is_err(), "'{s}' should not parse");
+        }
+    }
+
+    #[test]
+    fn test_override_resolution_last_wins() {
+        let s = Scheme::uniform(8, tern(4))
+            .unwrap()
+            .with_override("s2*", i8p(4))
+            .unwrap()
+            .with_override("s2b0c1", tern(64))
+            .unwrap();
+        assert_eq!(s.policy_for("stem"), &tern(4));
+        assert_eq!(s.policy_for("s2b0c2"), &i8p(4));
+        // literal added after the glob wins for the layer it names
+        assert_eq!(s.policy_for("s2b0c1"), &tern(64));
+        assert_eq!(s.w_bits_for("s2b0c2"), 8);
+    }
+
+    #[test]
+    fn test_glob_matching() {
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("s2*", "s2b0c1"));
+        assert!(glob_match("*proj", "s1b0proj"));
+        assert!(glob_match("s*c1", "s0b0c1"));
+        assert!(!glob_match("s2*", "s1b0c1"));
+        assert!(!glob_match("proj", "s1b0proj"));
+        assert!(glob_match("fc", "fc"));
+    }
+
+    #[test]
+    fn test_mixed_scheme_roundtrip_with_overrides() {
+        for s in [
+            "8a2w_n4@stem=i8@fc=i8",
+            "8a2w_n64@stem=i8@s2*=i4:n4@fc=i8",
+            "8a4w_n4@*proj=t",
+            "8a2wp_n8@fc=tp:n2",
+        ] {
+            let sch = Scheme::parse(s).unwrap();
+            assert_eq!(sch.to_string(), s, "round-trip of '{s}'");
+            assert_eq!(Scheme::from_json(&sch.to_json()).unwrap(), sch, "json round-trip of '{s}'");
+        }
+    }
+
+    #[test]
+    fn test_cluster_zero_rejected_at_construction() {
+        assert!(LayerPolicy::new(WeightCodec::I8, 0).is_err());
+        assert!(Scheme::parse("8a2w_n0").is_err());
+        assert!(Scheme::parse("8a2w_n4@fc=i8:n0").is_err());
+    }
+
+    #[test]
+    fn test_validate_layers() {
+        let known = ["stem", "s0b0c1", "s0b0c2", "fc"];
+        let ok = Scheme::parse("8a2w_n4@stem=i8@s0*=i4@fc=i8").unwrap();
+        ok.validate_layers(known).unwrap();
+        let typo = Scheme::parse("8a2w_n4@stme=i8").unwrap();
+        let err = typo.validate_layers(known).unwrap_err().to_string();
+        assert!(err.contains("stme") && err.contains("stem"), "{err}");
+        let dead_glob = Scheme::parse("8a2w_n4@s9*=i8").unwrap();
+        assert!(dead_glob.validate_layers(known).is_err());
+    }
+
+    #[test]
+    fn test_validate_for_network() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        Scheme::parse("8a2w_n4@stem=i8@fc=i8").unwrap().validate_for(&net).unwrap();
+        assert!(Scheme::parse("8a2w_n4@conv9=i8").unwrap().validate_for(&net).is_err());
+    }
+
+    #[test]
+    fn test_json_full_object_form() {
+        let j = crate::json::parse(
+            r#"{"act_bits": 8,
+                "default": {"codec": "t", "cluster": 4},
+                "overrides": [{"layer": "stem", "codec": "i8", "cluster": 4}]}"#,
+        )
+        .unwrap();
+        let s = Scheme::from_json(&j).unwrap();
+        assert_eq!(s.to_string(), "8a2w_n4@stem=i8");
+        assert!(Scheme::from_json(&crate::json::parse(r#"{"default": {}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn test_codec_parse_display() {
+        for c in ["t", "tp", "i3", "i4", "i7", "i8"] {
+            assert_eq!(c.parse::<WeightCodec>().unwrap().to_string(), c);
+        }
+        assert!("i2".parse::<WeightCodec>().is_err());
+        assert!("i9".parse::<WeightCodec>().is_err());
+        assert!("x".parse::<WeightCodec>().is_err());
+        assert_eq!(WeightCodec::from_w_bits(2).unwrap().w_bits(), 2);
+        assert_eq!(WeightCodec::from_w_bits(8).unwrap(), WeightCodec::I8);
+        assert!(WeightCodec::from_w_bits(32).is_err());
+    }
+}

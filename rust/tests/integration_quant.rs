@@ -31,7 +31,8 @@ fn rust_ternarizer_matches_python_export() {
         let shape = w.shape();
         let n_filters = *shape.last().unwrap();
         let epf = w.len() / n_filters;
-        let ours = quant::ternarize_layer(w.data(), epf, n_filters, cluster, TernaryMode::Support);
+        let ours =
+            quant::ternarize_layer(w.data(), epf, n_filters, cluster, TernaryMode::Support).unwrap();
 
         let theirs_codes = qexport[&format!("{layer}.wq")].as_i8().unwrap();
         let theirs_scale = qexport[&format!("{layer}.w_scale")].as_f32().unwrap();
@@ -80,7 +81,7 @@ fn rust_dfp_quantizer_matches_python_stem() {
     let w = weights["stem.w"].as_f32().unwrap();
     let n_filters = *w.shape().last().unwrap();
     let epf = w.len() / n_filters;
-    let ours = quant::quantize_layer_dfp(w.data(), epf, n_filters, 8, cluster);
+    let ours = quant::quantize_layer_dfp(w.data(), epf, n_filters, 8, cluster).unwrap();
     let theirs = qexport["stem.wq"].as_i8().unwrap();
     // round-half-even in numpy vs rust must agree exactly
     let diff = theirs.data().iter().zip(&ours.codes).filter(|(a, b)| a != b).count();
@@ -118,7 +119,7 @@ fn twn_baseline_worse_sqnr_than_clustered() {
     let n_filters = *w.shape().last().unwrap();
     let epf = w.len() / n_filters;
 
-    let clustered = quant::ternarize_layer(w.data(), epf, n_filters, 4, TernaryMode::Support);
+    let clustered = quant::ternarize_layer(w.data(), epf, n_filters, 4, TernaryMode::Support).unwrap();
     let ours = quant::sqnr_db(w.data(), &clustered.dequantize());
 
     let (codes, alpha) = quant::ternarize_twn(w.data());

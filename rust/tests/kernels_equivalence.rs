@@ -10,6 +10,7 @@ use dfp_infer::kernels::{
 };
 use dfp_infer::lpinfer::{forward_quant_with, QModelParams};
 use dfp_infer::model::resnet_mini;
+use dfp_infer::scheme::Scheme;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::testing::{check, Gen};
 use dfp_infer::util::SplitMix64;
@@ -131,8 +132,9 @@ fn forward_quant_invariant_under_registry_choice_and_threads() {
     let net = resnet_mini(8, &[8, 16, 16], 1, 5);
     let mut rng = SplitMix64::new(77);
     let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
-    for (w_bits, cluster) in [(2u32, 4usize), (2, 16), (2, 64), (4, 4)] {
-        let params = QModelParams::synthetic(&net, 1000 + cluster as u64, w_bits, cluster);
+    for (i, variant) in ["8a2w_n4", "8a2w_n16", "8a2w_n64", "8a4w_n4"].iter().enumerate() {
+        let scheme = Scheme::parse(variant).unwrap();
+        let params = QModelParams::synthetic(&net, 1000 + i as u64, &scheme);
         params.validate(&net).unwrap();
         let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
         assert!(want.data().iter().all(|v| v.is_finite()));
@@ -140,12 +142,45 @@ fn forward_quant_invariant_under_registry_choice_and_threads() {
             for threads in [1usize, 2, 4] {
                 let reg = KernelRegistry::new(Some(kind), threads);
                 let got = forward_quant_with(&params, &net, &x, &reg);
-                assert_eq!(
-                    got.data(),
-                    want.data(),
-                    "w_bits={w_bits} N={cluster} kernel={kind} threads={threads}"
-                );
+                assert_eq!(got.data(), want.data(), "scheme={variant} kernel={kind} threads={threads}");
             }
+        }
+    }
+}
+
+#[test]
+fn mixed_scheme_layers_carry_policies_and_logits_stay_bit_exact() {
+    // the paper's mixed configuration: i8 stem, ternary-N4 interior, i4
+    // tail stage, i8 FC — one model, per-layer policies, and logits must
+    // be bit-identical for every kernel force and thread count
+    let net = resnet_mini(8, &[8, 16, 16], 1, 5);
+    let scheme = Scheme::parse("8a2w_n4@stem=i8@s2*=i4@fc=i8").unwrap();
+    scheme.validate_for(&net).unwrap();
+    let params = QModelParams::synthetic(&net, 321, &scheme);
+    params.validate(&net).unwrap();
+
+    // per-layer policies honored end to end, including the packed encodings
+    assert_eq!(params.convs["stem"].policy.w_bits(), 8);
+    assert!(
+        params.convs["stem"].packed.ternary.is_none() && params.convs["stem"].packed.i4.is_none(),
+        "random i8 stem codes must not fit a sub-8-bit packing"
+    );
+    assert_eq!(params.convs["s0b0c1"].policy.w_bits(), 2);
+    assert!(params.convs["s0b0c1"].packed.ternary.is_some());
+    assert_eq!(params.convs["s2b0c1"].policy.w_bits(), 4);
+    let tail = &params.convs["s2b0c1"].packed;
+    assert!(tail.i4.is_some() && tail.ternary.is_none(), "i4 tail packs i4 but not ternary");
+    assert_eq!(params.scheme.policy_for("fc").w_bits(), 8);
+
+    let mut rng = SplitMix64::new(88);
+    let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+    let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
+    assert!(want.data().iter().all(|v| v.is_finite()));
+    for kind in ALL_KERNELS {
+        for threads in [1usize, 2, 4] {
+            let reg = KernelRegistry::new(Some(kind), threads);
+            let got = forward_quant_with(&params, &net, &x, &reg);
+            assert_eq!(got.data(), want.data(), "mixed scheme, kernel={kind} threads={threads}");
         }
     }
 }
@@ -153,12 +188,12 @@ fn forward_quant_invariant_under_registry_choice_and_threads() {
 #[test]
 fn registry_auto_uses_packed_engines_when_available() {
     let net = resnet_mini(8, &[4, 4, 4], 1, 3);
-    let tern = QModelParams::synthetic(&net, 9, 2, 4);
+    let tern = QModelParams::synthetic(&net, 9, &Scheme::parse("8a2w_n4").unwrap());
     let reg = KernelRegistry::auto();
     for p in tern.convs.values() {
         assert_eq!(reg.select(&p.packed), dfp_infer::kernels::KernelKind::PackedTernary);
     }
-    let i4 = QModelParams::synthetic(&net, 9, 4, 4);
+    let i4 = QModelParams::synthetic(&net, 9, &Scheme::parse("8a4w_n4").unwrap());
     // 4-bit codes almost surely exceed ternary range somewhere
     assert!(i4
         .convs

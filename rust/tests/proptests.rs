@@ -71,7 +71,7 @@ fn prop_ternary_layer_invariants() {
     );
     check(60, &gen, |(w, n)| {
         for mode in [TernaryMode::Paper, TernaryMode::Support] {
-            let t = quant::ternarize_layer(w, 9, 8, *n, mode);
+            let t = quant::ternarize_layer(w, 9, 8, *n, mode).map_err(|e| e.to_string())?;
             if t.codes.iter().any(|&c| !(-1..=1).contains(&c)) {
                 return Err("non-ternary code".into());
             }

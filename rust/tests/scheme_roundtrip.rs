@@ -1,0 +1,132 @@
+//! Scheme grammar property tests: `Scheme::parse(s).to_string() == s` for
+//! the legacy variant grammar and the extended `@layer=` override syntax,
+//! plus JSON round-trips, override precedence and error cases.
+
+use dfp_infer::scheme::{LayerPolicy, Scheme, WeightCodec};
+use dfp_infer::testing::{check, Gen};
+use dfp_infer::util::SplitMix64;
+
+/// Generates canonical scheme strings: a random legacy base plus up to two
+/// overrides. Override clusters are drawn from values never used as base
+/// clusters, so the canonical form always prints them (`:nN`).
+struct SchemeStrGen;
+
+const BASES: [&str; 8] = ["2w", "2wp", "3w", "4w", "5w", "6w", "7w", "8w"];
+const CLUSTERS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+const OV_PATTERNS: [&str; 5] = ["stem", "fc", "s0b0c1", "s2*", "*proj"];
+const OV_CODECS: [&str; 5] = ["t", "tp", "i3", "i4", "i8"];
+const OV_CLUSTERS: [usize; 3] = [3, 12, 48]; // disjoint from CLUSTERS
+
+impl Gen for SchemeStrGen {
+    type Value = String;
+
+    fn generate(&self, rng: &mut SplitMix64) -> String {
+        let base = BASES[rng.next_below(BASES.len() as u64) as usize];
+        let n = CLUSTERS[rng.next_below(CLUSTERS.len() as u64) as usize];
+        let mut s = format!("8a{base}_n{n}");
+        for _ in 0..rng.next_below(3) {
+            let pat = OV_PATTERNS[rng.next_below(OV_PATTERNS.len() as u64) as usize];
+            let codec = OV_CODECS[rng.next_below(OV_CODECS.len() as u64) as usize];
+            s.push_str(&format!("@{pat}={codec}"));
+            if rng.next_below(2) == 1 {
+                let c = OV_CLUSTERS[rng.next_below(OV_CLUSTERS.len() as u64) as usize];
+                s.push_str(&format!(":n{c}"));
+            }
+        }
+        s
+    }
+
+    fn shrink(&self, v: &String) -> Vec<String> {
+        // drop the last override
+        match v.rfind('@') {
+            Some(i) => vec![v[..i].to_string()],
+            None => Vec::new(),
+        }
+    }
+}
+
+#[test]
+fn prop_scheme_string_roundtrip() {
+    check(300, &SchemeStrGen, |s| {
+        let scheme = Scheme::parse(s).map_err(|e| format!("'{s}' failed to parse: {e}"))?;
+        let printed = scheme.to_string();
+        if printed != *s {
+            return Err(format!("'{s}' printed as '{printed}'"));
+        }
+        // JSON round-trip must reproduce the same scheme
+        let back = Scheme::from_json(&scheme.to_json()).map_err(|e| format!("json: {e}"))?;
+        if back != scheme {
+            return Err(format!("'{s}' json round-trip mismatch"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policy_for_respects_bits_of_last_matching_override() {
+    // structural property on generated schemes: for a literal layer name,
+    // policy_for returns the policy of the LAST override matching it
+    check(200, &SchemeStrGen, |s| {
+        let scheme = Scheme::parse(s).map_err(|e| e.to_string())?;
+        for layer in ["stem", "fc", "s0b0c1", "s2b0c2", "s1b0proj", "elsewhere"] {
+            let got = scheme.policy_for(layer).clone();
+            let want = scheme
+                .overrides()
+                .iter()
+                .rev()
+                .find(|(pat, _)| matches_name(pat, layer))
+                .map(|(_, p)| p.clone())
+                .unwrap_or_else(|| scheme.default_policy().clone());
+            if got != want {
+                return Err(format!("'{s}': policy_for({layer}) = {got:?}, want {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Independent (test-side) matcher for the patterns SchemeStrGen emits.
+fn matches_name(pat: &str, name: &str) -> bool {
+    match pat {
+        "s2*" => name.starts_with("s2"),
+        "*proj" => name.ends_with("proj"),
+        p => p == name,
+    }
+}
+
+#[test]
+fn override_precedence_is_deterministic() {
+    let tern = |n| LayerPolicy::new("t".parse::<WeightCodec>().unwrap(), n).unwrap();
+    let i8p = |n| LayerPolicy::new(WeightCodec::I8, n).unwrap();
+    let s = Scheme::uniform(8, tern(4))
+        .unwrap()
+        .with_override("s1*", i8p(4))
+        .unwrap()
+        .with_override("*c1", tern(64))
+        .unwrap();
+    // both globs match s1b0c1; the later one wins
+    assert_eq!(s.policy_for("s1b0c1"), &tern(64));
+    // only the first matches s1b0c2
+    assert_eq!(s.policy_for("s1b0c2"), &i8p(4));
+    // neither matches the stem
+    assert_eq!(s.policy_for("stem"), &tern(4));
+}
+
+#[test]
+fn unknown_layer_names_are_rejected_by_validation() {
+    let known = ["stem", "s0b0c1", "s0b0c2", "fc"];
+    assert!(Scheme::parse("8a2w_n4@stem=i8").unwrap().validate_layers(known).is_ok());
+    let err = Scheme::parse("8a2w_n4@conv7=i8").unwrap().validate_layers(known).unwrap_err();
+    assert!(err.to_string().contains("conv7"), "{err}");
+    // a glob matching nothing is equally a configuration bug
+    assert!(Scheme::parse("8a2w_n4@s9*=i8").unwrap().validate_layers(known).is_err());
+}
+
+#[test]
+fn degenerate_schemes_fail_to_construct() {
+    assert!(Scheme::parse("8a2w_n0").is_err(), "cluster 0 must be rejected");
+    assert!(Scheme::parse("8a2w_n4@fc=i8:n0").is_err());
+    assert!(Scheme::parse("fp32").is_err());
+    assert!(Scheme::parse("8a2w_n4@@fc=i8").is_err());
+    assert!(LayerPolicy::new(WeightCodec::Dfp { bits: 8 }, 4).is_err(), "dfp-8 is spelled i8");
+}
