@@ -5,17 +5,20 @@
 //!   3. realizable CPU speedup of the rust integer conv vs the f32 conv,
 //!   4. the kernels/ packed engines vs the dense i8 kernels — per
 //!      resnet-mini layer shape, dense and post-ReLU-sparse activations,
-//!      single- and multi-thread.
+//!      single- and multi-thread,
+//!   5. the fused integer requant epilogue vs the pre-fusion path (packed
+//!      GEMM to a full i32 tensor + f32 scale/BN/ReLU/round pass) — E5.6.
 //!
 //! Emits a machine-readable `BENCH_kernels.json` (override the path with
 //! `BENCH_JSON_OUT`) so later PRs have a perf trajectory baseline.
 //! `BENCH_QUICK=1` shortens every measurement for CI-style runs.
 
 use dfp_infer::bench::Bencher;
-use dfp_infer::dfp::packing;
+use dfp_infer::dfp::{packing, round_half_even};
 use dfp_infer::json::Json;
 use dfp_infer::kernels::{
-    gemm_packed_i4, gemm_packed_ternary, PackedI4Matrix, PackedTernaryMatrix, ThreadPool,
+    gemm_packed_i4, gemm_packed_ternary, KernelKind, KernelRegistry, LayerRequant, PackedI4Matrix,
+    PackedLayer, PackedTernaryMatrix, ThreadPool,
 };
 use dfp_infer::lpinfer::{gemm_i8, gemm_i8_dense};
 use dfp_infer::model::{resnet101, resnet_mini_default};
@@ -132,10 +135,49 @@ fn main() {
         ]));
     }
 
+    println!("\n== E5.6: requant epilogue — unfused f32 vs fused integer ==");
+    // same conv shape as E5.3/E5.4; the epilogue turns i32 accumulators
+    // into the next layer's i8 codes (folded BN + rescale + ReLU + clamp)
+    let w_scale: Vec<f32> = (0..f).map(|i| 0.0015 * (1 + i % 4) as f32).collect();
+    let bn_scale: Vec<f32> = (0..f).map(|i| 1.0 + 0.01 * (i % 8) as f32).collect();
+    let bn_shift: Vec<f32> = (0..f).map(|i| 0.1 * (i % 5) as f32 - 0.2).collect();
+    let packed_layer = PackedLayer::build(&w_tern, &w_scale, 4);
+    let lr = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift).unwrap();
+    let epi = lr.resolve(-4, -4, true);
+    let reg_t1 = KernelRegistry::new(Some(KernelKind::PackedTernary), 1);
+    let reg_t4 = KernelRegistry::new(Some(KernelKind::PackedTernary), 4);
+    b.bench("conv+requant unfused f32 epilogue 1t", macs, || {
+        // the pre-fusion serving path: packed GEMM to a full i32 tensor,
+        // then an f32 pass (scale, BN, ReLU, round-half-even) to i8
+        let acc = reg_t1.gemm(&a_sparse, &w_tern, &packed_layer);
+        let accd = acc.data();
+        let exp_scale = 2f32.powi(-4);
+        let mut out = vec![0i8; accd.len()];
+        for (i, o) in out.iter_mut().enumerate() {
+            let c = i % f;
+            let y = accd[i] as f32 * (w_scale[c] * exp_scale);
+            let v = (y * bn_scale[c] + bn_shift[c]).max(0.0);
+            *o = round_half_even(f64::from(v) * 2f64.powi(4)).clamp(-127.0, 127.0) as i8;
+        }
+        out
+    });
+    b.bench("conv+requant fused integer epilogue 1t", macs, || {
+        reg_t1.gemm_fused(&a_sparse, &packed_layer, || w_tern.clone(), &epi, None)
+    });
+    b.bench("conv+requant fused integer epilogue 4t", macs, || {
+        reg_t4.gemm_fused(&a_sparse, &packed_layer, || w_tern.clone(), &epi, None)
+    });
+    let fused_speedup = b
+        .ratio("conv+requant unfused f32 epilogue 1t", "conv+requant fused integer epilogue 1t")
+        .unwrap_or(0.0);
+    println!("fused integer epilogue vs unfused f32: {fused_speedup:.2}x");
+
+
     let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     let extras = vec![
         ("bench", Json::str("bench_kernels")),
         ("packed_thread_scaling_4t", Json::num(thread_scaling)),
+        ("fused_epilogue_speedup_vs_f32", Json::num(fused_speedup)),
         ("resnet_mini_layers", Json::Arr(layer_rows)),
     ];
     match b.write_json(std::path::Path::new(&out), extras) {

@@ -7,8 +7,17 @@
 //!
 //! Mirrors `python/compile/quantize.py` bit-for-bit (round-half-even),
 //! which the cross-language integration test checks on real weights.
+//!
+//! [`requant`] holds the integer-only rescale core ([`Requantizer`] +
+//! [`fx_rescale`]): fixed-point multiplier/shift encodings of real scales
+//! that let the serving path requantize i32 accumulators to i8 codes with
+//! no floating point (DESIGN.md §requant); [`packing`] the 2-bit/4-bit
+//! storage formats the kernels consume.
 
 pub mod packing;
+pub mod requant;
+
+pub use requant::{fx_rescale, Requantizer, RequantError, BIAS_FRAC, REQUANT_VERSION, SKIP_FRAC};
 
 use crate::tensor::Tensor;
 
@@ -44,6 +53,17 @@ pub fn round_half_even(x: f64) -> f64 {
 }
 
 /// Quantize `x` to `bits`-bit DFP. Returns (codes, exp).
+///
+/// ```
+/// use dfp_infer::dfp::{dequantize, quantize};
+/// // 8-bit DFP picks the smallest power-of-two grid covering max|x|
+/// let (codes, exp) = quantize(&[0.5, -1.0, 0.25], 8, None);
+/// assert_eq!(exp, -6); // smallest e with 1.0 <= 127 * 2^e
+/// assert_eq!(codes, vec![32, -64, 16]);
+/// // round-trip error is bounded by half a grid step
+/// let back = dequantize(&codes, exp);
+/// assert!((back[1] - -1.0).abs() <= 2f32.powi(exp - 1));
+/// ```
 pub fn quantize(x: &[f32], bits: u32, exp: Option<i32>) -> (Vec<i8>, i32) {
     let max_abs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
     let e = exp.unwrap_or_else(|| choose_exp(max_abs, bits));
@@ -72,6 +92,8 @@ pub struct ScaleU8 {
 }
 
 impl ScaleU8 {
+    /// Quantize a positive scale to 8-bit mantissa + exponent form
+    /// (relative error < 1/128); non-positive scales collapse to zero.
     pub fn quantize(alpha: f64) -> Self {
         if alpha <= 0.0 {
             return Self { mant: 0, exp: 0 };
@@ -85,6 +107,7 @@ impl ScaleU8 {
         Self { mant: m as u8, exp: e }
     }
 
+    /// The real scale this encoding represents (`mant · 2^exp`).
     pub fn dequantize(self) -> f64 {
         f64::from(self.mant) * 2f64.powi(self.exp)
     }
@@ -99,11 +122,14 @@ pub struct DfpTensor {
 }
 
 impl DfpTensor {
+    /// Quantize an f32 tensor to `bits`-bit DFP (auto-choosing the shared
+    /// exponent unless `exp` pins it).
     pub fn from_f32(t: &Tensor<f32>, bits: u32, exp: Option<i32>) -> Self {
         let (codes, e) = quantize(t.data(), bits, exp);
         Self { codes: Tensor::new(t.shape(), codes).expect("same shape"), exp: e, bits }
     }
 
+    /// Dequantize back to f32 (`codes · 2^exp`).
     pub fn to_f32(&self) -> Tensor<f32> {
         let data = dequantize(self.codes.data(), self.exp);
         Tensor::new(self.codes.shape(), data).expect("same shape")

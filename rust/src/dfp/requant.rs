@@ -1,0 +1,307 @@
+//! Integer-only requantization — the fixed-point rescale that lets the
+//! activation path stay in integers end to end (no f32 tensor between
+//! layers), gemmlowp-style.
+//!
+//! A positive real scale `s` is encoded as a [`Requantizer`]
+//! `{ mult, shift }` with `s ≈ mult · 2^-shift` and `mult` normalized into
+//! `[2^30, 2^31)`. Rescaling an `i32` GEMM accumulator is then one 64-bit
+//! multiply plus a round-half-even right shift ([`fx_rescale`]) — the same
+//! rounding the f32 reference path uses, so the two agree except within a
+//! hair's breadth of a rounding boundary (see the error bound on
+//! [`Requantizer::from_scale`]).
+//!
+//! The layer epilogue built on top of this lives in
+//! [`crate::kernels::epilogue`]; this module is the scalar numeric core.
+
+use std::fmt;
+
+/// Fraction bits of the fixed-point bias lane (`bn_shift` in real units).
+pub const BIAS_FRAC: i32 = 32;
+
+/// Fraction bits of the integer residual/skip lane: skip tensors carry
+/// `i64` values in units of `2^-SKIP_FRAC` output-grid steps of the layer
+/// that consumes them. 16 fraction bits keep the skip quantization error
+/// (≤ 2^-17 grid steps) far below the half-step rounding threshold while
+/// the i64 range (±2^47 grid steps) makes saturation unreachable.
+pub const SKIP_FRAC: i32 = 16;
+
+/// Version tag of the exported integer-requant tensors
+/// (`<layer>.rq_mult` / `.rq_shift` / `.rq_bias` + `meta.requant_version`).
+/// Exports without the tag fall back to deriving the multipliers from the
+/// f32 scales at load time; exports with a *newer* tag are rejected.
+pub const REQUANT_VERSION: i32 = 1;
+
+/// Typed failure of [`Requantizer::from_scale`]: integer requantization is
+/// only defined for finite, strictly positive scales (signs are folded into
+/// the multiplier by the layer epilogue, zero scales become a zero
+/// multiplier there).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RequantError {
+    /// scale was zero or negative
+    NonPositive(f64),
+    /// scale was NaN or infinite
+    NonFinite(f64),
+    /// scale magnitude beyond 2^±512 — far outside anything a real model
+    /// produces, and unrepresentable without overflowing the derivation
+    OutOfRange(f64),
+}
+
+impl fmt::Display for RequantError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RequantError::NonPositive(s) => {
+                write!(f, "requantizer scale must be > 0 (got {s})")
+            }
+            RequantError::NonFinite(s) => {
+                write!(f, "requantizer scale must be finite (got {s})")
+            }
+            RequantError::OutOfRange(s) => {
+                write!(f, "requantizer scale magnitude must be within 2^±512 (got {s})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequantError {}
+
+/// A positive real rescale factor in fixed point: `scale ≈ mult · 2^-shift`
+/// with `mult` in `[2^30, 2^31)`.
+///
+/// Applying it to an accumulator is `fx_rescale(i64::from(acc) * i64::from(mult), shift)`
+/// — one widening multiply and one rounding shift, no floating point.
+///
+/// ```
+/// use dfp_infer::dfp::{fx_rescale, Requantizer};
+/// let r = Requantizer::from_scale(0.0009765625).unwrap(); // 2^-10
+/// assert_eq!(r.shift, 40);
+/// // 3000 * 2^-10 = 2.93 -> rounds to 3
+/// assert_eq!(fx_rescale(3000 * i64::from(r.mult), r.shift), 3);
+/// // zero and negative scales are typed errors
+/// assert!(Requantizer::from_scale(0.0).is_err());
+/// assert!(Requantizer::from_scale(-1.5).is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requantizer {
+    /// normalized mantissa in `[2^30, 2^31)`
+    pub mult: i32,
+    /// right-shift applied after the multiply; `scale = mult · 2^-shift`.
+    /// Negative for scales ≥ 2^31 (then [`fx_rescale`] shifts left).
+    pub shift: i32,
+}
+
+impl Requantizer {
+    /// Derive the fixed-point encoding of `scale`.
+    ///
+    /// Errors (typed, [`RequantError`]) on zero, negative, NaN or infinite
+    /// scales. Exactness bound: the encoded scale differs from the real one
+    /// by at most one part in 2^31 (`|scale - mult·2^-shift| ≤ scale · 2^-31`),
+    /// so a rescaled accumulator differs from the real product by at most
+    /// `|acc·scale| · 2^-31 + 1/2` ULP of the target grid — requantized
+    /// codes can disagree with an exact-arithmetic reference only when the
+    /// real value lies within `|v|·2^-31` of a rounding boundary, i.e. by
+    /// at most one code.
+    pub fn from_scale(scale: f64) -> Result<Self, RequantError> {
+        if !scale.is_finite() {
+            return Err(RequantError::NonFinite(scale));
+        }
+        if scale <= 0.0 {
+            return Err(RequantError::NonPositive(scale));
+        }
+        let e = scale.log2().floor() as i32;
+        if e.abs() > 512 {
+            return Err(RequantError::OutOfRange(scale));
+        }
+        let mut shift = 30 - e;
+        let mut mult = (scale * 2f64.powi(shift)).round() as i64;
+        if mult == 1 << 31 {
+            // rounding bumped the mantissa out of range: renormalize
+            mult >>= 1;
+            shift -= 1;
+        }
+        debug_assert!((1 << 30..1 << 31).contains(&mult), "mult {mult} out of range");
+        Ok(Self { mult: mult as i32, shift })
+    }
+
+    /// The real scale this encoding represents (`mult · 2^-shift`).
+    pub fn as_f64(self) -> f64 {
+        f64::from(self.mult) * 2f64.powi(-self.shift)
+    }
+
+    /// Rescale one accumulator to the target grid and clamp into the
+    /// symmetric signed 8-bit range `[-127, 127]`.
+    #[inline]
+    pub fn apply_i8(self, acc: i32) -> i8 {
+        fx_rescale(i64::from(acc) * i64::from(self.mult), self.shift).clamp(-127, 127) as i8
+    }
+}
+
+/// Round-half-even fixed-point rescale: `x · 2^-shift` rounded to the
+/// nearest integer, ties to even — the integer twin of
+/// [`round_half_even`](crate::dfp::round_half_even). A negative `shift`
+/// shifts left (exact, saturating at the i64 bounds).
+///
+/// Internally widens to i128 so any `i64` input and any shift amount is
+/// handled without overflow; the result saturates to the `i64` range
+/// (callers clamp far tighter — to i8 codes or the skip lane — so
+/// saturation only occurs where the clamp already dominates).
+#[inline]
+pub fn fx_rescale(x: i64, shift: i32) -> i64 {
+    let wide = i128::from(x);
+    let v: i128 = if shift <= 0 {
+        let l = (-shift).min(63) as u32;
+        // i64 << 63 still fits i128; larger shifts saturate via the clamp
+        if (-shift) > 63 && x != 0 {
+            if x > 0 {
+                i128::from(i64::MAX) + 1
+            } else {
+                i128::from(i64::MIN) - 1
+            }
+        } else {
+            wide << l
+        }
+    } else {
+        let s = shift.min(126) as u32;
+        let floor = wide >> s;
+        let rem = wide - (floor << s);
+        let half = 1i128 << (s - 1);
+        if rem > half {
+            floor + 1
+        } else if rem < half {
+            floor
+        } else if floor & 1 == 0 {
+            floor
+        } else {
+            floor + 1
+        }
+    };
+    v.clamp(i128::from(i64::MIN), i128::from(i64::MAX)) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_from_scale_rejects_bad_scales_typed() {
+        assert_eq!(Requantizer::from_scale(0.0), Err(RequantError::NonPositive(0.0)));
+        assert_eq!(Requantizer::from_scale(-0.25), Err(RequantError::NonPositive(-0.25)));
+        assert!(matches!(
+            Requantizer::from_scale(f64::NAN),
+            Err(RequantError::NonFinite(_))
+        ));
+        assert_eq!(
+            Requantizer::from_scale(f64::INFINITY),
+            Err(RequantError::NonFinite(f64::INFINITY))
+        );
+        assert!(matches!(
+            Requantizer::from_scale(1e300),
+            Err(RequantError::OutOfRange(_))
+        ));
+        assert!(matches!(
+            Requantizer::from_scale(1e-300),
+            Err(RequantError::OutOfRange(_))
+        ));
+        let msg = Requantizer::from_scale(-1.0).unwrap_err().to_string();
+        assert!(msg.contains("> 0"), "{msg}");
+    }
+
+    #[test]
+    fn test_from_scale_precision_bound() {
+        // |scale - mult*2^-shift| <= scale * 2^-31 across magnitudes
+        for &s in &[1e-9, 3.7e-4, 0.017, 0.5, 1.0, 1.5, 123.456, 7.0e8] {
+            let r = Requantizer::from_scale(s).unwrap();
+            assert!((1i64 << 30..1i64 << 31).contains(&i64::from(r.mult)), "scale {s}");
+            let back = r.as_f64();
+            assert!((back - s).abs() <= s * 2f64.powi(-31), "scale {s} -> {back}");
+        }
+    }
+
+    #[test]
+    fn test_from_scale_power_of_two_is_exact() {
+        for e in [-20i32, -4, 0, 3, 17] {
+            let r = Requantizer::from_scale(2f64.powi(e)).unwrap();
+            assert_eq!(r.mult, 1 << 30);
+            assert_eq!(r.shift, 30 - e);
+            assert_eq!(r.as_f64(), 2f64.powi(e));
+        }
+    }
+
+    #[test]
+    fn test_fx_rescale_round_half_even_ties() {
+        // x * 2^-1 with ties: 1/2 -> 0, 3/2 -> 2, 5/2 -> 2, -1/2 -> 0, -3/2 -> -2
+        assert_eq!(fx_rescale(1, 1), 0);
+        assert_eq!(fx_rescale(3, 1), 2);
+        assert_eq!(fx_rescale(5, 1), 2);
+        assert_eq!(fx_rescale(-1, 1), 0);
+        assert_eq!(fx_rescale(-3, 1), -2);
+        assert_eq!(fx_rescale(-5, 1), -2);
+        // non-ties round to nearest
+        assert_eq!(fx_rescale(7, 2), 2); // 1.75 -> 2
+        assert_eq!(fx_rescale(-7, 2), -2);
+        assert_eq!(fx_rescale(9, 3), 1); // 1.125 -> 1
+    }
+
+    #[test]
+    fn test_fx_rescale_matches_float_reference() {
+        use crate::dfp::round_half_even;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(42);
+        for _ in 0..4000 {
+            // keep |x| <= 2^51 so the f64 reference is exact
+            let x = (rng.next_u64() as i64) >> (12 + rng.next_below(28) as u32);
+            let s = rng.next_below(40) as i32;
+            let want = round_half_even(x as f64 * 2f64.powi(-s)) as i64;
+            assert_eq!(fx_rescale(x, s), want, "x={x} s={s}");
+        }
+    }
+
+    #[test]
+    fn test_fx_rescale_extreme_shifts() {
+        assert_eq!(fx_rescale(i64::MAX, 126), 0);
+        assert_eq!(fx_rescale(i64::MIN, 126), 0);
+        assert_eq!(fx_rescale(1, 200), 0);
+        // left shifts saturate instead of wrapping
+        assert_eq!(fx_rescale(1, -70), i64::MAX);
+        assert_eq!(fx_rescale(-1, -70), i64::MIN);
+        assert_eq!(fx_rescale(i64::MAX / 2, -2), i64::MAX);
+        assert_eq!(fx_rescale(0, -100), 0);
+        assert_eq!(fx_rescale(5, 0), 5);
+        assert_eq!(fx_rescale(3, -2), 12);
+    }
+
+    #[test]
+    fn test_apply_i8_clamps_at_symmetric_127() {
+        let unit = Requantizer::from_scale(1.0).unwrap();
+        assert_eq!(unit.apply_i8(127), 127);
+        assert_eq!(unit.apply_i8(-127), -127);
+        assert_eq!(unit.apply_i8(128), 127);
+        assert_eq!(unit.apply_i8(-128), -127);
+        assert_eq!(unit.apply_i8(i32::MAX), 127);
+        assert_eq!(unit.apply_i8(i32::MIN), -127);
+        assert_eq!(unit.apply_i8(0), 0);
+        // half-scale ties round to even before the clamp
+        let half = Requantizer::from_scale(0.5).unwrap();
+        assert_eq!(half.apply_i8(1), 0);
+        assert_eq!(half.apply_i8(3), 2);
+        assert_eq!(half.apply_i8(255), 127); // 127.5 -> 128 -> clamp 127
+    }
+
+    #[test]
+    fn test_requantizer_agrees_with_f64_reference() {
+        use crate::dfp::round_half_even;
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..4000 {
+            let scale = 2f64.powi(rng.next_below(30) as i32 - 20)
+                * (1.0 + rng.next_below(1000) as f64 / 1000.0);
+            let r = Requantizer::from_scale(scale).unwrap();
+            let acc = rng.next_u64() as i32 >> rng.next_below(16);
+            let want = round_half_even(f64::from(acc) * scale).clamp(-127.0, 127.0) as i8;
+            let got = r.apply_i8(acc);
+            assert!(
+                (i32::from(got) - i32::from(want)).abs() <= 1,
+                "scale={scale} acc={acc}: fused {got} vs f64 {want}"
+            );
+        }
+    }
+}

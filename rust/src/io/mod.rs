@@ -73,6 +73,13 @@ impl AnyTensor {
             other => bail!("expected i32 tensor, got {:?}", other.dtype()),
         }
     }
+
+    pub fn as_i64(&self) -> Result<&Tensor<i64>> {
+        match self {
+            AnyTensor::I64(t) => Ok(t),
+            other => bail!("expected i64 tensor, got {:?}", other.dtype()),
+        }
+    }
 }
 
 /// Name -> tensor mapping (ordered, for deterministic writes).
@@ -268,6 +275,9 @@ mod tests {
         let t = AnyTensor::F32(Tensor::new(&[2], vec![1.0, 2.0]).unwrap());
         assert!(t.as_f32().is_ok());
         assert!(t.as_i8().is_err());
+        assert!(t.as_i64().is_err());
         assert_eq!(t.shape(), &[2]);
+        let t64 = AnyTensor::I64(Tensor::new(&[1], vec![5i64]).unwrap());
+        assert!(t64.as_i64().is_ok());
     }
 }

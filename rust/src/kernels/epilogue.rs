@@ -1,0 +1,354 @@
+//! Fused integer requantization epilogue — folded batch-norm + activation
+//! rescale applied to the i32 GEMM accumulators as fixed-point integer
+//! arithmetic, producing the next layer's i8 codes (or the i64 residual
+//! lane) without materializing any f32 tensor (see DESIGN.md §requant).
+//!
+//! Per output channel `c` the f32 reference path computes
+//! `q = rhe((acc·w_scale[c]·2^exp_in·bn_scale[c] + bn_shift[c] + skip) · 2^-act_exp)`.
+//! [`LayerRequant`] folds everything static into integers at load/export
+//! time: `mult[c]`/`shift[c]` encode `w_scale[c]·bn_scale[c]` (sign folded
+//! into the mantissa, gemmlowp-style), and `bias_fx[c]` carries `bn_shift`
+//! at [`BIAS_FRAC`] fraction bits. The two runtime exponents (`exp_in` of
+//! the incoming activations, `act_exp` of the produced grid) are pure shift
+//! adjustments, applied by [`LayerRequant::resolve`] — so one derivation
+//! serves every (input-exponent, target-grid) pairing, including the
+//! projection convs whose residual output targets the *consuming* layer's
+//! grid.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::dfp::requant::{fx_rescale, Requantizer, BIAS_FRAC, SKIP_FRAC};
+
+/// Per-output-channel integer requantization parameters of one layer,
+/// derived once from the f32 scales (or loaded from a versioned export —
+/// see [`crate::dfp::REQUANT_VERSION`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerRequant {
+    /// sign-folded fixed-point mantissa per channel: `|mult|` in
+    /// `[2^30, 2^31)`, or `0` for a dead channel (zero combined scale)
+    pub mult: Vec<i32>,
+    /// per-channel base shift: `w_scale[c]·bn_scale[c] ≈ mult[c]·2^-shift[c]`
+    pub shift: Vec<i32>,
+    /// `bn_shift[c]` in real units at [`BIAS_FRAC`] fraction bits
+    pub bias_fx: Vec<i64>,
+}
+
+impl LayerRequant {
+    /// Derive the integer requantization of one layer from its f32 scale
+    /// vectors (the fallback path for exports that predate the integer
+    /// multipliers). Negative combined scales fold their sign into `mult`;
+    /// exactly-zero scales become a zero multiplier; non-finite scales are
+    /// rejected with the typed [`crate::dfp::RequantError`].
+    pub fn derive(w_scale: &[f32], bn_scale: &[f32], bn_shift: &[f32]) -> Result<Self> {
+        ensure!(
+            w_scale.len() == bn_scale.len() && w_scale.len() == bn_shift.len(),
+            "requant derive: scale vectors disagree ({} / {} / {} channels)",
+            w_scale.len(),
+            bn_scale.len(),
+            bn_shift.len()
+        );
+        let n = w_scale.len();
+        let mut mult = Vec::with_capacity(n);
+        let mut shift = Vec::with_capacity(n);
+        let mut bias_fx = Vec::with_capacity(n);
+        for c in 0..n {
+            let s0 = f64::from(w_scale[c]) * f64::from(bn_scale[c]);
+            if s0 == 0.0 {
+                mult.push(0);
+                shift.push(0);
+            } else {
+                let r = Requantizer::from_scale(s0.abs())
+                    .map_err(|e| anyhow::Error::msg(format!("channel {c}: {e}")))?;
+                mult.push(if s0 < 0.0 { -r.mult } else { r.mult });
+                shift.push(r.shift);
+            }
+            ensure!(bn_shift[c].is_finite(), "channel {c}: non-finite bn_shift {}", bn_shift[c]);
+            bias_fx.push((f64::from(bn_shift[c]) * 2f64.powi(BIAS_FRAC)).round() as i64);
+        }
+        Ok(Self { mult, shift, bias_fx })
+    }
+
+    /// Rebuild from exported integer tensors (`rq_mult`/`rq_shift`/`rq_bias`),
+    /// validating the invariants [`LayerRequant::derive`] guarantees.
+    pub fn from_parts(mult: Vec<i32>, shift: Vec<i32>, bias_fx: Vec<i64>) -> Result<Self> {
+        ensure!(
+            mult.len() == shift.len() && mult.len() == bias_fx.len(),
+            "requant tensors disagree ({} / {} / {} channels)",
+            mult.len(),
+            shift.len(),
+            bias_fx.len()
+        );
+        for (c, (&m, &s)) in mult.iter().zip(&shift).enumerate() {
+            if m != 0 && !(1i64 << 30..1i64 << 31).contains(&i64::from(m).abs()) {
+                bail!("channel {c}: requant mult {m} outside ±[2^30, 2^31)");
+            }
+            // derive() can only produce shifts within 30 ± 512 (the scale
+            // exponent bound); anything outside is a corrupt export, and
+            // extreme values would overflow the resolve() shift arithmetic
+            if !(-512..=1024).contains(&s) {
+                bail!("channel {c}: requant shift {s} outside [-512, 1024]");
+            }
+        }
+        Ok(Self { mult, shift, bias_fx })
+    }
+
+    /// Number of output channels.
+    pub fn len(&self) -> usize {
+        self.mult.len()
+    }
+
+    /// True when the layer has no channels.
+    pub fn is_empty(&self) -> bool {
+        self.mult.is_empty()
+    }
+
+    /// Bind the two runtime exponents: `exp_in` (DFP exponent of the
+    /// incoming i8 activations) and `act_target` (exponent of the grid the
+    /// epilogue writes — the layer's own `act_exp`, or the *consuming*
+    /// layer's for a projection conv feeding the residual lane).
+    pub fn resolve(&self, exp_in: i32, act_target: i32, relu: bool) -> ResolvedEpilogue {
+        let n = self.len();
+        let mut mult = Vec::with_capacity(n);
+        let mut shift = Vec::with_capacity(n);
+        let mut bias = Vec::with_capacity(n);
+        for c in 0..n {
+            // acc · mult · 2^-shift_eff is the channel's value on the
+            // target grid: shift_eff folds both runtime exponents
+            let s_eff = if self.mult[c] == 0 { 30 } else { self.shift[c] - exp_in + act_target };
+            mult.push(i64::from(self.mult[c]));
+            shift.push(s_eff);
+            // bias (real units, BIAS_FRAC fraction bits) aligned to the
+            // same 2^-shift_eff fixed-point grid
+            bias.push(fx_rescale(self.bias_fx[c], BIAS_FRAC + act_target - s_eff));
+        }
+        ResolvedEpilogue { mult, shift, bias, relu }
+    }
+}
+
+/// A [`LayerRequant`] with the runtime exponents folded in — the plain-data
+/// epilogue the GEMM kernels apply to their accumulator blocks while the
+/// tile is still cache-hot.
+#[derive(Debug, Clone)]
+pub struct ResolvedEpilogue {
+    mult: Vec<i64>,
+    shift: Vec<i32>,
+    bias: Vec<i64>,
+    relu: bool,
+}
+
+impl ResolvedEpilogue {
+    /// Number of output channels.
+    pub fn len(&self) -> usize {
+        self.mult.len()
+    }
+
+    /// True when the epilogue has no channels.
+    pub fn is_empty(&self) -> bool {
+        self.mult.is_empty()
+    }
+
+    /// Requantize an accumulator block (rows `row0..row0+rows` of the full
+    /// (M, F) output, row-major in `acc`) straight to i8 codes. `skip`, if
+    /// present, is the full (M, F) integer residual lane in units of
+    /// `2^-SKIP_FRAC` target-grid steps.
+    pub fn apply_i8(
+        &self,
+        acc: &[i32],
+        row0: usize,
+        rows: usize,
+        f: usize,
+        skip: Option<&[i64]>,
+        out: &mut [i8],
+    ) {
+        debug_assert_eq!(self.len(), f);
+        debug_assert_eq!(acc.len(), rows * f);
+        debug_assert_eq!(out.len(), rows * f);
+        for r in 0..rows {
+            let arow = &acc[r * f..(r + 1) * f];
+            let orow = &mut out[r * f..(r + 1) * f];
+            for c in 0..f {
+                let mut u = i64::from(arow[c]) * self.mult[c];
+                u = u.saturating_add(self.bias[c]);
+                if let Some(sk) = skip {
+                    let s = sk[(row0 + r) * f + c];
+                    u = u.saturating_add(fx_rescale(s, SKIP_FRAC - self.shift[c]));
+                }
+                let mut q = fx_rescale(u, self.shift[c]);
+                if self.relu {
+                    q = q.max(0);
+                }
+                orow[c] = q.clamp(-127, 127) as i8;
+            }
+        }
+    }
+
+    /// Requantize an accumulator block onto the integer residual lane
+    /// (units of `2^-SKIP_FRAC` target-grid steps) instead of i8 codes —
+    /// the projection-conv path, which the f32 pipeline kept as a full
+    /// f32 tensor.
+    pub fn apply_skip(&self, acc: &[i32], rows: usize, f: usize, out: &mut [i64]) {
+        debug_assert_eq!(self.len(), f);
+        debug_assert_eq!(acc.len(), rows * f);
+        debug_assert_eq!(out.len(), rows * f);
+        for r in 0..rows {
+            let arow = &acc[r * f..(r + 1) * f];
+            let orow = &mut out[r * f..(r + 1) * f];
+            for c in 0..f {
+                let mut u = i64::from(arow[c]) * self.mult[c];
+                u = u.saturating_add(self.bias[c]);
+                let mut q = fx_rescale(u, self.shift[c] - SKIP_FRAC);
+                if self.relu {
+                    q = q.max(0);
+                }
+                orow[c] = q;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::round_half_even;
+    use crate::util::SplitMix64;
+
+    /// f32 reference epilogue (mirrors the lpinfer reference path).
+    #[allow(clippy::too_many_arguments)]
+    fn ref_epilogue(
+        acc: &[i32],
+        f: usize,
+        w_scale: &[f32],
+        bn_scale: &[f32],
+        bn_shift: &[f32],
+        exp_in: i32,
+        act_exp: i32,
+        relu: bool,
+        skip: Option<&[f32]>,
+    ) -> Vec<i8> {
+        let exp_scale = 2f32.powi(exp_in);
+        acc.iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                let c = i % f;
+                let y = a as f32 * (w_scale[c] * exp_scale);
+                let mut v = y * bn_scale[c] + bn_shift[c];
+                if let Some(s) = skip {
+                    v += s[i];
+                }
+                if relu {
+                    v = v.max(0.0);
+                }
+                round_half_even(f64::from(v) * 2f64.powi(-act_exp)).clamp(-127.0, 127.0) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn test_derive_rejects_mismatched_and_nonfinite() {
+        assert!(LayerRequant::derive(&[1.0, 2.0], &[1.0], &[0.0]).is_err());
+        assert!(LayerRequant::derive(&[f32::NAN], &[1.0], &[0.0]).is_err());
+        assert!(LayerRequant::derive(&[1.0], &[1.0], &[f32::INFINITY]).is_err());
+        // zero and negative scales are representable (dead / sign-folded)
+        let r = LayerRequant::derive(&[0.0, 0.5], &[1.0, -1.0], &[0.0, 1.0]).unwrap();
+        assert_eq!(r.mult[0], 0);
+        assert!(r.mult[1] < 0);
+    }
+
+    #[test]
+    fn test_from_parts_validates_mult_range() {
+        assert!(LayerRequant::from_parts(vec![1 << 30], vec![30], vec![0]).is_ok());
+        assert!(LayerRequant::from_parts(vec![-(1 << 30)], vec![30], vec![0]).is_ok());
+        assert!(LayerRequant::from_parts(vec![0], vec![0], vec![0]).is_ok());
+        assert!(LayerRequant::from_parts(vec![12345], vec![30], vec![0]).is_err());
+        assert!(LayerRequant::from_parts(vec![1 << 30], vec![30, 31], vec![0]).is_err());
+        // corrupt shifts must be rejected before they can overflow resolve()
+        assert!(LayerRequant::from_parts(vec![1 << 30], vec![i32::MIN], vec![0]).is_err());
+        assert!(LayerRequant::from_parts(vec![1 << 30], vec![2000], vec![0]).is_err());
+    }
+
+    #[test]
+    fn test_fused_epilogue_tracks_f32_reference_within_one_code() {
+        let mut rng = SplitMix64::new(99);
+        for trial in 0..200 {
+            let f = 1 + rng.next_below(8) as usize;
+            let rows = 1 + rng.next_below(6) as usize;
+            let w_scale: Vec<f32> =
+                (0..f).map(|_| 2f32.powi(-(rng.next_below(12) as i32)) * 1.7).collect();
+            let bn_scale: Vec<f32> =
+                (0..f).map(|_| (rng.next_below(400) as f32 - 200.0) / 100.0).collect();
+            let bn_shift: Vec<f32> =
+                (0..f).map(|_| (rng.next_below(64) as f32 - 32.0) / 4.0).collect();
+            let exp_in = -(rng.next_below(8) as i32);
+            let act_exp = -(rng.next_below(8) as i32);
+            let relu = rng.next_below(2) == 1;
+            let acc: Vec<i32> =
+                (0..rows * f).map(|_| rng.next_u64() as i32 >> 12).collect();
+
+            let lr = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift).unwrap();
+            let epi = lr.resolve(exp_in, act_exp, relu);
+            let mut got = vec![0i8; rows * f];
+            epi.apply_i8(&acc, 0, rows, f, None, &mut got);
+            let want = ref_epilogue(
+                &acc, f, &w_scale, &bn_scale, &bn_shift, exp_in, act_exp, relu, None,
+            );
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (i32::from(g) - i32::from(w)).abs() <= 1,
+                    "trial {trial} elem {i}: fused {g} vs ref {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_skip_lane_roundtrip_matches_f32_skip() {
+        // a residual carried on the integer lane must land on the same
+        // codes as the f32 skip within one grid step
+        let mut rng = SplitMix64::new(5);
+        for trial in 0..200 {
+            let f = 1 + rng.next_below(6) as usize;
+            let rows = 1 + rng.next_below(4) as usize;
+            let w_scale: Vec<f32> = (0..f).map(|_| 0.01 + rng.next_below(100) as f32 / 1000.0).collect();
+            let bn_scale = vec![1.0f32; f];
+            let bn_shift = vec![0.25f32; f];
+            let act_exp = -(rng.next_below(6) as i32);
+            let exp_in = -(rng.next_below(6) as i32);
+            let acc: Vec<i32> = (0..rows * f).map(|_| rng.next_u64() as i32 >> 16).collect();
+            // f32 skip values and their integer-lane encoding
+            let skip_f: Vec<f32> =
+                (0..rows * f).map(|_| (rng.next_below(2000) as f32 - 1000.0) / 8.0).collect();
+            let skip_fx: Vec<i64> = skip_f
+                .iter()
+                .map(|&s| {
+                    (f64::from(s) * 2f64.powi(crate::dfp::SKIP_FRAC - act_exp)).round() as i64
+                })
+                .collect();
+
+            let lr = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift).unwrap();
+            let epi = lr.resolve(exp_in, act_exp, true);
+            let mut got = vec![0i8; rows * f];
+            epi.apply_i8(&acc, 0, rows, f, Some(&skip_fx), &mut got);
+            let want = ref_epilogue(
+                &acc, f, &w_scale, &bn_scale, &bn_shift, exp_in, act_exp, true,
+                Some(&skip_f),
+            );
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (i32::from(g) - i32::from(w)).abs() <= 1,
+                    "trial {trial} elem {i}: fused {g} vs ref {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_identity_epilogue_passes_codes_through() {
+        // unit scales, zero bias, exponents cancelling: q == acc
+        let lr = LayerRequant::derive(&[1.0, 1.0], &[1.0, 1.0], &[0.0, 0.0]).unwrap();
+        let epi = lr.resolve(0, 0, false);
+        let acc = vec![-127i32, -1, 0, 1, 64, 127, 300, -300];
+        let mut out = vec![0i8; acc.len()];
+        epi.apply_i8(&acc, 0, 4, 2, None, &mut out);
+        assert_eq!(out, vec![-127, -1, 0, 1, 64, 127, 127, -127]);
+    }
+}

@@ -13,7 +13,7 @@ use super::threadpool::ThreadPool;
 
 /// Don't split a GEMM across threads below this many output rows per block:
 /// a block this size already amortizes spawn cost ~100x.
-const MIN_ROWS_PER_BLOCK: usize = 16;
+pub(crate) const MIN_ROWS_PER_BLOCK: usize = 16;
 
 /// int8 x int8 -> i32 GEMM: (M,K) x (K,F) -> (M,F).
 ///
@@ -44,6 +44,37 @@ pub fn gemm_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
         }
     }
     out
+}
+
+/// One output-row block of the dense i8 GEMM (shared by the fused-epilogue
+/// dispatch): accumulate rows `row0..row0+rows` of (M,K)x(K,F) into `out`
+/// (rows x F, block-local). `zero_skip` selects the [`gemm_i8`] sparse
+/// branch; both variants produce bit-identical accumulators.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn i8_row_block(
+    ad: &[i8],
+    bd: &[i8],
+    k: usize,
+    f: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+    zero_skip: bool,
+) {
+    for r in 0..rows {
+        let arow = &ad[(row0 + r) * k..(row0 + r + 1) * k];
+        let orow = &mut out[r * f..(r + 1) * f];
+        for (kk, &av) in arow.iter().enumerate() {
+            if zero_skip && av == 0 {
+                continue;
+            }
+            let av = i32::from(av);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
+            }
+        }
+    }
 }
 
 /// Branch-free dense variant of [`gemm_i8`]: widens the activation once
@@ -101,7 +132,14 @@ fn tern_decode_row(row: &[u8], pos: &mut [i32; PANEL_F], neg: &mut [i32; PANEL_F
 ///
 /// Working set per block: the A rows (rows × K i8) and the out tile
 /// (rows × F i32) stay L1-resident while the panel bytes stream once.
-fn tern_row_block(ad: &[i8], k: usize, row0: usize, rows: usize, w: &PackedTernaryMatrix, out: &mut [i32]) {
+pub(crate) fn tern_row_block(
+    ad: &[i8],
+    k: usize,
+    row0: usize,
+    rows: usize,
+    w: &PackedTernaryMatrix,
+    out: &mut [i32],
+) {
     const BPR: usize = PANEL_F / 4;
     let f = w.f;
     let mut pos = [0i32; PANEL_F];
@@ -148,7 +186,14 @@ pub fn gemm_packed_ternary(a: &Tensor<i8>, w: &PackedTernaryMatrix, pool: &Threa
 /// Sign-extension table for a 4-bit nibble.
 const SEXT4: [i8; 16] = [0, 1, 2, 3, 4, 5, 6, 7, -8, -7, -6, -5, -4, -3, -2, -1];
 
-fn i4_row_block(ad: &[i8], k: usize, row0: usize, rows: usize, w: &PackedI4Matrix, out: &mut [i32]) {
+pub(crate) fn i4_row_block(
+    ad: &[i8],
+    k: usize,
+    row0: usize,
+    rows: usize,
+    w: &PackedI4Matrix,
+    out: &mut [i32],
+) {
     const BPR: usize = PANEL_F / 2;
     let f = w.f;
     let mut wrow = [0i32; PANEL_F];

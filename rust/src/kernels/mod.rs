@@ -12,7 +12,12 @@
 //! * [`threadpool`] — scoped worker pool parallelizing over output-row
 //!   blocks, sized from [`crate::config::Config`];
 //! * [`registry`] — [`KernelRegistry`]: runtime selection among the
-//!   kernels by weight encoding, with a `--kernel` CLI override.
+//!   kernels by weight encoding, with a `--kernel` CLI override;
+//! * [`epilogue`] — the fused integer requantization epilogue
+//!   ([`LayerRequant`] / [`ResolvedEpilogue`]): folded batch-norm +
+//!   activation rescale applied to each accumulator tile as fixed-point
+//!   integer arithmetic while it is cache-hot, so the lpinfer activation
+//!   path never materializes an f32 (or full-size i32) tensor.
 //!
 //! All kernels produce bit-identical `i32` accumulators, so the registry
 //! can swap them per layer purely on performance grounds; `lpinfer`
@@ -20,11 +25,13 @@
 //! [`crate::coordinator::LpExecutor`] turns that pipeline into a serving
 //! backend that needs no PJRT artifacts.
 
+pub mod epilogue;
 pub mod gemm;
 pub mod packed;
 pub mod registry;
 pub mod threadpool;
 
+pub use epilogue::{LayerRequant, ResolvedEpilogue};
 pub use gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
 pub use packed::{PackedI4Matrix, PackedLayer, PackedTernaryMatrix, PANEL_F};
 pub use registry::{KernelChoice, KernelKind, KernelRegistry, ALL_KERNELS};

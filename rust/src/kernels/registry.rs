@@ -16,7 +16,11 @@ use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
-use super::gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
+use super::epilogue::ResolvedEpilogue;
+use super::gemm::{
+    gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary, i4_row_block, i8_row_block,
+    tern_row_block, MIN_ROWS_PER_BLOCK,
+};
 use super::packed::PackedLayer;
 use super::threadpool::ThreadPool;
 
@@ -194,6 +198,137 @@ impl KernelRegistry {
             }
         }
     }
+
+    /// GEMM with the integer requantization epilogue fused in: the selected
+    /// kernel accumulates each output-row block into a block-local i32
+    /// scratch tile, and `epi` rescales the tile straight to i8 codes while
+    /// it is still cache-hot — no f32 (and no full-size i32 tensor) is ever
+    /// materialized. `skip`, if present, is the (M, F) integer residual
+    /// lane (units of `2^-SKIP_FRAC` target-grid steps, see
+    /// [`crate::dfp::SKIP_FRAC`]).
+    pub fn gemm_fused(
+        &self,
+        a: &Tensor<i8>,
+        packed: &PackedLayer,
+        dense: impl FnOnce() -> Tensor<i8>,
+        epi: &ResolvedEpilogue,
+        skip: Option<&[i64]>,
+    ) -> Tensor<i8> {
+        let (m, k) = (a.dim(0), a.dim(1));
+        let ad = a.data();
+        match self.select(packed) {
+            KernelKind::PackedTernary => {
+                let w = packed.ternary.as_ref().expect("selected");
+                assert_eq!(k, w.k, "gemm_fused: A is (.., {k}) but W is ({}, ..)", w.k);
+                fused_i8(m, w.f, &self.pool, epi, skip, |row0, rows, acc| {
+                    tern_row_block(ad, k, row0, rows, w, acc);
+                })
+            }
+            KernelKind::PackedI4 => {
+                let w = packed.i4.as_ref().expect("selected");
+                assert_eq!(k, w.k, "gemm_fused: A is (.., {k}) but W is ({}, ..)", w.k);
+                fused_i8(m, w.f, &self.pool, epi, skip, |row0, rows, acc| {
+                    i4_row_block(ad, k, row0, rows, w, acc);
+                })
+            }
+            kind @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense) => {
+                let b = dense();
+                assert_eq!(k, b.dim(0), "gemm_fused: A is (.., {k}) but W is ({}, ..)", b.dim(0));
+                let f = b.dim(1);
+                let bd = b.data();
+                let zero_skip = kind == KernelKind::I8ZeroSkip;
+                fused_i8(m, f, &self.pool, epi, skip, |row0, rows, acc| {
+                    i8_row_block(ad, bd, k, f, row0, rows, acc, zero_skip);
+                })
+            }
+        }
+    }
+
+    /// Like [`Self::gemm_fused`] but the epilogue writes the i64 integer
+    /// residual lane instead of i8 codes — the projection-conv path whose
+    /// output feeds a later layer's skip connection.
+    pub fn gemm_fused_skip(
+        &self,
+        a: &Tensor<i8>,
+        packed: &PackedLayer,
+        dense: impl FnOnce() -> Tensor<i8>,
+        epi: &ResolvedEpilogue,
+    ) -> Tensor<i64> {
+        let (m, k) = (a.dim(0), a.dim(1));
+        let ad = a.data();
+        match self.select(packed) {
+            KernelKind::PackedTernary => {
+                let w = packed.ternary.as_ref().expect("selected");
+                assert_eq!(k, w.k, "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)", w.k);
+                fused_skip(m, w.f, &self.pool, epi, |row0, rows, acc| {
+                    tern_row_block(ad, k, row0, rows, w, acc);
+                })
+            }
+            KernelKind::PackedI4 => {
+                let w = packed.i4.as_ref().expect("selected");
+                assert_eq!(k, w.k, "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)", w.k);
+                fused_skip(m, w.f, &self.pool, epi, |row0, rows, acc| {
+                    i4_row_block(ad, k, row0, rows, w, acc);
+                })
+            }
+            kind @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense) => {
+                let b = dense();
+                assert_eq!(
+                    k,
+                    b.dim(0),
+                    "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)",
+                    b.dim(0)
+                );
+                let f = b.dim(1);
+                let bd = b.data();
+                let zero_skip = kind == KernelKind::I8ZeroSkip;
+                fused_skip(m, f, &self.pool, epi, |row0, rows, acc| {
+                    i8_row_block(ad, bd, k, f, row0, rows, acc, zero_skip);
+                })
+            }
+        }
+    }
+}
+
+/// Run `compute` over output-row blocks with a block-local i32 accumulator
+/// tile, applying the requant epilogue to each tile while it is cache-hot.
+fn fused_i8(
+    m: usize,
+    f: usize,
+    pool: &ThreadPool,
+    epi: &ResolvedEpilogue,
+    skip: Option<&[i64]>,
+    compute: impl Fn(usize, usize, &mut [i32]) + Sync,
+) -> Tensor<i8> {
+    assert_eq!(epi.len(), f, "epilogue has {} channels for an F={f} GEMM", epi.len());
+    if let Some(s) = skip {
+        assert_eq!(s.len(), m * f, "skip lane has {} elements for an {m}x{f} GEMM", s.len());
+    }
+    let mut out = Tensor::<i8>::zeros(&[m, f]);
+    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
+        let mut acc = vec![0i32; rows * f];
+        compute(row0, rows, &mut acc);
+        epi.apply_i8(&acc, row0, rows, f, skip, block);
+    });
+    out
+}
+
+/// [`fused_i8`] writing the i64 residual lane instead of i8 codes.
+fn fused_skip(
+    m: usize,
+    f: usize,
+    pool: &ThreadPool,
+    epi: &ResolvedEpilogue,
+    compute: impl Fn(usize, usize, &mut [i32]) + Sync,
+) -> Tensor<i64> {
+    assert_eq!(epi.len(), f, "epilogue has {} channels for an F={f} GEMM", epi.len());
+    let mut out = Tensor::<i64>::zeros(&[m, f]);
+    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
+        let mut acc = vec![0i32; rows * f];
+        compute(row0, rows, &mut acc);
+        epi.apply_skip(&acc, rows, f, block);
+    });
+    out
 }
 
 #[cfg(test)]
@@ -256,6 +391,45 @@ mod tests {
         // forcing ternary on a layer with no ternary encoding falls back
         let reg = KernelRegistry::new(Some(KernelKind::PackedTernary), 1);
         assert_eq!(reg.select(&PackedLayer::none()), KernelKind::I8ZeroSkip);
+    }
+
+    #[test]
+    fn test_gemm_fused_matches_unfused_epilogue_across_kernels() {
+        use crate::kernels::epilogue::LayerRequant;
+        let (k, f, m) = (27, 18, 37);
+        let (wd, packed) = tern_layer(k, f, 30);
+        let mut rng = SplitMix64::new(31);
+        let a = Tensor::new(
+            &[m, k],
+            (0..m * k).map(|_| (rng.next_below(255) as i16 - 127) as i8).collect::<Vec<i8>>(),
+        )
+        .unwrap();
+        let w_scale: Vec<f32> = (0..f).map(|i| 0.002 * (i + 1) as f32).collect();
+        let bn_scale = vec![1.0f32; f];
+        let bn_shift = vec![0.5f32; f];
+        let skip: Vec<i64> =
+            (0..m * f).map(|_| rng.next_below(1 << 20) as i64 - (1 << 19)).collect();
+        let lr = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift).unwrap();
+        let epi = lr.resolve(-4, -4, true);
+        // reference: whole unfused i32 accumulator, epilogue applied after
+        let acc = KernelRegistry::new(Some(KernelKind::I8Dense), 1).gemm(&a, &wd, &packed);
+        let mut want = vec![0i8; m * f];
+        epi.apply_i8(acc.data(), 0, m, f, Some(&skip), &mut want);
+        let mut want_skip = vec![0i64; m * f];
+        epi.apply_skip(acc.data(), m, f, &mut want_skip);
+        for kind in ALL_KERNELS {
+            for threads in [1usize, 3] {
+                let reg = KernelRegistry::new(Some(kind), threads);
+                let got = reg.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip));
+                assert_eq!(got.data(), &want[..], "fused i8, kernel {kind} threads {threads}");
+                let got_skip = reg.gemm_fused_skip(&a, &packed, || wd.clone(), &epi);
+                assert_eq!(
+                    got_skip.data(),
+                    &want_skip[..],
+                    "fused skip, kernel {kind} threads {threads}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -12,18 +12,21 @@
 //! * [`runtime`]     — PJRT client wrapper: load HLO text artifacts, execute
 //!   (stubbed without the `pjrt` feature — the `xla` crate is not vendorable).
 //! * [`kernels`]     — packed-ternary execution engine: column-blocked 2-bit /
-//!   i4 weight layouts, multiply-free cluster GEMM, scoped thread pool, and
-//!   the `KernelRegistry` runtime dispatch (`--kernel` override).
+//!   i4 weight layouts, multiply-free cluster GEMM, scoped thread pool,
+//!   the `KernelRegistry` runtime dispatch (`--kernel` override), and the
+//!   fused integer requantization epilogue (`LayerRequant`).
 //! * [`scheme`]      — typed per-layer precision schemes: `WeightCodec` /
 //!   `LayerPolicy` / `Scheme` with the compact `8a2w_n4@stem=i8` grammar;
 //!   every precision decision (quantizer, loader, dispatch, opcount,
 //!   serving) is parameterized by a `Scheme`.
 //! * [`quant`]       — paper Algorithms 1 & 2 (mirrors `python/compile/quantize.py`),
 //!   plus `quantize_model(&Scheme, …)` — per-layer codec dispatch.
-//! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8)
-//!   + the 2-bit/4-bit storage packing the kernels consume.
-//! * [`lpinfer`]     — pure-Rust integer inference pipeline, dispatching every
-//!   conv/FC GEMM through the kernel registry (cross-check + bench + serving).
+//! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8),
+//!   the integer-only requantizer (`Requantizer`, fixed-point mult+shift)
+//!   and the 2-bit/4-bit storage packing the kernels consume.
+//! * [`lpinfer`]     — pure-Rust integer inference pipeline: i8 activations,
+//!   i32 accumulators, fused integer requant, i64 residual lane — no f32
+//!   tensor between layers (an f32 reference path remains for validation).
 //! * [`nn`]          — pure-Rust f32 reference pipeline (baseline).
 //! * [`opcount`]     — analytic op-count / energy model (§3.3, 16× claim).
 //! * [`model`]       — network descriptions incl. exact ResNet-18/50/101 tables.

@@ -1,24 +1,29 @@
 //! Low-precision integer inference pipeline — the paper's "full 8-bit
-//! compute pipeline" in pure Rust.
+//! compute pipeline" in pure Rust, with an **integer-only activation
+//! path**: from the i32 GEMM accumulators, folded batch-norm + activation
+//! rescale + ReLU clamp run as fixed-point integer arithmetic fused into
+//! the kernel epilogue ([`crate::kernels::epilogue`]), and residuals are
+//! carried on an integer skip lane — no f32 tensor is materialized between
+//! conv layers (see DESIGN.md §requant).
 //!
-//! Replicates `python/compile/model.py::forward_quant(engine="sim")`
-//! op-for-op: int8 DFP activations, int8/ternary weights, i32 accumulation,
-//! per-filter scale (cluster α̂ · 2^exp_in), folded re-estimated BatchNorm,
-//! round-half-even requantization. Every conv/FC GEMM dispatches through
-//! [`crate::kernels::KernelRegistry`], so sub-8-bit layers run on the
-//! packed multiply-free engines while staying bit-exact with the dense i8
-//! kernels (see `rust/tests/kernels_equivalence.rs`). The integration tests
-//! check rust-vs-jax agreement on the exported quantized model; the benches
-//! use this pipeline to measure the realizable ternary-vs-fp32 CPU speedup
-//! (E5).
+//! Every conv/FC GEMM dispatches through [`crate::kernels::KernelRegistry`],
+//! so sub-8-bit layers run on the packed multiply-free engines while logits
+//! stay bit-exact across kernels and thread counts (property-tested in
+//! `rust/tests/kernels_equivalence.rs`).
+//!
+//! The original f32 epilogue survives as [`forward_quant_ref`] — the
+//! op-for-op mirror of `python/compile/model.py::forward_quant(engine="sim")`
+//! — and [`paths_divergence`] runs both pipelines in per-layer lockstep to
+//! bound their divergence (≤ 1 output code per requantization point,
+//! asserted in `rust/tests/requant_equivalence.rs`).
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::dfp::round_half_even;
-use crate::io::TensorMap;
-use crate::kernels::{KernelRegistry, PackedLayer};
+use crate::dfp::{fx_rescale, round_half_even, Requantizer, REQUANT_VERSION, SKIP_FRAC};
+use crate::io::{AnyTensor, TensorMap};
+use crate::kernels::{KernelRegistry, LayerRequant, PackedLayer};
 use crate::model::{ConvLayer, Network};
 use crate::nn::im2col;
 use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
@@ -42,11 +47,16 @@ pub struct QConvParams {
     /// packed encodings of `wq` for the kernels/ dispatch (built once here,
     /// so the hot path never re-derives or unpacks weights).
     pub packed: PackedLayer,
+    /// per-channel integer requantization (fixed-point multiplier + shift
+    /// + bias) the fused epilogue consumes — derived from the f32 scales,
+    /// or loaded from a versioned export (`rq_mult`/`rq_shift`/`rq_bias`).
+    pub requant: LayerRequant,
 }
 
 impl QConvParams {
-    /// Build layer params, packing `wq` into every encoding it fits; the
-    /// policy's cluster size attaches scale metadata to the packed matrices.
+    /// Build layer params, deriving the integer requantization from the
+    /// f32 scales and packing `wq` into every encoding it fits. Errors on
+    /// non-finite scales (see [`LayerRequant::derive`]).
     pub fn new(
         wq: Tensor<i8>,
         w_scale: Vec<f32>,
@@ -54,9 +64,30 @@ impl QConvParams {
         bn_shift: Vec<f32>,
         act_exp: i32,
         policy: LayerPolicy,
-    ) -> Self {
+    ) -> Result<Self> {
+        let requant = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift)?;
+        Self::with_requant(wq, w_scale, bn_scale, bn_shift, act_exp, policy, requant)
+    }
+
+    /// Build layer params from pre-computed integer requantization tensors
+    /// (the versioned-export load path).
+    pub fn with_requant(
+        wq: Tensor<i8>,
+        w_scale: Vec<f32>,
+        bn_scale: Vec<f32>,
+        bn_shift: Vec<f32>,
+        act_exp: i32,
+        policy: LayerPolicy,
+        requant: LayerRequant,
+    ) -> Result<Self> {
+        ensure!(
+            requant.len() == w_scale.len(),
+            "requant has {} channels but the layer has {}",
+            requant.len(),
+            w_scale.len()
+        );
         let packed = PackedLayer::build(&wq, &w_scale, policy.cluster);
-        Self { wq, w_scale, bn_scale, bn_shift, act_exp, policy, packed }
+        Ok(Self { wq, w_scale, bn_scale, bn_shift, act_exp, policy, packed, requant })
     }
 }
 
@@ -80,7 +111,15 @@ pub struct QModelParams {
 }
 
 impl QModelParams {
-    /// Load from a `qweights_<tag>.dft` produced by `python -m compile.aot`.
+    /// Load from a `qweights_<tag>.dft` produced by `python -m compile.aot`
+    /// or [`QModelParams::to_tensors`].
+    ///
+    /// Requant versioning: exports carrying `meta.requant_version == 1`
+    /// provide per-layer `rq_mult`/`rq_shift`/`rq_bias` integer tensors and
+    /// load them verbatim; older exports (no version tag) fall back to
+    /// deriving the integer multipliers from the f32 scales, bit-identically
+    /// to what the exporter would have written. A *newer* version is
+    /// rejected instead of misread.
     pub fn from_tensors(map: &TensorMap, net: &Network) -> Result<Self> {
         let f32v = |name: &str| -> Result<Vec<f32>> {
             Ok(map
@@ -97,6 +136,15 @@ impl QModelParams {
                 .as_i32()?
                 .data()[0])
         };
+        let requant_version = match map.get("meta.requant_version") {
+            Some(t) => t.as_i32()?.data()[0],
+            None => 0,
+        };
+        ensure!(
+            requant_version <= REQUANT_VERSION,
+            "export has requant_version {requant_version}, newer than the supported {REQUANT_VERSION} — \
+             upgrade this binary or re-export the artifact"
+        );
         let cluster = i32s("meta.cluster")? as usize;
         let model_bits = i32s("meta.w_bits")? as u32;
         let default_policy = LayerPolicy::new(WeightCodec::from_w_bits(model_bits)?, cluster)?;
@@ -114,20 +162,28 @@ impl QModelParams {
                 scheme = scheme.with_override(n, p.clone())?;
                 p
             };
-            convs.insert(
-                n.clone(),
-                QConvParams::new(
-                    map.get(&format!("{n}.wq"))
-                        .with_context(|| format!("missing {n}.wq"))?
-                        .as_i8()?
-                        .clone(),
-                    f32v(&format!("{n}.w_scale"))?,
-                    f32v(&format!("{n}.bn_scale"))?,
-                    f32v(&format!("{n}.bn_shift"))?,
-                    i32s(&format!("{n}.act_exp"))?,
-                    policy,
-                ),
-            );
+            let wq = map
+                .get(&format!("{n}.wq"))
+                .with_context(|| format!("missing {n}.wq"))?
+                .as_i8()?
+                .clone();
+            let w_scale = f32v(&format!("{n}.w_scale"))?;
+            let bn_scale = f32v(&format!("{n}.bn_scale"))?;
+            let bn_shift = f32v(&format!("{n}.bn_shift"))?;
+            let act_exp = i32s(&format!("{n}.act_exp"))?;
+            let params = if requant_version >= 1 {
+                let requant = LayerRequant::from_parts(
+                    rq_tensor(map, n, "rq_mult")?.as_i32()?.data().to_vec(),
+                    rq_tensor(map, n, "rq_shift")?.as_i32()?.data().to_vec(),
+                    rq_tensor(map, n, "rq_bias")?.as_i64()?.data().to_vec(),
+                )
+                .with_context(|| format!("layer {n}"))?;
+                QConvParams::with_requant(wq, w_scale, bn_scale, bn_shift, act_exp, policy, requant)
+            } else {
+                // f32 fallback: derive the integer multipliers at load time
+                QConvParams::new(wq, w_scale, bn_scale, bn_shift, act_exp, policy)
+            };
+            convs.insert(n.clone(), params.with_context(|| format!("layer {n}"))?);
         }
         // exports may record a distinct FC precision (QuantConfig.fc_bits);
         // without the optional fc.w_bits entry the FC follows the default
@@ -156,6 +212,55 @@ impl QModelParams {
         Ok(out)
     }
 
+    /// Serialize to the `qweights_*.dft` tensor layout, including the
+    /// integer requantization tensors (`rq_mult`/`rq_shift`/`rq_bias` per
+    /// layer) tagged `meta.requant_version = 1` — so serving never has to
+    /// re-derive multipliers from f32, and [`QModelParams::from_tensors`]
+    /// round-trips the model exactly.
+    pub fn to_tensors(&self) -> TensorMap {
+        let f32t = |v: &[f32]| AnyTensor::F32(Tensor::new(&[v.len()], v.to_vec()).expect("1-d"));
+        let i32t = |v: Vec<i32>| {
+            let n = v.len();
+            AnyTensor::I32(Tensor::new(&[n], v).expect("1-d"))
+        };
+        let i64t = |v: Vec<i64>| {
+            let n = v.len();
+            AnyTensor::I64(Tensor::new(&[n], v).expect("1-d"))
+        };
+        let scalar = |x: i32| i32t(vec![x]);
+        let mut map = TensorMap::new();
+        for (n, p) in &self.convs {
+            map.insert(format!("{n}.wq"), AnyTensor::I8(p.wq.clone()));
+            map.insert(format!("{n}.w_scale"), f32t(&p.w_scale));
+            map.insert(format!("{n}.bn_scale"), f32t(&p.bn_scale));
+            map.insert(format!("{n}.bn_shift"), f32t(&p.bn_shift));
+            map.insert(format!("{n}.act_exp"), scalar(p.act_exp));
+            map.insert(format!("{n}.w_bits"), scalar(p.policy.w_bits() as i32));
+            map.insert(format!("{n}.rq_mult"), i32t(p.requant.mult.clone()));
+            map.insert(format!("{n}.rq_shift"), i32t(p.requant.shift.clone()));
+            map.insert(format!("{n}.rq_bias"), i64t(p.requant.bias_fx.clone()));
+        }
+        map.insert("fc.wq".into(), AnyTensor::I8(self.fc_wq.clone()));
+        map.insert("fc.scale".into(), f32t(&self.fc_scale));
+        map.insert("fc.b".into(), f32t(&self.fc_b));
+        map.insert(
+            "fc.w_bits".into(),
+            scalar(self.scheme.policy_for("fc").w_bits() as i32),
+        );
+        map.insert("meta.in_exp".into(), scalar(self.in_exp));
+        map.insert("meta.feat_exp".into(), scalar(self.feat_exp));
+        map.insert(
+            "meta.cluster".into(),
+            scalar(self.scheme.default_policy().cluster as i32),
+        );
+        map.insert(
+            "meta.w_bits".into(),
+            scalar(self.scheme.default_policy().w_bits() as i32),
+        );
+        map.insert("meta.requant_version".into(), scalar(REQUANT_VERSION));
+        map
+    }
+
     /// Deterministic synthetic model (random codes, benign scales) for
     /// tests, benches and the artifact-free serving demo. Every layer's
     /// code range follows its `scheme` policy (ternary -> {-1,0,1},
@@ -181,7 +286,8 @@ impl QModelParams {
                     vec![0.0; l.cout],
                     -4,
                     policy,
-                ),
+                )
+                .expect("benign synthetic scales"),
             );
         }
         let fc_policy = scheme.policy_for("fc").clone();
@@ -226,6 +332,9 @@ impl QModelParams {
             if p.w_scale.len() != l.cout || p.bn_scale.len() != l.cout {
                 bail!("{}: scale length mismatch", l.name);
             }
+            if p.requant.len() != l.cout {
+                bail!("{}: requant channel count {} != {}", l.name, p.requant.len(), l.cout);
+            }
             check_codes(&l.name, p.wq.data(), &p.policy)?;
         }
         if self.fc_wq.dim(0) != net.fc_in || self.fc_wq.dim(1) != net.fc_out {
@@ -236,13 +345,182 @@ impl QModelParams {
     }
 }
 
-/// f32 -> int8 DFP requantization (round-half-even, symmetric clip).
+/// Look up one of a layer's versioned integer-requant tensors, with a
+/// load-error message naming the missing entry.
+fn rq_tensor<'m>(map: &'m TensorMap, layer: &str, suffix: &str) -> Result<&'m AnyTensor> {
+    map.get(&format!("{layer}.{suffix}"))
+        .with_context(|| format!("versioned requant export is missing {layer}.{suffix}"))
+}
+
+/// f32 -> int8 DFP requantization (round-half-even, symmetric clip). Used
+/// at the pipeline *entry* (quantizing the input image) and by the f32
+/// reference path; the layer-to-layer hot path requantizes in integers
+/// (see [`crate::kernels::epilogue`]).
 pub fn requant(x: &[f32], exp: i32) -> Vec<i8> {
     let scale = 2f64.powi(-exp);
     x.iter()
         .map(|&v| round_half_even(f64::from(v) * scale).clamp(-127.0, 127.0) as i8)
         .collect()
 }
+
+// ---------------------------------------------------------------------------
+// fused integer path (the serving hot path)
+// ---------------------------------------------------------------------------
+
+/// One conv through the fused integer pipeline: im2col, registry GEMM with
+/// the requant epilogue fused in, straight to i8 codes on the layer's own
+/// activation grid. `skip` is the integer residual lane (already on this
+/// layer's target grid at [`SKIP_FRAC`] fraction bits).
+fn qconv_fused(
+    x: &Tensor<i8>,
+    exp_in: i32,
+    l: &ConvLayer,
+    p: &QConvParams,
+    relu: bool,
+    skip: Option<&Tensor<i64>>,
+    reg: &KernelRegistry,
+) -> Tensor<i8> {
+    let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
+    let epi = p.requant.resolve(exp_in, p.act_exp, relu);
+    let out = reg.gemm_fused(
+        &cols,
+        &p.packed,
+        || p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape"),
+        &epi,
+        skip.map(Tensor::data),
+    );
+    out.reshape(&[n, ho, wo, l.cout]).expect("conv output shape")
+}
+
+/// A projection conv evaluated straight onto the integer residual lane of
+/// the layer that will consume it (`act_target` = the consuming layer's
+/// activation exponent). Replaces the f32 `z` tensor the reference path
+/// keeps for residuals.
+fn qconv_to_skip(
+    x: &Tensor<i8>,
+    exp_in: i32,
+    l: &ConvLayer,
+    p: &QConvParams,
+    act_target: i32,
+    reg: &KernelRegistry,
+) -> Tensor<i64> {
+    let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
+    let epi = p.requant.resolve(exp_in, act_target, false);
+    let out = reg.gemm_fused_skip(
+        &cols,
+        &p.packed,
+        || p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape"),
+        &epi,
+    );
+    out.reshape(&[n, ho, wo, l.cout]).expect("conv output shape")
+}
+
+/// Identity-skip path: re-align i8 activations at `exp_h` onto the integer
+/// residual lane of a layer whose grid is `act_target` — a pure shift
+/// (exact whenever `SKIP_FRAC + exp_h - act_target >= 0`, which holds for
+/// every realistic exponent pair).
+fn dequant_to_skip(hq: &Tensor<i8>, exp_h: i32, act_target: i32) -> Tensor<i64> {
+    let s = SKIP_FRAC + exp_h - act_target;
+    hq.map(|v| fx_rescale(i64::from(v), -s))
+}
+
+/// Forward a f32 image batch through the integer pipeline with the default
+/// (auto, single-thread) kernel registry. Returns logits.
+pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
+    forward_quant_with(params, net, x, &KernelRegistry::auto())
+}
+
+/// Forward pass with an explicit kernel registry (kernel choice + threads),
+/// integer-only between layers: i8 activations, i32 accumulators, fused
+/// integer requant epilogues, i64 residual lane. The only f32 tensors are
+/// the input image and the output logits. Logits are bit-identical for
+/// every registry configuration.
+pub fn forward_quant_with(
+    params: &QModelParams,
+    net: &Network,
+    x: &Tensor<f32>,
+    reg: &KernelRegistry,
+) -> Tensor<f32> {
+    let layers: BTreeMap<&str, &ConvLayer> =
+        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+
+    // quantize input image to int8 DFP (pipeline entry: f32 is allowed here)
+    let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
+
+    let mut hq =
+        qconv_fused(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, reg);
+    let mut exp_h = params.convs["stem"].act_exp;
+
+    let mut i = 1;
+    while i < net.layers.len() {
+        let c1 = &net.layers[i];
+        let c2 = &net.layers[i + 1];
+        let has_proj = net
+            .layers
+            .get(i + 2)
+            .map(|l| l.name.ends_with("proj"))
+            .unwrap_or(false);
+        let exp2 = params.convs[&c2.name].act_exp;
+        // residual on the integer skip lane, targeted at c2's grid
+        let skip_fx = if has_proj {
+            let proj = &net.layers[i + 2];
+            qconv_to_skip(&hq, exp_h, proj, &params.convs[&proj.name], exp2, reg)
+        } else {
+            dequant_to_skip(&hq, exp_h, exp2)
+        };
+        let h1 = qconv_fused(&hq, exp_h, c1, &params.convs[&c1.name], true, None, reg);
+        let exp1 = params.convs[&c1.name].act_exp;
+        hq = qconv_fused(&h1, exp1, c2, &params.convs[&c2.name], true, Some(&skip_fx), reg);
+        exp_h = exp2;
+        i += if has_proj { 3 } else { 2 };
+    }
+
+    // integer global average pool: i64 code sums requantized to feat_exp
+    // through a scalar fixed-point multiplier (no f32 feature tensor)
+    let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
+    let mut sums = vec![0i64; n * c];
+    {
+        let hd = hq.data();
+        for b in 0..n {
+            for y in 0..ho {
+                for xx in 0..wo {
+                    let base = ((b * ho + y) * wo + xx) * c;
+                    for ch in 0..c {
+                        sums[b * c + ch] += i64::from(hd[base + ch]);
+                    }
+                }
+            }
+        }
+    }
+    let gap = Requantizer::from_scale(2f64.powi(exp_h - params.feat_exp) / ((ho * wo) as f64))
+        .expect("GAP requant scale representable");
+    let fq_data: Vec<i8> = sums
+        .iter()
+        .map(|&s| fx_rescale(s * i64::from(gap.mult), gap.shift).clamp(-127, 127) as i8)
+        .collect();
+    let fq = Tensor::new(&[n, c], fq_data).expect("feat shape");
+
+    // integer FC; logits are the pipeline output, produced in f32
+    let acc = reg.gemm(&fq, &params.fc_wq, &params.fc_packed);
+    let ncls = params.fc_b.len();
+    let fs = 2f32.powi(params.feat_exp);
+    let mut logits = Tensor::<f32>::zeros(&[n, ncls]);
+    {
+        let ld = logits.data_mut();
+        let ad = acc.data();
+        for b in 0..n {
+            for k in 0..ncls {
+                ld[b * ncls + k] =
+                    ad[b * ncls + k] as f32 * (params.fc_scale[k] * fs) + params.fc_b[k];
+            }
+        }
+    }
+    logits
+}
+
+// ---------------------------------------------------------------------------
+// f32 reference path (python-sim mirror; validation only)
+// ---------------------------------------------------------------------------
 
 struct ConvOut {
     /// int8 requantized activations (next layer input)
@@ -252,7 +530,7 @@ struct ConvOut {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn qconv(
+fn qconv_ref(
     x: &Tensor<i8>,
     exp_in: i32,
     l: &ConvLayer,
@@ -290,15 +568,18 @@ fn qconv(
     ConvOut { q, z: zt }
 }
 
-/// Forward a f32 image batch through the integer pipeline with the default
-/// (auto, single-thread) kernel registry. Returns logits.
-pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
-    forward_quant_with(params, net, x, &KernelRegistry::auto())
+/// [`forward_quant_ref_with`] with the default (auto, single-thread)
+/// registry.
+pub fn forward_quant_ref(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
+    forward_quant_ref_with(params, net, x, &KernelRegistry::auto())
 }
 
-/// Forward pass with an explicit kernel registry (kernel choice + threads).
-/// Logits are bit-identical for every registry configuration.
-pub fn forward_quant_with(
+/// The f32-epilogue reference pipeline: identical op order to
+/// `python/compile/model.py::forward_quant(engine="sim")`, materializing
+/// f32 pre-activations between layers. Kept for cross-validation of the
+/// fused integer path ([`paths_divergence`]) and the python cross-check
+/// tests — serving uses [`forward_quant_with`].
+pub fn forward_quant_ref_with(
     params: &QModelParams,
     net: &Network,
     x: &Tensor<f32>,
@@ -307,11 +588,10 @@ pub fn forward_quant_with(
     let layers: BTreeMap<&str, &ConvLayer> =
         net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
 
-    // quantize input image to int8 DFP
     let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
 
     let stem =
-        qconv(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, false, reg);
+        qconv_ref(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, false, reg);
     let mut hq = stem.q;
     let mut exp_h = params.convs["stem"].act_exp;
 
@@ -327,16 +607,16 @@ pub fn forward_quant_with(
         // skip path in f32 (mirrors the python sim exactly)
         let skip_f = if has_proj {
             let proj = &net.layers[i + 2];
-            qconv(&hq, exp_h, proj, &params.convs[&proj.name], false, None, true, reg)
+            qconv_ref(&hq, exp_h, proj, &params.convs[&proj.name], false, None, true, reg)
                 .z
                 .expect("proj keeps f32")
         } else {
             let s = 2f32.powi(exp_h);
             hq.map(|v| f32::from(v) * s)
         };
-        let h1 = qconv(&hq, exp_h, c1, &params.convs[&c1.name], true, None, false, reg);
+        let h1 = qconv_ref(&hq, exp_h, c1, &params.convs[&c1.name], true, None, false, reg);
         let exp1 = params.convs[&c1.name].act_exp;
-        let h2 = qconv(&h1.q, exp1, c2, &params.convs[&c2.name], true, Some(&skip_f), false, reg);
+        let h2 = qconv_ref(&h1.q, exp1, c2, &params.convs[&c2.name], true, Some(&skip_f), false, reg);
         exp_h = params.convs[&c2.name].act_exp;
         hq = h2.q;
         i += if has_proj { 3 } else { 2 };
@@ -381,6 +661,133 @@ pub fn forward_quant_with(
     logits
 }
 
+// ---------------------------------------------------------------------------
+// fused-vs-reference divergence harness
+// ---------------------------------------------------------------------------
+
+/// Result of [`paths_divergence`]: how far the fused integer path strays
+/// from the f32 reference.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathsDivergence {
+    /// max |fused - ref| over every requantized activation code, measured
+    /// in per-layer lockstep (both paths fed the same reference input at
+    /// each layer). The documented bound is 1: the fused multiplier is
+    /// exact to 2^-31, so codes can only differ when the real value sits
+    /// within a hair of a rounding boundary (DESIGN.md §requant).
+    pub max_code_ulp: i32,
+    /// max |fused - ref| over the final logits of the two *free-running*
+    /// pipelines (code divergences may cascade here, so this is reported
+    /// rather than bounded analytically).
+    pub logit_max_abs_diff: f32,
+}
+
+fn code_ulp(a: &Tensor<i8>, b: &Tensor<i8>) -> i32 {
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| (i32::from(x) - i32::from(y)).abs())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Run the fused integer pipeline and the f32 reference in per-layer
+/// lockstep (the fused layer consumes the *reference* activations, so
+/// divergence cannot cascade) and report the maximum code divergence,
+/// plus the free-running logit gap. The validation harness behind
+/// `rust/tests/requant_equivalence.rs`.
+pub fn paths_divergence(
+    params: &QModelParams,
+    net: &Network,
+    x: &Tensor<f32>,
+    reg: &KernelRegistry,
+) -> PathsDivergence {
+    let layers: BTreeMap<&str, &ConvLayer> =
+        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+    let mut max_ulp = 0i32;
+
+    let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
+    let stem_l = layers["stem"];
+    let stem_p = &params.convs["stem"];
+    let stem_ref = qconv_ref(&xq, params.in_exp, stem_l, stem_p, true, None, false, reg);
+    let stem_fused = qconv_fused(&xq, params.in_exp, stem_l, stem_p, true, None, reg);
+    max_ulp = max_ulp.max(code_ulp(&stem_ref.q, &stem_fused));
+    let mut hq = stem_ref.q;
+    let mut exp_h = stem_p.act_exp;
+
+    let mut i = 1;
+    while i < net.layers.len() {
+        let c1 = &net.layers[i];
+        let c2 = &net.layers[i + 1];
+        let has_proj = net
+            .layers
+            .get(i + 2)
+            .map(|l| l.name.ends_with("proj"))
+            .unwrap_or(false);
+        let exp2 = params.convs[&c2.name].act_exp;
+        // both skip representations from the same reference activations
+        let (skip_f, skip_fx) = if has_proj {
+            let proj = &net.layers[i + 2];
+            let pp = &params.convs[&proj.name];
+            let zf = qconv_ref(&hq, exp_h, proj, pp, false, None, true, reg)
+                .z
+                .expect("proj keeps f32");
+            let fx = qconv_to_skip(&hq, exp_h, proj, pp, exp2, reg);
+            (zf, fx)
+        } else {
+            let s = 2f32.powi(exp_h);
+            (hq.map(|v| f32::from(v) * s), dequant_to_skip(&hq, exp_h, exp2))
+        };
+        let p1 = &params.convs[&c1.name];
+        let h1_ref = qconv_ref(&hq, exp_h, c1, p1, true, None, false, reg);
+        let h1_fused = qconv_fused(&hq, exp_h, c1, p1, true, None, reg);
+        max_ulp = max_ulp.max(code_ulp(&h1_ref.q, &h1_fused));
+        let p2 = &params.convs[&c2.name];
+        let h2_ref = qconv_ref(&h1_ref.q, p1.act_exp, c2, p2, true, Some(&skip_f), false, reg);
+        let h2_fused = qconv_fused(&h1_ref.q, p1.act_exp, c2, p2, true, Some(&skip_fx), reg);
+        max_ulp = max_ulp.max(code_ulp(&h2_ref.q, &h2_fused));
+        hq = h2_ref.q;
+        exp_h = exp2;
+        i += if has_proj { 3 } else { 2 };
+    }
+
+    // GAP lockstep: f32 mean+requant vs integer sum+fixed-point rescale
+    let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
+    let mut sums = vec![0i64; n * c];
+    let mut feat = vec![0.0f32; n * c];
+    {
+        let hd = hq.data();
+        for b in 0..n {
+            for y in 0..ho {
+                for xx in 0..wo {
+                    let base = ((b * ho + y) * wo + xx) * c;
+                    for ch in 0..c {
+                        sums[b * c + ch] += i64::from(hd[base + ch]);
+                        feat[b * c + ch] += f32::from(hd[base + ch]);
+                    }
+                }
+            }
+        }
+        let inv = 2f32.powi(exp_h) / (ho * wo) as f32;
+        for v in feat.iter_mut() {
+            *v *= inv;
+        }
+    }
+    let fq_ref = requant(&feat, params.feat_exp);
+    let gap = Requantizer::from_scale(2f64.powi(exp_h - params.feat_exp) / ((ho * wo) as f64))
+        .expect("GAP requant scale representable");
+    for (s, &r) in sums.iter().zip(&fq_ref) {
+        let q = fx_rescale(s * i64::from(gap.mult), gap.shift).clamp(-127, 127) as i8;
+        max_ulp = max_ulp.max((i32::from(q) - i32::from(r)).abs());
+    }
+
+    let logits_ref = forward_quant_ref_with(params, net, x, reg);
+    let logits_fused = forward_quant_with(params, net, x, reg);
+    PathsDivergence {
+        max_code_ulp: max_ulp,
+        logit_max_abs_diff: logits_ref.max_abs_diff(&logits_fused),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,9 +814,7 @@ mod tests {
         assert_eq!(q, vec![4]);
     }
 
-    #[test]
-    fn test_qconv_1x1_identity() {
-        // identity 1x1 ternary conv with unit scales: output == clipped input
+    fn identity_conv() -> (ConvLayer, QConvParams) {
         let l = ConvLayer {
             name: "t".into(),
             kh: 1,
@@ -429,11 +834,22 @@ mod tests {
             vec![0.0; 2],
             0,
             LayerPolicy::new(WeightCodec::Ternary { mode: TernaryMode::Support }, 2).unwrap(),
-        );
+        )
+        .unwrap();
+        (l, p)
+    }
+
+    #[test]
+    fn test_qconv_1x1_identity_both_paths() {
+        // identity 1x1 ternary conv with unit scales: output == clipped input
+        let (l, p) = identity_conv();
         assert!(p.packed.ternary.is_some(), "ternary codes must pack");
         let x = Tensor::new(&[1, 2, 2, 2], vec![1i8, -2, 3, -4, 5, -6, 7, -8]).unwrap();
-        let out = qconv(&x, 0, &l, &p, false, None, false, &KernelRegistry::auto());
-        assert_eq!(out.q.data(), x.data());
+        let reg = KernelRegistry::auto();
+        let out_ref = qconv_ref(&x, 0, &l, &p, false, None, false, &reg);
+        assert_eq!(out_ref.q.data(), x.data());
+        let out_fused = qconv_fused(&x, 0, &l, &p, false, None, &reg);
+        assert_eq!(out_fused.data(), x.data());
     }
 
     #[test]
@@ -461,6 +877,17 @@ mod tests {
             let got = forward_quant_with(&params, &net, &x, &reg);
             assert_eq!(got.data(), want.data(), "kernel {kind}");
         }
+    }
+
+    #[test]
+    fn test_fused_path_tracks_reference_on_synthetic_net() {
+        let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
+        let params = QModelParams::synthetic(&net, 17, &scheme("8a2w_n4@stem=i8"));
+        let mut rng = SplitMix64::new(18);
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        let d = paths_divergence(&params, &net, &x, &KernelRegistry::auto());
+        assert!(d.max_code_ulp <= 1, "lockstep divergence {} > 1 code", d.max_code_ulp);
+        assert!(d.logit_max_abs_diff.is_finite());
     }
 
     #[test]
@@ -516,5 +943,65 @@ mod tests {
         let lied = QModelParams { scheme: scheme("8a2w_n4"), ..wide };
         let err = lied.validate(&net).unwrap_err().to_string();
         assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn test_export_roundtrip_preserves_requant_and_logits() {
+        let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
+        let params = QModelParams::synthetic(&net, 33, &scheme("8a2w_n4@stem=i8"));
+        let map = params.to_tensors();
+        assert_eq!(map["meta.requant_version"].as_i32().unwrap().data()[0], REQUANT_VERSION);
+        let back = QModelParams::from_tensors(&map, &net).unwrap();
+        for (name, p) in &params.convs {
+            assert_eq!(p.requant, back.convs[name].requant, "layer {name}");
+        }
+        assert_eq!(params.scheme, back.scheme);
+        let mut rng = SplitMix64::new(34);
+        let x = Tensor::new(&[1, 8, 8, 3], rng.normal(8 * 8 * 3)).unwrap();
+        let want = forward_quant(&params, &net, &x);
+        let got = forward_quant(&back, &net, &x);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn test_legacy_export_falls_back_to_derived_requant() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let params = QModelParams::synthetic(&net, 35, &scheme("8a2w_n4"));
+        let mut map = params.to_tensors();
+        // strip the integer-requant tensors: a pre-versioning export
+        map.remove("meta.requant_version");
+        let names: Vec<String> =
+            map.keys().filter(|k| k.contains(".rq_")).cloned().collect();
+        for n in names {
+            map.remove(&n);
+        }
+        let back = QModelParams::from_tensors(&map, &net).unwrap();
+        // the f32 fallback derives exactly what the export carried
+        for (name, p) in &params.convs {
+            assert_eq!(p.requant, back.convs[name].requant, "layer {name}");
+        }
+    }
+
+    #[test]
+    fn test_newer_requant_version_rejected() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let params = QModelParams::synthetic(&net, 36, &scheme("8a2w_n4"));
+        let mut map = params.to_tensors();
+        map.insert(
+            "meta.requant_version".into(),
+            AnyTensor::I32(Tensor::new(&[1], vec![REQUANT_VERSION + 1]).unwrap()),
+        );
+        let err = QModelParams::from_tensors(&map, &net).unwrap_err().to_string();
+        assert!(err.contains("requant_version"), "{err}");
+    }
+
+    #[test]
+    fn test_versioned_export_missing_rq_tensor_is_an_error() {
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let params = QModelParams::synthetic(&net, 37, &scheme("8a2w_n4"));
+        let mut map = params.to_tensors();
+        map.remove("stem.rq_mult");
+        let err = QModelParams::from_tensors(&map, &net).unwrap_err().to_string();
+        assert!(err.contains("stem.rq_mult"), "{err}");
     }
 }

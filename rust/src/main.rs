@@ -79,10 +79,16 @@ fn cmd_info(args: &Args) -> Result<()> {
     let m = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
     println!("image: {0}x{0}x3, classes: {1}", m.img, m.classes);
     println!("batch sizes: {:?}", m.batch_sizes);
-    println!("{:<12} {:>6} {:>8} {:>10}  {}", "variant", "bits", "cluster", "eval_acc", "scheme");
+    println!(
+        "{:<12} {:>6} {:>8} {:>10} {:>3}  {}",
+        "variant", "bits", "cluster", "eval_acc", "rq", "scheme"
+    );
     for (name, v) in &m.variants {
         let scheme = m.scheme_of(name).map(|s| s.to_string()).unwrap_or_else(|| "-".into());
-        println!("{:<12} {:>6} {:>8} {:>10.4}  {}", name, v.w_bits, v.cluster, v.eval_acc, scheme);
+        println!(
+            "{:<12} {:>6} {:>8} {:>10.4} {:>3}  {}",
+            name, v.w_bits, v.cluster, v.eval_acc, v.requant_version, scheme
+        );
     }
     Ok(())
 }

@@ -17,6 +17,11 @@ pub struct VariantInfo {
     pub eval_acc: f64,
     pub w_bits: u32,
     pub cluster: usize,
+    /// version of the integer-requant tensors the variant's qweights
+    /// export carries (0 = pre-versioning export: the loader derives the
+    /// multipliers from the f32 scales instead — see
+    /// [`crate::dfp::REQUANT_VERSION`]).
+    pub requant_version: i32,
 }
 
 /// The whole manifest.
@@ -63,6 +68,8 @@ impl Manifest {
                     eval_acc: v.get("eval_acc").and_then(Json::as_f64).unwrap_or(0.0),
                     w_bits: v.get("w_bits").and_then(Json::as_i64).unwrap_or(32) as u32,
                     cluster: v.get("cluster").and_then(Json::as_i64).unwrap_or(0) as usize,
+                    requant_version: v.get("requant_version").and_then(Json::as_i64).unwrap_or(0)
+                        as i32,
                 },
             );
         }
@@ -97,7 +104,7 @@ mod tests {
       "batch_sizes": [1, 8, 32],
       "variants": {
         "fp32": {"files": {"1": "model_fp32_b1.hlo.txt"}, "eval_acc": 0.9, "w_bits": 32, "cluster": 0},
-        "8a2w_n4": {"files": {"1": "a.hlo.txt", "8": "b.hlo.txt"}, "eval_acc": 0.85, "w_bits": 2, "cluster": 4}
+        "8a2w_n4": {"files": {"1": "a.hlo.txt", "8": "b.hlo.txt"}, "eval_acc": 0.85, "w_bits": 2, "cluster": 4, "requant_version": 1}
       }
     }"#;
 
@@ -112,6 +119,9 @@ mod tests {
         assert_eq!(v.files[&8], "b.hlo.txt");
         assert_eq!(v.w_bits, 2);
         assert!((v.eval_acc - 0.85).abs() < 1e-12);
+        assert_eq!(v.requant_version, 1);
+        // variants without the tag default to the pre-versioning 0
+        assert_eq!(m.variants["fp32"].requant_version, 0);
     }
 
     #[test]

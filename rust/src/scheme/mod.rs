@@ -111,6 +111,8 @@ pub struct LayerPolicy {
 }
 
 impl LayerPolicy {
+    /// Construct a policy, rejecting the degenerate `cluster == 0` and
+    /// out-of-range DFP bit widths up front.
     pub fn new(codec: WeightCodec, cluster: usize) -> Result<Self> {
         ensure!(cluster >= 1, "layer policy: cluster size must be >= 1 (got 0)");
         if let WeightCodec::Dfp { bits } = codec {
@@ -156,8 +158,20 @@ fn glob_match(pat: &str, text: &str) -> bool {
 /// default applies when none does. The builder methods consume and return
 /// `self` so schemes read as literals:
 ///
-/// ```ignore
-/// let s = Scheme::uniform(8, ternary_n4)?.with_override("stem", i8)?.with_override("fc", i8)?;
+/// ```
+/// use dfp_infer::quant::TernaryMode;
+/// use dfp_infer::scheme::{LayerPolicy, Scheme, WeightCodec};
+/// let tern = LayerPolicy::new(WeightCodec::Ternary { mode: TernaryMode::Support }, 4).unwrap();
+/// let i8p = LayerPolicy::new(WeightCodec::I8, 4).unwrap();
+/// let s = Scheme::uniform(8, tern)
+///     .unwrap()
+///     .with_override("stem", i8p.clone())
+///     .unwrap()
+///     .with_override("fc", i8p)
+///     .unwrap();
+/// assert_eq!(s.to_string(), "8a2w_n4@stem=i8@fc=i8");
+/// assert_eq!(s.w_bits_for("stem"), 8);
+/// assert_eq!(s.w_bits_for("s0b0c1"), 2); // default policy: ternary
 /// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Scheme {
@@ -186,10 +200,12 @@ impl Scheme {
         Ok(self)
     }
 
+    /// Activation bit width (the `<A>a` prefix of the grammar).
     pub fn act_bits(&self) -> u32 {
         self.act_bits
     }
 
+    /// The policy applied to every layer no override matches.
     pub fn default_policy(&self) -> &LayerPolicy {
         &self.default_policy
     }
@@ -250,6 +266,19 @@ impl Scheme {
     /// the canonical codec spellings and omits `:nN` equal to the default
     /// cluster (non-canonical aliases like `@x=ternary` or a redundant
     /// `:n4` parse fine but print canonically).
+    ///
+    /// ```
+    /// use dfp_infer::scheme::Scheme;
+    /// // ternary default at N=64, i8 stem/fc, 4-bit stage-2 at N=4
+    /// let s = Scheme::parse("8a2w_n64@stem=i8@s2*=i4:n4@fc=i8").unwrap();
+    /// assert_eq!(s.act_bits(), 8);
+    /// assert_eq!(s.default_policy().cluster, 64);
+    /// assert_eq!(s.policy_for("s2b0c1").w_bits(), 4);
+    /// assert_eq!(s.to_string(), "8a2w_n64@stem=i8@s2*=i4:n4@fc=i8");
+    /// // malformed specs fail fast
+    /// assert!(Scheme::parse("8a9w_n4").is_err());
+    /// assert!(Scheme::parse("8a2w_n4@stem=i9").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<Self> {
         let syntax = || format!("scheme '{s}': expected <A>a<W>w_n<N>[@layer=codec[:nN]]* (e.g. 8a2w_n4@stem=i8)");
         let mut parts = s.split('@');
