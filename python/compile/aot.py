@@ -36,6 +36,7 @@ from .model import (
     ModelSpec, QuantConfig, build_qmodel, eval_fp, eval_qmodel, forward_fp,
     forward_quant,
 )
+from .requant import REQUANT_VERSION, derive_requant
 
 HERE = os.path.dirname(__file__)
 MODELS_DIR = os.path.join(HERE, "..", "..", "models")
@@ -90,6 +91,14 @@ def export_qweights(path: str, qm) -> None:
         t[f"{name}.bn_shift"] = l.bn_shift
         t[f"{name}.act_exp"] = np.array([l.act_exp], np.int32)
         t[f"{name}.w_bits"] = np.array([l.w_bits], np.int32)
+        rq_mult, rq_shift, rq_bias = derive_requant(
+            np.asarray(l.w_scale, np.float32),
+            np.asarray(l.bn_scale, np.float32),
+            np.asarray(l.bn_shift, np.float32),
+        )
+        t[f"{name}.rq_mult"] = rq_mult
+        t[f"{name}.rq_shift"] = rq_shift
+        t[f"{name}.rq_bias"] = rq_bias
     t["fc.wq"] = qm.fc_wq
     t["fc.scale"] = qm.fc_scale.astype(np.float32)
     t["fc.b"] = qm.fc_b
@@ -97,6 +106,7 @@ def export_qweights(path: str, qm) -> None:
     t["meta.feat_exp"] = np.array([qm.feat_exp], np.int32)
     t["meta.cluster"] = np.array([qm.cfg.cluster], np.int32)
     t["meta.w_bits"] = np.array([qm.cfg.w_bits], np.int32)
+    t["meta.requant_version"] = np.array([REQUANT_VERSION], np.int32)
     write_dft(path, t)
 
 
@@ -149,6 +159,9 @@ def main():
             "files": files, "eval_acc": acc,
             "w_bits": cfg.w_bits if cfg else 32,
             "cluster": cfg.cluster if cfg else 0,
+            # quantized variants ship versioned integer-requant tensors in
+            # their qweights export; fp32 has no quantized weights (tag 0)
+            "requant_version": REQUANT_VERSION if cfg else 0,
         }
 
     # eval data for the rust drivers (images f32, labels i32)

@@ -1,0 +1,67 @@
+"""Integer-requantization export math (numpy + stdlib only, no jax).
+
+Mirrors the rust derivation (`dfp::Requantizer::from_scale` /
+`kernels::LayerRequant::derive`) so version-1 exports carry exactly the
+multipliers the rust loader would otherwise re-derive from the f32
+scales: the combined per-channel scale `s = w_scale * bn_scale`
+(computed in f64) becomes `mult * 2^-shift` with `|mult|` normalized
+into [2^30, 2^31) and the sign folded into the mantissa; `bn_shift` is
+carried at BIAS_FRAC fraction bits. Kept free of jax imports so it is
+unit-testable without an accelerator stack (`tests/test_requant_export.py`).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+# Version tag of the integer-requant export (mirrors rust
+# `dfp::REQUANT_VERSION`): exports carrying it provide per-layer
+# rq_mult/rq_shift/rq_bias tensors, so the rust loader skips its
+# f32-derivation fallback.
+REQUANT_VERSION = 1
+
+# Fraction bits of the fixed-point bias lane (rust `dfp::BIAS_FRAC`).
+BIAS_FRAC = 32
+
+
+def _round_half_away(x: float) -> int:
+    """f64 `.round()` semantics (ties away from zero), unlike python round."""
+    return int(math.floor(x + 0.5)) if x >= 0.0 else int(math.ceil(x - 0.5))
+
+
+def derive_requant(w_scale, bn_scale, bn_shift):
+    """Per-channel integer requantization tensors (rq_mult, rq_shift, rq_bias).
+
+    Raises ValueError on non-finite inputs or scales outside 2^±512,
+    matching the rust loader's typed rejections.
+    """
+    n = len(w_scale)
+    mult = np.zeros(n, np.int32)
+    shift = np.zeros(n, np.int32)
+    bias = np.zeros(n, np.int64)
+    for c in range(n):
+        s0 = float(np.float64(w_scale[c]) * np.float64(bn_scale[c]))
+        if not math.isfinite(s0):
+            raise ValueError(f"channel {c}: non-finite requant scale {s0}")
+        if s0 != 0.0:
+            # frexp gives |s0| = m * 2^e with m in [0.5, 1), exactly, so
+            # floor(log2|s0|) == e - 1 without float-log rounding hazards
+            _, e = math.frexp(abs(s0))
+            sh = 31 - e  # == 30 - floor(log2 |s0|)
+            if abs(e - 1) > 512:
+                raise ValueError(f"channel {c}: requant scale out of range {s0}")
+            mm = _round_half_away(abs(s0) * 2.0 ** sh)
+            if mm == 1 << 31:
+                # rounding bumped the mantissa out of range: renormalize
+                mm >>= 1
+                sh -= 1
+            assert (1 << 30) <= mm < (1 << 31), (s0, mm)
+            mult[c] = -mm if s0 < 0.0 else mm
+            shift[c] = sh
+        b = float(np.float64(bn_shift[c]))
+        if not math.isfinite(b):
+            raise ValueError(f"channel {c}: non-finite bn_shift {b}")
+        bias[c] = _round_half_away(b * 2.0 ** BIAS_FRAC)
+    return mult, shift, bias

@@ -1,0 +1,91 @@
+"""compile.requant — the integer-requant export math must mirror the rust
+derivation (`dfp::Requantizer::from_scale` / `LayerRequant::derive`).
+
+A python reference of the rust algorithm (log2().floor() + .round()) is
+checked against `derive_requant`'s frexp formulation across random scale
+envelopes, plus the invariants the rust loader enforces on version-1
+exports (mantissa range, shift bounds, sign folding, bias rounding).
+No jax required — this file must stay importable without an accelerator
+stack.
+"""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from compile.requant import BIAS_FRAC, REQUANT_VERSION, derive_requant
+
+
+def _round_half_away(x: float) -> int:
+    return int(math.floor(x + 0.5)) if x >= 0.0 else int(math.ceil(x - 0.5))
+
+
+def rust_from_scale(scale: float):
+    """Reference port of rust `Requantizer::from_scale` (log2-based)."""
+    e = math.floor(math.log2(scale))
+    shift = 30 - e
+    mult = _round_half_away(scale * 2.0 ** shift)
+    if mult == 1 << 31:
+        mult >>= 1
+        shift -= 1
+    return mult, shift
+
+
+def test_matches_rust_derivation_across_random_scales():
+    rng = random.Random(3)
+    for _ in range(20000):
+        w = np.float32(2.0 ** rng.uniform(-14, -2) * rng.uniform(1.0, 2.0))
+        b = np.float32(rng.uniform(-2.0, 2.0))
+        sh = np.float32(rng.uniform(-8.0, 8.0))
+        if float(b) == 0.0:
+            continue
+        mult, shift, bias = derive_requant([w], [b], [sh])
+        s0 = float(np.float64(w) * np.float64(b))
+        rm, rs = rust_from_scale(abs(s0))
+        rm = -rm if s0 < 0.0 else rm
+        assert int(mult[0]) == rm, (w, b)
+        assert int(shift[0]) == rs, (w, b)
+        assert int(bias[0]) == _round_half_away(float(np.float64(sh)) * 2.0 ** BIAS_FRAC)
+        # the invariants rust `LayerRequant::from_parts` enforces on load
+        assert (1 << 30) <= abs(int(mult[0])) < (1 << 31)
+        assert -512 <= int(shift[0]) <= 1024
+
+
+def test_power_of_two_scales_are_exact():
+    for e in (-20, -10, -4, 0, 3):
+        mult, shift, _ = derive_requant(
+            [np.float32(2.0 ** e)], [np.float32(1.0)], [np.float32(0.0)]
+        )
+        assert int(mult[0]) == 1 << 30
+        assert int(shift[0]) == 30 - e
+
+
+def test_zero_scale_is_dead_channel_and_sign_folds():
+    mult, shift, bias = derive_requant(
+        np.array([0.0, 0.5, 0.5], np.float32),
+        np.array([1.0, -1.0, 1.0], np.float32),
+        np.array([0.25, 0.0, -0.25], np.float32),
+    )
+    assert int(mult[0]) == 0 and int(shift[0]) == 0
+    assert int(mult[1]) < 0 and int(mult[2]) > 0
+    assert int(bias[0]) == 1 << (BIAS_FRAC - 2)
+    assert int(bias[2]) == -(1 << (BIAS_FRAC - 2))
+    assert REQUANT_VERSION == 1
+
+
+def test_dtypes_match_dft_layout():
+    mult, shift, bias = derive_requant(
+        np.array([0.01], np.float32), np.array([1.0], np.float32), np.array([0.5], np.float32)
+    )
+    assert mult.dtype == np.int32
+    assert shift.dtype == np.int32
+    assert bias.dtype == np.int64
+
+
+def test_rejects_non_finite():
+    with pytest.raises(ValueError):
+        derive_requant([np.float32("nan")], [np.float32(1.0)], [np.float32(0.0)])
+    with pytest.raises(ValueError):
+        derive_requant([np.float32(1.0)], [np.float32(1.0)], [np.float32("inf")])

@@ -18,7 +18,7 @@ use dfp_infer::dfp::{packing, round_half_even};
 use dfp_infer::json::Json;
 use dfp_infer::kernels::{
     gemm_packed_i4, gemm_packed_ternary, KernelKind, KernelRegistry, LayerRequant, PackedI4Matrix,
-    PackedLayer, PackedTernaryMatrix, ThreadPool,
+    PackedLayer, PackedTernaryMatrix, SimdTier, ThreadPool, TierChoice,
 };
 use dfp_infer::lpinfer::{gemm_i8, gemm_i8_dense};
 use dfp_infer::model::{resnet101, resnet_mini_default};
@@ -172,13 +172,111 @@ fn main() {
         .unwrap_or(0.0);
     println!("fused integer epilogue vs unfused f32: {fused_speedup:.2}x");
 
+    println!("\n== E5.7: SIMD tier vs scalar (runtime dispatch) ==");
+    let tier = SimdTier::detect();
+    // dispatch smoke: the detected tier must be available and bit-exact vs
+    // scalar before any timing happens (CI greps the OK line)
+    {
+        assert!(tier.available(), "detected tier must be available");
+        let reg_simd = KernelRegistry::with_tier(None, TierChoice::Auto, 1);
+        assert_eq!(reg_simd.tier(), tier, "auto policy must pick the detected tier");
+        let reg_scalar = KernelRegistry::with_tier(None, TierChoice::Forced(SimdTier::Scalar), 1);
+        let a = rand_i8(&[5, 37], &mut rng);
+        let wt = rand_ternary(&[37, 21], &mut rng);
+        let pl = PackedLayer::build(&wt, &[], 0);
+        assert_eq!(
+            reg_simd.gemm(&a, &wt, &pl).data(),
+            reg_scalar.gemm(&a, &wt, &pl).data(),
+            "simd tier must be bit-exact vs scalar"
+        );
+        println!("simd dispatch OK (tier {tier})");
+    }
+    let mut simd_rows = Vec::new();
+    for l in &mini.layers {
+        if !["stem", "s1b0c2", "s2b0c2"].contains(&l.name.as_str()) {
+            continue;
+        }
+        let (lm, lk, lf) = (l.out_hw * l.out_hw, l.kh * l.kw * l.cin, l.cout);
+        let lmacs = (lm * lk * lf) as f64;
+        let a_dense = rand_i8(&[lm, lk], &mut rng);
+        let a_sp = relu_like(&a_dense);
+        let wt = rand_ternary(&[lk, lf], &mut rng);
+        let wi = rand_i8(&[lk, lf], &mut rng);
+        let pl_tern = PackedLayer::build(&wt, &[], 0);
+        let pl_none = PackedLayer::none();
+        let ws: Vec<f32> = (0..lf).map(|i| 0.0015 * (1 + i % 4) as f32).collect();
+        let bs: Vec<f32> = (0..lf).map(|i| 1.0 + 0.01 * (i % 8) as f32).collect();
+        let bh: Vec<f32> = (0..lf).map(|i| 0.1 * (i % 5) as f32 - 0.2).collect();
+        let lepi = LayerRequant::derive(&ws, &bs, &bh).unwrap().resolve(-4, -4, true);
+        let scalar_i8 =
+            KernelRegistry::with_tier(Some(KernelKind::I8ZeroSkip), TierChoice::Forced(SimdTier::Scalar), 1);
+        let simd_i8 = KernelRegistry::with_tier(Some(KernelKind::I8ZeroSkip), TierChoice::Auto, 1);
+        let scalar_t =
+            KernelRegistry::with_tier(Some(KernelKind::PackedTernary), TierChoice::Forced(SimdTier::Scalar), 1);
+        let simd_t = KernelRegistry::with_tier(Some(KernelKind::PackedTernary), TierChoice::Auto, 1);
+        let n_i8s = format!("{} i8 gemm scalar ({lm}x{lk}x{lf})", l.name);
+        let n_i8v = format!("{} i8 gemm {tier} ({lm}x{lk}x{lf})", l.name);
+        b.bench(&n_i8s, lmacs, || scalar_i8.gemm(&a_dense, &wi, &pl_none));
+        b.bench(&n_i8v, lmacs, || simd_i8.gemm(&a_dense, &wi, &pl_none));
+        let i8_speedup = b.ratio(&n_i8s, &n_i8v).unwrap_or(0.0);
+        let n_ts = format!("{} ternary scalar ({lm}x{lk}x{lf})", l.name);
+        let n_tv = format!("{} ternary {tier} ({lm}x{lk}x{lf})", l.name);
+        b.bench(&n_ts, lmacs, || scalar_t.gemm(&a_sp, &wt, &pl_tern));
+        b.bench(&n_tv, lmacs, || simd_t.gemm(&a_sp, &wt, &pl_tern));
+        let tern_speedup = b.ratio(&n_ts, &n_tv).unwrap_or(0.0);
+        let n_fs = format!("{} fused-epilogue scalar ({lm}x{lk}x{lf})", l.name);
+        let n_fv = format!("{} fused-epilogue {tier} ({lm}x{lk}x{lf})", l.name);
+        b.bench(&n_fs, lmacs, || scalar_t.gemm_fused(&a_sp, &pl_tern, || wt.clone(), &lepi, None));
+        b.bench(&n_fv, lmacs, || simd_t.gemm_fused(&a_sp, &pl_tern, || wt.clone(), &lepi, None));
+        let fused_simd_speedup = b.ratio(&n_fs, &n_fv).unwrap_or(0.0);
+        println!(
+            "  {:<8} {tier} vs scalar: i8 gemm {i8_speedup:.2}x, ternary {tern_speedup:.2}x, \
+             fused epilogue {fused_simd_speedup:.2}x",
+            l.name
+        );
+        simd_rows.push(Json::obj(vec![
+            ("layer", Json::str(l.name.clone())),
+            ("m", Json::num(lm as f64)),
+            ("k", Json::num(lk as f64)),
+            ("f", Json::num(lf as f64)),
+            ("simd_i8_gemm_speedup", Json::num(i8_speedup)),
+            ("simd_ternary_speedup", Json::num(tern_speedup)),
+            ("simd_fused_epilogue_speedup", Json::num(fused_simd_speedup)),
+        ]));
+    }
+    // epilogue in isolation: the per-channel mult/shift/round-half-even
+    // rescale of a full accumulator tensor, scalar vs vector
+    let epi_speedup = {
+        let (rows, fch) = (1024usize, 64usize);
+        let acc: Vec<i32> = (0..rows * fch).map(|_| rng.next_u64() as i32 >> 8).collect();
+        let ws: Vec<f32> = (0..fch).map(|i| 0.0015 * (1 + i % 4) as f32).collect();
+        let ones = vec![1.0f32; fch];
+        let tenth = vec![0.1f32; fch];
+        let epi = LayerRequant::derive(&ws, &ones, &tenth).unwrap().resolve(-4, -4, true);
+        let elems = (rows * fch) as f64;
+        let mut out = vec![0i8; rows * fch];
+        b.bench("requant epilogue apply scalar", elems, || {
+            epi.apply_i8_with(SimdTier::Scalar, &acc, 0, rows, fch, None, &mut out);
+            out[0]
+        });
+        let name_v = format!("requant epilogue apply {tier}");
+        b.bench(&name_v, elems, || {
+            epi.apply_i8_with(tier, &acc, 0, rows, fch, None, &mut out);
+            out[0]
+        });
+        b.ratio("requant epilogue apply scalar", &name_v).unwrap_or(0.0)
+    };
+    println!("epilogue apply {tier} vs scalar: {epi_speedup:.2}x");
 
     let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     let extras = vec![
         ("bench", Json::str("bench_kernels")),
         ("packed_thread_scaling_4t", Json::num(thread_scaling)),
         ("fused_epilogue_speedup_vs_f32", Json::num(fused_speedup)),
+        ("simd_tier", Json::str(tier.to_string())),
+        ("simd_epilogue_apply_speedup", Json::num(epi_speedup)),
         ("resnet_mini_layers", Json::Arr(layer_rows)),
+        ("simd_vs_scalar_layers", Json::Arr(simd_rows)),
     ];
     match b.write_json(std::path::Path::new(&out), extras) {
         Ok(()) => println!("\nwrote {out}"),

@@ -31,7 +31,10 @@ pub struct Config {
     pub noise: f32,
     /// GEMM threads per executor (kernels/ thread pool; 0 = all cores)
     pub threads: usize,
-    /// kernel selection for the registry (`--kernel auto|i8|i8-dense|ternary|i4`)
+    /// kernel selection for the registry
+    /// (`--kernel auto|i8|i8-dense|ternary|i4`, optionally suffixed with a
+    /// SIMD tier: `+scalar|+simd|+avx2|+neon`, e.g. `ternary+scalar`;
+    /// the default tier is the best the CPU supports)
     pub kernel: KernelChoice,
     /// precision scheme to serve/eval/quantize (`--scheme 8a2w_n4@stem=i8`);
     /// `None` means "all exported variants"
@@ -49,7 +52,7 @@ impl Default for Config {
             seed: 0,
             noise: crate::data::DEFAULT_NOISE,
             threads: 1,
-            kernel: KernelChoice::Auto,
+            kernel: KernelChoice::auto(),
             scheme: None,
         }
     }
@@ -160,7 +163,7 @@ mod tests {
         let c = Config::default();
         assert_eq!(c.workers, 1);
         assert_eq!(c.max_wait_us, 2_000);
-        assert_eq!(c.kernel, KernelChoice::Auto);
+        assert_eq!(c.kernel, KernelChoice::auto());
         assert!(c.scheme.is_none());
     }
 
@@ -201,7 +204,7 @@ mod tests {
         )
         .unwrap();
         let c = Config::resolve(&a).unwrap();
-        assert_eq!(c.kernel, KernelChoice::Forced(crate::kernels::KernelKind::PackedTernary));
+        assert_eq!(c.kernel, KernelChoice::forced(crate::kernels::KernelKind::PackedTernary));
         assert_eq!(c.threads, 4);
         let reg = c.kernel_registry();
         assert_eq!(reg.choice(), Some(crate::kernels::KernelKind::PackedTernary));
@@ -211,6 +214,27 @@ mod tests {
         let d = Config::default();
         assert!(d.kernel_registry().choice().is_none());
         assert_eq!(d.kernel_registry().pool().threads(), 1);
+    }
+
+    #[test]
+    fn test_kernel_tier_suffix_resolution() {
+        use crate::kernels::{SimdTier, TierChoice};
+        let a = Args::parse_from(
+            ["--kernel", "ternary+scalar", "--threads", "2"].iter().map(|s| s.to_string()),
+            false,
+        )
+        .unwrap();
+        let c = Config::resolve(&a).unwrap();
+        assert_eq!(c.kernel.enc, Some(crate::kernels::KernelKind::PackedTernary));
+        assert_eq!(c.kernel.tier, TierChoice::Forced(SimdTier::Scalar));
+        assert_eq!(c.kernel_registry().tier(), SimdTier::Scalar);
+
+        // bad tier names fail at resolve time, like bad kernel names
+        let bad =
+            Args::parse_from(["--kernel", "auto+sse9"].iter().map(|s| s.to_string()), false)
+                .unwrap();
+        let err = Config::resolve(&bad).unwrap_err().to_string();
+        assert!(err.contains("auto|scalar|simd|avx2|neon"), "{err}");
     }
 
     #[test]
@@ -231,7 +255,7 @@ mod tests {
         .unwrap();
         let c = Config::resolve(&a).unwrap();
         assert_eq!(c.scheme.as_ref().unwrap().to_string(), "8a2w_n4@stem=i8");
-        assert_eq!(c.kernel, KernelChoice::Forced(crate::kernels::KernelKind::PackedI4));
+        assert_eq!(c.kernel, KernelChoice::forced(crate::kernels::KernelKind::PackedI4));
 
         // CLI wins over the file
         let a = Args::parse_from(

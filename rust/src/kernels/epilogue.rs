@@ -19,6 +19,8 @@ use anyhow::{bail, ensure, Result};
 
 use crate::dfp::requant::{fx_rescale, Requantizer, BIAS_FRAC, SKIP_FRAC};
 
+use super::simd::SimdTier;
+
 /// Per-output-channel integer requantization parameters of one layer,
 /// derived once from the f32 scales (or loaded from a versioned export —
 /// see [`crate::dfp::REQUANT_VERSION`]).
@@ -121,19 +123,110 @@ impl LayerRequant {
             // same 2^-shift_eff fixed-point grid
             bias.push(fx_rescale(self.bias_fx[c], BIAS_FRAC + act_target - s_eff));
         }
-        ResolvedEpilogue { mult, shift, bias, relu }
+        let simd = SimdLanes::build(&mult, &shift, &bias);
+        ResolvedEpilogue { mult, shift, bias, relu, simd }
+    }
+}
+
+/// Per-channel constants the vector epilogue consumes, precomputed at
+/// [`LayerRequant::resolve`] time (and therefore cached for the whole model
+/// life once `lpinfer` builds its epilogue cache at load).
+///
+/// Built only when every channel satisfies the SIMD preconditions under
+/// which the lane-wise round-half-even is provably bit-exact with plain
+/// (non-widening, non-saturating) i64 lane arithmetic:
+/// `1 <= shift[c] <= 62` and `|bias[c]| < 2^60`. With those bounds
+/// `|acc·mult| < 2^62` and every intermediate stays below `2^63`, so the
+/// wrapping lane ops equal the scalar i128-widened path exactly (see
+/// DESIGN.md §kernels). Epilogues outside the envelope simply keep
+/// `simd = None` and always run scalar — results never change.
+#[derive(Debug, Clone)]
+pub(crate) struct SimdLanes {
+    /// `mult` narrowed to i32 (always exact: `|mult| < 2^31`)
+    pub(crate) mult32: Vec<i32>,
+    /// the final rescale shift per channel, widened for 64-bit lanes
+    pub(crate) shift64: Vec<i64>,
+    /// `1 << (shift-1)` — the round-half-even tie threshold
+    pub(crate) half: Vec<i64>,
+    /// skip-lane alignment, left-shift amount: `max(0, shift - SKIP_FRAC)`
+    pub(crate) skip_shl: Vec<i64>,
+    /// skip-lane alignment, right-shift amount: `max(0, SKIP_FRAC - shift)`
+    pub(crate) skip_shr: Vec<i64>,
+    /// tie threshold of the skip right-shift (`0` for left-shift lanes)
+    pub(crate) skip_half: Vec<i64>,
+    /// all-ones where the skip alignment right-shifts (shift < SKIP_FRAC)
+    pub(crate) skip_rhe_mask: Vec<i64>,
+    /// largest `|skip|` the vector path may consume: beyond it the
+    /// left-shift alignment could overflow i64 where the scalar path
+    /// saturates, so such blocks fall back to scalar
+    pub(crate) skip_abs_limit: i64,
+    /// `shift - SKIP_FRAC` per channel (the [`ResolvedEpilogue::apply_skip`]
+    /// rescale); only valid when `skip_out_ok`
+    pub(crate) out_shift64: Vec<i64>,
+    /// tie threshold of the `apply_skip` rescale
+    pub(crate) out_half: Vec<i64>,
+    /// true when `apply_skip` may vectorize (`17 <= shift[c] <= 62` for
+    /// every channel, so `shift - SKIP_FRAC` is a plain right shift)
+    pub(crate) skip_out_ok: bool,
+}
+
+impl SimdLanes {
+    fn build(mult: &[i64], shift: &[i32], bias: &[i64]) -> Option<Self> {
+        const BIAS_LIMIT: i64 = 1 << 60;
+        let ok = shift.iter().all(|&s| (1..=62).contains(&s))
+            && bias.iter().all(|&b| b > -BIAS_LIMIT && b < BIAS_LIMIT);
+        if !ok {
+            return None;
+        }
+        let n = shift.len();
+        let mut lanes = SimdLanes {
+            mult32: mult.iter().map(|&m| m as i32).collect(),
+            shift64: Vec::with_capacity(n),
+            half: Vec::with_capacity(n),
+            skip_shl: Vec::with_capacity(n),
+            skip_shr: Vec::with_capacity(n),
+            skip_half: Vec::with_capacity(n),
+            skip_rhe_mask: Vec::with_capacity(n),
+            skip_abs_limit: 0,
+            out_shift64: Vec::with_capacity(n),
+            out_half: Vec::with_capacity(n),
+            skip_out_ok: shift.iter().all(|&s| s >= SKIP_FRAC + 1),
+        };
+        let mut max_shl = 0i64;
+        for &s in shift {
+            let s = i64::from(s);
+            lanes.shift64.push(s);
+            lanes.half.push(1i64 << (s - 1));
+            let shl = (s - i64::from(SKIP_FRAC)).max(0);
+            let shr = (i64::from(SKIP_FRAC) - s).max(0);
+            max_shl = max_shl.max(shl);
+            lanes.skip_shl.push(shl);
+            lanes.skip_shr.push(shr);
+            lanes.skip_half.push(if shr > 0 { 1i64 << (shr - 1) } else { 0 });
+            lanes.skip_rhe_mask.push(if shr > 0 { -1 } else { 0 });
+            if lanes.skip_out_ok {
+                lanes.out_shift64.push(s - i64::from(SKIP_FRAC));
+                lanes.out_half.push(1i64 << (s - i64::from(SKIP_FRAC) - 1));
+            }
+        }
+        // shl <= 46 (shift <= 62), so the exponent stays in [14, 60]
+        lanes.skip_abs_limit = 1i64 << (60 - max_shl);
+        Some(lanes)
     }
 }
 
 /// A [`LayerRequant`] with the runtime exponents folded in — the plain-data
 /// epilogue the GEMM kernels apply to their accumulator blocks while the
-/// tile is still cache-hot.
+/// tile is still cache-hot. Carries precomputed `SimdLanes` whenever the
+/// channel constants satisfy the vector-epilogue preconditions, so the SIMD
+/// tier can engage without any per-forward derivation.
 #[derive(Debug, Clone)]
 pub struct ResolvedEpilogue {
-    mult: Vec<i64>,
-    shift: Vec<i32>,
-    bias: Vec<i64>,
-    relu: bool,
+    pub(crate) mult: Vec<i64>,
+    pub(crate) shift: Vec<i32>,
+    pub(crate) bias: Vec<i64>,
+    pub(crate) relu: bool,
+    pub(crate) simd: Option<SimdLanes>,
 }
 
 impl ResolvedEpilogue {
@@ -163,10 +256,27 @@ impl ResolvedEpilogue {
         debug_assert_eq!(self.len(), f);
         debug_assert_eq!(acc.len(), rows * f);
         debug_assert_eq!(out.len(), rows * f);
+        self.apply_i8_range(acc, row0, rows, f, 0, f, skip, out);
+    }
+
+    /// [`Self::apply_i8`] restricted to channels `c0..c1` (the scalar core;
+    /// the SIMD tiers reuse it for the vector-width tail).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn apply_i8_range(
+        &self,
+        acc: &[i32],
+        row0: usize,
+        rows: usize,
+        f: usize,
+        c0: usize,
+        c1: usize,
+        skip: Option<&[i64]>,
+        out: &mut [i8],
+    ) {
         for r in 0..rows {
             let arow = &acc[r * f..(r + 1) * f];
             let orow = &mut out[r * f..(r + 1) * f];
-            for c in 0..f {
+            for c in c0..c1 {
                 let mut u = i64::from(arow[c]) * self.mult[c];
                 u = u.saturating_add(self.bias[c]);
                 if let Some(sk) = skip {
@@ -182,6 +292,55 @@ impl ResolvedEpilogue {
         }
     }
 
+    /// Tier-dispatched [`Self::apply_i8`]: runs the vector epilogue when the
+    /// tier has one, the channel constants are inside the SIMD envelope
+    /// (`SimdLanes`) and — when a skip lane is present — every skip value
+    /// in the block is below the overflow-safety limit; otherwise falls
+    /// back to the scalar path. Bit-identical either way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_i8_with(
+        &self,
+        tier: SimdTier,
+        acc: &[i32],
+        row0: usize,
+        rows: usize,
+        f: usize,
+        skip: Option<&[i64]>,
+        out: &mut [i8],
+    ) {
+        debug_assert_eq!(self.len(), f);
+        debug_assert_eq!(acc.len(), rows * f);
+        debug_assert_eq!(out.len(), rows * f);
+        if tier != SimdTier::Scalar {
+            if let Some(lanes) = &self.simd {
+                let skip_ok = match skip {
+                    None => true,
+                    Some(sk) => {
+                        let lim = lanes.skip_abs_limit;
+                        sk[row0 * f..(row0 + rows) * f].iter().all(|&s| s > -lim && s < lim)
+                    }
+                };
+                if skip_ok {
+                    match tier {
+                        #[cfg(target_arch = "x86_64")]
+                        // SAFETY: tier == Avx2 implies AVX2 was detected.
+                        SimdTier::Avx2 => unsafe {
+                            super::simd::avx2::apply_i8(self, lanes, acc, row0, rows, f, skip, out)
+                        },
+                        #[cfg(target_arch = "aarch64")]
+                        // SAFETY: NEON is baseline on aarch64.
+                        SimdTier::Neon => unsafe {
+                            super::simd::neon::apply_i8(self, lanes, acc, row0, rows, f, skip, out)
+                        },
+                        _ => self.apply_i8_range(acc, row0, rows, f, 0, f, skip, out),
+                    }
+                    return;
+                }
+            }
+        }
+        self.apply_i8_range(acc, row0, rows, f, 0, f, skip, out);
+    }
+
     /// Requantize an accumulator block onto the integer residual lane
     /// (units of `2^-SKIP_FRAC` target-grid steps) instead of i8 codes —
     /// the projection-conv path, which the f32 pipeline kept as a full
@@ -190,10 +349,23 @@ impl ResolvedEpilogue {
         debug_assert_eq!(self.len(), f);
         debug_assert_eq!(acc.len(), rows * f);
         debug_assert_eq!(out.len(), rows * f);
+        self.apply_skip_range(acc, rows, f, 0, f, out);
+    }
+
+    /// [`Self::apply_skip`] restricted to channels `c0..c1`.
+    pub(crate) fn apply_skip_range(
+        &self,
+        acc: &[i32],
+        rows: usize,
+        f: usize,
+        c0: usize,
+        c1: usize,
+        out: &mut [i64],
+    ) {
         for r in 0..rows {
             let arow = &acc[r * f..(r + 1) * f];
             let orow = &mut out[r * f..(r + 1) * f];
-            for c in 0..f {
+            for c in c0..c1 {
                 let mut u = i64::from(arow[c]) * self.mult[c];
                 u = u.saturating_add(self.bias[c]);
                 let mut q = fx_rescale(u, self.shift[c] - SKIP_FRAC);
@@ -203,6 +375,36 @@ impl ResolvedEpilogue {
                 orow[c] = q;
             }
         }
+    }
+
+    /// Tier-dispatched [`Self::apply_skip`] (see [`Self::apply_i8_with`];
+    /// additionally requires `shift - SKIP_FRAC` to be a plain right shift
+    /// on every channel, i.e. `SimdLanes::skip_out_ok`).
+    pub fn apply_skip_with(&self, tier: SimdTier, acc: &[i32], rows: usize, f: usize, out: &mut [i64]) {
+        debug_assert_eq!(self.len(), f);
+        debug_assert_eq!(acc.len(), rows * f);
+        debug_assert_eq!(out.len(), rows * f);
+        if tier != SimdTier::Scalar {
+            if let Some(lanes) = &self.simd {
+                if lanes.skip_out_ok {
+                    match tier {
+                        #[cfg(target_arch = "x86_64")]
+                        // SAFETY: tier == Avx2 implies AVX2 was detected.
+                        SimdTier::Avx2 => unsafe {
+                            super::simd::avx2::apply_skip(self, lanes, acc, rows, f, out)
+                        },
+                        #[cfg(target_arch = "aarch64")]
+                        // SAFETY: NEON is baseline on aarch64.
+                        SimdTier::Neon => unsafe {
+                            super::simd::neon::apply_skip(self, lanes, acc, rows, f, out)
+                        },
+                        _ => self.apply_skip_range(acc, rows, f, 0, f, out),
+                    }
+                    return;
+                }
+            }
+        }
+        self.apply_skip_range(acc, rows, f, 0, f, out);
     }
 }
 
@@ -339,6 +541,72 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn test_simd_epilogue_bit_exact_vs_scalar() {
+        use crate::kernels::simd::SimdTier;
+        let tier = SimdTier::detect();
+        let mut rng = SplitMix64::new(123);
+        for trial in 0..300 {
+            // f deliberately sweeps non-multiples of every vector width
+            let f = 1 + rng.next_below(70) as usize;
+            let rows = 1 + rng.next_below(7) as usize;
+            let row0 = rng.next_below(3) as usize;
+            let m = row0 + rows;
+            let w_scale: Vec<f32> =
+                (0..f).map(|_| 2f32.powi(-6 - rng.next_below(7) as i32) * 1.3).collect();
+            let bn_scale: Vec<f32> =
+                (0..f).map(|_| (rng.next_below(300) as f32 - 150.0) / 100.0).collect();
+            let bn_shift: Vec<f32> =
+                (0..f).map(|_| (rng.next_below(160) as f32 - 80.0) / 10.0).collect();
+            let relu = rng.next_below(2) == 1;
+            let lr = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift).unwrap();
+            let epi = lr.resolve(-(rng.next_below(6) as i32), -(rng.next_below(6) as i32), relu);
+            let acc: Vec<i32> = (0..rows * f).map(|_| rng.next_u64() as i32 >> 8).collect();
+            let skip: Vec<i64> =
+                (0..m * f).map(|_| rng.next_below(1 << 24) as i64 - (1 << 23)).collect();
+            for sk in [None, Some(&skip[..])] {
+                let mut want = vec![0i8; rows * f];
+                epi.apply_i8(&acc, row0, rows, f, sk, &mut want);
+                let mut got = vec![0i8; rows * f];
+                epi.apply_i8_with(tier, &acc, row0, rows, f, sk, &mut got);
+                assert_eq!(got, want, "trial {trial} f={f} skip={}", sk.is_some());
+            }
+            let mut want = vec![0i64; rows * f];
+            epi.apply_skip(&acc, rows, f, &mut want);
+            let mut got = vec![0i64; rows * f];
+            epi.apply_skip_with(tier, &acc, rows, f, &mut got);
+            assert_eq!(got, want, "trial {trial} f={f} apply_skip");
+        }
+    }
+
+    #[test]
+    fn test_simd_envelope_gating_falls_back_scalar() {
+        use crate::kernels::simd::SimdTier;
+        // a huge scale pushes shift_eff out of [1, 62]: the resolve must
+        // disable the vector path and the tiered entry point must still
+        // match the scalar one exactly
+        let lr = LayerRequant::derive(&[1.0e9, 0.5], &[1.0, 1.0], &[0.0, 0.25]).unwrap();
+        let epi = lr.resolve(0, -20, false);
+        assert!(epi.simd.is_none(), "out-of-envelope shift must disable SIMD lanes");
+        let acc = vec![3i32, -5, 100, -100];
+        let mut want = vec![0i8; 4];
+        epi.apply_i8(&acc, 0, 2, 2, None, &mut want);
+        let mut got = vec![0i8; 4];
+        epi.apply_i8_with(SimdTier::detect(), &acc, 0, 2, 2, None, &mut got);
+        assert_eq!(got, want);
+
+        // oversized skip values trip the per-block limit check
+        let lr = LayerRequant::derive(&[0.01, 0.02], &[1.0, 1.0], &[0.0, 0.0]).unwrap();
+        let epi = lr.resolve(-4, -4, true);
+        assert!(epi.simd.is_some());
+        let huge = vec![i64::MAX / 2; 4];
+        let mut want = vec![0i8; 4];
+        epi.apply_i8(&acc, 0, 2, 2, Some(&huge), &mut want);
+        let mut got = vec![0i8; 4];
+        epi.apply_i8_with(SimdTier::detect(), &acc, 0, 2, 2, Some(&huge), &mut got);
+        assert_eq!(got, want);
     }
 
     #[test]

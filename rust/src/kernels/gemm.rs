@@ -15,41 +15,46 @@ use super::threadpool::ThreadPool;
 /// a block this size already amortizes spawn cost ~100x.
 pub(crate) const MIN_ROWS_PER_BLOCK: usize = 16;
 
+/// Denominator of the zero-skip probe: a row takes the `av == 0` skip
+/// branch only when at least `1/ZERO_PROBE_DEN` of its activations are
+/// zero. The probe costs K compares against the K·F inner-loop work it
+/// steers, so it is ~free, and it removes the dense-operand penalty the
+/// unconditional branch used to carry (~15 % on dense activations).
+pub(crate) const ZERO_PROBE_DEN: usize = 8;
+
+/// Cheap per-row sparsity probe: is this activation row sparse enough for
+/// the zero-skip branch to pay for itself?
+#[inline]
+pub(crate) fn row_worth_skipping(arow: &[i8]) -> bool {
+    let zeros = arow.iter().filter(|&&v| v == 0).count();
+    zeros * ZERO_PROBE_DEN >= arow.len()
+}
+
 /// int8 x int8 -> i32 GEMM: (M,K) x (K,F) -> (M,F).
 ///
 /// PERF (§Perf L3): the `av == 0` skip exploits post-ReLU activation
-/// sparsity (~40-60 % zeros in the real pipeline). For dense operands the
-/// branch costs ~15 %; [`gemm_i8_dense`] below is the branch-free variant —
+/// sparsity (~40-60 % zeros in the real pipeline). A per-row zero-count
+/// probe (`row_worth_skipping`) routes rows below the sparsity threshold
+/// to the branch-free block, so dense operands no longer pay for the
+/// branch; [`gemm_i8_dense`] is the always-branch-free variant —
 /// `rust/benches/bench_kernels.rs` quantifies both, and the packed kernels
-/// below beat either on sub-8-bit weights.
+/// below beat either on sub-8-bit weights. Skipping zero activations adds
+/// exactly nothing to the accumulators, so both variants (and either probe
+/// decision) produce bit-identical results.
 pub fn gemm_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
     let (m, k) = (a.dim(0), a.dim(1));
     let (k2, f) = (b.dim(0), b.dim(1));
     assert_eq!(k, k2);
     let mut out = Tensor::<i32>::zeros(&[m, f]);
-    let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut od[i * f..(i + 1) * f];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let av = i32::from(av);
-            let brow = &bd[kk * f..(kk + 1) * f];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * i32::from(bv);
-            }
-        }
-    }
+    i8_row_block(a.data(), b.data(), k, f, 0, m, out.data_mut(), true);
     out
 }
 
-/// One output-row block of the dense i8 GEMM (shared by the fused-epilogue
-/// dispatch): accumulate rows `row0..row0+rows` of (M,K)x(K,F) into `out`
-/// (rows x F, block-local). `zero_skip` selects the [`gemm_i8`] sparse
-/// branch; both variants produce bit-identical accumulators.
+/// One output-row block of the dense i8 GEMM (shared by the registry and
+/// fused-epilogue dispatch): accumulate rows `row0..row0+rows` of
+/// (M,K)x(K,F) into `out` (rows x F, block-local). `zero_skip` enables the
+/// [`gemm_i8`] sparse branch behind the per-row probe; both variants
+/// produce bit-identical accumulators.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn i8_row_block(
     ad: &[i8],
@@ -64,8 +69,9 @@ pub(crate) fn i8_row_block(
     for r in 0..rows {
         let arow = &ad[(row0 + r) * k..(row0 + r + 1) * k];
         let orow = &mut out[r * f..(r + 1) * f];
+        let skip_zeros = zero_skip && row_worth_skipping(arow);
         for (kk, &av) in arow.iter().enumerate() {
-            if zero_skip && av == 0 {
+            if skip_zeros && av == 0 {
                 continue;
             }
             let av = i32::from(av);
@@ -84,19 +90,7 @@ pub fn gemm_i8_dense(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
     let (k2, f) = (b.dim(0), b.dim(1));
     assert_eq!(k, k2);
     let mut out = Tensor::<i32>::zeros(&[m, f]);
-    let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut od[i * f..(i + 1) * f];
-        for (kk, &av) in arow.iter().enumerate() {
-            let av = i32::from(av);
-            let brow = &bd[kk * f..(kk + 1) * f];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * i32::from(bv);
-            }
-        }
-    }
+    i8_row_block(a.data(), b.data(), k, f, 0, m, out.data_mut(), false);
     out
 }
 
@@ -109,7 +103,7 @@ pub fn gemm_i8_dense(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
 /// iff `-1`. The masks turn the ternary accumulate into the branch- and
 /// multiply-free `acc += (a & pos) - (a & neg)`.
 #[inline]
-fn tern_decode_row(row: &[u8], pos: &mut [i32; PANEL_F], neg: &mut [i32; PANEL_F]) {
+pub(crate) fn tern_decode_row(row: &[u8], pos: &mut [i32; PANEL_F], neg: &mut [i32; PANEL_F]) {
     for (bi, &b) in row.iter().enumerate() {
         let b = b as usize;
         for t in 0..4 {
@@ -305,6 +299,34 @@ mod tests {
             let got = gemm_packed_ternary(&a, &wp, &ThreadPool::new(threads));
             assert_eq!(got.data(), want.data(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn test_zero_probe_routes_rows_and_stays_exact() {
+        // rows above / below the probe threshold must take different paths
+        // (asserted via the probe itself) without changing a single bit
+        let (m, k, f) = (6, 33, 21);
+        let mut a = rand_i8(&[m, k], -127, 127, 31);
+        {
+            let ad = a.data_mut();
+            for j in 0..k {
+                if j % 2 == 0 {
+                    ad[2 * k + j] = 0; // row 2: ~50% zeros -> skip branch
+                }
+                ad[5 * k + j] = 0; // row 5: all zeros
+            }
+            for j in 0..k {
+                if ad[j] == 0 {
+                    ad[j] = 1; // make row 0 fully dense...
+                }
+            }
+            ad[3] = 0; // ...with a single zero: below the threshold
+        }
+        assert!(super::row_worth_skipping(&a.data()[2 * k..3 * k]));
+        assert!(super::row_worth_skipping(&a.data()[5 * k..6 * k]));
+        assert!(!super::row_worth_skipping(&a.data()[..k]));
+        let b = rand_i8(&[k, f], -127, 127, 32);
+        assert_eq!(gemm_i8(&a, &b).data(), gemm_i8_dense(&a, &b).data());
     }
 
     #[test]

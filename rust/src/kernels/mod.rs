@@ -11,8 +11,13 @@
 //!   over (M, K, F) tiles;
 //! * [`threadpool`] — scoped worker pool parallelizing over output-row
 //!   blocks, sized from [`crate::config::Config`];
+//! * [`simd`] — the SIMD execution tier: AVX2 (x86_64) / NEON (aarch64)
+//!   implementations of the ternary accumulate, the dense/sparse i8 inner
+//!   loop and the requant epilogue, behind runtime CPU-feature detection
+//!   with the scalar kernels as the guaranteed fallback;
 //! * [`registry`] — [`KernelRegistry`]: runtime selection among the
-//!   kernels by weight encoding, with a `--kernel` CLI override;
+//!   kernels by weight encoding *and* SIMD tier, with a `--kernel` CLI
+//!   override (`<encoding>[+<tier>]`);
 //! * [`epilogue`] — the fused integer requantization epilogue
 //!   ([`LayerRequant`] / [`ResolvedEpilogue`]): folded batch-norm +
 //!   activation rescale applied to each accumulator tile as fixed-point
@@ -29,10 +34,12 @@ pub mod epilogue;
 pub mod gemm;
 pub mod packed;
 pub mod registry;
+pub mod simd;
 pub mod threadpool;
 
 pub use epilogue::{LayerRequant, ResolvedEpilogue};
 pub use gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
 pub use packed::{PackedI4Matrix, PackedLayer, PackedTernaryMatrix, PANEL_F};
 pub use registry::{KernelChoice, KernelKind, KernelRegistry, ALL_KERNELS};
+pub use simd::{SimdTier, TierChoice};
 pub use threadpool::ThreadPool;

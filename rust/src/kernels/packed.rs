@@ -22,11 +22,17 @@ use anyhow::{bail, Result};
 use crate::dfp::ScaleU8;
 use crate::tensor::Tensor;
 
-/// Filters per column panel. Multiple of 4 (ternary codes per byte) and of
-/// 2 (i4 codes per byte); 32 keeps the per-k decode masks tiny (256 B)
-/// while the GEMM inner lane loop is long enough to vectorize well — one
-/// panel byte-row is a single 8- or 16-byte load.
+/// Filters per column panel. Multiple of 4 (ternary codes per byte), of 2
+/// (i4 codes per byte) and of every SIMD lane count the `simd` tier uses
+/// (8×i32 AVX2, 4×i32 NEON), so a full panel row decomposes into whole
+/// vectors and only the final partial panel takes the scalar tail; 32
+/// keeps the per-k decode masks tiny (256 B) while the GEMM inner lane
+/// loop is long enough to vectorize well — one panel byte-row is a single
+/// 8- or 16-byte load.
 pub const PANEL_F: usize = 32;
+
+// the SIMD tier relies on full panels splitting into whole vectors
+const _: () = assert!(PANEL_F % 8 == 0);
 
 const TERN_BYTES_PER_ROW: usize = PANEL_F / 4;
 const I4_BYTES_PER_ROW: usize = PANEL_F / 2;

@@ -1,35 +1,40 @@
-//! Kernel selection: which GEMM runs a given layer.
+//! Kernel selection: which GEMM implementation runs a given layer.
 //!
-//! Dispatch rules (see DESIGN.md §kernels):
-//! * an explicit choice (`--kernel`, `Config.kernel`) wins whenever the
-//!   layer has the encoding it needs; a layer that can't satisfy it (e.g.
-//!   an 8-bit stem under `--kernel ternary`) falls back to the auto rule so
-//!   a forced run never aborts mid-network;
-//! * auto prefers the cheapest encoding the layer supports:
-//!   packed-ternary > packed-i4 > dense i8 zero-skip.
+//! Two orthogonal axes (see DESIGN.md §kernels):
+//! * **encoding** — which weight format executes (packed-ternary,
+//!   packed-i4, dense i8): an explicit choice (`--kernel`, `Config.kernel`)
+//!   wins whenever the layer has the encoding it needs; a layer that can't
+//!   satisfy it (e.g. an 8-bit stem under `--kernel ternary`) falls back to
+//!   the auto rule so a forced run never aborts. Auto prefers the cheapest
+//!   encoding the layer supports: packed-ternary > packed-i4 > dense i8
+//!   zero-skip.
+//! * **SIMD tier** — which instruction set executes the inner loops
+//!   ([`SimdTier`]): the `+<tier>` suffix of `--kernel` forces one, the
+//!   default picks the best the CPU supports at runtime
+//!   (`is_x86_feature_detected!`), and an unavailable force falls back to
+//!   the scalar kernels.
 //!
-//! Every kernel yields bit-identical `i32` accumulators, so selection is a
-//! pure performance decision — `forward_quant` logits are invariant under
-//! any choice (property-tested in `rust/tests/kernels_equivalence.rs`).
+//! Every kernel yields bit-identical `i32` accumulators and epilogue
+//! outputs, so selection on *both* axes is a pure performance decision —
+//! `forward_quant` logits are invariant under any choice (property-tested
+//! in `rust/tests/kernels_equivalence.rs`).
 
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
 use super::epilogue::ResolvedEpilogue;
-use super::gemm::{
-    gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary, i4_row_block, i8_row_block,
-    tern_row_block, MIN_ROWS_PER_BLOCK,
-};
+use super::gemm::{i4_row_block, MIN_ROWS_PER_BLOCK};
 use super::packed::PackedLayer;
+use super::simd::{self, SimdTier, TierChoice};
 use super::threadpool::ThreadPool;
 
 /// The GEMM implementations the registry can dispatch to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelKind {
-    /// dense i8 x i8 with the activation zero-skip branch
+    /// dense i8 x i8 with the probed activation zero-skip branch
     I8ZeroSkip,
-    /// dense i8 x i8, branch-free (LLVM-vectorized inner loop)
+    /// dense i8 x i8, branch-free
     I8Dense,
     /// multiply-free 2-bit packed ternary engine
     PackedTernary,
@@ -61,40 +66,55 @@ impl std::str::FromStr for KernelKind {
             "i8-dense" | "dense" => KernelKind::I8Dense,
             "ternary" | "packed-ternary" => KernelKind::PackedTernary,
             "i4" | "packed-i4" => KernelKind::PackedI4,
-            other => bail!("unknown kernel '{other}' (try auto|i8|i8-dense|ternary|i4)"),
+            other => bail!(
+                "unknown kernel '{other}' (try auto|i8|i8-dense|ternary|i4, \
+                 optionally suffixed +scalar|+simd|+avx2|+neon)"
+            ),
         })
     }
 }
 
-/// A resolved `--kernel` / `Config.kernel` setting: automatic per-layer
-/// dispatch or one forced kernel. Parsing happens once, at config-resolve
-/// time, so a typo'd kernel name fails fast with the valid names instead of
-/// surviving as an arbitrary string until dispatch.
+/// A resolved `--kernel` / `Config.kernel` setting: an encoding choice
+/// (automatic per-layer dispatch or one forced kernel) plus a SIMD tier
+/// request, written `<encoding>[+<tier>]` (`ternary`, `auto+scalar`,
+/// `i8+avx2`, …). Parsing happens once, at config-resolve time, so a
+/// typo'd name fails fast with the valid alternatives instead of surviving
+/// as an arbitrary string until dispatch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum KernelChoice {
-    /// per-layer auto rule (cheapest encoding the layer supports)
-    #[default]
-    Auto,
-    /// force one kernel wherever its encoding exists (auto elsewhere)
-    Forced(KernelKind),
+pub struct KernelChoice {
+    /// forced GEMM encoding; `None` is the per-layer auto rule
+    pub enc: Option<KernelKind>,
+    /// SIMD tier request (default: best detected)
+    pub tier: TierChoice,
 }
 
 impl KernelChoice {
-    /// The forced kind, if any.
+    /// The per-layer auto rule at the best detected tier (the default).
+    pub const fn auto() -> Self {
+        Self { enc: None, tier: TierChoice::Auto }
+    }
+
+    /// Force one encoding wherever it exists (auto elsewhere), best tier.
+    pub const fn forced(kind: KernelKind) -> Self {
+        Self { enc: Some(kind), tier: TierChoice::Auto }
+    }
+
+    /// The forced encoding, if any.
     pub fn kind(self) -> Option<KernelKind> {
-        match self {
-            KernelChoice::Auto => None,
-            KernelChoice::Forced(k) => Some(k),
-        }
+        self.enc
     }
 }
 
 impl std::fmt::Display for KernelChoice {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            KernelChoice::Auto => f.write_str("auto"),
-            KernelChoice::Forced(k) => write!(f, "{k}"),
+        match self.enc {
+            None => f.write_str("auto")?,
+            Some(k) => write!(f, "{k}")?,
         }
+        if let TierChoice::Forced(t) = self.tier {
+            write!(f, "+{t}")?;
+        }
+        Ok(())
     }
 }
 
@@ -102,18 +122,29 @@ impl std::str::FromStr for KernelChoice {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Self> {
-        Ok(match s {
-            "" | "auto" => KernelChoice::Auto,
-            other => KernelChoice::Forced(other.parse()?),
-        })
+        let (enc_s, tier_s) = match s.split_once('+') {
+            Some((e, t)) => (e, Some(t)),
+            None => (s, None),
+        };
+        let enc = match enc_s {
+            "" | "auto" => None,
+            other => Some(other.parse()?),
+        };
+        let tier = match tier_s {
+            None => TierChoice::Auto,
+            Some(t) => t.parse()?,
+        };
+        Ok(Self { enc, tier })
     }
 }
 
-/// Runtime kernel dispatcher: an optional forced choice plus the thread
-/// pool the packed kernels parallelize on.
+/// Runtime kernel dispatcher: an optional forced encoding, the SIMD tier
+/// the inner loops run at (resolved once against the CPU at construction),
+/// and the thread pool the kernels parallelize on.
 #[derive(Debug, Clone)]
 pub struct KernelRegistry {
     choice: Option<KernelKind>,
+    tier: SimdTier,
     pool: ThreadPool,
 }
 
@@ -124,8 +155,16 @@ impl Default for KernelRegistry {
 }
 
 impl KernelRegistry {
+    /// Encoding choice + threads at the best detected SIMD tier.
     pub fn new(choice: Option<KernelKind>, threads: usize) -> Self {
-        Self { choice, pool: ThreadPool::new(threads) }
+        Self::with_tier(choice, TierChoice::Auto, threads)
+    }
+
+    /// Full construction: encoding choice, SIMD tier request, pool width.
+    /// The tier resolves immediately — a forced-but-unavailable tier
+    /// becomes [`SimdTier::Scalar`], so dispatch never re-probes the CPU.
+    pub fn with_tier(choice: Option<KernelKind>, tier: TierChoice, threads: usize) -> Self {
+        Self { choice, tier: tier.resolve(), pool: ThreadPool::new(threads) }
     }
 
     /// Auto selection, single-threaded (the library default — callers that
@@ -136,7 +175,7 @@ impl KernelRegistry {
 
     /// Build from a typed [`KernelChoice`] (the `Config.kernel` field).
     pub fn with_choice(choice: KernelChoice, threads: usize) -> Self {
-        Self::new(choice.kind(), threads)
+        Self::with_tier(choice.enc, choice.tier, threads)
     }
 
     /// Parse a CLI/config kernel name; `"auto"` (or empty) means no force.
@@ -146,6 +185,11 @@ impl KernelRegistry {
 
     pub fn choice(&self) -> Option<KernelKind> {
         self.choice
+    }
+
+    /// The SIMD tier the inner loops run at (already CPU-resolved).
+    pub fn tier(&self) -> SimdTier {
+        self.tier
     }
 
     pub fn pool(&self) -> &ThreadPool {
@@ -187,14 +231,33 @@ impl KernelRegistry {
         packed: &PackedLayer,
         dense: impl FnOnce() -> Tensor<i8>,
     ) -> Tensor<i32> {
+        let (m, k) = (a.dim(0), a.dim(1));
+        let ad = a.data();
+        let tier = self.tier;
         match self.select(packed) {
-            KernelKind::I8ZeroSkip => gemm_i8(a, &dense()),
-            KernelKind::I8Dense => gemm_i8_dense(a, &dense()),
             KernelKind::PackedTernary => {
-                gemm_packed_ternary(a, packed.ternary.as_ref().expect("selected"), &self.pool)
+                let w = packed.ternary.as_ref().expect("selected");
+                assert_eq!(k, w.k, "gemm: A is (.., {k}) but W is ({}, ..)", w.k);
+                unfused_i32(m, w.f, &self.pool, |row0, rows, acc| {
+                    simd::tern_row_block(tier, ad, k, row0, rows, w, acc);
+                })
             }
             KernelKind::PackedI4 => {
-                gemm_packed_i4(a, packed.i4.as_ref().expect("selected"), &self.pool)
+                let w = packed.i4.as_ref().expect("selected");
+                assert_eq!(k, w.k, "gemm: A is (.., {k}) but W is ({}, ..)", w.k);
+                unfused_i32(m, w.f, &self.pool, |row0, rows, acc| {
+                    i4_row_block(ad, k, row0, rows, w, acc);
+                })
+            }
+            kind @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense) => {
+                let b = dense();
+                assert_eq!(k, b.dim(0), "gemm: A is (.., {k}) but W is ({}, ..)", b.dim(0));
+                let f = b.dim(1);
+                let bd = b.data();
+                let zero_skip = kind == KernelKind::I8ZeroSkip;
+                unfused_i32(m, f, &self.pool, |row0, rows, acc| {
+                    simd::i8_row_block(tier, ad, bd, k, f, row0, rows, acc, zero_skip);
+                })
             }
         }
     }
@@ -216,18 +279,19 @@ impl KernelRegistry {
     ) -> Tensor<i8> {
         let (m, k) = (a.dim(0), a.dim(1));
         let ad = a.data();
+        let tier = self.tier;
         match self.select(packed) {
             KernelKind::PackedTernary => {
                 let w = packed.ternary.as_ref().expect("selected");
                 assert_eq!(k, w.k, "gemm_fused: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_i8(m, w.f, &self.pool, epi, skip, |row0, rows, acc| {
-                    tern_row_block(ad, k, row0, rows, w, acc);
+                fused_i8(m, w.f, &self.pool, tier, epi, skip, |row0, rows, acc| {
+                    simd::tern_row_block(tier, ad, k, row0, rows, w, acc);
                 })
             }
             KernelKind::PackedI4 => {
                 let w = packed.i4.as_ref().expect("selected");
                 assert_eq!(k, w.k, "gemm_fused: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_i8(m, w.f, &self.pool, epi, skip, |row0, rows, acc| {
+                fused_i8(m, w.f, &self.pool, tier, epi, skip, |row0, rows, acc| {
                     i4_row_block(ad, k, row0, rows, w, acc);
                 })
             }
@@ -237,8 +301,8 @@ impl KernelRegistry {
                 let f = b.dim(1);
                 let bd = b.data();
                 let zero_skip = kind == KernelKind::I8ZeroSkip;
-                fused_i8(m, f, &self.pool, epi, skip, |row0, rows, acc| {
-                    i8_row_block(ad, bd, k, f, row0, rows, acc, zero_skip);
+                fused_i8(m, f, &self.pool, tier, epi, skip, |row0, rows, acc| {
+                    simd::i8_row_block(tier, ad, bd, k, f, row0, rows, acc, zero_skip);
                 })
             }
         }
@@ -256,18 +320,19 @@ impl KernelRegistry {
     ) -> Tensor<i64> {
         let (m, k) = (a.dim(0), a.dim(1));
         let ad = a.data();
+        let tier = self.tier;
         match self.select(packed) {
             KernelKind::PackedTernary => {
                 let w = packed.ternary.as_ref().expect("selected");
                 assert_eq!(k, w.k, "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_skip(m, w.f, &self.pool, epi, |row0, rows, acc| {
-                    tern_row_block(ad, k, row0, rows, w, acc);
+                fused_skip(m, w.f, &self.pool, tier, epi, |row0, rows, acc| {
+                    simd::tern_row_block(tier, ad, k, row0, rows, w, acc);
                 })
             }
             KernelKind::PackedI4 => {
                 let w = packed.i4.as_ref().expect("selected");
                 assert_eq!(k, w.k, "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_skip(m, w.f, &self.pool, epi, |row0, rows, acc| {
+                fused_skip(m, w.f, &self.pool, tier, epi, |row0, rows, acc| {
                     i4_row_block(ad, k, row0, rows, w, acc);
                 })
             }
@@ -282,12 +347,28 @@ impl KernelRegistry {
                 let f = b.dim(1);
                 let bd = b.data();
                 let zero_skip = kind == KernelKind::I8ZeroSkip;
-                fused_skip(m, f, &self.pool, epi, |row0, rows, acc| {
-                    i8_row_block(ad, bd, k, f, row0, rows, acc, zero_skip);
+                fused_skip(m, f, &self.pool, tier, epi, |row0, rows, acc| {
+                    simd::i8_row_block(tier, ad, bd, k, f, row0, rows, acc, zero_skip);
                 })
             }
         }
     }
+}
+
+/// Run `compute` over output-row blocks into a full (M, F) i32 tensor (the
+/// unfused entry points; the FC layer and reference paths need the raw
+/// accumulators).
+fn unfused_i32(
+    m: usize,
+    f: usize,
+    pool: &ThreadPool,
+    compute: impl Fn(usize, usize, &mut [i32]) + Sync,
+) -> Tensor<i32> {
+    let mut out = Tensor::<i32>::zeros(&[m, f]);
+    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
+        compute(row0, rows, block);
+    });
+    out
 }
 
 /// Run `compute` over output-row blocks with a block-local i32 accumulator
@@ -296,6 +377,7 @@ fn fused_i8(
     m: usize,
     f: usize,
     pool: &ThreadPool,
+    tier: SimdTier,
     epi: &ResolvedEpilogue,
     skip: Option<&[i64]>,
     compute: impl Fn(usize, usize, &mut [i32]) + Sync,
@@ -308,7 +390,7 @@ fn fused_i8(
     pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
         let mut acc = vec![0i32; rows * f];
         compute(row0, rows, &mut acc);
-        epi.apply_i8(&acc, row0, rows, f, skip, block);
+        epi.apply_i8_with(tier, &acc, row0, rows, f, skip, block);
     });
     out
 }
@@ -318,6 +400,7 @@ fn fused_skip(
     m: usize,
     f: usize,
     pool: &ThreadPool,
+    tier: SimdTier,
     epi: &ResolvedEpilogue,
     compute: impl Fn(usize, usize, &mut [i32]) + Sync,
 ) -> Tensor<i64> {
@@ -326,7 +409,7 @@ fn fused_skip(
     pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
         let mut acc = vec![0i32; rows * f];
         compute(row0, rows, &mut acc);
-        epi.apply_skip(&acc, rows, f, block);
+        epi.apply_skip_with(tier, &acc, rows, f, block);
     });
     out
 }
@@ -344,6 +427,12 @@ mod tests {
         (wd, packed)
     }
 
+    /// Tier settings every test machine can exercise: forced scalar plus
+    /// whatever the CPU actually supports.
+    fn test_tiers() -> Vec<TierChoice> {
+        vec![TierChoice::Forced(SimdTier::Scalar), TierChoice::Auto]
+    }
+
     #[test]
     fn test_parse_and_display() {
         for k in ALL_KERNELS {
@@ -353,22 +442,40 @@ mod tests {
         assert!("warp".parse::<KernelKind>().is_err());
         assert!(KernelRegistry::parse("auto", 1).unwrap().choice().is_none());
         assert!(KernelRegistry::parse("warp", 1).is_err());
+        // tier suffixes parse end to end through the registry
+        let reg = KernelRegistry::parse("ternary+scalar", 2).unwrap();
+        assert_eq!(reg.choice(), Some(KernelKind::PackedTernary));
+        assert_eq!(reg.tier(), SimdTier::Scalar);
+        assert!(KernelRegistry::parse("ternary+warp", 1).is_err());
     }
 
     #[test]
     fn test_kernel_choice_parse_display_roundtrip() {
-        assert_eq!("auto".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
-        assert_eq!("".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
-        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
-        assert_eq!(KernelChoice::Auto.kind(), None);
+        assert_eq!("auto".parse::<KernelChoice>().unwrap(), KernelChoice::auto());
+        assert_eq!("".parse::<KernelChoice>().unwrap(), KernelChoice::auto());
+        assert_eq!(KernelChoice::default(), KernelChoice::auto());
+        assert_eq!(KernelChoice::auto().kind(), None);
         for k in ALL_KERNELS {
             let c: KernelChoice = k.to_string().parse().unwrap();
-            assert_eq!(c, KernelChoice::Forced(k));
+            assert_eq!(c, KernelChoice::forced(k));
             assert_eq!(c.kind(), Some(k));
             assert_eq!(c.to_string().parse::<KernelChoice>().unwrap(), c);
+            // with a tier suffix
+            for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon] {
+                let s = format!("{k}+{t}");
+                let c: KernelChoice = s.parse().unwrap();
+                assert_eq!(c.enc, Some(k));
+                assert_eq!(c.tier, TierChoice::Forced(t));
+                assert_eq!(c.to_string(), s);
+            }
         }
+        assert_eq!(
+            "auto+simd".parse::<KernelChoice>().unwrap(),
+            KernelChoice { enc: None, tier: TierChoice::Auto }
+        );
         let err = "warp".parse::<KernelChoice>().unwrap_err().to_string();
         assert!(err.contains("auto|i8|i8-dense|ternary|i4"), "{err}");
+        assert!("i8+sse9".parse::<KernelChoice>().is_err());
     }
 
     #[test]
@@ -391,6 +498,30 @@ mod tests {
         // forcing ternary on a layer with no ternary encoding falls back
         let reg = KernelRegistry::new(Some(KernelKind::PackedTernary), 1);
         assert_eq!(reg.select(&PackedLayer::none()), KernelKind::I8ZeroSkip);
+    }
+
+    #[test]
+    fn test_registry_tier_resolution() {
+        // auto resolves to the detected tier; an unavailable force resolves
+        // to scalar, and the registry keeps serving correct results
+        assert_eq!(KernelRegistry::auto().tier(), SimdTier::detect());
+        for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon] {
+            let reg = KernelRegistry::with_tier(None, TierChoice::Forced(t), 1);
+            if t.available() {
+                assert_eq!(reg.tier(), t);
+            } else {
+                assert_eq!(reg.tier(), SimdTier::Scalar);
+            }
+            let (wd, packed) = tern_layer(9, 13, 5);
+            let a = Tensor::new(&[3, 9], vec![1i8; 27]).unwrap();
+            let want = KernelRegistry::with_tier(
+                Some(KernelKind::I8Dense),
+                TierChoice::Forced(SimdTier::Scalar),
+                1,
+            )
+            .gemm(&a, &wd, &packed);
+            assert_eq!(reg.gemm(&a, &wd, &packed).data(), want.data(), "tier {t}");
+        }
     }
 
     #[test]
@@ -418,22 +549,28 @@ mod tests {
         let mut want_skip = vec![0i64; m * f];
         epi.apply_skip(acc.data(), m, f, &mut want_skip);
         for kind in ALL_KERNELS {
-            for threads in [1usize, 3] {
-                let reg = KernelRegistry::new(Some(kind), threads);
-                let got = reg.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip));
-                assert_eq!(got.data(), &want[..], "fused i8, kernel {kind} threads {threads}");
-                let got_skip = reg.gemm_fused_skip(&a, &packed, || wd.clone(), &epi);
-                assert_eq!(
-                    got_skip.data(),
-                    &want_skip[..],
-                    "fused skip, kernel {kind} threads {threads}"
-                );
+            for tier in test_tiers() {
+                for threads in [1usize, 3] {
+                    let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                    let got = reg.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip));
+                    assert_eq!(
+                        got.data(),
+                        &want[..],
+                        "fused i8, kernel {kind} tier {tier} threads {threads}"
+                    );
+                    let got_skip = reg.gemm_fused_skip(&a, &packed, || wd.clone(), &epi);
+                    assert_eq!(
+                        got_skip.data(),
+                        &want_skip[..],
+                        "fused skip, kernel {kind} tier {tier} threads {threads}"
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn test_dispatch_is_bit_exact_across_kernels() {
+    fn test_dispatch_is_bit_exact_across_kernels_and_tiers() {
         let (k, f, m) = (27, 18, 5);
         let (wd, packed) = tern_layer(k, f, 3);
         let mut rng = SplitMix64::new(4);
@@ -444,8 +581,14 @@ mod tests {
         .unwrap();
         let want = KernelRegistry::new(Some(KernelKind::I8Dense), 1).gemm(&a, &wd, &packed);
         for kind in ALL_KERNELS {
-            let reg = KernelRegistry::new(Some(kind), 2);
-            assert_eq!(reg.gemm(&a, &wd, &packed).data(), want.data(), "kernel {kind}");
+            for tier in test_tiers() {
+                let reg = KernelRegistry::with_tier(Some(kind), tier, 2);
+                assert_eq!(
+                    reg.gemm(&a, &wd, &packed).data(),
+                    want.data(),
+                    "kernel {kind} tier {tier}"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,259 @@
+//! AVX2 (x86_64) implementations of the three hot loops.
+//!
+//! Every function here is bit-exact vs its scalar twin in
+//! [`crate::kernels::gemm`] / [`crate::kernels::epilogue`]:
+//! * the GEMM loops are pure i32 accumulation (exact, order-insensitive);
+//! * the epilogue reproduces round-half-even on 64-bit lanes — arithmetic
+//!   shift is emulated with the sign-bias trick
+//!   (`asr(x,n) = ((x ^ MIN) >>> n) - (MIN >>> n)`), the remainder/half
+//!   comparison decides the increment, and ties break to even via the
+//!   floor's low bit. The caller ([`ResolvedEpilogue::apply_i8_with`])
+//!   guarantees the [`SimdLanes`] preconditions, under which wrapping i64
+//!   lane arithmetic equals the scalar i128-widened path exactly.
+//!
+//! All functions carry `#[target_feature(enable = "avx2")]` and must only
+//! be called after runtime detection (`SimdTier::Avx2` from
+//! [`super::SimdTier::detect`]).
+//!
+//! Tail handling: lane loops cover the largest multiple of the vector
+//! width; remaining columns run the scalar code, so no shape constraint is
+//! imposed on K or F.
+
+use core::arch::x86_64::*;
+
+use super::super::epilogue::{ResolvedEpilogue, SimdLanes};
+use super::super::gemm::{row_worth_skipping, tern_decode_row};
+use super::super::packed::{PackedTernaryMatrix, PANEL_F};
+
+/// Ternary row-block accumulate: mask-select `±a` over the decoded 2-bit
+/// panel, eight i32 lanes at a time (`acc += (a & pos) - (a & neg)`).
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the caller).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn tern_row_block(
+    ad: &[i8],
+    k: usize,
+    row0: usize,
+    rows: usize,
+    w: &PackedTernaryMatrix,
+    out: &mut [i32],
+) {
+    const BPR: usize = PANEL_F / 4;
+    let f = w.f;
+    let mut pos = [0i32; PANEL_F];
+    let mut neg = [0i32; PANEL_F];
+    for p in 0..w.n_panels() {
+        let panel = w.panel(p);
+        let f0 = p * PANEL_F;
+        let fw = PANEL_F.min(f - f0);
+        let vecs = fw / 8;
+        for kk in 0..k {
+            tern_decode_row(&panel[kk * BPR..kk * BPR + BPR], &mut pos, &mut neg);
+            for r in 0..rows {
+                let av = i32::from(ad[(row0 + r) * k + kk]);
+                if av == 0 {
+                    continue;
+                }
+                let avv = _mm256_set1_epi32(av);
+                let orow = &mut out[r * f + f0..r * f + f0 + fw];
+                for v in 0..vecs {
+                    let op = orow.as_mut_ptr().add(v * 8);
+                    let pv = _mm256_loadu_si256(pos.as_ptr().add(v * 8) as *const __m256i);
+                    let nv = _mm256_loadu_si256(neg.as_ptr().add(v * 8) as *const __m256i);
+                    let contrib =
+                        _mm256_sub_epi32(_mm256_and_si256(avv, pv), _mm256_and_si256(avv, nv));
+                    let o = _mm256_loadu_si256(op as *const __m256i);
+                    _mm256_storeu_si256(op as *mut __m256i, _mm256_add_epi32(o, contrib));
+                }
+                for j in vecs * 8..fw {
+                    orow[j] += (av & pos[j]) - (av & neg[j]);
+                }
+            }
+        }
+    }
+}
+
+/// Dense/sparse i8 row block: widening multiply-accumulate, eight lanes at
+/// a time (`cvtepi8_epi32` + `mullo_epi32` + `add_epi32`). Shares the
+/// per-row zero-count probe with the scalar kernel; skipping a zero
+/// activation contributes nothing, so probe decisions cannot change the
+/// accumulators.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the caller).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn i8_row_block(
+    ad: &[i8],
+    bd: &[i8],
+    k: usize,
+    f: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+    zero_skip: bool,
+) {
+    let vecs = f / 8;
+    for r in 0..rows {
+        let arow = &ad[(row0 + r) * k..(row0 + r + 1) * k];
+        let orow = &mut out[r * f..(r + 1) * f];
+        let skip_zeros = zero_skip && row_worth_skipping(arow);
+        for (kk, &av8) in arow.iter().enumerate() {
+            if skip_zeros && av8 == 0 {
+                continue;
+            }
+            let av = i32::from(av8);
+            let avv = _mm256_set1_epi32(av);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for v in 0..vecs {
+                let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                    brow.as_ptr().add(v * 8) as *const __m128i
+                ));
+                let op = orow.as_mut_ptr().add(v * 8);
+                let o = _mm256_loadu_si256(op as *const __m256i);
+                _mm256_storeu_si256(
+                    op as *mut __m256i,
+                    _mm256_add_epi32(o, _mm256_mullo_epi32(avv, wv)),
+                );
+            }
+            for j in vecs * 8..f {
+                orow[j] += av * i32::from(brow[j]);
+            }
+        }
+    }
+}
+
+/// Lane-wise round-half-even rescale `x · 2^-n` for `n` in `[1, 62]`
+/// (per-lane counts). Matches `dfp::fx_rescale` exactly for inputs that
+/// cannot saturate (the [`SimdLanes`] preconditions).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rhe(x: __m256i, n: __m256i, half: __m256i, one: __m256i, sign: __m256i) -> __m256i {
+    // arithmetic shift right emulated via the sign-bias trick
+    let floor = _mm256_sub_epi64(
+        _mm256_srlv_epi64(_mm256_xor_si256(x, sign), n),
+        _mm256_srlv_epi64(sign, n),
+    );
+    let rem = _mm256_sub_epi64(x, _mm256_sllv_epi64(floor, n));
+    let gt = _mm256_cmpgt_epi64(rem, half);
+    let eq = _mm256_cmpeq_epi64(rem, half);
+    let odd = _mm256_and_si256(floor, one);
+    let inc = _mm256_add_epi64(_mm256_and_si256(gt, one), _mm256_and_si256(eq, odd));
+    _mm256_add_epi64(floor, inc)
+}
+
+/// Vector requant epilogue to i8 codes: per-channel multiplier broadcast
+/// (exact `i32 × i32 → i64` via `mul_epi32`), bias and rescaled skip-lane
+/// add, lane-wise round-half-even, ReLU, saturating narrow — four channels
+/// per iteration, scalar tail via [`ResolvedEpilogue::apply_i8_range`].
+///
+/// # Safety
+/// Requires AVX2, `epi.simd` preconditions, and — when `skip` is present —
+/// every block skip value within `lanes.skip_abs_limit` (checked by the
+/// dispatching caller).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn apply_i8(
+    epi: &ResolvedEpilogue,
+    lanes: &SimdLanes,
+    acc: &[i32],
+    row0: usize,
+    rows: usize,
+    f: usize,
+    skip: Option<&[i64]>,
+    out: &mut [i8],
+) {
+    let chunks = f / 4;
+    let one = _mm256_set1_epi64x(1);
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let zero = _mm256_setzero_si256();
+    let hi = _mm256_set1_epi64x(127);
+    let lo = _mm256_set1_epi64x(-127);
+    for ci in 0..chunks {
+        let c = ci * 4;
+        let multv = _mm256_loadu_si256(epi.mult.as_ptr().add(c) as *const __m256i);
+        let biasv = _mm256_loadu_si256(epi.bias.as_ptr().add(c) as *const __m256i);
+        let shiftv = _mm256_loadu_si256(lanes.shift64.as_ptr().add(c) as *const __m256i);
+        let halfv = _mm256_loadu_si256(lanes.half.as_ptr().add(c) as *const __m256i);
+        let (shlv, shrv, shalfv, rhemask) = if skip.is_some() {
+            (
+                _mm256_loadu_si256(lanes.skip_shl.as_ptr().add(c) as *const __m256i),
+                _mm256_loadu_si256(lanes.skip_shr.as_ptr().add(c) as *const __m256i),
+                _mm256_loadu_si256(lanes.skip_half.as_ptr().add(c) as *const __m256i),
+                _mm256_loadu_si256(lanes.skip_rhe_mask.as_ptr().add(c) as *const __m256i),
+            )
+        } else {
+            (zero, zero, zero, zero)
+        };
+        for r in 0..rows {
+            let ap = acc.as_ptr().add(r * f + c) as *const __m128i;
+            let a4 = _mm256_cvtepi32_epi64(_mm_loadu_si128(ap));
+            // low 32 bits of each lane hold acc / mult exactly (|mult| < 2^31)
+            let mut u = _mm256_add_epi64(_mm256_mul_epi32(a4, multv), biasv);
+            if let Some(sk) = skip {
+                let s4 =
+                    _mm256_loadu_si256(sk.as_ptr().add((row0 + r) * f + c) as *const __m256i);
+                let left = _mm256_sllv_epi64(s4, shlv);
+                let right = rhe(s4, shrv, shalfv, one, sign);
+                u = _mm256_add_epi64(u, _mm256_blendv_epi8(left, right, rhemask));
+            }
+            let mut q = rhe(u, shiftv, halfv, one, sign);
+            if epi.relu {
+                q = _mm256_and_si256(q, _mm256_cmpgt_epi64(q, zero));
+            }
+            q = _mm256_blendv_epi8(q, hi, _mm256_cmpgt_epi64(q, hi));
+            q = _mm256_blendv_epi8(q, lo, _mm256_cmpgt_epi64(lo, q));
+            let mut tmp = [0i64; 4];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, q);
+            let o = r * f + c;
+            out[o] = tmp[0] as i8;
+            out[o + 1] = tmp[1] as i8;
+            out[o + 2] = tmp[2] as i8;
+            out[o + 3] = tmp[3] as i8;
+        }
+    }
+    if chunks * 4 < f {
+        epi.apply_i8_range(acc, row0, rows, f, chunks * 4, f, skip, out);
+    }
+}
+
+/// Vector epilogue onto the i64 residual lane (`rhe(u, shift - SKIP_FRAC)`,
+/// optional ReLU, no narrowing).
+///
+/// # Safety
+/// Requires AVX2 and `lanes.skip_out_ok` (checked by the caller).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn apply_skip(
+    epi: &ResolvedEpilogue,
+    lanes: &SimdLanes,
+    acc: &[i32],
+    rows: usize,
+    f: usize,
+    out: &mut [i64],
+) {
+    let chunks = f / 4;
+    let one = _mm256_set1_epi64x(1);
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let zero = _mm256_setzero_si256();
+    for ci in 0..chunks {
+        let c = ci * 4;
+        let multv = _mm256_loadu_si256(epi.mult.as_ptr().add(c) as *const __m256i);
+        let biasv = _mm256_loadu_si256(epi.bias.as_ptr().add(c) as *const __m256i);
+        let shiftv = _mm256_loadu_si256(lanes.out_shift64.as_ptr().add(c) as *const __m256i);
+        let halfv = _mm256_loadu_si256(lanes.out_half.as_ptr().add(c) as *const __m256i);
+        for r in 0..rows {
+            let ap = acc.as_ptr().add(r * f + c) as *const __m128i;
+            let a4 = _mm256_cvtepi32_epi64(_mm_loadu_si128(ap));
+            let u = _mm256_add_epi64(_mm256_mul_epi32(a4, multv), biasv);
+            let mut q = rhe(u, shiftv, halfv, one, sign);
+            if epi.relu {
+                q = _mm256_and_si256(q, _mm256_cmpgt_epi64(q, zero));
+            }
+            _mm256_storeu_si256(out.as_mut_ptr().add(r * f + c) as *mut __m256i, q);
+        }
+    }
+    if chunks * 4 < f {
+        epi.apply_skip_range(acc, rows, f, chunks * 4, f, out);
+    }
+}

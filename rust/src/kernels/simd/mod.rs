@@ -1,0 +1,262 @@
+//! SIMD execution tier: runtime CPU-feature detection and dispatch for the
+//! three hot loops of the engine — the ternary row-block accumulate, the
+//! dense/sparse i8 GEMM inner loop, and the per-channel requant epilogue.
+//!
+//! Tiers:
+//! * [`SimdTier::Avx2`] — x86_64 AVX2 intrinsics (`avx2.rs`), selected
+//!   when `is_x86_feature_detected!("avx2")` reports support;
+//! * [`SimdTier::Neon`] — aarch64 NEON intrinsics (`neon.rs`), always
+//!   available on that architecture;
+//! * [`SimdTier::Scalar`] — the portable kernels in [`super::gemm`] /
+//!   [`super::epilogue`], the guaranteed-available fallback.
+//!
+//! Every SIMD kernel is **bit-exact** vs its scalar twin: the GEMM loops
+//! are pure integer accumulation (exact and order-insensitive), and the
+//! epilogue reproduces round-half-even lane-wise (see
+//! `DESIGN.md §kernels` for the argument and the preconditions under which
+//! the vector epilogue engages — outside them it falls back to scalar, so
+//! results never change). `--kernel` accepts an optional `+<tier>` suffix
+//! (`ternary+scalar`, `auto+avx2`, …); the default [`TierChoice::Auto`]
+//! picks the best detected tier. Forcing a tier the CPU does not support
+//! falls back to scalar, mirroring the encoding-force fallback rule, so a
+//! forced run never aborts.
+
+use anyhow::{bail, Result};
+
+use super::gemm;
+use super::packed::PackedTernaryMatrix;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+/// A SIMD instruction tier the kernels can dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    /// portable scalar kernels (always available)
+    Scalar,
+    /// x86_64 AVX2 (256-bit integer vectors)
+    Avx2,
+    /// aarch64 NEON (128-bit integer vectors)
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_detected() -> bool {
+    false
+}
+
+impl SimdTier {
+    /// The best tier the running CPU supports.
+    pub fn detect() -> Self {
+        if cfg!(target_arch = "aarch64") {
+            SimdTier::Neon
+        } else if avx2_detected() {
+            SimdTier::Avx2
+        } else {
+            SimdTier::Scalar
+        }
+    }
+
+    /// True when this tier can execute on the running CPU.
+    pub fn available(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            SimdTier::Avx2 => avx2_detected(),
+            SimdTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+impl std::fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        })
+    }
+}
+
+impl std::str::FromStr for SimdTier {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "scalar" => SimdTier::Scalar,
+            "avx2" => SimdTier::Avx2,
+            "neon" => SimdTier::Neon,
+            other => bail!("unknown simd tier '{other}' (try auto|scalar|simd|avx2|neon)"),
+        })
+    }
+}
+
+/// The `+<tier>` part of a `--kernel` setting: pick the best detected tier
+/// automatically, or force one (`simd` is an alias for auto — it exists so
+/// `--kernel auto+simd` reads naturally).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TierChoice {
+    /// best tier the CPU supports (the default)
+    #[default]
+    Auto,
+    /// force one tier; an unavailable force falls back to scalar
+    Forced(SimdTier),
+}
+
+impl TierChoice {
+    /// Resolve to the tier that will actually run on this CPU.
+    pub fn resolve(self) -> SimdTier {
+        match self {
+            TierChoice::Auto => SimdTier::detect(),
+            TierChoice::Forced(t) if t.available() => t,
+            TierChoice::Forced(_) => SimdTier::Scalar,
+        }
+    }
+}
+
+impl std::fmt::Display for TierChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TierChoice::Auto => f.write_str("auto"),
+            TierChoice::Forced(t) => write!(f, "{t}"),
+        }
+    }
+}
+
+impl std::str::FromStr for TierChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "" | "auto" | "simd" => TierChoice::Auto,
+            other => TierChoice::Forced(other.parse()?),
+        })
+    }
+}
+
+/// Ternary row-block accumulate at the given tier.
+///
+/// `tier` must be available on this CPU (guaranteed for tiers produced by
+/// [`TierChoice::resolve`] / [`SimdTier::detect`]).
+pub(crate) fn tern_row_block(
+    tier: SimdTier,
+    ad: &[i8],
+    k: usize,
+    row0: usize,
+    rows: usize,
+    w: &PackedTernaryMatrix,
+    out: &mut [i32],
+) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier == Avx2 implies AVX2 was detected at registry build.
+        SimdTier::Avx2 => unsafe { avx2::tern_row_block(ad, k, row0, rows, w, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::tern_row_block(ad, k, row0, rows, w, out) },
+        _ => gemm::tern_row_block(ad, k, row0, rows, w, out),
+    }
+}
+
+/// Dense/sparse i8 row block at the given tier (see
+/// [`gemm::i8_row_block`] for the zero-skip probe semantics; the SIMD
+/// variants share it, and all variants produce bit-identical accumulators).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn i8_row_block(
+    tier: SimdTier,
+    ad: &[i8],
+    bd: &[i8],
+    k: usize,
+    f: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+    zero_skip: bool,
+) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier == Avx2 implies AVX2 was detected at registry build.
+        SimdTier::Avx2 => unsafe { avx2::i8_row_block(ad, bd, k, f, row0, rows, out, zero_skip) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdTier::Neon => unsafe { neon::i8_row_block(ad, bd, k, f, row0, rows, out, zero_skip) },
+        _ => gemm::i8_row_block(ad, bd, k, f, row0, rows, out, zero_skip),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn rand_i8(n: usize, lo: i64, hi: i64, rng: &mut SplitMix64) -> Vec<i8> {
+        (0..n).map(|_| (rng.next_below((hi - lo + 1) as u64) as i64 + lo) as i8).collect()
+    }
+
+    #[test]
+    fn test_detect_is_available() {
+        let t = SimdTier::detect();
+        assert!(t.available(), "detected tier {t} must be available");
+        assert!(SimdTier::Scalar.available());
+    }
+
+    #[test]
+    fn test_tier_parse_display_roundtrip() {
+        for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Neon] {
+            assert_eq!(t.to_string().parse::<SimdTier>().unwrap(), t);
+            let c = TierChoice::Forced(t);
+            assert_eq!(c.to_string().parse::<TierChoice>().unwrap(), c);
+        }
+        assert_eq!("auto".parse::<TierChoice>().unwrap(), TierChoice::Auto);
+        assert_eq!("simd".parse::<TierChoice>().unwrap(), TierChoice::Auto);
+        assert!("sse9".parse::<TierChoice>().is_err());
+    }
+
+    #[test]
+    fn test_unavailable_force_falls_back_to_scalar() {
+        // at most one of avx2/neon can be available on a given arch, so the
+        // other must resolve to the scalar fallback
+        for t in [SimdTier::Avx2, SimdTier::Neon] {
+            let resolved = TierChoice::Forced(t).resolve();
+            if t.available() {
+                assert_eq!(resolved, t);
+            } else {
+                assert_eq!(resolved, SimdTier::Scalar);
+            }
+        }
+        assert_eq!(TierChoice::Forced(SimdTier::Scalar).resolve(), SimdTier::Scalar);
+        assert_eq!(TierChoice::Auto.resolve(), SimdTier::detect());
+    }
+
+    #[test]
+    fn test_simd_row_blocks_bit_exact_vs_scalar_awkward_shapes() {
+        let tier = SimdTier::detect();
+        let mut rng = SplitMix64::new(99);
+        // K and F deliberately not multiples of any vector width
+        for (m, k, f) in [(1, 1, 1), (3, 7, 5), (4, 13, 31), (5, 9, 33), (2, 27, 65), (7, 31, 37)] {
+            let ad = rand_i8(m * k, -127, 127, &mut rng);
+            let wt = rand_i8(k * f, -1, 1, &mut rng);
+            let wi = rand_i8(k * f, -127, 127, &mut rng);
+            let wp = PackedTernaryMatrix::from_codes(&wt, k, f).unwrap();
+            let mut want = vec![0i32; m * f];
+            tern_row_block(SimdTier::Scalar, &ad, k, 0, m, &wp, &mut want);
+            let mut got = vec![0i32; m * f];
+            tern_row_block(tier, &ad, k, 0, m, &wp, &mut got);
+            assert_eq!(got, want, "ternary m={m} k={k} f={f} tier={tier}");
+
+            for zero_skip in [false, true] {
+                let mut want = vec![0i32; m * f];
+                gemm::i8_row_block(&ad, &wi, k, f, 0, m, &mut want, zero_skip);
+                let mut got = vec![0i32; m * f];
+                i8_row_block(tier, &ad, &wi, k, f, 0, m, &mut got, zero_skip);
+                assert_eq!(got, want, "i8 m={m} k={k} f={f} skip={zero_skip} tier={tier}");
+            }
+        }
+    }
+}

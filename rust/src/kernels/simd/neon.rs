@@ -1,0 +1,226 @@
+//! NEON (aarch64) implementations of the three hot loops — the 128-bit
+//! twins of `avx2.rs`, bit-exact vs the scalar kernels under the same
+//! [`SimdLanes`] preconditions. NEON's `vshlq_s64` takes signed per-lane
+//! shift counts (negative counts shift right arithmetically, truncating),
+//! which replaces the sign-bias trick the AVX2 path needs.
+//!
+//! All functions carry `#[target_feature(enable = "neon")]`; NEON is
+//! baseline on aarch64, so dispatch never needs a runtime probe there.
+
+use core::arch::aarch64::*;
+
+use super::super::epilogue::{ResolvedEpilogue, SimdLanes};
+use super::super::gemm::{row_worth_skipping, tern_decode_row};
+use super::super::packed::{PackedTernaryMatrix, PANEL_F};
+
+/// Ternary row-block accumulate, four i32 lanes at a time.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn tern_row_block(
+    ad: &[i8],
+    k: usize,
+    row0: usize,
+    rows: usize,
+    w: &PackedTernaryMatrix,
+    out: &mut [i32],
+) {
+    const BPR: usize = PANEL_F / 4;
+    let f = w.f;
+    let mut pos = [0i32; PANEL_F];
+    let mut neg = [0i32; PANEL_F];
+    for p in 0..w.n_panels() {
+        let panel = w.panel(p);
+        let f0 = p * PANEL_F;
+        let fw = PANEL_F.min(f - f0);
+        let vecs = fw / 4;
+        for kk in 0..k {
+            tern_decode_row(&panel[kk * BPR..kk * BPR + BPR], &mut pos, &mut neg);
+            for r in 0..rows {
+                let av = i32::from(ad[(row0 + r) * k + kk]);
+                if av == 0 {
+                    continue;
+                }
+                let avv = vdupq_n_s32(av);
+                let orow = &mut out[r * f + f0..r * f + f0 + fw];
+                for v in 0..vecs {
+                    let op = orow.as_mut_ptr().add(v * 4);
+                    let pv = vld1q_s32(pos.as_ptr().add(v * 4));
+                    let nv = vld1q_s32(neg.as_ptr().add(v * 4));
+                    let contrib = vsubq_s32(vandq_s32(avv, pv), vandq_s32(avv, nv));
+                    vst1q_s32(op, vaddq_s32(vld1q_s32(op), contrib));
+                }
+                for j in vecs * 4..fw {
+                    orow[j] += (av & pos[j]) - (av & neg[j]);
+                }
+            }
+        }
+    }
+}
+
+/// Dense/sparse i8 row block: widening multiply-accumulate via
+/// `vmovl_s8` + `vmlal_s16`, eight weights per iteration.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn i8_row_block(
+    ad: &[i8],
+    bd: &[i8],
+    k: usize,
+    f: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+    zero_skip: bool,
+) {
+    let vecs = f / 8;
+    for r in 0..rows {
+        let arow = &ad[(row0 + r) * k..(row0 + r + 1) * k];
+        let orow = &mut out[r * f..(r + 1) * f];
+        let skip_zeros = zero_skip && row_worth_skipping(arow);
+        for (kk, &av8) in arow.iter().enumerate() {
+            if skip_zeros && av8 == 0 {
+                continue;
+            }
+            let av = i32::from(av8);
+            let av4 = vdup_n_s16(av as i16);
+            let brow = &bd[kk * f..(kk + 1) * f];
+            for v in 0..vecs {
+                let w16 = vmovl_s8(vld1_s8(brow.as_ptr().add(v * 8)));
+                let op = orow.as_mut_ptr().add(v * 8);
+                let lo = vmlal_s16(vld1q_s32(op), vget_low_s16(w16), av4);
+                vst1q_s32(op, lo);
+                let op_hi = op.add(4);
+                let hi = vmlal_s16(vld1q_s32(op_hi), vget_high_s16(w16), av4);
+                vst1q_s32(op_hi, hi);
+            }
+            for j in vecs * 8..f {
+                orow[j] += av * i32::from(brow[j]);
+            }
+        }
+    }
+}
+
+/// Lane-wise round-half-even rescale `x · 2^-n` for per-lane `n` in
+/// `[1, 62]`; `nneg` must hold `-n`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn rhe(x: int64x2_t, n: int64x2_t, nneg: int64x2_t, half: int64x2_t, one: int64x2_t) -> int64x2_t {
+    let floor = vshlq_s64(x, nneg);
+    let rem = vsubq_s64(x, vshlq_s64(floor, n));
+    let gt = vreinterpretq_s64_u64(vcgtq_s64(rem, half));
+    let eq = vreinterpretq_s64_u64(vceqq_s64(rem, half));
+    let odd = vandq_s64(floor, one);
+    let inc = vaddq_s64(vandq_s64(gt, one), vandq_s64(eq, odd));
+    vaddq_s64(floor, inc)
+}
+
+/// Vector requant epilogue to i8 codes, two channels per iteration
+/// (`vmull_s32` for the exact i32×i32→i64 multiply), scalar tail via
+/// [`ResolvedEpilogue::apply_i8_range`].
+///
+/// # Safety
+/// Requires NEON, `epi.simd` preconditions, and — when `skip` is present —
+/// every block skip value within `lanes.skip_abs_limit` (checked by the
+/// dispatching caller).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn apply_i8(
+    epi: &ResolvedEpilogue,
+    lanes: &SimdLanes,
+    acc: &[i32],
+    row0: usize,
+    rows: usize,
+    f: usize,
+    skip: Option<&[i64]>,
+    out: &mut [i8],
+) {
+    let chunks = f / 2;
+    let one = vdupq_n_s64(1);
+    let zero = vdupq_n_s64(0);
+    let hi = vdupq_n_s64(127);
+    let lo = vdupq_n_s64(-127);
+    for ci in 0..chunks {
+        let c = ci * 2;
+        let multv = vld1_s32(lanes.mult32.as_ptr().add(c));
+        let biasv = vld1q_s64(epi.bias.as_ptr().add(c));
+        let shiftv = vld1q_s64(lanes.shift64.as_ptr().add(c));
+        let shiftnv = vnegq_s64(shiftv);
+        let halfv = vld1q_s64(lanes.half.as_ptr().add(c));
+        let (shlv, shrv, shrnv, shalfv, rhemask) = if skip.is_some() {
+            let shr = vld1q_s64(lanes.skip_shr.as_ptr().add(c));
+            (
+                vld1q_s64(lanes.skip_shl.as_ptr().add(c)),
+                shr,
+                vnegq_s64(shr),
+                vld1q_s64(lanes.skip_half.as_ptr().add(c)),
+                vreinterpretq_u64_s64(vld1q_s64(lanes.skip_rhe_mask.as_ptr().add(c))),
+            )
+        } else {
+            (zero, zero, zero, zero, vreinterpretq_u64_s64(zero))
+        };
+        for r in 0..rows {
+            let a2 = vld1_s32(acc.as_ptr().add(r * f + c));
+            let mut u = vaddq_s64(vmull_s32(a2, multv), biasv);
+            if let Some(sk) = skip {
+                let s2 = vld1q_s64(sk.as_ptr().add((row0 + r) * f + c));
+                let left = vshlq_s64(s2, shlv);
+                let right = rhe(s2, shrv, shrnv, shalfv, one);
+                u = vaddq_s64(u, vbslq_s64(rhemask, right, left));
+            }
+            let mut q = rhe(u, shiftv, shiftnv, halfv, one);
+            if epi.relu {
+                q = vandq_s64(q, vreinterpretq_s64_u64(vcgtq_s64(q, zero)));
+            }
+            q = vbslq_s64(vcgtq_s64(q, hi), hi, q);
+            q = vbslq_s64(vcgtq_s64(lo, q), lo, q);
+            let o = r * f + c;
+            out[o] = vgetq_lane_s64::<0>(q) as i8;
+            out[o + 1] = vgetq_lane_s64::<1>(q) as i8;
+        }
+    }
+    if chunks * 2 < f {
+        epi.apply_i8_range(acc, row0, rows, f, chunks * 2, f, skip, out);
+    }
+}
+
+/// Vector epilogue onto the i64 residual lane.
+///
+/// # Safety
+/// Requires NEON and `lanes.skip_out_ok` (checked by the caller).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn apply_skip(
+    epi: &ResolvedEpilogue,
+    lanes: &SimdLanes,
+    acc: &[i32],
+    rows: usize,
+    f: usize,
+    out: &mut [i64],
+) {
+    let chunks = f / 2;
+    let one = vdupq_n_s64(1);
+    let zero = vdupq_n_s64(0);
+    for ci in 0..chunks {
+        let c = ci * 2;
+        let multv = vld1_s32(lanes.mult32.as_ptr().add(c));
+        let biasv = vld1q_s64(epi.bias.as_ptr().add(c));
+        let shiftv = vld1q_s64(lanes.out_shift64.as_ptr().add(c));
+        let shiftnv = vnegq_s64(shiftv);
+        let halfv = vld1q_s64(lanes.out_half.as_ptr().add(c));
+        for r in 0..rows {
+            let a2 = vld1_s32(acc.as_ptr().add(r * f + c));
+            let u = vaddq_s64(vmull_s32(a2, multv), biasv);
+            let mut q = rhe(u, shiftv, shiftnv, halfv, one);
+            if epi.relu {
+                q = vandq_s64(q, vreinterpretq_s64_u64(vcgtq_s64(q, zero)));
+            }
+            vst1q_s64(out.as_mut_ptr().add(r * f + c), q);
+        }
+    }
+    if chunks * 2 < f {
+        epi.apply_skip_range(acc, rows, f, chunks * 2, f, out);
+    }
+}

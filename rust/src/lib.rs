@@ -12,9 +12,11 @@
 //! * [`runtime`]     — PJRT client wrapper: load HLO text artifacts, execute
 //!   (stubbed without the `pjrt` feature — the `xla` crate is not vendorable).
 //! * [`kernels`]     — packed-ternary execution engine: column-blocked 2-bit /
-//!   i4 weight layouts, multiply-free cluster GEMM, scoped thread pool,
-//!   the `KernelRegistry` runtime dispatch (`--kernel` override), and the
-//!   fused integer requantization epilogue (`LayerRequant`).
+//!   i4 weight layouts, multiply-free cluster GEMM, a SIMD tier (AVX2 /
+//!   NEON behind runtime feature detection, scalar fallback), scoped
+//!   thread pool, the `KernelRegistry` runtime dispatch
+//!   (`--kernel <encoding>[+<tier>]` override), and the fused integer
+//!   requantization epilogue (`LayerRequant`).
 //! * [`scheme`]      — typed per-layer precision schemes: `WeightCodec` /
 //!   `LayerPolicy` / `Scheme` with the compact `8a2w_n4@stem=i8` grammar;
 //!   every precision decision (quantizer, loader, dispatch, opcount,

@@ -17,13 +17,14 @@
 //! bound their divergence (≤ 1 output code per requantization point,
 //! asserted in `rust/tests/requant_equivalence.rs`).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::dfp::{fx_rescale, round_half_even, Requantizer, REQUANT_VERSION, SKIP_FRAC};
 use crate::io::{AnyTensor, TensorMap};
-use crate::kernels::{KernelRegistry, LayerRequant, PackedLayer};
+use crate::kernels::{KernelRegistry, LayerRequant, PackedLayer, ResolvedEpilogue};
 use crate::model::{ConvLayer, Network};
 use crate::nn::im2col;
 use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
@@ -108,6 +109,91 @@ pub struct QModelParams {
     pub scheme: Scheme,
     /// packed encodings of `fc_wq` (same dispatch as the conv layers).
     pub fc_packed: PackedLayer,
+    /// resolved requantization epilogues, built once at load
+    /// ([`EpilogueCache`]): `exp_in`/`act_target` are fixed per loaded
+    /// model, so `forward_quant` borrows these instead of calling
+    /// `LayerRequant::resolve` per conv per forward. Empty for
+    /// hand-assembled params — the forward pass then resolves on the fly,
+    /// producing identical results. Private (read via
+    /// [`QModelParams::epilogues`]) because it is *derived* state: only
+    /// [`QModelParams::rebuild_epilogues`] may refresh it, so external code
+    /// cannot install a cache that disagrees with the conv scales.
+    epilogues: EpilogueCache,
+}
+
+/// Every [`ResolvedEpilogue`] the fused forward pass needs, keyed by layer:
+/// the own-grid epilogue (ReLU fused) for each non-projection conv, and the
+/// *consumer*-grid epilogue (no ReLU) for each projection conv feeding the
+/// integer residual lane. Built by walking the network's residual-block
+/// structure exactly like [`forward_quant_with`] does.
+///
+/// The cache is derived state: after mutating `convs[*]` scales/requant in
+/// place, call [`QModelParams::rebuild_epilogues`] (loaders do this for
+/// you).
+#[derive(Debug, Clone, Default)]
+pub struct EpilogueCache {
+    own: BTreeMap<String, ResolvedEpilogue>,
+    proj: BTreeMap<String, ResolvedEpilogue>,
+}
+
+impl EpilogueCache {
+    /// Resolve every epilogue for `convs` against the network topology.
+    /// Returns an empty cache (forward falls back to on-the-fly resolution)
+    /// when a layer the walk needs is missing from `convs`.
+    pub fn build(convs: &BTreeMap<String, QConvParams>, in_exp: i32, net: &Network) -> Self {
+        let mut cache = Self::default();
+        let Some(stem) = convs.get("stem") else {
+            return cache;
+        };
+        cache.own.insert("stem".into(), stem.requant.resolve(in_exp, stem.act_exp, true));
+        let mut exp_h = stem.act_exp;
+        let mut i = 1;
+        while i + 1 < net.layers.len() {
+            let c1 = &net.layers[i];
+            let c2 = &net.layers[i + 1];
+            let has_proj = net
+                .layers
+                .get(i + 2)
+                .map(|l| l.name.ends_with("proj"))
+                .unwrap_or(false);
+            let (Some(p1), Some(p2)) = (convs.get(&c1.name), convs.get(&c2.name)) else {
+                return Self::default();
+            };
+            let exp2 = p2.act_exp;
+            if has_proj {
+                let proj = &net.layers[i + 2];
+                let Some(pp) = convs.get(&proj.name) else {
+                    return Self::default();
+                };
+                cache.proj.insert(proj.name.clone(), pp.requant.resolve(exp_h, exp2, false));
+            }
+            cache.own.insert(c1.name.clone(), p1.requant.resolve(exp_h, p1.act_exp, true));
+            cache.own.insert(c2.name.clone(), p2.requant.resolve(p1.act_exp, exp2, true));
+            exp_h = exp2;
+            i += if has_proj { 3 } else { 2 };
+        }
+        cache
+    }
+
+    /// The cached own-grid epilogue of a non-projection conv.
+    pub fn own(&self, layer: &str) -> Option<&ResolvedEpilogue> {
+        self.own.get(layer)
+    }
+
+    /// The cached consumer-grid epilogue of a projection conv.
+    pub fn proj(&self, layer: &str) -> Option<&ResolvedEpilogue> {
+        self.proj.get(layer)
+    }
+
+    /// Number of cached epilogues.
+    pub fn len(&self) -> usize {
+        self.own.len() + self.proj.len()
+    }
+
+    /// True when nothing is cached (forward resolves on the fly).
+    pub fn is_empty(&self) -> bool {
+        self.own.is_empty() && self.proj.is_empty()
+    }
 }
 
 impl QModelParams {
@@ -197,7 +283,7 @@ impl QModelParams {
         let fc_wq = map.get("fc.wq").context("missing fc.wq")?.as_i8()?.clone();
         let fc_scale = f32v("fc.scale")?;
         let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, scheme.policy_for("fc").cluster);
-        let out = Self {
+        let mut out = Self {
             convs,
             fc_wq,
             fc_scale,
@@ -206,9 +292,11 @@ impl QModelParams {
             feat_exp: i32s("meta.feat_exp")?,
             scheme,
             fc_packed,
+            epilogues: EpilogueCache::default(),
         };
         // loaded codes must actually fit the scheme the export declares
         out.validate(net)?;
+        out.rebuild_epilogues(net);
         Ok(out)
     }
 
@@ -296,7 +384,7 @@ impl QModelParams {
             .expect("fc shape");
         let fc_scale = vec![0.1 / fc_qmax as f32; net.fc_out];
         let fc_packed = PackedLayer::build(&fc_wq, &fc_scale, fc_policy.cluster);
-        Self {
+        let mut params = Self {
             convs,
             fc_wq,
             fc_scale,
@@ -305,7 +393,24 @@ impl QModelParams {
             feat_exp: -5,
             scheme: scheme.clone(),
             fc_packed,
-        }
+            epilogues: EpilogueCache::default(),
+        };
+        params.rebuild_epilogues(net);
+        params
+    }
+
+    /// Rebuild the resolved-epilogue cache from the current conv params.
+    /// Loaders call this; it is also required after mutating layer scales
+    /// or requant tensors in place (e.g. in adversarial tests), since the
+    /// cache is derived state.
+    pub fn rebuild_epilogues(&mut self, net: &Network) {
+        self.epilogues = EpilogueCache::build(&self.convs, self.in_exp, net);
+    }
+
+    /// The load-time resolved-epilogue cache (read-only; see
+    /// [`QModelParams::rebuild_epilogues`]).
+    pub fn epilogues(&self) -> &EpilogueCache {
+        &self.epilogues
     }
 
     /// Sanity-check the params against the network description *and* the
@@ -368,51 +473,77 @@ pub fn requant(x: &[f32], exp: i32) -> Vec<i8> {
 // ---------------------------------------------------------------------------
 
 /// One conv through the fused integer pipeline: im2col, registry GEMM with
-/// the requant epilogue fused in, straight to i8 codes on the layer's own
-/// activation grid. `skip` is the integer residual lane (already on this
-/// layer's target grid at [`SKIP_FRAC`] fraction bits).
+/// the requant epilogue fused in, straight to i8 codes on the epilogue's
+/// target grid. `epi` is the resolved epilogue (borrowed from the model's
+/// [`EpilogueCache`] on the hot path); `skip` is the integer residual lane
+/// (already on this layer's target grid at [`SKIP_FRAC`] fraction bits).
 fn qconv_fused(
     x: &Tensor<i8>,
-    exp_in: i32,
     l: &ConvLayer,
     p: &QConvParams,
-    relu: bool,
+    epi: &ResolvedEpilogue,
     skip: Option<&Tensor<i64>>,
     reg: &KernelRegistry,
 ) -> Tensor<i8> {
     let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
-    let epi = p.requant.resolve(exp_in, p.act_exp, relu);
     let out = reg.gemm_fused(
         &cols,
         &p.packed,
         || p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape"),
-        &epi,
+        epi,
         skip.map(Tensor::data),
     );
     out.reshape(&[n, ho, wo, l.cout]).expect("conv output shape")
 }
 
 /// A projection conv evaluated straight onto the integer residual lane of
-/// the layer that will consume it (`act_target` = the consuming layer's
-/// activation exponent). Replaces the f32 `z` tensor the reference path
-/// keeps for residuals.
+/// the layer that will consume it (`epi` targets the *consuming* layer's
+/// activation grid, no ReLU). Replaces the f32 `z` tensor the reference
+/// path keeps for residuals.
 fn qconv_to_skip(
     x: &Tensor<i8>,
-    exp_in: i32,
     l: &ConvLayer,
     p: &QConvParams,
-    act_target: i32,
+    epi: &ResolvedEpilogue,
     reg: &KernelRegistry,
 ) -> Tensor<i64> {
     let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
-    let epi = p.requant.resolve(exp_in, act_target, false);
     let out = reg.gemm_fused_skip(
         &cols,
         &p.packed,
         || p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape"),
-        &epi,
+        epi,
     );
     out.reshape(&[n, ho, wo, l.cout]).expect("conv output shape")
+}
+
+/// Borrow a layer's cached own-grid epilogue, or resolve it on the fly for
+/// hand-assembled params (identical result either way).
+fn own_epi<'a>(
+    params: &'a QModelParams,
+    name: &str,
+    p: &QConvParams,
+    exp_in: i32,
+) -> Cow<'a, ResolvedEpilogue> {
+    match params.epilogues.own(name) {
+        Some(e) => Cow::Borrowed(e),
+        None => Cow::Owned(p.requant.resolve(exp_in, p.act_exp, true)),
+    }
+}
+
+/// Borrow a projection conv's cached consumer-grid epilogue, or resolve it
+/// on the fly.
+fn proj_epi<'a>(
+    params: &'a QModelParams,
+    name: &str,
+    p: &QConvParams,
+    exp_in: i32,
+    act_target: i32,
+) -> Cow<'a, ResolvedEpilogue> {
+    match params.epilogues.proj(name) {
+        Some(e) => Cow::Borrowed(e),
+        None => Cow::Owned(p.requant.resolve(exp_in, act_target, false)),
+    }
 }
 
 /// Identity-skip path: re-align i8 activations at `exp_h` onto the integer
@@ -447,9 +578,10 @@ pub fn forward_quant_with(
     // quantize input image to int8 DFP (pipeline entry: f32 is allowed here)
     let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
 
-    let mut hq =
-        qconv_fused(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, reg);
-    let mut exp_h = params.convs["stem"].act_exp;
+    let stem_p = &params.convs["stem"];
+    let stem_epi = own_epi(params, "stem", stem_p, params.in_exp);
+    let mut hq = qconv_fused(&xq, layers["stem"], stem_p, &stem_epi, None, reg);
+    let mut exp_h = stem_p.act_exp;
 
     let mut i = 1;
     while i < net.layers.len() {
@@ -464,13 +596,19 @@ pub fn forward_quant_with(
         // residual on the integer skip lane, targeted at c2's grid
         let skip_fx = if has_proj {
             let proj = &net.layers[i + 2];
-            qconv_to_skip(&hq, exp_h, proj, &params.convs[&proj.name], exp2, reg)
+            let pp = &params.convs[&proj.name];
+            let pepi = proj_epi(params, &proj.name, pp, exp_h, exp2);
+            qconv_to_skip(&hq, proj, pp, &pepi, reg)
         } else {
             dequant_to_skip(&hq, exp_h, exp2)
         };
-        let h1 = qconv_fused(&hq, exp_h, c1, &params.convs[&c1.name], true, None, reg);
-        let exp1 = params.convs[&c1.name].act_exp;
-        hq = qconv_fused(&h1, exp1, c2, &params.convs[&c2.name], true, Some(&skip_fx), reg);
+        let p1 = &params.convs[&c1.name];
+        let e1 = own_epi(params, &c1.name, p1, exp_h);
+        let h1 = qconv_fused(&hq, c1, p1, &e1, None, reg);
+        let exp1 = p1.act_exp;
+        let p2 = &params.convs[&c2.name];
+        let e2 = own_epi(params, &c2.name, p2, exp1);
+        hq = qconv_fused(&h1, c2, p2, &e2, Some(&skip_fx), reg);
         exp_h = exp2;
         i += if has_proj { 3 } else { 2 };
     }
@@ -709,7 +847,8 @@ pub fn paths_divergence(
     let stem_l = layers["stem"];
     let stem_p = &params.convs["stem"];
     let stem_ref = qconv_ref(&xq, params.in_exp, stem_l, stem_p, true, None, false, reg);
-    let stem_fused = qconv_fused(&xq, params.in_exp, stem_l, stem_p, true, None, reg);
+    let stem_epi = own_epi(params, "stem", stem_p, params.in_exp);
+    let stem_fused = qconv_fused(&xq, stem_l, stem_p, &stem_epi, None, reg);
     max_ulp = max_ulp.max(code_ulp(&stem_ref.q, &stem_fused));
     let mut hq = stem_ref.q;
     let mut exp_h = stem_p.act_exp;
@@ -731,7 +870,8 @@ pub fn paths_divergence(
             let zf = qconv_ref(&hq, exp_h, proj, pp, false, None, true, reg)
                 .z
                 .expect("proj keeps f32");
-            let fx = qconv_to_skip(&hq, exp_h, proj, pp, exp2, reg);
+            let pepi = proj_epi(params, &proj.name, pp, exp_h, exp2);
+            let fx = qconv_to_skip(&hq, proj, pp, &pepi, reg);
             (zf, fx)
         } else {
             let s = 2f32.powi(exp_h);
@@ -739,11 +879,13 @@ pub fn paths_divergence(
         };
         let p1 = &params.convs[&c1.name];
         let h1_ref = qconv_ref(&hq, exp_h, c1, p1, true, None, false, reg);
-        let h1_fused = qconv_fused(&hq, exp_h, c1, p1, true, None, reg);
+        let e1 = own_epi(params, &c1.name, p1, exp_h);
+        let h1_fused = qconv_fused(&hq, c1, p1, &e1, None, reg);
         max_ulp = max_ulp.max(code_ulp(&h1_ref.q, &h1_fused));
         let p2 = &params.convs[&c2.name];
         let h2_ref = qconv_ref(&h1_ref.q, p1.act_exp, c2, p2, true, Some(&skip_f), false, reg);
-        let h2_fused = qconv_fused(&h1_ref.q, p1.act_exp, c2, p2, true, Some(&skip_fx), reg);
+        let e2 = own_epi(params, &c2.name, p2, p1.act_exp);
+        let h2_fused = qconv_fused(&h1_ref.q, c2, p2, &e2, Some(&skip_fx), reg);
         max_ulp = max_ulp.max(code_ulp(&h2_ref.q, &h2_fused));
         hq = h2_ref.q;
         exp_h = exp2;
@@ -848,7 +990,8 @@ mod tests {
         let reg = KernelRegistry::auto();
         let out_ref = qconv_ref(&x, 0, &l, &p, false, None, false, &reg);
         assert_eq!(out_ref.q.data(), x.data());
-        let out_fused = qconv_fused(&x, 0, &l, &p, false, None, &reg);
+        let epi = p.requant.resolve(0, p.act_exp, false);
+        let out_fused = qconv_fused(&x, &l, &p, &epi, None, &reg);
         assert_eq!(out_fused.data(), x.data());
     }
 
@@ -891,6 +1034,36 @@ mod tests {
     }
 
     #[test]
+    fn test_epilogue_cache_built_at_load_and_equals_fallback() {
+        let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
+        let params = QModelParams::synthetic(&net, 51, &scheme("8a2w_n4@stem=i8"));
+        // one own-grid entry per non-proj conv, one per projection conv
+        let n_proj = net.layers.iter().filter(|l| l.name.ends_with("proj")).count();
+        assert!(n_proj > 0, "test net must exercise the projection path");
+        assert_eq!(params.epilogues.len(), net.layers.len());
+        for l in &net.layers {
+            if l.name.ends_with("proj") {
+                assert!(params.epilogues.proj(&l.name).is_some(), "{}", l.name);
+            } else {
+                assert!(params.epilogues.own(&l.name).is_some(), "{}", l.name);
+            }
+        }
+        // export -> load rebuilds the cache too
+        let back = QModelParams::from_tensors(&params.to_tensors(), &net).unwrap();
+        assert_eq!(back.epilogues.len(), net.layers.len());
+        // an empty cache (hand-assembled params) resolves on the fly to
+        // bit-identical logits
+        let mut bare = params.clone();
+        bare.epilogues = EpilogueCache::default();
+        assert!(bare.epilogues.is_empty());
+        let mut rng = SplitMix64::new(52);
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        let want = forward_quant(&params, &net, &x);
+        let got = forward_quant(&bare, &net, &x);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
     fn test_synthetic_packs_expected_encodings() {
         let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
         let tern = QModelParams::synthetic(&net, 1, &scheme("8a2w_n4"));
@@ -915,6 +1088,7 @@ mod tests {
             feat_exp: 0,
             scheme: scheme("8a2w_n4"),
             fc_packed: PackedLayer::none(),
+            epilogues: EpilogueCache::default(),
         };
         assert!(params.validate(&net).is_err());
     }

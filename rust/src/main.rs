@@ -7,7 +7,10 @@
 //!              pure-Rust quantized pipeline (kernels/ packed GEMMs, needs
 //!              only qweights exports), `pjrt` the XLA artifacts; `auto`
 //!              prefers lp when qweights are present. `--kernel` forces a
-//!              GEMM implementation, `--threads` sizes its pool.
+//!              GEMM implementation and/or SIMD tier
+//!              (`<encoding>[+<tier>]`, e.g. `ternary+scalar`; the default
+//!              tier is the best the CPU supports), `--threads` sizes its
+//!              pool.
 //!   eval       evaluate artifact variants on the exported eval set
 //!              (same --executor/--kernel/--threads knobs as serve)
 //!   opcount    print the §3.3 op-replacement table for a network
@@ -195,7 +198,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         other => bail!("unknown executor '{other}' (try auto|lp|pjrt)"),
     };
     let mut exec: Box<dyn Executor> = if use_lp {
-        println!("executor: lpinfer (kernel {}, {} GEMM threads)", cfg.kernel, registry.pool().threads());
+        println!(
+            "executor: lpinfer (kernel {}, simd tier {}, {} GEMM threads)",
+            cfg.kernel,
+            registry.tier(),
+            registry.pool().threads()
+        );
         Box::new(LpExecutor::from_artifacts(&cfg.artifacts_dir, registry)?)
     } else {
         let engine = PjrtExecutor::new(&cfg.artifacts_dir)?;
@@ -305,8 +313,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut m = manifest.clone();
         m.variants.retain(|n, _| servable.contains(n));
         println!(
-            "executor: lpinfer (kernel {}, {} GEMM threads) over {:?}",
+            "executor: lpinfer (kernel {}, simd tier {}, {} GEMM threads) over {:?}",
             cfg.kernel,
+            registry.tier(),
             registry.pool().threads(),
             m.variants.keys().collect::<Vec<_>>()
         );

@@ -5,8 +5,8 @@
 //! invariant under every registry choice.
 
 use dfp_infer::kernels::{
-    gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary, KernelRegistry, PackedI4Matrix,
-    PackedTernaryMatrix, ThreadPool, ALL_KERNELS,
+    gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary, KernelKind, KernelRegistry, PackedI4Matrix,
+    PackedLayer, PackedTernaryMatrix, SimdTier, ThreadPool, TierChoice, ALL_KERNELS,
 };
 use dfp_infer::lpinfer::{forward_quant_with, QModelParams};
 use dfp_infer::model::resnet_mini;
@@ -125,10 +125,16 @@ fn packed_roundtrip_preserves_codes_across_cluster_sizes() {
     }
 }
 
+/// Tier settings every test machine can exercise: forced scalar plus the
+/// best detected tier (which is also scalar on machines without SIMD).
+fn test_tiers() -> [TierChoice; 2] {
+    [TierChoice::Forced(SimdTier::Scalar), TierChoice::Auto]
+}
+
 #[test]
-fn forward_quant_invariant_under_registry_choice_and_threads() {
-    // logits bit-identical for every kernel choice x thread count, for
-    // ternary (N in {4,16,64}) and 4-bit models
+fn forward_quant_invariant_under_registry_choice_tiers_and_threads() {
+    // logits bit-identical for every kernel choice x SIMD tier x thread
+    // count, for ternary (N in {4,16,64}) and 4-bit models
     let net = resnet_mini(8, &[8, 16, 16], 1, 5);
     let mut rng = SplitMix64::new(77);
     let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
@@ -139,10 +145,78 @@ fn forward_quant_invariant_under_registry_choice_and_threads() {
         let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
         assert!(want.data().iter().all(|v| v.is_finite()));
         for kind in ALL_KERNELS {
-            for threads in [1usize, 2, 4] {
-                let reg = KernelRegistry::new(Some(kind), threads);
-                let got = forward_quant_with(&params, &net, &x, &reg);
-                assert_eq!(got.data(), want.data(), "scheme={variant} kernel={kind} threads={threads}");
+            for tier in test_tiers() {
+                for threads in [1usize, 2, 4] {
+                    let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                    let got = forward_quant_with(&params, &net, &x, &reg);
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "scheme={variant} kernel={kind} tier={tier} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_tier_bit_exact_on_unaligned_k_and_f() {
+    // K and F deliberately not multiples of any vector width (8 for AVX2
+    // i32 lanes, 4/2 for NEON): the tail-lane handling must agree with the
+    // scalar kernels bit for bit, for every registry kernel, both fused
+    // entry points and 1/2/4 threads
+    use dfp_infer::kernels::LayerRequant;
+    let mut rng = SplitMix64::new(4242);
+    for (m, k, f) in [(3, 7, 5), (5, 13, 31), (4, 9, 33), (7, 27, 65), (2, 31, 37), (1, 1, 1)] {
+        let a = Tensor::new(
+            &[m, k],
+            (0..m * k)
+                .map(|_| {
+                    let v = (rng.next_below(255) as i16 - 127) as i8;
+                    if v < -60 {
+                        0
+                    } else {
+                        v
+                    }
+                })
+                .collect::<Vec<i8>>(),
+        )
+        .unwrap();
+        let wd = Tensor::new(
+            &[k, f],
+            (0..k * f).map(|_| rng.next_below(3) as i8 - 1).collect::<Vec<i8>>(),
+        )
+        .unwrap();
+        let packed = PackedLayer::build(&wd, &[], 0);
+        let w_scale: Vec<f32> = (0..f).map(|i| 0.001 * (1 + i % 7) as f32).collect();
+        let bn_scale: Vec<f32> = (0..f).map(|i| 1.0 - 0.03 * (i % 5) as f32).collect();
+        let bn_shift: Vec<f32> = (0..f).map(|i| 0.2 * (i % 3) as f32 - 0.2).collect();
+        let epi = LayerRequant::derive(&w_scale, &bn_scale, &bn_shift).unwrap().resolve(-4, -4, true);
+        let skip: Vec<i64> =
+            (0..m * f).map(|_| rng.next_below(1 << 22) as i64 - (1 << 21)).collect();
+        let scalar =
+            KernelRegistry::with_tier(Some(KernelKind::I8Dense), TierChoice::Forced(SimdTier::Scalar), 1);
+        let want = scalar.gemm(&a, &wd, &packed);
+        let want_fused = scalar.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip));
+        let want_skip = scalar.gemm_fused_skip(&a, &packed, || wd.clone(), &epi);
+        for kind in ALL_KERNELS {
+            for tier in test_tiers() {
+                for threads in [1usize, 2, 4] {
+                    let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                    let ctx = format!("m={m} k={k} f={f} kernel={kind} tier={tier} threads={threads}");
+                    assert_eq!(reg.gemm(&a, &wd, &packed).data(), want.data(), "gemm {ctx}");
+                    assert_eq!(
+                        reg.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip)).data(),
+                        want_fused.data(),
+                        "fused {ctx}"
+                    );
+                    assert_eq!(
+                        reg.gemm_fused_skip(&a, &packed, || wd.clone(), &epi).data(),
+                        want_skip.data(),
+                        "fused-skip {ctx}"
+                    );
+                }
             }
         }
     }
@@ -177,10 +251,16 @@ fn mixed_scheme_layers_carry_policies_and_logits_stay_bit_exact() {
     let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
     assert!(want.data().iter().all(|v| v.is_finite()));
     for kind in ALL_KERNELS {
-        for threads in [1usize, 2, 4] {
-            let reg = KernelRegistry::new(Some(kind), threads);
-            let got = forward_quant_with(&params, &net, &x, &reg);
-            assert_eq!(got.data(), want.data(), "mixed scheme, kernel={kind} threads={threads}");
+        for tier in test_tiers() {
+            for threads in [1usize, 2, 4] {
+                let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                let got = forward_quant_with(&params, &net, &x, &reg);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "mixed scheme, kernel={kind} tier={tier} threads={threads}"
+                );
+            }
         }
     }
 }

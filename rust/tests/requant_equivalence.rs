@@ -12,7 +12,7 @@
 //! for bit-identity across kernels/threads (the fused path is pure integer,
 //! so kernel choice cannot change them).
 
-use dfp_infer::kernels::{KernelRegistry, ALL_KERNELS};
+use dfp_infer::kernels::{KernelRegistry, SimdTier, TierChoice, ALL_KERNELS};
 use dfp_infer::lpinfer::{forward_quant_with, paths_divergence, QConvParams, QModelParams};
 use dfp_infer::model::resnet_mini;
 use dfp_infer::scheme::Scheme;
@@ -81,7 +81,16 @@ fn randomized_model(net: &dfp_infer::model::Network, seed: u64, scheme: &Scheme)
             .expect("finite randomized scales");
         params.convs.insert(n.clone(), rebuilt);
     }
+    // the epilogue cache is derived state; the in-place conv swap above
+    // invalidated it
+    params.rebuild_epilogues(net);
     params
+}
+
+/// Tier settings every test machine can exercise: forced scalar plus the
+/// best detected tier (which is also scalar on machines without SIMD).
+fn test_tiers() -> [TierChoice; 2] {
+    [TierChoice::Forced(SimdTier::Scalar), TierChoice::Auto]
 }
 
 #[test]
@@ -94,20 +103,22 @@ fn prop_fused_requant_within_one_code_of_f32_reference() {
         let mut rng = SplitMix64::new(case.seed ^ 1);
         let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
         for kind in ALL_KERNELS {
-            for threads in [1usize, 2, 4] {
-                let reg = KernelRegistry::new(Some(kind), threads);
-                let d = paths_divergence(&params, &net, &x, &reg);
-                if d.max_code_ulp > 1 {
-                    return Err(format!(
-                        "scheme={} kernel={kind} threads={threads}: lockstep divergence {} codes (bound 1)",
-                        case.scheme, d.max_code_ulp
-                    ));
-                }
-                if !d.logit_max_abs_diff.is_finite() {
-                    return Err(format!(
-                        "scheme={} kernel={kind} threads={threads}: non-finite logit divergence",
-                        case.scheme
-                    ));
+            for tier in test_tiers() {
+                for threads in [1usize, 2, 4] {
+                    let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                    let d = paths_divergence(&params, &net, &x, &reg);
+                    if d.max_code_ulp > 1 {
+                        return Err(format!(
+                            "scheme={} kernel={kind} tier={tier} threads={threads}: lockstep divergence {} codes (bound 1)",
+                            case.scheme, d.max_code_ulp
+                        ));
+                    }
+                    if !d.logit_max_abs_diff.is_finite() {
+                        return Err(format!(
+                            "scheme={} kernel={kind} tier={tier} threads={threads}: non-finite logit divergence",
+                            case.scheme
+                        ));
+                    }
                 }
             }
         }
@@ -116,26 +127,32 @@ fn prop_fused_requant_within_one_code_of_f32_reference() {
 }
 
 #[test]
-fn fused_logits_bit_identical_across_kernels_and_threads() {
-    // the integer path has no float on it, so kernel/thread choice must not
-    // move a single bit of the logits — even with adversarial scales
-    let net = resnet_mini(8, &[4, 8, 8], 1, 3);
-    for (i, variant) in SCHEMES.iter().enumerate() {
-        let scheme = Scheme::parse(variant).unwrap();
-        let params = randomized_model(&net, 4000 + i as u64, &scheme);
-        let mut rng = SplitMix64::new(4100 + i as u64);
-        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
-        let want = forward_quant_with(&params, &net, &x, &KernelRegistry::auto());
-        assert!(want.data().iter().all(|v| v.is_finite()), "{variant}");
-        for kind in ALL_KERNELS {
-            for threads in [1usize, 2, 4] {
-                let reg = KernelRegistry::new(Some(kind), threads);
-                let got = forward_quant_with(&params, &net, &x, &reg);
-                assert_eq!(
-                    got.data(),
-                    want.data(),
-                    "scheme={variant} kernel={kind} threads={threads}"
-                );
+fn fused_logits_bit_identical_across_kernels_tiers_and_threads() {
+    // the integer path has no float on it, so kernel/tier/thread choice
+    // must not move a single bit of the logits — even with adversarial
+    // scales, and on channel counts that leave SIMD tail lanes (5/9/13)
+    for (neti, net) in
+        [resnet_mini(8, &[4, 8, 8], 1, 3), resnet_mini(8, &[5, 9, 13], 1, 3)].iter().enumerate()
+    {
+        for (i, variant) in SCHEMES.iter().enumerate() {
+            let scheme = Scheme::parse(variant).unwrap();
+            let params = randomized_model(net, 4000 + 100 * neti as u64 + i as u64, &scheme);
+            let mut rng = SplitMix64::new(4100 + i as u64);
+            let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+            let want = forward_quant_with(&params, net, &x, &KernelRegistry::auto());
+            assert!(want.data().iter().all(|v| v.is_finite()), "{variant}");
+            for kind in ALL_KERNELS {
+                for tier in test_tiers() {
+                    for threads in [1usize, 2, 4] {
+                        let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                        let got = forward_quant_with(&params, net, &x, &reg);
+                        assert_eq!(
+                            got.data(),
+                            want.data(),
+                            "net={neti} scheme={variant} kernel={kind} tier={tier} threads={threads}"
+                        );
+                    }
+                }
             }
         }
     }
