@@ -7,7 +7,9 @@
 //!      resnet-mini layer shape, dense and post-ReLU-sparse activations,
 //!      single- and multi-thread,
 //!   5. the fused integer requant epilogue vs the pre-fusion path (packed
-//!      GEMM to a full i32 tensor + f32 scale/BN/ReLU/round pass) — E5.6.
+//!      GEMM to a full i32 tensor + f32 scale/BN/ReLU/round pass) — E5.6,
+//!   6. the steady-state forward: per-worker workspace reuse vs per-call
+//!      allocation, and the 1×1 im2col-free direct path — E5.8.
 //!
 //! Emits a machine-readable `BENCH_kernels.json` (override the path with
 //! `BENCH_JSON_OUT`) so later PRs have a perf trajectory baseline.
@@ -20,10 +22,13 @@ use dfp_infer::kernels::{
     gemm_packed_i4, gemm_packed_ternary, KernelKind, KernelRegistry, LayerRequant, PackedI4Matrix,
     PackedLayer, PackedTernaryMatrix, SimdTier, ThreadPool, TierChoice,
 };
-use dfp_infer::lpinfer::{gemm_i8, gemm_i8_dense};
+use dfp_infer::lpinfer::{
+    forward_quant_into, forward_quant_with, gemm_i8, gemm_i8_dense, ForwardWorkspace, QModelParams,
+};
 use dfp_infer::model::{resnet101, resnet_mini_default};
-use dfp_infer::nn::gemm_f32;
+use dfp_infer::nn::{gemm_f32, im2col_into};
 use dfp_infer::opcount;
+use dfp_infer::scheme::Scheme;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::util::SplitMix64;
 
@@ -162,10 +167,10 @@ fn main() {
         out
     });
     b.bench("conv+requant fused integer epilogue 1t", macs, || {
-        reg_t1.gemm_fused(&a_sparse, &packed_layer, || w_tern.clone(), &epi, None)
+        reg_t1.gemm_fused(&a_sparse, &packed_layer, &w_tern, &epi, None)
     });
     b.bench("conv+requant fused integer epilogue 4t", macs, || {
-        reg_t4.gemm_fused(&a_sparse, &packed_layer, || w_tern.clone(), &epi, None)
+        reg_t4.gemm_fused(&a_sparse, &packed_layer, &w_tern, &epi, None)
     });
     let fused_speedup = b
         .ratio("conv+requant unfused f32 epilogue 1t", "conv+requant fused integer epilogue 1t")
@@ -226,8 +231,8 @@ fn main() {
         let tern_speedup = b.ratio(&n_ts, &n_tv).unwrap_or(0.0);
         let n_fs = format!("{} fused-epilogue scalar ({lm}x{lk}x{lf})", l.name);
         let n_fv = format!("{} fused-epilogue {tier} ({lm}x{lk}x{lf})", l.name);
-        b.bench(&n_fs, lmacs, || scalar_t.gemm_fused(&a_sp, &pl_tern, || wt.clone(), &lepi, None));
-        b.bench(&n_fv, lmacs, || simd_t.gemm_fused(&a_sp, &pl_tern, || wt.clone(), &lepi, None));
+        b.bench(&n_fs, lmacs, || scalar_t.gemm_fused(&a_sp, &pl_tern, &wt, &lepi, None));
+        b.bench(&n_fv, lmacs, || simd_t.gemm_fused(&a_sp, &pl_tern, &wt, &lepi, None));
         let fused_simd_speedup = b.ratio(&n_fs, &n_fv).unwrap_or(0.0);
         println!(
             "  {:<8} {tier} vs scalar: i8 gemm {i8_speedup:.2}x, ternary {tern_speedup:.2}x, \
@@ -256,17 +261,77 @@ fn main() {
         let elems = (rows * fch) as f64;
         let mut out = vec![0i8; rows * fch];
         b.bench("requant epilogue apply scalar", elems, || {
-            epi.apply_i8_with(SimdTier::Scalar, &acc, 0, rows, fch, None, &mut out);
+            epi.apply_i8_with(SimdTier::Scalar, &acc, 0, rows, fch, None, None, &mut out);
             out[0]
         });
         let name_v = format!("requant epilogue apply {tier}");
         b.bench(&name_v, elems, || {
-            epi.apply_i8_with(tier, &acc, 0, rows, fch, None, &mut out);
+            epi.apply_i8_with(tier, &acc, 0, rows, fch, None, None, &mut out);
             out[0]
         });
         b.ratio("requant epilogue apply scalar", &name_v).unwrap_or(0.0)
     };
     println!("epilogue apply {tier} vs scalar: {epi_speedup:.2}x");
+
+    println!("\n== E5.8: steady-state forward — workspace reuse & 1x1 im2col-free path ==");
+    // whole-network forward on the resnet-mini layer shapes: the per-call
+    // allocating wrapper (fresh ForwardWorkspace per request) vs steady-state
+    // reuse of one warmed arena (the serving configuration)
+    let scheme = Scheme::parse("8a2w_n4").unwrap();
+    let qparams = QModelParams::synthetic(&mini, 5, &scheme);
+    let reg_auto1 = KernelRegistry::new(None, 1);
+    let batch = 2usize;
+    let hw = mini.input_hw;
+    let x_fwd = {
+        let mut r = SplitMix64::new(6);
+        Tensor::new(&[batch, hw, hw, 3], r.normal(batch * hw * hw * 3)).unwrap()
+    };
+    let fwd_units = (mini.total_macs() * batch as u64) as f64;
+    b.bench("forward per-call alloc (batch 2)", fwd_units, || {
+        forward_quant_with(&qparams, &mini, &x_fwd, &reg_auto1)
+    });
+    let mut fwd_ws = ForwardWorkspace::new();
+    let mut fwd_logits = vec![0f32; batch * mini.fc_out];
+    // warm the arena once so the measured loop is the zero-alloc steady state
+    forward_quant_into(&qparams, &mini, &x_fwd, &reg_auto1, &mut fwd_ws, &mut fwd_logits);
+    println!("  workspace arena after warm-up: {} KB", fwd_ws.allocated_bytes() / 1024);
+    b.bench("forward workspace reuse (batch 2)", fwd_units, || {
+        forward_quant_into(&qparams, &mini, &x_fwd, &reg_auto1, &mut fwd_ws, &mut fwd_logits);
+        fwd_logits[0]
+    });
+    let workspace_reuse_speedup =
+        b.ratio("forward per-call alloc (batch 2)", "forward workspace reuse (batch 2)").unwrap_or(0.0);
+    println!("workspace reuse vs per-call alloc: {workspace_reuse_speedup:.2}x");
+
+    // bottleneck-shaped 1x1/s1/p0 conv: the im2col "patch matrix" is an
+    // element-for-element copy of the NHWC activations, so the direct path
+    // feeds the activation buffer straight to the fused GEMM
+    let (oh, ow, cin1, cf1) = (14usize, 14, 64, 64);
+    let m1 = oh * ow;
+    let a1 = relu_like(&rand_i8(&[m1, cin1], &mut rng));
+    let w1 = rand_ternary(&[cin1, cf1], &mut rng);
+    let pl1 = PackedLayer::build(&w1, &[], 0);
+    let ws1: Vec<f32> = (0..cf1).map(|i| 0.0015 * (1 + i % 4) as f32).collect();
+    let ones1 = vec![1.0f32; cf1];
+    let shift1 = vec![0.1f32; cf1];
+    let epi1 = LayerRequant::derive(&ws1, &ones1, &shift1).unwrap().resolve(-4, -4, true);
+    let macs1 = (m1 * cin1 * cf1) as f64;
+    let mut cols1 = vec![0i8; m1 * cin1];
+    let mut out1 = vec![0i8; m1 * cf1];
+    let mut acc1 = vec![0i32; m1 * cf1];
+    b.bench("conv1x1 via im2col copy (196x64x64)", macs1, || {
+        im2col_into(a1.data(), 1, oh, ow, cin1, 1, 1, 1, 0, &mut cols1, reg_auto1.pool());
+        reg_auto1.gemm_fused_into(&cols1, m1, cin1, cf1, &pl1, w1.data(), &epi1, None, None, &mut out1, &mut acc1);
+        out1[0]
+    });
+    b.bench("conv1x1 direct im2col-free (196x64x64)", macs1, || {
+        reg_auto1.gemm_fused_into(a1.data(), m1, cin1, cf1, &pl1, w1.data(), &epi1, None, None, &mut out1, &mut acc1);
+        out1[0]
+    });
+    let conv1x1_direct_speedup = b
+        .ratio("conv1x1 via im2col copy (196x64x64)", "conv1x1 direct im2col-free (196x64x64)")
+        .unwrap_or(0.0);
+    println!("1x1 direct vs im2col: {conv1x1_direct_speedup:.2}x");
 
     let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     let extras = vec![
@@ -275,6 +340,8 @@ fn main() {
         ("fused_epilogue_speedup_vs_f32", Json::num(fused_speedup)),
         ("simd_tier", Json::str(tier.to_string())),
         ("simd_epilogue_apply_speedup", Json::num(epi_speedup)),
+        ("workspace_reuse_speedup", Json::num(workspace_reuse_speedup)),
+        ("conv1x1_direct_speedup", Json::num(conv1x1_direct_speedup)),
         ("resnet_mini_layers", Json::Arr(layer_rows)),
         ("simd_vs_scalar_layers", Json::Arr(simd_rows)),
     ];

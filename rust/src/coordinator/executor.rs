@@ -11,7 +11,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::kernels::KernelRegistry;
-use crate::lpinfer::{forward_quant_with, QModelParams};
+use crate::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
 use crate::model::Network;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -87,10 +87,18 @@ impl Executor for PjrtExecutor {
 /// `kernels/` registry for every variant it holds. Unlike [`PjrtExecutor`]
 /// it accepts any batch size, so the advertised `batch_sizes` are purely a
 /// batching-policy knob.
+///
+/// Each executor owns one [`ForwardWorkspace`] arena, and the coordinator
+/// builds one executor per worker thread — so concurrent serving reuses a
+/// per-worker arena instead of allocating activation/im2col/accumulator
+/// tensors per request (after warm-up, a steady-state batch forwards with
+/// zero heap allocations on a single-threaded registry; see
+/// `lpinfer::forward_quant_into`).
 pub struct LpExecutor {
     net: Network,
     variants: BTreeMap<String, QModelParams>,
     registry: KernelRegistry,
+    workspace: ForwardWorkspace,
     sizes: Vec<usize>,
     img: usize,
     classes: usize,
@@ -116,7 +124,7 @@ impl LpExecutor {
             sizes = vec![1, 8, 32];
         }
         let (img, classes) = (net.input_hw, net.fc_out);
-        Ok(Self { net, variants, registry, sizes, img, classes })
+        Ok(Self { net, variants, registry, workspace: ForwardWorkspace::new(), sizes, img, classes })
     }
 
     /// The manifest variants this executor could serve from `dir`: sub-8-bit
@@ -206,7 +214,11 @@ impl Executor for LpExecutor {
             x.shape(),
             i = self.img
         );
-        Ok(forward_quant_with(params, &self.net, x, &self.registry))
+        // per-worker workspace arena: steady-state batches reuse the same
+        // buffers; only the logits tensor handed back is allocated here
+        let mut logits = Tensor::<f32>::zeros(&[batch, self.classes]);
+        forward_quant_into(params, &self.net, x, &self.registry, &mut self.workspace, logits.data_mut());
+        Ok(logits)
     }
 
     fn batch_sizes(&self, variant: &str) -> Vec<usize> {
@@ -336,6 +348,25 @@ mod tests {
         assert!(y.data().iter().all(|v| v.is_finite()));
         assert!(e.run_batch("missing", 2, &x).is_err());
         assert!(e.run_batch("8a2w_n4", 4, &x).is_err()); // batch mismatch
+    }
+
+    #[test]
+    fn test_lp_executor_workspace_reuse_is_bit_exact_across_requests() {
+        // repeated and size-varying batches through the same executor (and
+        // therefore the same ForwardWorkspace arena) must match the
+        // allocating forward exactly — a dirty arena can never leak
+        let mut e = lp_executor();
+        let mut rng = crate::util::SplitMix64::new(77);
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        for (variant, batch) in [("8a2w_n4", 2usize), ("8a4w_n4", 1), ("8a2w_n4", 4), ("8a2w_n4", 4)] {
+            let x = Tensor::new(&[batch, 8, 8, 3], rng.normal(batch * 8 * 8 * 3)).unwrap();
+            let scheme = crate::scheme::Scheme::parse(variant).unwrap();
+            let seed = if variant == "8a2w_n4" { 3 } else { 4 };
+            let params = QModelParams::synthetic(&net, seed, &scheme);
+            let want = crate::lpinfer::forward_quant(&params, &net, &x);
+            let got = e.run_batch(variant, batch, &x).unwrap();
+            assert_eq!(got.data(), want.data(), "variant {variant} batch {batch}");
+        }
     }
 
     #[test]

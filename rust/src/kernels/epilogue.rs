@@ -297,6 +297,17 @@ impl ResolvedEpilogue {
     /// (`SimdLanes`) and — when a skip lane is present — every skip value
     /// in the block is below the overflow-safety limit; otherwise falls
     /// back to the scalar path. Bit-identical either way.
+    ///
+    /// `skip_max`, when provided, is the per-row max `|skip|` of the full
+    /// (M, F) lane, carried from where the lane was produced
+    /// ([`crate::kernels::KernelRegistry::gemm_fused_skip_into`] or the
+    /// identity-skip rescale). The overflow gate then checks `rows` maxima
+    /// instead of re-scanning the `rows × f` block — the values were last
+    /// touched at production time, so the re-scan here would pull the whole
+    /// lane through the cache once more per consuming block. Because a
+    /// row's max is below the limit iff every value in the row is, the gate
+    /// decision (and therefore the output) is identical with or without the
+    /// maxima.
     #[allow(clippy::too_many_arguments)]
     pub fn apply_i8_with(
         &self,
@@ -306,6 +317,7 @@ impl ResolvedEpilogue {
         rows: usize,
         f: usize,
         skip: Option<&[i64]>,
+        skip_max: Option<&[i64]>,
         out: &mut [i8],
     ) {
         debug_assert_eq!(self.len(), f);
@@ -313,10 +325,12 @@ impl ResolvedEpilogue {
         debug_assert_eq!(out.len(), rows * f);
         if tier != SimdTier::Scalar {
             if let Some(lanes) = &self.simd {
-                let skip_ok = match skip {
-                    None => true,
-                    Some(sk) => {
-                        let lim = lanes.skip_abs_limit;
+                let lim = lanes.skip_abs_limit;
+                let skip_ok = match (skip, skip_max) {
+                    (None, _) => true,
+                    // carried per-row maxima: O(rows) gate, no lane re-scan
+                    (Some(_), Some(mx)) => mx[row0..row0 + rows].iter().all(|&m| m < lim),
+                    (Some(sk), None) => {
                         sk[row0 * f..(row0 + rows) * f].iter().all(|&s| s > -lim && s < lim)
                     }
                 };
@@ -566,12 +580,24 @@ mod tests {
             let acc: Vec<i32> = (0..rows * f).map(|_| rng.next_u64() as i32 >> 8).collect();
             let skip: Vec<i64> =
                 (0..m * f).map(|_| rng.next_below(1 << 24) as i64 - (1 << 23)).collect();
+            // per-row maxima of the full (M, F) lane, as producers carry them
+            let row_max: Vec<i64> = (0..m)
+                .map(|r| skip[r * f..(r + 1) * f].iter().map(|s| s.saturating_abs()).max().unwrap())
+                .collect();
             for sk in [None, Some(&skip[..])] {
                 let mut want = vec![0i8; rows * f];
                 epi.apply_i8(&acc, row0, rows, f, sk, &mut want);
-                let mut got = vec![0i8; rows * f];
-                epi.apply_i8_with(tier, &acc, row0, rows, f, sk, &mut got);
-                assert_eq!(got, want, "trial {trial} f={f} skip={}", sk.is_some());
+                for mx in [None, Some(&row_max[..])] {
+                    let mut got = vec![0i8; rows * f];
+                    epi.apply_i8_with(tier, &acc, row0, rows, f, sk, mx, &mut got);
+                    assert_eq!(
+                        got,
+                        want,
+                        "trial {trial} f={f} skip={} max={}",
+                        sk.is_some(),
+                        mx.is_some()
+                    );
+                }
             }
             let mut want = vec![0i64; rows * f];
             epi.apply_skip(&acc, rows, f, &mut want);
@@ -594,19 +620,23 @@ mod tests {
         let mut want = vec![0i8; 4];
         epi.apply_i8(&acc, 0, 2, 2, None, &mut want);
         let mut got = vec![0i8; 4];
-        epi.apply_i8_with(SimdTier::detect(), &acc, 0, 2, 2, None, &mut got);
+        epi.apply_i8_with(SimdTier::detect(), &acc, 0, 2, 2, None, None, &mut got);
         assert_eq!(got, want);
 
-        // oversized skip values trip the per-block limit check
+        // oversized skip values trip the per-block limit check — whether the
+        // gate scans the block or reads the carried per-row maxima
         let lr = LayerRequant::derive(&[0.01, 0.02], &[1.0, 1.0], &[0.0, 0.0]).unwrap();
         let epi = lr.resolve(-4, -4, true);
         assert!(epi.simd.is_some());
         let huge = vec![i64::MAX / 2; 4];
+        let huge_max = vec![i64::MAX / 2; 2];
         let mut want = vec![0i8; 4];
         epi.apply_i8(&acc, 0, 2, 2, Some(&huge), &mut want);
-        let mut got = vec![0i8; 4];
-        epi.apply_i8_with(SimdTier::detect(), &acc, 0, 2, 2, Some(&huge), &mut got);
-        assert_eq!(got, want);
+        for mx in [None, Some(&huge_max[..])] {
+            let mut got = vec![0i8; 4];
+            epi.apply_i8_with(SimdTier::detect(), &acc, 0, 2, 2, Some(&huge), mx, &mut got);
+            assert_eq!(got, want, "max carried: {}", mx.is_some());
+        }
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //!   with the scalar kernels as the guaranteed fallback;
 //! * [`registry`] — [`KernelRegistry`]: runtime selection among the
 //!   kernels by weight encoding *and* SIMD tier, with a `--kernel` CLI
-//!   override (`<encoding>[+<tier>]`);
+//!   override (`<encoding>[+<tier>]`); every GEMM has a borrowed-output
+//!   `*_into` form (caller-owned output + accumulator scratch, zero
+//!   allocations) next to its allocating wrapper;
 //! * [`epilogue`] — the fused integer requantization epilogue
 //!   ([`LayerRequant`] / [`ResolvedEpilogue`]): folded batch-norm +
 //!   activation rescale applied to each accumulator tile as fixed-point

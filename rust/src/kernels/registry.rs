@@ -216,50 +216,101 @@ impl KernelRegistry {
         }
     }
 
-    /// Dispatch one GEMM: `a` (M,K) i8 activations, `dense` the (K,F) i8
-    /// codes, `packed` the layer's packed encodings. Returns (M,F) i32.
-    pub fn gemm(&self, a: &Tensor<i8>, dense: &Tensor<i8>, packed: &PackedLayer) -> Tensor<i32> {
-        self.gemm_with(a, packed, || dense.clone())
+    /// Output-channel count of the kernel [`Self::select`] will run: the
+    /// packed matrix's `f` for a packed encoding, the last axis of the
+    /// dense operand otherwise (so HWIO weight tensors work unreshaped).
+    fn out_features(&self, packed: &PackedLayer, dense: &Tensor<i8>) -> usize {
+        match self.select(packed) {
+            KernelKind::PackedTernary => packed.ternary.as_ref().expect("selected").f,
+            KernelKind::PackedI4 => packed.i4.as_ref().expect("selected").f,
+            KernelKind::I8ZeroSkip | KernelKind::I8Dense => *dense.shape().last().unwrap_or(&0),
+        }
     }
 
-    /// Like [`Self::gemm`] but the dense (K,F) operand is produced lazily —
-    /// the packed kernels never touch it, so callers that keep weights
-    /// packed (the lpinfer hot path) skip the dense materialization.
-    pub fn gemm_with(
-        &self,
-        a: &Tensor<i8>,
-        packed: &PackedLayer,
-        dense: impl FnOnce() -> Tensor<i8>,
-    ) -> Tensor<i32> {
+    /// Dispatch one GEMM: `a` (M,K) i8 activations, `dense` the layer's i8
+    /// codes (any row-major ..×F layout whose trailing axis is the filter
+    /// axis — (K,F) and HWIO both work; it is only read when no packed
+    /// encoding is selected), `packed` the layer's packed encodings.
+    /// Returns (M,F) i32. Allocating wrapper over [`Self::gemm_into`].
+    pub fn gemm(&self, a: &Tensor<i8>, dense: &Tensor<i8>, packed: &PackedLayer) -> Tensor<i32> {
         let (m, k) = (a.dim(0), a.dim(1));
-        let ad = a.data();
+        let f = self.out_features(packed, dense);
+        let mut out = Tensor::<i32>::zeros(&[m, f]);
+        self.gemm_into(a.data(), m, k, f, packed, dense.data(), out.data_mut());
+        out
+    }
+
+    /// Resolve the kernel [`Self::select`] picks into its row-block compute
+    /// closure (`compute(row0, rows, acc)` accumulates rows `row0..row0+rows`
+    /// into a zeroed block-local tile) and hand it to `run` — the one place
+    /// the encoding dispatch and its shape asserts live, shared by every
+    /// borrowed-output entry point. `entry` names the caller for assert
+    /// messages.
+    fn with_compute(
+        &self,
+        entry: &str,
+        a: &[i8],
+        k: usize,
+        f: usize,
+        packed: &PackedLayer,
+        dense: &[i8],
+        run: &mut dyn FnMut(&(dyn Fn(usize, usize, &mut [i32]) + Sync)),
+    ) {
         let tier = self.tier;
         match self.select(packed) {
             KernelKind::PackedTernary => {
                 let w = packed.ternary.as_ref().expect("selected");
-                assert_eq!(k, w.k, "gemm: A is (.., {k}) but W is ({}, ..)", w.k);
-                unfused_i32(m, w.f, &self.pool, |row0, rows, acc| {
-                    simd::tern_row_block(tier, ad, k, row0, rows, w, acc);
-                })
+                assert_eq!((k, f), (w.k, w.f), "{entry}: ({k},{f}) vs packed ({}, {})", w.k, w.f);
+                run(&|row0, rows, acc: &mut [i32]| {
+                    simd::tern_row_block(tier, a, k, row0, rows, w, acc);
+                });
             }
             KernelKind::PackedI4 => {
                 let w = packed.i4.as_ref().expect("selected");
-                assert_eq!(k, w.k, "gemm: A is (.., {k}) but W is ({}, ..)", w.k);
-                unfused_i32(m, w.f, &self.pool, |row0, rows, acc| {
-                    i4_row_block(ad, k, row0, rows, w, acc);
-                })
+                assert_eq!((k, f), (w.k, w.f), "{entry}: ({k},{f}) vs packed ({}, {})", w.k, w.f);
+                run(&|row0, rows, acc: &mut [i32]| {
+                    i4_row_block(a, k, row0, rows, w, acc);
+                });
             }
             kind @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense) => {
-                let b = dense();
-                assert_eq!(k, b.dim(0), "gemm: A is (.., {k}) but W is ({}, ..)", b.dim(0));
-                let f = b.dim(1);
-                let bd = b.data();
+                assert_eq!(
+                    dense.len(),
+                    k * f,
+                    "{entry}: dense operand has {} codes for a ({k}, {f}) layer",
+                    dense.len()
+                );
                 let zero_skip = kind == KernelKind::I8ZeroSkip;
-                unfused_i32(m, f, &self.pool, |row0, rows, acc| {
-                    simd::i8_row_block(tier, ad, bd, k, f, row0, rows, acc, zero_skip);
-                })
+                run(&|row0, rows, acc: &mut [i32]| {
+                    simd::i8_row_block(tier, a, dense, k, f, row0, rows, acc, zero_skip);
+                });
             }
         }
+    }
+
+    /// Borrowed-output GEMM: accumulate `a` (M×K, row-major) against the
+    /// layer's weights into the caller's `out` (M×F, overwritten) — no
+    /// allocation. `dense` is the flat (K,F) code slice (an HWIO weight
+    /// buffer *is* this slice, so callers pass `wq.data()` — it is only
+    /// read when no packed encoding is selected, and may be empty then).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_into(
+        &self,
+        a: &[i8],
+        m: usize,
+        k: usize,
+        f: usize,
+        packed: &PackedLayer,
+        dense: &[i8],
+        out: &mut [i32],
+    ) {
+        assert_eq!(a.len(), m * k, "gemm: A has {} codes for an {m}x{k} operand", a.len());
+        assert_eq!(out.len(), m * f, "gemm: out has {} slots for an {m}x{f} result", out.len());
+        self.with_compute("gemm", a, k, f, packed, dense, &mut |compute| {
+            self.pool.run_row_blocks(&mut *out, m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
+                block.fill(0);
+                compute(row0, rows, block);
+            });
+        });
     }
 
     /// GEMM with the integer requantization epilogue fused in: the selected
@@ -268,150 +319,145 @@ impl KernelRegistry {
     /// it is still cache-hot — no f32 (and no full-size i32 tensor) is ever
     /// materialized. `skip`, if present, is the (M, F) integer residual
     /// lane (units of `2^-SKIP_FRAC` target-grid steps, see
-    /// [`crate::dfp::SKIP_FRAC`]).
+    /// [`crate::dfp::SKIP_FRAC`]). Allocating wrapper over
+    /// [`Self::gemm_fused_into`].
     pub fn gemm_fused(
         &self,
         a: &Tensor<i8>,
         packed: &PackedLayer,
-        dense: impl FnOnce() -> Tensor<i8>,
+        dense: &Tensor<i8>,
         epi: &ResolvedEpilogue,
         skip: Option<&[i64]>,
     ) -> Tensor<i8> {
         let (m, k) = (a.dim(0), a.dim(1));
-        let ad = a.data();
-        let tier = self.tier;
-        match self.select(packed) {
-            KernelKind::PackedTernary => {
-                let w = packed.ternary.as_ref().expect("selected");
-                assert_eq!(k, w.k, "gemm_fused: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_i8(m, w.f, &self.pool, tier, epi, skip, |row0, rows, acc| {
-                    simd::tern_row_block(tier, ad, k, row0, rows, w, acc);
-                })
-            }
-            KernelKind::PackedI4 => {
-                let w = packed.i4.as_ref().expect("selected");
-                assert_eq!(k, w.k, "gemm_fused: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_i8(m, w.f, &self.pool, tier, epi, skip, |row0, rows, acc| {
-                    i4_row_block(ad, k, row0, rows, w, acc);
-                })
-            }
-            kind @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense) => {
-                let b = dense();
-                assert_eq!(k, b.dim(0), "gemm_fused: A is (.., {k}) but W is ({}, ..)", b.dim(0));
-                let f = b.dim(1);
-                let bd = b.data();
-                let zero_skip = kind == KernelKind::I8ZeroSkip;
-                fused_i8(m, f, &self.pool, tier, epi, skip, |row0, rows, acc| {
-                    simd::i8_row_block(tier, ad, bd, k, f, row0, rows, acc, zero_skip);
-                })
-            }
+        let f = self.out_features(packed, dense);
+        let mut out = Tensor::<i8>::zeros(&[m, f]);
+        let mut scratch = vec![0i32; m * f];
+        self.gemm_fused_into(a.data(), m, k, f, packed, dense.data(), epi, skip, None, out.data_mut(), &mut scratch);
+        out
+    }
+
+    /// Borrowed-output fused GEMM: like [`Self::gemm_fused`] but writing the
+    /// i8 codes into the caller's `out` and accumulating into the caller's
+    /// i32 `scratch` (length ≥ M×F; each row block gets the matching
+    /// sub-slice, so tiles stay block-local and cache-hot exactly as in the
+    /// allocating path) — zero allocations. `skip_max`, if present, carries
+    /// the per-row max `|skip|` produced alongside the lane, replacing the
+    /// vector-gate re-scan (see [`ResolvedEpilogue::apply_i8_with`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_fused_into(
+        &self,
+        a: &[i8],
+        m: usize,
+        k: usize,
+        f: usize,
+        packed: &PackedLayer,
+        dense: &[i8],
+        epi: &ResolvedEpilogue,
+        skip: Option<&[i64]>,
+        skip_max: Option<&[i64]>,
+        out: &mut [i8],
+        scratch: &mut [i32],
+    ) {
+        assert_eq!(epi.len(), f, "epilogue has {} channels for an F={f} GEMM", epi.len());
+        assert_eq!(a.len(), m * k, "gemm_fused: A has {} codes for {m}x{k}", a.len());
+        assert_eq!(out.len(), m * f, "gemm_fused: out has {} slots for {m}x{f}", out.len());
+        assert!(scratch.len() >= m * f, "gemm_fused: scratch {} < {m}x{f}", scratch.len());
+        if let Some(s) = skip {
+            assert_eq!(s.len(), m * f, "skip lane has {} elements for an {m}x{f} GEMM", s.len());
         }
+        if let Some(mx) = skip_max {
+            assert_eq!(mx.len(), m, "skip maxima carry {} rows for an M={m} GEMM", mx.len());
+        }
+        let scratch = &mut scratch[..m * f];
+        let tier = self.tier;
+        self.with_compute("gemm_fused", a, k, f, packed, dense, &mut |compute| {
+            self.pool.run_row_blocks2(
+                &mut *out,
+                &mut *scratch,
+                m,
+                f,
+                f,
+                MIN_ROWS_PER_BLOCK,
+                |row0, rows, oblk, ablk| {
+                    ablk.fill(0);
+                    compute(row0, rows, ablk);
+                    epi.apply_i8_with(tier, ablk, row0, rows, f, skip, skip_max, oblk);
+                },
+            );
+        });
     }
 
     /// Like [`Self::gemm_fused`] but the epilogue writes the i64 integer
     /// residual lane instead of i8 codes — the projection-conv path whose
-    /// output feeds a later layer's skip connection.
+    /// output feeds a later layer's skip connection. Allocating wrapper
+    /// over [`Self::gemm_fused_skip_into`].
     pub fn gemm_fused_skip(
         &self,
         a: &Tensor<i8>,
         packed: &PackedLayer,
-        dense: impl FnOnce() -> Tensor<i8>,
+        dense: &Tensor<i8>,
         epi: &ResolvedEpilogue,
     ) -> Tensor<i64> {
         let (m, k) = (a.dim(0), a.dim(1));
-        let ad = a.data();
+        let f = self.out_features(packed, dense);
+        let mut out = Tensor::<i64>::zeros(&[m, f]);
+        let mut scratch = vec![0i32; m * f];
+        self.gemm_fused_skip_into(a.data(), m, k, f, packed, dense.data(), epi, out.data_mut(), None, &mut scratch);
+        out
+    }
+
+    /// Borrowed-output skip-lane GEMM. `row_max`, when provided (length M),
+    /// receives the per-row max `|value|` of the produced lane — computed
+    /// in one streaming pass right after the blocks complete (typically
+    /// still cache-resident; worst case one sequential re-read), so the
+    /// consuming [`Self::gemm_fused_into`] can gate its vector epilogue on
+    /// `rows` maxima instead of branch-scanning the whole lane per
+    /// consuming block after the intervening conv has evicted it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_fused_skip_into(
+        &self,
+        a: &[i8],
+        m: usize,
+        k: usize,
+        f: usize,
+        packed: &PackedLayer,
+        dense: &[i8],
+        epi: &ResolvedEpilogue,
+        out: &mut [i64],
+        row_max: Option<&mut [i64]>,
+        scratch: &mut [i32],
+    ) {
+        assert_eq!(epi.len(), f, "epilogue has {} channels for an F={f} GEMM", epi.len());
+        assert_eq!(a.len(), m * k, "gemm_fused_skip: A has {} codes for {m}x{k}", a.len());
+        assert_eq!(out.len(), m * f, "gemm_fused_skip: out has {} slots for {m}x{f}", out.len());
+        assert!(scratch.len() >= m * f, "gemm_fused_skip: scratch {} < {m}x{f}", scratch.len());
+        let scratch = &mut scratch[..m * f];
         let tier = self.tier;
-        match self.select(packed) {
-            KernelKind::PackedTernary => {
-                let w = packed.ternary.as_ref().expect("selected");
-                assert_eq!(k, w.k, "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_skip(m, w.f, &self.pool, tier, epi, |row0, rows, acc| {
-                    simd::tern_row_block(tier, ad, k, row0, rows, w, acc);
-                })
-            }
-            KernelKind::PackedI4 => {
-                let w = packed.i4.as_ref().expect("selected");
-                assert_eq!(k, w.k, "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)", w.k);
-                fused_skip(m, w.f, &self.pool, tier, epi, |row0, rows, acc| {
-                    i4_row_block(ad, k, row0, rows, w, acc);
-                })
-            }
-            kind @ (KernelKind::I8ZeroSkip | KernelKind::I8Dense) => {
-                let b = dense();
-                assert_eq!(
-                    k,
-                    b.dim(0),
-                    "gemm_fused_skip: A is (.., {k}) but W is ({}, ..)",
-                    b.dim(0)
-                );
-                let f = b.dim(1);
-                let bd = b.data();
-                let zero_skip = kind == KernelKind::I8ZeroSkip;
-                fused_skip(m, f, &self.pool, tier, epi, |row0, rows, acc| {
-                    simd::i8_row_block(tier, ad, bd, k, f, row0, rows, acc, zero_skip);
-                })
+        self.with_compute("gemm_fused_skip", a, k, f, packed, dense, &mut |compute| {
+            self.pool.run_row_blocks2(
+                &mut *out,
+                &mut *scratch,
+                m,
+                f,
+                f,
+                MIN_ROWS_PER_BLOCK,
+                |row0, rows, oblk, ablk| {
+                    ablk.fill(0);
+                    compute(row0, rows, ablk);
+                    epi.apply_skip_with(tier, ablk, rows, f, oblk);
+                },
+            );
+        });
+        if let Some(mx) = row_max {
+            assert_eq!(mx.len(), m, "row_max carries {} rows for an M={m} GEMM", mx.len());
+            for (r, slot) in mx.iter_mut().enumerate() {
+                *slot = out[r * f..(r + 1) * f]
+                    .iter()
+                    .fold(0i64, |acc, &v| acc.max(v.saturating_abs()));
             }
         }
     }
-}
-
-/// Run `compute` over output-row blocks into a full (M, F) i32 tensor (the
-/// unfused entry points; the FC layer and reference paths need the raw
-/// accumulators).
-fn unfused_i32(
-    m: usize,
-    f: usize,
-    pool: &ThreadPool,
-    compute: impl Fn(usize, usize, &mut [i32]) + Sync,
-) -> Tensor<i32> {
-    let mut out = Tensor::<i32>::zeros(&[m, f]);
-    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
-        compute(row0, rows, block);
-    });
-    out
-}
-
-/// Run `compute` over output-row blocks with a block-local i32 accumulator
-/// tile, applying the requant epilogue to each tile while it is cache-hot.
-fn fused_i8(
-    m: usize,
-    f: usize,
-    pool: &ThreadPool,
-    tier: SimdTier,
-    epi: &ResolvedEpilogue,
-    skip: Option<&[i64]>,
-    compute: impl Fn(usize, usize, &mut [i32]) + Sync,
-) -> Tensor<i8> {
-    assert_eq!(epi.len(), f, "epilogue has {} channels for an F={f} GEMM", epi.len());
-    if let Some(s) = skip {
-        assert_eq!(s.len(), m * f, "skip lane has {} elements for an {m}x{f} GEMM", s.len());
-    }
-    let mut out = Tensor::<i8>::zeros(&[m, f]);
-    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
-        let mut acc = vec![0i32; rows * f];
-        compute(row0, rows, &mut acc);
-        epi.apply_i8_with(tier, &acc, row0, rows, f, skip, block);
-    });
-    out
-}
-
-/// [`fused_i8`] writing the i64 residual lane instead of i8 codes.
-fn fused_skip(
-    m: usize,
-    f: usize,
-    pool: &ThreadPool,
-    tier: SimdTier,
-    epi: &ResolvedEpilogue,
-    compute: impl Fn(usize, usize, &mut [i32]) + Sync,
-) -> Tensor<i64> {
-    assert_eq!(epi.len(), f, "epilogue has {} channels for an F={f} GEMM", epi.len());
-    let mut out = Tensor::<i64>::zeros(&[m, f]);
-    pool.run_row_blocks(out.data_mut(), m, f, MIN_ROWS_PER_BLOCK, |row0, rows, block| {
-        let mut acc = vec![0i32; rows * f];
-        compute(row0, rows, &mut acc);
-        epi.apply_skip_with(tier, &acc, rows, f, block);
-    });
-    out
 }
 
 #[cfg(test)]
@@ -552,13 +598,13 @@ mod tests {
             for tier in test_tiers() {
                 for threads in [1usize, 3] {
                     let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
-                    let got = reg.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip));
+                    let got = reg.gemm_fused(&a, &packed, &wd, &epi, Some(&skip));
                     assert_eq!(
                         got.data(),
                         &want[..],
                         "fused i8, kernel {kind} tier {tier} threads {threads}"
                     );
-                    let got_skip = reg.gemm_fused_skip(&a, &packed, || wd.clone(), &epi);
+                    let got_skip = reg.gemm_fused_skip(&a, &packed, &wd, &epi);
                     assert_eq!(
                         got_skip.data(),
                         &want_skip[..],
@@ -566,6 +612,59 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn test_into_entry_points_ignore_stale_buffer_contents() {
+        use crate::kernels::epilogue::LayerRequant;
+        let (m, k, f) = (19, 11, 13);
+        let (wd, packed) = tern_layer(k, f, 77);
+        let mut rng = SplitMix64::new(78);
+        let a = Tensor::new(
+            &[m, k],
+            (0..m * k).map(|_| (rng.next_below(255) as i16 - 127) as i8).collect::<Vec<i8>>(),
+        )
+        .unwrap();
+        let w_scale: Vec<f32> = (0..f).map(|i| 0.004 * (1 + i % 3) as f32).collect();
+        let ones = vec![1.0f32; f];
+        let quarter = vec![0.25f32; f];
+        let lr = LayerRequant::derive(&w_scale, &ones, &quarter).unwrap();
+        let epi = lr.resolve(-4, -4, true);
+        let reg = KernelRegistry::new(None, 2);
+        let want = reg.gemm(&a, &wd, &packed);
+        let want_fused = reg.gemm_fused(&a, &packed, &wd, &epi, None);
+        let want_skip = reg.gemm_fused_skip(&a, &packed, &wd, &epi);
+        // reused arena buffers arrive full of garbage: results must not
+        // depend on prior contents of out or scratch
+        let mut out_i32 = vec![i32::MIN; m * f];
+        reg.gemm_into(a.data(), m, k, f, &packed, wd.data(), &mut out_i32);
+        assert_eq!(&out_i32[..], want.data());
+        let mut out_i8 = vec![-9i8; m * f];
+        let mut scratch = vec![i32::MAX; m * f];
+        reg.gemm_fused_into(a.data(), m, k, f, &packed, wd.data(), &epi, None, None, &mut out_i8, &mut scratch);
+        assert_eq!(&out_i8[..], want_fused.data());
+        let mut out_i64 = vec![i64::MIN + 1; m * f];
+        let mut row_max = vec![-1i64; m];
+        scratch.fill(12345);
+        reg.gemm_fused_skip_into(
+            a.data(),
+            m,
+            k,
+            f,
+            &packed,
+            wd.data(),
+            &epi,
+            &mut out_i64,
+            Some(&mut row_max),
+            &mut scratch,
+        );
+        assert_eq!(&out_i64[..], want_skip.data());
+        for (r, &mx) in row_max.iter().enumerate() {
+            let want_mx = want_skip.data()[r * f..(r + 1) * f]
+                .iter()
+                .fold(0i64, |acc, &v| acc.max(v.saturating_abs()));
+            assert_eq!(mx, want_mx, "row {r} max");
         }
     }
 

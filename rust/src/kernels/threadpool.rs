@@ -40,6 +40,11 @@ impl ThreadPool {
     /// across up to `threads` scoped threads. Blocks never shrink below
     /// `min_rows` rows (small problems stay single-threaded), and the body
     /// must fill its block independently of every other block.
+    ///
+    /// With one block (single thread, or too few rows) the body runs inline
+    /// on the calling thread — no spawn, no heap allocation — which is what
+    /// lets the single-threaded `forward_quant` steady state stay
+    /// allocation-free end to end.
     pub fn run_row_blocks<T: Send>(
         &self,
         out: &mut [T],
@@ -48,28 +53,58 @@ impl ThreadPool {
         min_rows: usize,
         body: impl Fn(usize, usize, &mut [T]) + Sync,
     ) {
-        assert_eq!(out.len(), rows * cols, "output buffer shape mismatch");
+        // one splitter serves both entry points: zero-width aux of the same
+        // element type, so every block's aux slice is empty
+        self.run_row_blocks2(out, &mut [] as &mut [T], rows, cols, 0, min_rows, |row0, n, block, _aux| {
+            body(row0, n, block)
+        });
+    }
+
+    /// [`Self::run_row_blocks`] over *two* row-major buffers sharing the
+    /// same row count (`cols_out` / `cols_aux` columns each): both are split
+    /// at the same row boundaries and the body gets the matching pair of
+    /// blocks. This is how the fused GEMMs thread a caller-owned i32
+    /// accumulator scratch alongside the output without allocating a tile
+    /// per block — each block's scratch is a disjoint sub-slice of one
+    /// long-lived arena buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_row_blocks2<T: Send, U: Send>(
+        &self,
+        out: &mut [T],
+        aux: &mut [U],
+        rows: usize,
+        cols_out: usize,
+        cols_aux: usize,
+        min_rows: usize,
+        body: impl Fn(usize, usize, &mut [T], &mut [U]) + Sync,
+    ) {
+        assert_eq!(out.len(), rows * cols_out, "output buffer shape mismatch");
+        assert_eq!(aux.len(), rows * cols_aux, "aux buffer shape mismatch");
         if rows == 0 {
             return;
         }
         // floor division keeps every block >= min_rows (the doc contract)
         let blocks = self.threads.min((rows / min_rows.max(1)).max(1));
         if blocks == 1 {
-            body(0, rows, out);
+            body(0, rows, out, aux);
             return;
         }
         let rows_per = rows.div_ceil(blocks);
         std::thread::scope(|s| {
             let body = &body;
-            let mut rest = out;
+            let mut rest_out = out;
+            let mut rest_aux = aux;
             let mut row0 = 0;
             while row0 < rows {
                 let take = rows_per.min(rows - row0);
-                let tail = std::mem::take(&mut rest);
-                let (block, tail) = tail.split_at_mut(take * cols);
-                rest = tail;
+                let tail = std::mem::take(&mut rest_out);
+                let (block_out, tail) = tail.split_at_mut(take * cols_out);
+                rest_out = tail;
+                let tail = std::mem::take(&mut rest_aux);
+                let (block_aux, tail) = tail.split_at_mut(take * cols_aux);
+                rest_aux = tail;
                 let first = row0;
-                s.spawn(move || body(first, take, block));
+                s.spawn(move || body(first, take, block_out, block_aux));
                 row0 += take;
             }
         });
@@ -101,6 +136,41 @@ mod tests {
                 });
                 for (i, v) in out.iter().enumerate() {
                     assert_eq!(*v, i as u32 + 1, "threads={threads} rows={rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_row_blocks2_pairs_cover_exactly_once() {
+        for threads in [1, 2, 4, 7] {
+            for rows in [1usize, 2, 5, 16, 33] {
+                let (co, ca) = (3usize, 2usize);
+                let mut out = vec![0u32; rows * co];
+                let mut aux = vec![0u64; rows * ca];
+                ThreadPool::new(threads).run_row_blocks2(
+                    &mut out,
+                    &mut aux,
+                    rows,
+                    co,
+                    ca,
+                    1,
+                    |r0, n, bo, ba| {
+                        assert_eq!(bo.len(), n * co);
+                        assert_eq!(ba.len(), n * ca);
+                        for (i, v) in bo.iter_mut().enumerate() {
+                            *v += (r0 * co + i) as u32 + 1;
+                        }
+                        for (i, v) in ba.iter_mut().enumerate() {
+                            *v += (r0 * ca + i) as u64 + 1;
+                        }
+                    },
+                );
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(*v, i as u32 + 1, "out threads={threads} rows={rows}");
+                }
+                for (i, v) in aux.iter().enumerate() {
+                    assert_eq!(*v, i as u64 + 1, "aux threads={threads} rows={rows}");
                 }
             }
         }

@@ -28,7 +28,9 @@
 //!   and the 2-bit/4-bit storage packing the kernels consume.
 //! * [`lpinfer`]     — pure-Rust integer inference pipeline: i8 activations,
 //!   i32 accumulators, fused integer requant, i64 residual lane — no f32
-//!   tensor between layers (an f32 reference path remains for validation).
+//!   tensor between layers (an f32 reference path remains for validation);
+//!   `plan` builds the load-time `ForwardPlan` + `ForwardWorkspace` arena
+//!   for the zero-allocation steady-state forward (1×1 convs skip im2col).
 //! * [`nn`]          — pure-Rust f32 reference pipeline (baseline).
 //! * [`opcount`]     — analytic op-count / energy model (§3.3, 16× claim).
 //! * [`model`]       — network descriptions incl. exact ResNet-18/50/101 tables.

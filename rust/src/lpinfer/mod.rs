@@ -11,11 +11,19 @@
 //! stay bit-exact across kernels and thread counts (property-tested in
 //! `rust/tests/kernels_equivalence.rs`).
 //!
+//! The serving entry point is [`forward_quant_into`]: the whole pipeline
+//! runs through a reusable [`ForwardWorkspace`] arena sized once at model
+//! load by the [`ForwardPlan`] (see the [`plan`] module and DESIGN.md
+//! §forward-plan) — pointwise (1×1/s1/p0) convs skip im2col entirely, and
+//! the steady state performs zero heap allocations per request.
+//!
 //! The original f32 epilogue survives as [`forward_quant_ref`] — the
 //! op-for-op mirror of `python/compile/model.py::forward_quant(engine="sim")`
 //! — and [`paths_divergence`] runs both pipelines in per-layer lockstep to
 //! bound their divergence (≤ 1 output code per requantization point,
 //! asserted in `rust/tests/requant_equivalence.rs`).
+
+pub mod plan;
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
@@ -26,11 +34,12 @@ use crate::dfp::{fx_rescale, round_half_even, Requantizer, REQUANT_VERSION, SKIP
 use crate::io::{AnyTensor, TensorMap};
 use crate::kernels::{KernelRegistry, LayerRequant, PackedLayer, ResolvedEpilogue};
 use crate::model::{ConvLayer, Network};
-use crate::nn::im2col;
+use crate::nn::{im2col, im2col_into};
 use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
 use crate::tensor::Tensor;
 
 pub use crate::kernels::{gemm_i8, gemm_i8_dense};
+pub use plan::{BlockStep, ConvDims, ForwardPlan, ForwardWorkspace};
 
 /// Quantized parameters for one conv layer.
 #[derive(Debug, Clone)]
@@ -98,7 +107,12 @@ impl QConvParams {
 /// i4 tail) are first-class.
 #[derive(Debug, Clone)]
 pub struct QModelParams {
-    pub convs: BTreeMap<String, QConvParams>,
+    /// per-layer quantized params. Private because the [`EpilogueCache`] is
+    /// *derived* from these: all mutation goes through
+    /// [`QModelParams::set_conv`], which invalidates the cache, so in-place
+    /// scale edits can never serve stale epilogues (read via
+    /// [`QModelParams::convs()`]).
+    convs: BTreeMap<String, QConvParams>,
     pub fc_wq: Tensor<i8>,
     pub fc_scale: Vec<f32>,
     pub fc_b: Vec<f32>,
@@ -119,6 +133,10 @@ pub struct QModelParams {
     /// [`QModelParams::rebuild_epilogues`] may refresh it, so external code
     /// cannot install a cache that disagrees with the conv scales.
     epilogues: EpilogueCache,
+    /// load-time forward plan (buffer geometry for [`ForwardWorkspace`]),
+    /// rebuilt alongside the epilogue cache. Empty for hand-assembled
+    /// params — the forward pass then derives one per call.
+    plan: ForwardPlan,
 }
 
 /// Every [`ResolvedEpilogue`] the fused forward pass needs, keyed by layer:
@@ -132,8 +150,13 @@ pub struct QModelParams {
 /// you).
 #[derive(Debug, Clone, Default)]
 pub struct EpilogueCache {
-    own: BTreeMap<String, ResolvedEpilogue>,
-    proj: BTreeMap<String, ResolvedEpilogue>,
+    /// own-grid epilogues keyed by layer, each tagged with the `exp_in` it
+    /// was resolved for (the layer's own `act_exp` is fixed by its params,
+    /// so the input exponent pins the resolution completely)
+    own: BTreeMap<String, (i32, ResolvedEpilogue)>,
+    /// consumer-grid epilogues of projection convs, tagged with
+    /// `(exp_in, act_target)`
+    proj: BTreeMap<String, (i32, i32, ResolvedEpilogue)>,
 }
 
 impl EpilogueCache {
@@ -142,10 +165,13 @@ impl EpilogueCache {
     /// when a layer the walk needs is missing from `convs`.
     pub fn build(convs: &BTreeMap<String, QConvParams>, in_exp: i32, net: &Network) -> Self {
         let mut cache = Self::default();
-        let Some(stem) = convs.get("stem") else {
+        // the first layer is the stem positionally, whatever its name —
+        // mirror the forward pass exactly
+        let Some(stem) = net.layers.first().and_then(|l| convs.get(&l.name)) else {
             return cache;
         };
-        cache.own.insert("stem".into(), stem.requant.resolve(in_exp, stem.act_exp, true));
+        let stem_name = net.layers[0].name.clone();
+        cache.own.insert(stem_name, (in_exp, stem.requant.resolve(in_exp, stem.act_exp, true)));
         let mut exp_h = stem.act_exp;
         let mut i = 1;
         while i + 1 < net.layers.len() {
@@ -165,24 +191,32 @@ impl EpilogueCache {
                 let Some(pp) = convs.get(&proj.name) else {
                     return Self::default();
                 };
-                cache.proj.insert(proj.name.clone(), pp.requant.resolve(exp_h, exp2, false));
+                cache.proj.insert(proj.name.clone(), (exp_h, exp2, pp.requant.resolve(exp_h, exp2, false)));
             }
-            cache.own.insert(c1.name.clone(), p1.requant.resolve(exp_h, p1.act_exp, true));
-            cache.own.insert(c2.name.clone(), p2.requant.resolve(p1.act_exp, exp2, true));
+            cache.own.insert(c1.name.clone(), (exp_h, p1.requant.resolve(exp_h, p1.act_exp, true)));
+            cache.own.insert(c2.name.clone(), (p1.act_exp, p2.requant.resolve(p1.act_exp, exp2, true)));
             exp_h = exp2;
             i += if has_proj { 3 } else { 2 };
         }
         cache
     }
 
-    /// The cached own-grid epilogue of a non-projection conv.
-    pub fn own(&self, layer: &str) -> Option<&ResolvedEpilogue> {
-        self.own.get(layer)
+    /// The cached own-grid epilogue of a non-projection conv, provided it
+    /// was resolved for this `exp_in`. The cache records the exponent chain
+    /// it was built against, so running a model against a network whose
+    /// residual-block walk implies different exponents simply *misses* and
+    /// falls back to on-the-fly resolution — a stale entry can never serve.
+    pub fn own(&self, layer: &str, exp_in: i32) -> Option<&ResolvedEpilogue> {
+        self.own.get(layer).and_then(|(e, epi)| (*e == exp_in).then_some(epi))
     }
 
-    /// The cached consumer-grid epilogue of a projection conv.
-    pub fn proj(&self, layer: &str) -> Option<&ResolvedEpilogue> {
-        self.proj.get(layer)
+    /// The cached consumer-grid epilogue of a projection conv, provided it
+    /// was resolved for this `(exp_in, act_target)` pair (see
+    /// [`EpilogueCache::own`] for why the exponents are validated).
+    pub fn proj(&self, layer: &str, exp_in: i32, act_target: i32) -> Option<&ResolvedEpilogue> {
+        self.proj
+            .get(layer)
+            .and_then(|(ei, at, epi)| (*ei == exp_in && *at == act_target).then_some(epi))
     }
 
     /// Number of cached epilogues.
@@ -293,6 +327,7 @@ impl QModelParams {
             scheme,
             fc_packed,
             epilogues: EpilogueCache::default(),
+            plan: ForwardPlan::default(),
         };
         // loaded codes must actually fit the scheme the export declares
         out.validate(net)?;
@@ -394,23 +429,54 @@ impl QModelParams {
             scheme: scheme.clone(),
             fc_packed,
             epilogues: EpilogueCache::default(),
+            plan: ForwardPlan::default(),
         };
         params.rebuild_epilogues(net);
         params
     }
 
-    /// Rebuild the resolved-epilogue cache from the current conv params.
-    /// Loaders call this; it is also required after mutating layer scales
-    /// or requant tensors in place (e.g. in adversarial tests), since the
-    /// cache is derived state.
+    /// Rebuild the load-time caches — the resolved-epilogue cache and the
+    /// [`ForwardPlan`] — from the current conv params and network. Loaders
+    /// call this; it is also how [`QModelParams::set_conv`] edits regain
+    /// their cached epilogues (until then the forward pass resolves on the
+    /// fly, with identical results).
     pub fn rebuild_epilogues(&mut self, net: &Network) {
         self.epilogues = EpilogueCache::build(&self.convs, self.in_exp, net);
+        self.plan = ForwardPlan::build(net);
     }
 
     /// The load-time resolved-epilogue cache (read-only; see
     /// [`QModelParams::rebuild_epilogues`]).
     pub fn epilogues(&self) -> &EpilogueCache {
         &self.epilogues
+    }
+
+    /// The load-time forward plan (read-only; rebuilt by
+    /// [`QModelParams::rebuild_epilogues`]).
+    pub fn forward_plan(&self) -> &ForwardPlan {
+        &self.plan
+    }
+
+    /// Per-layer quantized params, read-only (mutation goes through
+    /// [`QModelParams::set_conv`]).
+    pub fn convs(&self) -> &BTreeMap<String, QConvParams> {
+        &self.convs
+    }
+
+    /// One layer's params, if present.
+    pub fn conv(&self, name: &str) -> Option<&QConvParams> {
+        self.convs.get(name)
+    }
+
+    /// Insert or replace one layer's params, **invalidating** the resolved-
+    /// epilogue cache: the cache is derived from the conv scales, so any
+    /// edit clears it and the forward pass resolves epilogues on the fly
+    /// (bit-identical results) until [`QModelParams::rebuild_epilogues`]
+    /// restores the cached fast path. This is the only mutation path to
+    /// `convs`, which makes serving a stale epilogue unrepresentable.
+    pub fn set_conv(&mut self, name: impl Into<String>, p: QConvParams) {
+        self.convs.insert(name.into(), p);
+        self.epilogues = EpilogueCache::default();
     }
 
     /// Sanity-check the params against the network description *and* the
@@ -462,10 +528,18 @@ fn rq_tensor<'m>(map: &'m TensorMap, layer: &str, suffix: &str) -> Result<&'m An
 /// reference path; the layer-to-layer hot path requantizes in integers
 /// (see [`crate::kernels::epilogue`]).
 pub fn requant(x: &[f32], exp: i32) -> Vec<i8> {
+    let mut out = vec![0i8; x.len()];
+    requant_into(x, exp, &mut out);
+    out
+}
+
+/// Borrowed-output [`requant`] (the workspace entry path).
+pub fn requant_into(x: &[f32], exp: i32, out: &mut [i8]) {
+    assert_eq!(x.len(), out.len(), "requant: {} values into {} slots", x.len(), out.len());
     let scale = 2f64.powi(-exp);
-    x.iter()
-        .map(|&v| round_half_even(f64::from(v) * scale).clamp(-127.0, 127.0) as i8)
-        .collect()
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = round_half_even(f64::from(v) * scale).clamp(-127.0, 127.0) as i8;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -486,13 +560,9 @@ fn qconv_fused(
     reg: &KernelRegistry,
 ) -> Tensor<i8> {
     let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
-    let out = reg.gemm_fused(
-        &cols,
-        &p.packed,
-        || p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape"),
-        epi,
-        skip.map(Tensor::data),
-    );
+    // the HWIO buffer *is* the flat (kh*kw*cin, cout) GEMM operand — the
+    // registry reads it borrowed, no clone/reshape
+    let out = reg.gemm_fused(&cols, &p.packed, &p.wq, epi, skip.map(Tensor::data));
     out.reshape(&[n, ho, wo, l.cout]).expect("conv output shape")
 }
 
@@ -508,31 +578,28 @@ fn qconv_to_skip(
     reg: &KernelRegistry,
 ) -> Tensor<i64> {
     let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
-    let out = reg.gemm_fused_skip(
-        &cols,
-        &p.packed,
-        || p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape"),
-        epi,
-    );
+    let out = reg.gemm_fused_skip(&cols, &p.packed, &p.wq, epi);
     out.reshape(&[n, ho, wo, l.cout]).expect("conv output shape")
 }
 
-/// Borrow a layer's cached own-grid epilogue, or resolve it on the fly for
-/// hand-assembled params (identical result either way).
+/// Borrow a layer's cached own-grid epilogue, or resolve it on the fly —
+/// for hand-assembled params (empty cache) or when the cached entry was
+/// built for a different input exponent (mismatched network). Identical
+/// result either way.
 fn own_epi<'a>(
     params: &'a QModelParams,
     name: &str,
     p: &QConvParams,
     exp_in: i32,
 ) -> Cow<'a, ResolvedEpilogue> {
-    match params.epilogues.own(name) {
+    match params.epilogues.own(name, exp_in) {
         Some(e) => Cow::Borrowed(e),
         None => Cow::Owned(p.requant.resolve(exp_in, p.act_exp, true)),
     }
 }
 
 /// Borrow a projection conv's cached consumer-grid epilogue, or resolve it
-/// on the fly.
+/// on the fly (see [`own_epi`]).
 fn proj_epi<'a>(
     params: &'a QModelParams,
     name: &str,
@@ -540,7 +607,7 @@ fn proj_epi<'a>(
     exp_in: i32,
     act_target: i32,
 ) -> Cow<'a, ResolvedEpilogue> {
-    match params.epilogues.proj(name) {
+    match params.epilogues.proj(name, exp_in, act_target) {
         Some(e) => Cow::Borrowed(e),
         None => Cow::Owned(p.requant.resolve(exp_in, act_target, false)),
     }
@@ -555,6 +622,109 @@ fn dequant_to_skip(hq: &Tensor<i8>, exp_h: i32, act_target: i32) -> Tensor<i64> 
     hq.map(|v| fx_rescale(i64::from(v), -s))
 }
 
+/// Borrowed-output [`dequant_to_skip`] that also records the per-row max
+/// `|skip|` while the values are in registers — the consuming epilogue's
+/// vector gate reads `rows` maxima instead of re-scanning the lane. `f` is
+/// the consuming layer's channel count (one lane row per output pixel).
+fn dequant_to_skip_into(hq: &[i8], exp_h: i32, act_target: i32, f: usize, out: &mut [i64], row_max: &mut [i64]) {
+    assert_eq!(hq.len(), out.len(), "identity skip: {} codes into {} lane slots", hq.len(), out.len());
+    assert_eq!(out.len(), row_max.len() * f, "identity skip: lane is not {} rows x {f}", row_max.len());
+    let s = SKIP_FRAC + exp_h - act_target;
+    for (r, mx) in row_max.iter_mut().enumerate() {
+        let mut m = 0i64;
+        for c in 0..f {
+            let v = fx_rescale(i64::from(hq[r * f + c]), -s);
+            out[r * f + c] = v;
+            m = m.max(v.saturating_abs());
+        }
+        *mx = m;
+    }
+}
+
+/// Prepare one conv's GEMM operand: the NHWC `input` buffer itself for a
+/// pointwise layer (its im2col is the identity), otherwise im2col into the
+/// `cols` arena (parallel over patch-row blocks on the registry's pool).
+#[allow(clippy::too_many_arguments)]
+fn conv_operand<'a>(
+    reg: &KernelRegistry,
+    l: &ConvLayer,
+    d: &ConvDims,
+    n: usize,
+    h: usize,
+    w: usize,
+    input: &'a [i8],
+    cols: &'a mut [i8],
+) -> &'a [i8] {
+    let m = n * d.m;
+    if d.direct {
+        debug_assert_eq!(input.len(), m * d.k, "pointwise conv operand shape");
+        input
+    } else {
+        let (ho, wo) = im2col_into(
+            input,
+            n,
+            h,
+            w,
+            l.cin,
+            l.kh,
+            l.kw,
+            l.stride,
+            l.pad,
+            &mut cols[..m * d.k],
+            reg.pool(),
+        );
+        debug_assert_eq!((ho, wo), (d.ho, d.wo), "planned vs actual conv output grid");
+        &cols[..m * d.k]
+    }
+}
+
+/// One conv through the workspace path: [`conv_operand`], then the fused
+/// borrowed-output GEMM with the `acc` arena as accumulator scratch.
+#[allow(clippy::too_many_arguments)]
+fn run_conv(
+    reg: &KernelRegistry,
+    l: &ConvLayer,
+    d: &ConvDims,
+    p: &QConvParams,
+    epi: &ResolvedEpilogue,
+    n: usize,
+    h: usize,
+    w: usize,
+    input: &[i8],
+    cols: &mut [i8],
+    acc: &mut [i32],
+    skip: Option<&[i64]>,
+    skip_max: Option<&[i64]>,
+    out: &mut [i8],
+) {
+    let m = n * d.m;
+    let a = conv_operand(reg, l, d, n, h, w, input, cols);
+    reg.gemm_fused_into(a, m, d.k, d.f, &p.packed, p.wq.data(), epi, skip, skip_max, out, acc);
+}
+
+/// [`run_conv`] onto the i64 residual lane (projection convs), carrying the
+/// per-row max `|skip|` for the consuming layer's vector gate.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_skip(
+    reg: &KernelRegistry,
+    l: &ConvLayer,
+    d: &ConvDims,
+    p: &QConvParams,
+    epi: &ResolvedEpilogue,
+    n: usize,
+    h: usize,
+    w: usize,
+    input: &[i8],
+    cols: &mut [i8],
+    acc: &mut [i32],
+    out: &mut [i64],
+    row_max: &mut [i64],
+) {
+    let m = n * d.m;
+    let a = conv_operand(reg, l, d, n, h, w, input, cols);
+    reg.gemm_fused_skip_into(a, m, d.k, d.f, &p.packed, p.wq.data(), epi, out, Some(row_max), acc);
+}
+
 /// Forward a f32 image batch through the integer pipeline with the default
 /// (auto, single-thread) kernel registry. Returns logits.
 pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
@@ -566,94 +736,187 @@ pub fn forward_quant(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> T
 /// integer requant epilogues, i64 residual lane. The only f32 tensors are
 /// the input image and the output logits. Logits are bit-identical for
 /// every registry configuration.
+///
+/// Allocating wrapper over [`forward_quant_into`] with a throwaway
+/// [`ForwardWorkspace`]; serving paths keep a workspace per worker and call
+/// [`forward_quant_into`] directly for the zero-allocation steady state.
 pub fn forward_quant_with(
     params: &QModelParams,
     net: &Network,
     x: &Tensor<f32>,
     reg: &KernelRegistry,
 ) -> Tensor<f32> {
-    let layers: BTreeMap<&str, &ConvLayer> =
-        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+    let mut ws = ForwardWorkspace::new();
+    let mut logits = Tensor::<f32>::zeros(&[x.dim(0), params.fc_b.len()]);
+    forward_quant_into(params, net, x, reg, &mut ws, logits.data_mut());
+    logits
+}
+
+/// The steady-state forward pass: run the whole integer pipeline through a
+/// reusable [`ForwardWorkspace`], writing logits into the caller's buffer
+/// (`n × classes`, row-major).
+///
+/// After the first call has sized the workspace for a batch shape, repeat
+/// calls with the same (or smaller) batch perform **zero heap allocations**
+/// when the model carries its load-built caches ([`EpilogueCache`] +
+/// [`ForwardPlan`]) and the registry is single-threaded (asserted by
+/// `rust/tests/alloc_steady_state.rs`; multi-threaded registries reuse the
+/// same arenas — only the scoped thread spawns allocate). Logits are
+/// bit-identical to [`forward_quant_with`] for every registry
+/// configuration and workspace history.
+pub fn forward_quant_into(
+    params: &QModelParams,
+    net: &Network,
+    x: &Tensor<f32>,
+    reg: &KernelRegistry,
+    ws: &mut ForwardWorkspace,
+    logits: &mut [f32],
+) {
+    let (n, h, w) = (x.dim(0), x.dim(1), x.dim(2));
+    let ncls = params.fc_b.len();
+    assert_eq!(logits.len(), n * ncls, "logits buffer is not {n}x{ncls}");
+    // borrow the load-time plan; hand-built params or off-nominal input
+    // geometry derive one locally (allocates — the steady state never does)
+    let local_plan;
+    let plan: &ForwardPlan = if params.plan.matches(net, h, w) {
+        &params.plan
+    } else {
+        local_plan = ForwardPlan::build_for(net, h, w);
+        &local_plan
+    };
+    assert!(
+        !plan.is_empty(),
+        "forward_quant: no forward plan for network '{}' — it is empty or not stem + (c1, c2[, proj])*",
+        net.name
+    );
+    assert_eq!(x.dim(3), plan.in_c, "input channels != stem cin");
+    ws.ensure(plan, n);
+    let ForwardWorkspace { xq, act_a, act_b, cols, acc, skip, skip_max, sums, fq, fc_acc } = ws;
 
     // quantize input image to int8 DFP (pipeline entry: f32 is allowed here)
-    let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
+    let xq = &mut xq[..n * plan.xq_elems];
+    requant_into(x.data(), params.in_exp, xq);
 
-    let stem_p = &params.convs["stem"];
-    let stem_epi = own_epi(params, "stem", stem_p, params.in_exp);
-    let mut hq = qconv_fused(&xq, layers["stem"], stem_p, &stem_epi, None, reg);
+    let stem_l = &net.layers[0];
+    let sd = &plan.dims[0];
+    let stem_p = &params.convs[&stem_l.name];
+    let stem_epi = own_epi(params, &stem_l.name, stem_p, params.in_exp);
+    run_conv(reg, stem_l, sd, stem_p, &stem_epi, n, h, w, xq, cols, acc, None, None, &mut act_a[..n * sd.m * sd.f]);
+    let (mut cur_h, mut cur_w, mut cur_f) = (sd.ho, sd.wo, sd.f);
     let mut exp_h = stem_p.act_exp;
 
-    let mut i = 1;
-    while i < net.layers.len() {
-        let c1 = &net.layers[i];
-        let c2 = &net.layers[i + 1];
-        let has_proj = net
-            .layers
-            .get(i + 2)
-            .map(|l| l.name.ends_with("proj"))
-            .unwrap_or(false);
-        let exp2 = params.convs[&c2.name].act_exp;
-        // residual on the integer skip lane, targeted at c2's grid
-        let skip_fx = if has_proj {
-            let proj = &net.layers[i + 2];
-            let pp = &params.convs[&proj.name];
-            let pepi = proj_epi(params, &proj.name, pp, exp_h, exp2);
-            qconv_to_skip(&hq, proj, pp, &pepi, reg)
-        } else {
-            dequant_to_skip(&hq, exp_h, exp2)
-        };
-        let p1 = &params.convs[&c1.name];
-        let e1 = own_epi(params, &c1.name, p1, exp_h);
-        let h1 = qconv_fused(&hq, c1, p1, &e1, None, reg);
-        let exp1 = p1.act_exp;
-        let p2 = &params.convs[&c2.name];
-        let e2 = own_epi(params, &c2.name, p2, exp1);
-        hq = qconv_fused(&h1, c2, p2, &e2, Some(&skip_fx), reg);
+    // hq always lives in act_a: c1 writes act_b, c2 lands back in act_a
+    for step in &plan.steps {
+        let c1_l = &net.layers[step.c1];
+        let c2_l = &net.layers[step.c2];
+        let (d1, d2) = (&plan.dims[step.c1], &plan.dims[step.c2]);
+        let p1 = &params.convs[&c1_l.name];
+        let p2 = &params.convs[&c2_l.name];
+        let exp2 = p2.act_exp;
+        let cur_len = n * cur_h * cur_w * cur_f;
+        let m2 = n * d2.m;
+        let skip_len = m2 * d2.f;
+        // residual on the integer skip lane, targeted at c2's grid, with
+        // per-row maxima carried alongside for the vector-epilogue gate
+        match step.proj {
+            Some(pi) => {
+                let proj_l = &net.layers[pi];
+                let pd = &plan.dims[pi];
+                let pp = &params.convs[&proj_l.name];
+                let pepi = proj_epi(params, &proj_l.name, pp, exp_h, exp2);
+                run_conv_skip(
+                    reg,
+                    proj_l,
+                    pd,
+                    pp,
+                    &pepi,
+                    n,
+                    cur_h,
+                    cur_w,
+                    &act_a[..cur_len],
+                    cols,
+                    acc,
+                    &mut skip[..skip_len],
+                    &mut skip_max[..m2],
+                );
+            }
+            None => {
+                dequant_to_skip_into(&act_a[..cur_len], exp_h, exp2, d2.f, &mut skip[..skip_len], &mut skip_max[..m2])
+            }
+        }
+        let e1 = own_epi(params, &c1_l.name, p1, exp_h);
+        let m1 = n * d1.m;
+        run_conv(
+            reg,
+            c1_l,
+            d1,
+            p1,
+            &e1,
+            n,
+            cur_h,
+            cur_w,
+            &act_a[..cur_len],
+            cols,
+            acc,
+            None,
+            None,
+            &mut act_b[..m1 * d1.f],
+        );
+        let e2 = own_epi(params, &c2_l.name, p2, p1.act_exp);
+        run_conv(
+            reg,
+            c2_l,
+            d2,
+            p2,
+            &e2,
+            n,
+            d1.ho,
+            d1.wo,
+            &act_b[..m1 * d1.f],
+            cols,
+            acc,
+            Some(&skip[..skip_len]),
+            Some(&skip_max[..m2]),
+            &mut act_a[..skip_len],
+        );
+        (cur_h, cur_w, cur_f) = (d2.ho, d2.wo, d2.f);
         exp_h = exp2;
-        i += if has_proj { 3 } else { 2 };
     }
 
     // integer global average pool: i64 code sums requantized to feat_exp
     // through a scalar fixed-point multiplier (no f32 feature tensor)
-    let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
-    let mut sums = vec![0i64; n * c];
-    {
-        let hd = hq.data();
-        for b in 0..n {
-            for y in 0..ho {
-                for xx in 0..wo {
-                    let base = ((b * ho + y) * wo + xx) * c;
-                    for ch in 0..c {
-                        sums[b * c + ch] += i64::from(hd[base + ch]);
-                    }
+    let c = cur_f;
+    assert_eq!(c, params.fc_wq.dim(0), "final activation channels != fc_in");
+    let hq = &act_a[..n * cur_h * cur_w * c];
+    let sums = &mut sums[..n * c];
+    sums.fill(0);
+    for b in 0..n {
+        for y in 0..cur_h {
+            for xx in 0..cur_w {
+                let base = ((b * cur_h + y) * cur_w + xx) * c;
+                for ch in 0..c {
+                    sums[b * c + ch] += i64::from(hq[base + ch]);
                 }
             }
         }
     }
-    let gap = Requantizer::from_scale(2f64.powi(exp_h - params.feat_exp) / ((ho * wo) as f64))
+    let gap = Requantizer::from_scale(2f64.powi(exp_h - params.feat_exp) / ((cur_h * cur_w) as f64))
         .expect("GAP requant scale representable");
-    let fq_data: Vec<i8> = sums
-        .iter()
-        .map(|&s| fx_rescale(s * i64::from(gap.mult), gap.shift).clamp(-127, 127) as i8)
-        .collect();
-    let fq = Tensor::new(&[n, c], fq_data).expect("feat shape");
+    let fq = &mut fq[..n * c];
+    for (q, &s) in fq.iter_mut().zip(sums.iter()) {
+        *q = fx_rescale(s * i64::from(gap.mult), gap.shift).clamp(-127, 127) as i8;
+    }
 
     // integer FC; logits are the pipeline output, produced in f32
-    let acc = reg.gemm(&fq, &params.fc_wq, &params.fc_packed);
-    let ncls = params.fc_b.len();
+    let fc_acc = &mut fc_acc[..n * ncls];
+    reg.gemm_into(fq, n, c, ncls, &params.fc_packed, params.fc_wq.data(), fc_acc);
     let fs = 2f32.powi(params.feat_exp);
-    let mut logits = Tensor::<f32>::zeros(&[n, ncls]);
-    {
-        let ld = logits.data_mut();
-        let ad = acc.data();
-        for b in 0..n {
-            for k in 0..ncls {
-                ld[b * ncls + k] =
-                    ad[b * ncls + k] as f32 * (params.fc_scale[k] * fs) + params.fc_b[k];
-            }
+    for b in 0..n {
+        for k in 0..ncls {
+            logits[b * ncls + k] =
+                fc_acc[b * ncls + k] as f32 * (params.fc_scale[k] * fs) + params.fc_b[k];
         }
     }
-    logits
 }
 
 // ---------------------------------------------------------------------------
@@ -679,9 +942,7 @@ fn qconv_ref(
     reg: &KernelRegistry,
 ) -> ConvOut {
     let (cols, (n, ho, wo)) = im2col(x, l.kh, l.kw, l.stride, l.pad);
-    let acc = reg.gemm_with(&cols, &p.packed, || {
-        p.wq.clone().reshape(&[l.kh * l.kw * l.cin, l.cout]).expect("weight reshape")
-    });
+    let acc = reg.gemm(&cols, &p.wq, &p.packed);
     let cout = l.cout;
     let exp_scale = 2f32.powi(exp_in);
     let mut z = vec![0.0f32; acc.len()];
@@ -723,15 +984,14 @@ pub fn forward_quant_ref_with(
     x: &Tensor<f32>,
     reg: &KernelRegistry,
 ) -> Tensor<f32> {
-    let layers: BTreeMap<&str, &ConvLayer> =
-        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
-
     let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
 
-    let stem =
-        qconv_ref(&xq, params.in_exp, layers["stem"], &params.convs["stem"], true, None, false, reg);
+    // the first layer is the stem positionally (same rule as forward_quant)
+    let stem_l = &net.layers[0];
+    let stem_p = &params.convs[&stem_l.name];
+    let stem = qconv_ref(&xq, params.in_exp, stem_l, stem_p, true, None, false, reg);
     let mut hq = stem.q;
-    let mut exp_h = params.convs["stem"].act_exp;
+    let mut exp_h = stem_p.act_exp;
 
     let mut i = 1;
     while i < net.layers.len() {
@@ -839,15 +1099,14 @@ pub fn paths_divergence(
     x: &Tensor<f32>,
     reg: &KernelRegistry,
 ) -> PathsDivergence {
-    let layers: BTreeMap<&str, &ConvLayer> =
-        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
     let mut max_ulp = 0i32;
 
     let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
-    let stem_l = layers["stem"];
-    let stem_p = &params.convs["stem"];
+    // the first layer is the stem positionally (same rule as forward_quant)
+    let stem_l = &net.layers[0];
+    let stem_p = &params.convs[&stem_l.name];
     let stem_ref = qconv_ref(&xq, params.in_exp, stem_l, stem_p, true, None, false, reg);
-    let stem_epi = own_epi(params, "stem", stem_p, params.in_exp);
+    let stem_epi = own_epi(params, &stem_l.name, stem_p, params.in_exp);
     let stem_fused = qconv_fused(&xq, stem_l, stem_p, &stem_epi, None, reg);
     max_ulp = max_ulp.max(code_ulp(&stem_ref.q, &stem_fused));
     let mut hq = stem_ref.q;
@@ -1037,17 +1296,29 @@ mod tests {
     fn test_epilogue_cache_built_at_load_and_equals_fallback() {
         let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
         let params = QModelParams::synthetic(&net, 51, &scheme("8a2w_n4@stem=i8"));
-        // one own-grid entry per non-proj conv, one per projection conv
+        // one own-grid entry per non-proj conv, one per projection conv,
+        // each keyed by the exponent chain of the residual-block walk
         let n_proj = net.layers.iter().filter(|l| l.name.ends_with("proj")).count();
         assert!(n_proj > 0, "test net must exercise the projection path");
         assert_eq!(params.epilogues.len(), net.layers.len());
-        for l in &net.layers {
-            if l.name.ends_with("proj") {
-                assert!(params.epilogues.proj(&l.name).is_some(), "{}", l.name);
-            } else {
-                assert!(params.epilogues.own(&l.name).is_some(), "{}", l.name);
+        assert!(params.epilogues.own("stem", params.in_exp).is_some());
+        let mut exp_h = params.convs["stem"].act_exp;
+        let mut i = 1;
+        while i + 1 < net.layers.len() {
+            let c1 = &net.layers[i];
+            let c2 = &net.layers[i + 1];
+            let has_proj = net.layers.get(i + 2).map(|l| l.name.ends_with("proj")).unwrap_or(false);
+            let exp2 = params.convs[&c2.name].act_exp;
+            if has_proj {
+                assert!(params.epilogues.proj(&net.layers[i + 2].name, exp_h, exp2).is_some());
             }
+            assert!(params.epilogues.own(&c1.name, exp_h).is_some(), "{}", c1.name);
+            assert!(params.epilogues.own(&c2.name, params.convs[&c1.name].act_exp).is_some(), "{}", c2.name);
+            exp_h = exp2;
+            i += if has_proj { 3 } else { 2 };
         }
+        // a mismatched exponent misses instead of serving a stale entry
+        assert!(params.epilogues.own("stem", params.in_exp + 1).is_none());
         // export -> load rebuilds the cache too
         let back = QModelParams::from_tensors(&params.to_tensors(), &net).unwrap();
         assert_eq!(back.epilogues.len(), net.layers.len());
@@ -1089,6 +1360,7 @@ mod tests {
             scheme: scheme("8a2w_n4"),
             fc_packed: PackedLayer::none(),
             epilogues: EpilogueCache::default(),
+            plan: ForwardPlan::default(),
         };
         assert!(params.validate(&net).is_err());
     }
@@ -1177,5 +1449,211 @@ mod tests {
         map.remove("stem.rq_mult");
         let err = QModelParams::from_tensors(&map, &net).unwrap_err().to_string();
         assert!(err.contains("stem.rq_mult"), "{err}");
+    }
+
+    /// The pre-plan forward implementation (one tensor allocation per conv,
+    /// via the Tensor-based helpers) — kept here as the equivalence oracle
+    /// for the workspace rewrite.
+    fn forward_quant_legacy(
+        params: &QModelParams,
+        net: &Network,
+        x: &Tensor<f32>,
+        reg: &KernelRegistry,
+    ) -> Tensor<f32> {
+        let layers: BTreeMap<&str, &ConvLayer> =
+            net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+        let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
+        let stem_p = &params.convs["stem"];
+        let stem_epi = own_epi(params, "stem", stem_p, params.in_exp);
+        let mut hq = qconv_fused(&xq, layers["stem"], stem_p, &stem_epi, None, reg);
+        let mut exp_h = stem_p.act_exp;
+        let mut i = 1;
+        while i < net.layers.len() {
+            let c1 = &net.layers[i];
+            let c2 = &net.layers[i + 1];
+            let has_proj = net
+                .layers
+                .get(i + 2)
+                .map(|l| l.name.ends_with("proj"))
+                .unwrap_or(false);
+            let exp2 = params.convs[&c2.name].act_exp;
+            let skip_fx = if has_proj {
+                let proj = &net.layers[i + 2];
+                let pp = &params.convs[&proj.name];
+                let pepi = proj_epi(params, &proj.name, pp, exp_h, exp2);
+                qconv_to_skip(&hq, proj, pp, &pepi, reg)
+            } else {
+                dequant_to_skip(&hq, exp_h, exp2)
+            };
+            let p1 = &params.convs[&c1.name];
+            let e1 = own_epi(params, &c1.name, p1, exp_h);
+            let h1 = qconv_fused(&hq, c1, p1, &e1, None, reg);
+            let p2 = &params.convs[&c2.name];
+            let e2 = own_epi(params, &c2.name, p2, p1.act_exp);
+            hq = qconv_fused(&h1, c2, p2, &e2, Some(&skip_fx), reg);
+            exp_h = exp2;
+            i += if has_proj { 3 } else { 2 };
+        }
+        let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
+        let mut sums = vec![0i64; n * c];
+        for b in 0..n {
+            for y in 0..ho {
+                for xx in 0..wo {
+                    let base = ((b * ho + y) * wo + xx) * c;
+                    for ch in 0..c {
+                        sums[b * c + ch] += i64::from(hq.data()[base + ch]);
+                    }
+                }
+            }
+        }
+        let gap = Requantizer::from_scale(2f64.powi(exp_h - params.feat_exp) / ((ho * wo) as f64))
+            .expect("GAP requant scale representable");
+        let fq_data: Vec<i8> = sums
+            .iter()
+            .map(|&s| fx_rescale(s * i64::from(gap.mult), gap.shift).clamp(-127, 127) as i8)
+            .collect();
+        let fq = Tensor::new(&[n, c], fq_data).expect("feat shape");
+        let acc = reg.gemm(&fq, &params.fc_wq, &params.fc_packed);
+        let ncls = params.fc_b.len();
+        let fs = 2f32.powi(params.feat_exp);
+        let mut logits = Tensor::<f32>::zeros(&[n, ncls]);
+        for b in 0..n {
+            for k in 0..ncls {
+                logits.data_mut()[b * ncls + k] =
+                    acc.data()[b * ncls + k] as f32 * (params.fc_scale[k] * fs) + params.fc_b[k];
+            }
+        }
+        logits
+    }
+
+    /// stem 3×3 + one block whose c1 is 1×1/stride-1/pad-0 — exercises the
+    /// im2col-free direct path end to end (resnet-mini's own 1×1 convs are
+    /// all strided projections).
+    fn pointwise_net() -> Network {
+        let conv = |name: &str, k: usize, cin: usize, cout: usize, pad: usize| ConvLayer {
+            name: name.into(),
+            kh: k,
+            kw: k,
+            cin,
+            cout,
+            stride: 1,
+            pad,
+            out_hw: 8,
+            residual: false,
+            relu: true,
+        };
+        let mut c2 = conv("s0b0c2", 3, 6, 6, 1);
+        c2.residual = true;
+        Network {
+            name: "pointwise-mini".into(),
+            input_hw: 8,
+            layers: vec![conv("stem", 3, 3, 6, 1), conv("s0b0c1", 1, 6, 6, 0), c2],
+            fc_in: 6,
+            fc_out: 3,
+        }
+    }
+
+    #[test]
+    fn test_workspace_forward_matches_legacy_tensor_path() {
+        for (net, tag) in [
+            (crate::model::resnet_mini(8, &[4, 8, 8], 1, 3), "resnet-mini"),
+            (pointwise_net(), "pointwise"),
+        ] {
+            for (seed, s) in [(41u64, "8a2w_n4"), (42, "8a2w_n4@stem=i8"), (43, "8a4w_n4")] {
+                let params = QModelParams::synthetic(&net, seed, &scheme(s));
+                params.validate(&net).unwrap();
+                let mut rng = SplitMix64::new(seed ^ 7);
+                let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+                for threads in [1usize, 2] {
+                    let reg = KernelRegistry::new(None, threads);
+                    let want = forward_quant_legacy(&params, &net, &x, &reg);
+                    let got = forward_quant_with(&params, &net, &x, &reg);
+                    assert_eq!(got.data(), want.data(), "{tag} scheme={s} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_pointwise_conv_skips_im2col_and_stays_bit_exact() {
+        let net = pointwise_net();
+        let c1 = &net.layers[1];
+        assert!(c1.is_pointwise());
+        let params = QModelParams::synthetic(&net, 44, &scheme("8a2w_n4"));
+        let plan = params.forward_plan();
+        assert!(plan.matches(&net, 8, 8));
+        assert!(plan.dims[1].direct, "1x1/s1/p0 conv must take the direct path");
+        assert!(!plan.dims[0].direct && !plan.dims[2].direct);
+        let mut rng = SplitMix64::new(45);
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        // the direct path must agree with every kernel/thread combination
+        let want = forward_quant(&params, &net, &x);
+        for kind in crate::kernels::ALL_KERNELS {
+            for threads in [1usize, 2] {
+                let reg = KernelRegistry::new(Some(kind), threads);
+                let got = forward_quant_with(&params, &net, &x, &reg);
+                assert_eq!(got.data(), want.data(), "kernel {kind} threads {threads}");
+            }
+        }
+        // and with the f32 reference within the documented lockstep bound
+        let d = paths_divergence(&params, &net, &x, &KernelRegistry::auto());
+        assert!(d.max_code_ulp <= 1, "lockstep divergence {} > 1 code", d.max_code_ulp);
+    }
+
+    #[test]
+    fn test_forward_into_reuses_workspace_across_batches_bit_exact() {
+        let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
+        let params = QModelParams::synthetic(&net, 71, &scheme("8a2w_n4@stem=i8"));
+        let mut ws = ForwardWorkspace::new();
+        let mut rng = SplitMix64::new(72);
+        // grow, shrink, grow, steady — the dirty arena must never leak into
+        // the logits
+        for n in [2usize, 1, 3, 3] {
+            let x = Tensor::new(&[n, 8, 8, 3], rng.normal(n * 8 * 8 * 3)).unwrap();
+            let auto = KernelRegistry::auto();
+            let want = forward_quant_with(&params, &net, &x, &auto);
+            let mut logits = vec![0f32; n * 3];
+            forward_quant_into(&params, &net, &x, &auto, &mut ws, &mut logits);
+            assert_eq!(&logits[..], want.data(), "batch {n}");
+            let reg = KernelRegistry::new(None, 3);
+            forward_quant_into(&params, &net, &x, &reg, &mut ws, &mut logits);
+            assert_eq!(&logits[..], want.data(), "batch {n} threaded");
+        }
+    }
+
+    #[test]
+    fn test_set_conv_invalidates_epilogue_cache_never_stale() {
+        let net = crate::model::resnet_mini(8, &[4, 8, 8], 1, 3);
+        let mut edited = QModelParams::synthetic(&net, 61, &scheme("8a2w_n4"));
+        let mut rebuilt = edited.clone();
+        assert!(!edited.epilogues.is_empty());
+        let name = "s0b0c1";
+        let p = edited.conv(name).unwrap();
+        let doubled = QConvParams::new(
+            p.wq.clone(),
+            p.w_scale.clone(),
+            p.bn_scale.iter().map(|v| v * 2.0).collect(),
+            p.bn_shift.clone(),
+            p.act_exp,
+            p.policy.clone(),
+        )
+        .unwrap();
+        edited.set_conv(name, doubled.clone());
+        // the setter cleared the derived cache — a stale epilogue cannot
+        // survive an in-place scale edit
+        assert!(edited.epilogues.is_empty());
+        rebuilt.set_conv(name, doubled);
+        rebuilt.rebuild_epilogues(&net);
+        assert!(!rebuilt.epilogues.is_empty());
+        let mut rng = SplitMix64::new(62);
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();
+        // on-the-fly resolution (cleared cache) == freshly rebuilt cache,
+        // and both see the *edited* scales
+        let got = forward_quant(&edited, &net, &x);
+        let want = forward_quant(&rebuilt, &net, &x);
+        assert_eq!(got.data(), want.data());
+        let unedited = QModelParams::synthetic(&net, 61, &scheme("8a2w_n4"));
+        let orig = forward_quant(&unedited, &net, &x);
+        assert_ne!(got.data(), orig.data(), "edit must actually change the logits");
     }
 }

@@ -1,0 +1,378 @@
+//! Forward planning: everything the integer forward pass will touch,
+//! computed **once** at model load instead of per request.
+//!
+//! [`ForwardPlan`] walks the [`Network`] a single time (alongside the
+//! [`super::EpilogueCache`] build) and records, per conv, the GEMM geometry
+//! `(m, k, f)`, the output spatial size, and whether the layer is a
+//! 1×1/stride-1/pad-0 conv whose im2col is the identity — plus the maximum
+//! per-image size of every scratch buffer any layer needs. A
+//! [`ForwardWorkspace`] then allocates those buffers once, and
+//! [`super::forward_quant_into`] runs the whole network through them:
+//!
+//! * `xq` — the quantized input image;
+//! * `act_a` / `act_b` — ping-pong i8 activation buffers (a residual block
+//!   reads the running activation from one, writes `c1` into the other, and
+//!   lands `c2` back in the first — two buffers cover any depth);
+//! * `cols` — im2col patch scratch (skipped entirely for pointwise convs:
+//!   the NHWC activation buffer *is* the GEMM operand);
+//! * `acc` — the i32 accumulator arena the fused GEMMs tile per row block;
+//! * `skip` / `skip_max` — the i64 residual lane and its per-row max
+//!   magnitudes (the SIMD epilogue's overflow gate reads the maxima instead
+//!   of re-scanning the lane);
+//! * `sums` / `fq` / `fc_acc` — GAP and FC scratch.
+//!
+//! In steady state (same batch size, model with load-built caches, a
+//! single-threaded registry) a forward pass through a reused workspace
+//! performs **zero heap allocations** — asserted by
+//! `rust/tests/alloc_steady_state.rs`. Multi-threaded registries reuse the
+//! same arenas for all tensor data; only the scoped thread spawns
+//! themselves allocate. Buffers grow monotonically: a larger batch resizes
+//! them once and later batches reuse the high-water mark.
+
+use crate::model::Network;
+
+/// GEMM geometry of one conv layer, for a batch of one image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvDims {
+    /// output pixels per image (`ho * wo`) — GEMM M is `n * m`
+    pub m: usize,
+    /// GEMM depth (`kh * kw * cin`)
+    pub k: usize,
+    /// output channels (GEMM F)
+    pub f: usize,
+    /// output spatial size
+    pub ho: usize,
+    /// output spatial size
+    pub wo: usize,
+    /// 1×1/stride-1/pad-0: the GEMM reads the activation buffer directly,
+    /// no im2col (see [`crate::model::ConvLayer::is_pointwise`])
+    pub direct: bool,
+    // input geometry, kept so [`ForwardPlan::matches`] can verify a plan
+    // against a network without re-walking allocations
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    stride: usize,
+    pad: usize,
+}
+
+/// One residual block of the forward walk: indices into `net.layers`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockStep {
+    pub c1: usize,
+    pub c2: usize,
+    /// projection conv feeding the residual lane (absent = identity skip)
+    pub proj: Option<usize>,
+}
+
+/// The load-time forward plan: per-layer GEMM geometry, the residual-block
+/// walk, and the per-image high-water size of every workspace buffer.
+/// Built by [`ForwardPlan::build`] (called from
+/// `QModelParams::rebuild_epilogues` at load); an empty default plan makes
+/// the forward pass derive one on the fly (hand-assembled params).
+#[derive(Debug, Clone, Default)]
+pub struct ForwardPlan {
+    /// parallel to `net.layers`
+    pub(crate) dims: Vec<ConvDims>,
+    /// residual blocks after the stem
+    pub(crate) steps: Vec<BlockStep>,
+    pub(crate) in_h: usize,
+    pub(crate) in_w: usize,
+    pub(crate) in_c: usize,
+    // per-image element counts of each workspace buffer
+    pub(crate) xq_elems: usize,
+    pub(crate) act_elems: usize,
+    pub(crate) cols_elems: usize,
+    pub(crate) acc_elems: usize,
+    pub(crate) skip_elems: usize,
+    pub(crate) skip_rows: usize,
+    pub(crate) feat_c: usize,
+    pub(crate) classes: usize,
+}
+
+fn conv_dims(l: &crate::model::ConvLayer, h: usize, w: usize) -> ConvDims {
+    let ho = (h + 2 * l.pad - l.kh) / l.stride + 1;
+    let wo = (w + 2 * l.pad - l.kw) / l.stride + 1;
+    ConvDims {
+        m: ho * wo,
+        k: l.kh * l.kw * l.cin,
+        f: l.cout,
+        ho,
+        wo,
+        direct: l.is_pointwise(),
+        kh: l.kh,
+        kw: l.kw,
+        cin: l.cin,
+        stride: l.stride,
+        pad: l.pad,
+    }
+}
+
+impl ForwardPlan {
+    /// Plan for `net` at its nominal input size.
+    pub fn build(net: &Network) -> Self {
+        Self::build_for(net, net.input_hw, net.input_hw)
+    }
+
+    /// Plan for `net` fed `h × w` inputs (the forward pass falls back to
+    /// this when an input disagrees with the nominal geometry).
+    pub fn build_for(net: &Network, in_h: usize, in_w: usize) -> Self {
+        fn note(plan: &mut ForwardPlan, d: &ConvDims) {
+            let out = d.m * d.f;
+            plan.act_elems = plan.act_elems.max(out);
+            plan.acc_elems = plan.acc_elems.max(out);
+            if !d.direct {
+                plan.cols_elems = plan.cols_elems.max(d.m * d.k);
+            }
+        }
+        let mut plan = ForwardPlan {
+            in_h,
+            in_w,
+            in_c: net.layers.first().map(|l| l.cin).unwrap_or(0),
+            feat_c: net.fc_in,
+            classes: net.fc_out,
+            ..ForwardPlan::default()
+        };
+        plan.xq_elems = in_h * in_w * plan.in_c;
+        if net.layers.is_empty() {
+            return plan;
+        }
+        let stem = conv_dims(&net.layers[0], in_h, in_w);
+        note(&mut plan, &stem);
+        let (mut h, mut w) = (stem.ho, stem.wo);
+        let mut dims = vec![stem];
+        let mut steps = Vec::new();
+        let mut i = 1;
+        while i + 1 < net.layers.len() {
+            let has_proj = net
+                .layers
+                .get(i + 2)
+                .map(|l| l.name.ends_with("proj"))
+                .unwrap_or(false);
+            let d1 = conv_dims(&net.layers[i], h, w);
+            let d2 = conv_dims(&net.layers[i + 1], d1.ho, d1.wo);
+            note(&mut plan, &d1);
+            note(&mut plan, &d2);
+            plan.skip_elems = plan.skip_elems.max(d2.m * d2.f);
+            plan.skip_rows = plan.skip_rows.max(d2.m);
+            let (next_h, next_w) = (d2.ho, d2.wo);
+            let d2_f = d2.f;
+            dims.push(d1);
+            dims.push(d2);
+            if has_proj {
+                // the projection reads the *pre-block* activation grid
+                let dp = conv_dims(&net.layers[i + 2], h, w);
+                debug_assert_eq!(
+                    (dp.ho, dp.wo, dp.f),
+                    (next_h, next_w, d2_f),
+                    "projection grid must match the consuming layer"
+                );
+                note(&mut plan, &dp);
+                dims.push(dp);
+                steps.push(BlockStep { c1: i, c2: i + 1, proj: Some(i + 2) });
+            } else {
+                steps.push(BlockStep { c1: i, c2: i + 1, proj: None });
+            }
+            (h, w) = (next_h, next_w);
+            i += if has_proj { 3 } else { 2 };
+        }
+        // every layer must be visited exactly once; a net with a dangling
+        // unpaired tail layer yields the *empty* plan (same degrade rule as
+        // EpilogueCache::build, so Result-returning loaders stay Ok), and
+        // the forward pass then fails loudly instead of silently skipping
+        // the layer — matching the pre-plan loop, which panicked there
+        if dims.len() != net.layers.len() {
+            return ForwardPlan::default();
+        }
+        plan.dims = dims;
+        plan.steps = steps;
+        plan
+    }
+
+    /// True when nothing was planned (default plan of hand-built params).
+    pub fn is_empty(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// Does this plan describe `net` fed `h × w` inputs? A pure, allocation-
+    /// free comparison: per-layer geometry and the residual-block walk must
+    /// both agree.
+    pub fn matches(&self, net: &Network, h: usize, w: usize) -> bool {
+        if self.in_h != h
+            || self.in_w != w
+            || self.dims.len() != net.layers.len()
+            || self.feat_c != net.fc_in
+            || self.classes != net.fc_out
+            || net.layers.first().map(|l| l.cin).unwrap_or(0) != self.in_c
+        {
+            return false;
+        }
+        for (d, l) in self.dims.iter().zip(&net.layers) {
+            if (d.kh, d.kw, d.cin, d.stride, d.pad, d.f)
+                != (l.kh, l.kw, l.cin, l.stride, l.pad, l.cout)
+            {
+                return false;
+            }
+        }
+        // the block walk is keyed on layer *names* (proj detection), which
+        // the geometry check above cannot see
+        let mut i = 1;
+        let mut s = 0;
+        while i + 1 < net.layers.len() {
+            let has_proj = net
+                .layers
+                .get(i + 2)
+                .map(|l| l.name.ends_with("proj"))
+                .unwrap_or(false);
+            let Some(step) = self.steps.get(s) else {
+                return false;
+            };
+            let want_proj = if has_proj { Some(i + 2) } else { None };
+            if step.c1 != i || step.c2 != i + 1 || step.proj != want_proj {
+                return false;
+            }
+            s += 1;
+            i += if has_proj { 3 } else { 2 };
+        }
+        s == self.steps.len()
+    }
+}
+
+/// The reusable forward arena: every buffer `forward_quant_into` writes,
+/// allocated once and grown only when a larger batch arrives. One workspace
+/// per serving worker (see `coordinator::LpExecutor`); borrow it mutably
+/// per request.
+#[derive(Debug, Default)]
+pub struct ForwardWorkspace {
+    pub(crate) xq: Vec<i8>,
+    pub(crate) act_a: Vec<i8>,
+    pub(crate) act_b: Vec<i8>,
+    pub(crate) cols: Vec<i8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) skip: Vec<i64>,
+    pub(crate) skip_max: Vec<i64>,
+    pub(crate) sums: Vec<i64>,
+    pub(crate) fq: Vec<i8>,
+    pub(crate) fc_acc: Vec<i32>,
+}
+
+fn grow<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+}
+
+impl ForwardWorkspace {
+    /// An empty workspace; the first `ensure` sizes it.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to what `plan` needs for an `n`-image batch.
+    /// Monotonic: shrinking batches keep the high-water allocation, equal
+    /// batches allocate nothing.
+    pub fn ensure(&mut self, plan: &ForwardPlan, n: usize) {
+        grow(&mut self.xq, n * plan.xq_elems);
+        grow(&mut self.act_a, n * plan.act_elems);
+        grow(&mut self.act_b, n * plan.act_elems);
+        grow(&mut self.cols, n * plan.cols_elems);
+        grow(&mut self.acc, n * plan.acc_elems);
+        grow(&mut self.skip, n * plan.skip_elems);
+        grow(&mut self.skip_max, n * plan.skip_rows);
+        grow(&mut self.sums, n * plan.feat_c);
+        grow(&mut self.fq, n * plan.feat_c);
+        grow(&mut self.fc_acc, n * plan.classes);
+    }
+
+    /// Total bytes currently held by the arena (introspection / benches).
+    pub fn allocated_bytes(&self) -> usize {
+        self.xq.len()
+            + self.act_a.len()
+            + self.act_b.len()
+            + self.cols.len()
+            + self.fq.len()
+            + 4 * (self.acc.len() + self.fc_acc.len())
+            + 8 * (self.skip.len() + self.skip_max.len() + self.sums.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet_mini;
+
+    #[test]
+    fn test_plan_walk_and_sizes_on_resnet_mini() {
+        let net = resnet_mini(8, &[4, 8, 8], 1, 3);
+        let plan = ForwardPlan::build(&net);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.dims.len(), net.layers.len());
+        assert!(plan.matches(&net, 8, 8));
+        assert!(!plan.matches(&net, 16, 16));
+        // stem: 3x3 s1 p1 on 8x8x3 -> 8x8, k = 27
+        assert_eq!((plan.dims[0].m, plan.dims[0].k, plan.dims[0].f), (64, 27, 4));
+        assert!(!plan.dims[0].direct);
+        // every proj in this family is 1x1 but strided -> never direct
+        for (d, l) in plan.dims.iter().zip(&net.layers) {
+            assert_eq!(d.direct, l.is_pointwise(), "{}", l.name);
+            assert_eq!(d.k, l.kh * l.kw * l.cin, "{}", l.name);
+        }
+        // block walk covers every non-stem layer exactly once
+        let mut seen = vec![false; net.layers.len()];
+        seen[0] = true;
+        for s in &plan.steps {
+            for idx in [Some(s.c1), Some(s.c2), s.proj].into_iter().flatten() {
+                assert!(!seen[idx], "layer {idx} visited twice");
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "walk must cover all layers");
+        // buffer highwater marks cover every layer
+        for d in &plan.dims {
+            assert!(plan.act_elems >= d.m * d.f);
+            assert!(plan.acc_elems >= d.m * d.f);
+            if !d.direct {
+                assert!(plan.cols_elems >= d.m * d.k);
+            }
+        }
+        assert_eq!(plan.feat_c, net.fc_in);
+        assert_eq!(plan.classes, net.fc_out);
+    }
+
+    #[test]
+    fn test_workspace_grow_only() {
+        let net = resnet_mini(8, &[4, 8, 8], 1, 3);
+        let plan = ForwardPlan::build(&net);
+        let mut ws = ForwardWorkspace::new();
+        ws.ensure(&plan, 2);
+        let bytes2 = ws.allocated_bytes();
+        assert!(bytes2 > 0);
+        ws.ensure(&plan, 1); // smaller batch keeps the high-water mark
+        assert_eq!(ws.allocated_bytes(), bytes2);
+        ws.ensure(&plan, 4);
+        assert!(ws.allocated_bytes() > bytes2);
+    }
+
+    #[test]
+    fn test_plan_build_degrades_to_empty_on_dangling_tail_layer() {
+        // a layer the block walk cannot reach must never be silently
+        // skipped: the build degrades to the empty plan (loaders stay Ok)
+        // and the forward pass then refuses to run (loud assert), instead
+        // of producing logits that ignore the layer
+        let mut net = resnet_mini(8, &[4, 4, 4], 1, 3);
+        let mut tail = net.layers[1].clone();
+        tail.name = "dangling".into();
+        net.layers.push(tail);
+        let plan = ForwardPlan::build(&net);
+        assert!(plan.is_empty(), "unwalkable net must yield the empty plan");
+        assert!(!plan.matches(&net, 8, 8));
+    }
+
+    #[test]
+    fn test_default_plan_is_empty_and_mismatches() {
+        let net = resnet_mini(8, &[4, 4, 4], 1, 3);
+        let plan = ForwardPlan::default();
+        assert!(plan.is_empty());
+        assert!(!plan.matches(&net, 8, 8));
+    }
+}

@@ -33,6 +33,14 @@ impl ConvLayer {
         (self.kh * self.kw * self.cin * self.cout * self.out_hw * self.out_hw) as u64
     }
 
+    /// True for 1×1 / stride-1 / pad-0 convolutions, whose im2col patch
+    /// matrix is element-for-element the NHWC input itself — the forward
+    /// pass feeds the activation buffer straight to the GEMM and skips the
+    /// im2col copy entirely (the bulk of ResNet bottleneck convs).
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1 && self.stride == 1 && self.pad == 0
+    }
+
     /// Weights in this layer.
     pub fn n_weights(&self) -> u64 {
         (self.kh * self.kw * self.cin * self.cout) as u64

@@ -9,10 +9,16 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::io::TensorMap;
+use crate::kernels::ThreadPool;
 use crate::model::{ConvLayer, Network};
 use crate::tensor::{Element, Tensor};
 
 pub const BN_EPS: f32 = 1e-5;
+
+/// Don't split an im2col across threads below this many patch rows per
+/// block: a patch row is a handful of `memcpy`s, far cheaper than a GEMM
+/// row, so blocks must be larger before spawn cost amortizes.
+const IM2COL_MIN_ROWS_PER_BLOCK: usize = 64;
 
 /// im2col: NHWC input -> (N*Ho*Wo, kh*kw*C) patch matrix (zero padded).
 /// Patch index varies (kh, kw, C) fastest-last — matches the python
@@ -29,32 +35,61 @@ pub fn im2col<T: Element>(
     let wo = (w + 2 * pad - kw) / stride + 1;
     let k = kh * kw * c;
     let mut out = Tensor::<T>::zeros(&[n * ho * wo, k]);
-    let xd = x.data();
-    let od = out.data_mut();
-    for b in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((b * ho) + oy) * wo + ox;
-                let base = row * k;
-                for ky in 0..kh {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue; // zero padding (already zeroed)
-                    }
-                    for kx in 0..kw {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
+    let pool = ThreadPool::new(1);
+    im2col_into(x.data(), n, h, w, c, kh, kw, stride, pad, out.data_mut(), &pool);
+    (out, (n, ho, wo))
+}
+
+/// Borrowed-output [`im2col`]: build the (N·Ho·Wo, kh·kw·C) patch matrix of
+/// an NHWC buffer into the caller's `out` slice, parallelized over patch-row
+/// blocks on `pool` (each output row depends only on the input, so rows
+/// split freely; small maps stay single-threaded and run inline with zero
+/// allocations). `out` may hold stale data from a previous call — every row
+/// is fully rewritten, with padding positions explicitly zeroed. Returns
+/// `(ho, wo)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into<T: Element>(
+    xd: &[T],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [T],
+    pool: &ThreadPool,
+) -> (usize, usize) {
+    assert_eq!(xd.len(), n * h * w * c, "im2col: input is not (N,{h},{w},{c})");
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let rows = n * ho * wo;
+    assert_eq!(out.len(), rows * k, "im2col: out has {} slots for {rows}x{k}", out.len());
+    pool.run_row_blocks(out, rows, k, IM2COL_MIN_ROWS_PER_BLOCK, |row0, nrows, block| {
+        for r in 0..nrows {
+            let row = row0 + r;
+            let ox = row % wo;
+            let oy = (row / wo) % ho;
+            let b = row / (ho * wo);
+            let orow = &mut block[r * k..(r + 1) * k];
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                for kx in 0..kw {
+                    let dst = (ky * kw + kx) * c;
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                        orow[dst..dst + c].fill(T::default()); // zero padding
+                    } else {
                         let src = ((b * h + iy as usize) * w + ix as usize) * c;
-                        let dst = base + (ky * kw + kx) * c;
-                        od[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                        orow[dst..dst + c].copy_from_slice(&xd[src..src + c]);
                     }
                 }
             }
         }
-    }
-    (out, (n, ho, wo))
+    });
+    (ho, wo)
 }
 
 /// f32 GEMM: (M,K) x (K,F) -> (M,F). Row-major, k-inner loop ordered for
@@ -271,6 +306,27 @@ mod tests {
         let x = rand_tensor(&[1, 4, 4, 2], 2);
         let (_, (_, ho, wo)) = im2col(&x, 3, 3, 2, 1);
         assert_eq!((ho, wo), (2, 2));
+    }
+
+    #[test]
+    fn test_im2col_into_matches_alloc_reuses_dirty_buffer_and_threads() {
+        use crate::kernels::ThreadPool;
+        for (nb, h, w, c, kh, kw, stride, pad) in
+            [(2, 5, 5, 3, 3, 3, 1, 1), (1, 8, 8, 2, 3, 3, 2, 1), (2, 4, 6, 3, 1, 1, 1, 0)]
+        {
+            let x = rand_tensor(&[nb, h, w, c], (h * 10 + w) as u64);
+            let (want, (_, ho, wo)) = im2col(&x, kh, kw, stride, pad);
+            let k = kh * kw * c;
+            for threads in [1usize, 3] {
+                let pool = ThreadPool::new(threads);
+                // dirty buffer: padding zeros must be rewritten, not assumed
+                let mut out = vec![7.5f32; nb * ho * wo * k];
+                let got_hw =
+                    im2col_into(x.data(), nb, h, w, c, kh, kw, stride, pad, &mut out, &pool);
+                assert_eq!(got_hw, (ho, wo));
+                assert_eq!(&out[..], want.data(), "threads={threads} kh={kh} stride={stride}");
+            }
+        }
     }
 
     #[test]

@@ -4,8 +4,10 @@
 
 use anyhow::{bail, Result};
 
-/// Element types storable in a [`Tensor`] / DFT container.
-pub trait Element: Copy + Default + std::fmt::Debug + 'static {
+/// Element types storable in a [`Tensor`] / DFT container. `Send + Sync`
+/// so generic buffers can be filled in parallel over the kernels'
+/// [`crate::kernels::ThreadPool`] (every implementor is a primitive).
+pub trait Element: Copy + Default + std::fmt::Debug + Send + Sync + 'static {
     const DTYPE: DType;
 }
 

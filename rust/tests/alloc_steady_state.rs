@@ -1,0 +1,109 @@
+//! Steady-state allocation accounting for the forward pass.
+//!
+//! The acceptance bar of the forward-planning subsystem (DESIGN.md
+//! §forward-plan): once a [`ForwardWorkspace`] has been sized by a warm-up
+//! call, every subsequent `forward_quant_into` with the same batch shape
+//! must perform **zero heap allocations** — input quantization, im2col (or
+//! the 1×1 direct path), every fused GEMM, the residual lane, GAP, FC and
+//! the logits write all run inside the arena.
+//!
+//! Measured with a counting global allocator wrapping the system one. The
+//! guarantee holds for a single-threaded registry (multi-threaded runs
+//! reuse the same arenas for all tensor data, but `std::thread::scope`
+//! spawns allocate stacks); the model must carry its load-built caches
+//! (epilogue cache + forward plan), which every loader provides.
+//!
+//! This file deliberately contains a single #[test]: the counter is global,
+//! and a concurrently running sibling test would pollute the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dfp_infer::kernels::KernelRegistry;
+use dfp_infer::lpinfer::{forward_quant_into, forward_quant_with, ForwardWorkspace, QModelParams};
+use dfp_infer::model::resnet_mini;
+use dfp_infer::scheme::Scheme;
+use dfp_infer::tensor::Tensor;
+use dfp_infer::util::SplitMix64;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System` unchanged; the counter is a
+// relaxed atomic increment with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_forward_makes_zero_heap_allocations() {
+    let net = resnet_mini(8, &[4, 8, 8], 1, 3);
+    let scheme = Scheme::parse("8a2w_n4@stem=i8").unwrap();
+    // synthetic() builds the load-time caches exactly like the dft loader
+    let params = QModelParams::synthetic(&net, 90, &scheme);
+    assert!(!params.epilogues().is_empty(), "zero-alloc steady state needs the load-built caches");
+    assert!(!params.forward_plan().is_empty());
+    let reg = KernelRegistry::new(None, 1); // single-threaded: no spawns
+    let mut rng = SplitMix64::new(91);
+    let n = 2usize;
+    let x = Tensor::new(&[n, 8, 8, 3], rng.normal(n * 8 * 8 * 3)).unwrap();
+
+    let want = forward_quant_with(&params, &net, &x, &reg);
+
+    let mut ws = ForwardWorkspace::new();
+    let mut logits = vec![0f32; n * net.fc_out];
+    // warm-up: sizes the arena (allocates) and faults the buffers in
+    forward_quant_into(&params, &net, &x, &reg, &mut ws, &mut logits);
+    assert_eq!(&logits[..], want.data(), "workspace path must match the allocating path");
+
+    // steady state: repeat requests through the warmed arena
+    logits.fill(0.0);
+    let before = allocs();
+    for _ in 0..3 {
+        forward_quant_into(&params, &net, &x, &reg, &mut ws, &mut logits);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward_quant_into allocated {} time(s) over 3 requests",
+        after - before
+    );
+    assert_eq!(&logits[..], want.data(), "steady-state logits must stay bit-exact");
+
+    // a smaller batch through the same arena also stays allocation-free
+    // (buffers are a high-water mark, never shrunk)
+    let x1 = Tensor::new(&[1, 8, 8, 3], rng.normal(8 * 8 * 3)).unwrap();
+    let want1 = forward_quant_with(&params, &net, &x1, &reg);
+    let mut logits1 = vec![0f32; net.fc_out];
+    let before = allocs();
+    forward_quant_into(&params, &net, &x1, &reg, &mut ws, &mut logits1);
+    let after = allocs();
+    assert_eq!(after - before, 0, "smaller batch must reuse the high-water arena");
+    assert_eq!(&logits1[..], want1.data());
+}

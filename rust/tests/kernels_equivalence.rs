@@ -198,8 +198,12 @@ fn simd_tier_bit_exact_on_unaligned_k_and_f() {
         let scalar =
             KernelRegistry::with_tier(Some(KernelKind::I8Dense), TierChoice::Forced(SimdTier::Scalar), 1);
         let want = scalar.gemm(&a, &wd, &packed);
-        let want_fused = scalar.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip));
-        let want_skip = scalar.gemm_fused_skip(&a, &packed, || wd.clone(), &epi);
+        let want_fused = scalar.gemm_fused(&a, &packed, &wd, &epi, Some(&skip));
+        let want_skip = scalar.gemm_fused_skip(&a, &packed, &wd, &epi);
+        // per-row maxima of the skip lane, as the forward pass carries them
+        let skip_row_max: Vec<i64> = (0..m)
+            .map(|r| skip[r * f..(r + 1) * f].iter().map(|s| s.saturating_abs()).max().unwrap())
+            .collect();
         for kind in ALL_KERNELS {
             for tier in test_tiers() {
                 for threads in [1usize, 2, 4] {
@@ -207,15 +211,69 @@ fn simd_tier_bit_exact_on_unaligned_k_and_f() {
                     let ctx = format!("m={m} k={k} f={f} kernel={kind} tier={tier} threads={threads}");
                     assert_eq!(reg.gemm(&a, &wd, &packed).data(), want.data(), "gemm {ctx}");
                     assert_eq!(
-                        reg.gemm_fused(&a, &packed, || wd.clone(), &epi, Some(&skip)).data(),
+                        reg.gemm_fused(&a, &packed, &wd, &epi, Some(&skip)).data(),
                         want_fused.data(),
                         "fused {ctx}"
                     );
                     assert_eq!(
-                        reg.gemm_fused_skip(&a, &packed, || wd.clone(), &epi).data(),
+                        reg.gemm_fused_skip(&a, &packed, &wd, &epi).data(),
                         want_skip.data(),
                         "fused-skip {ctx}"
                     );
+                    // borrowed-output entry points over dirty arenas, with
+                    // and without carried skip maxima — bit-exact vs the
+                    // allocating wrappers for every kernel x tier x threads
+                    let mut out_i32 = vec![i32::MIN; m * f];
+                    reg.gemm_into(a.data(), m, k, f, &packed, wd.data(), &mut out_i32);
+                    assert_eq!(&out_i32[..], want.data(), "gemm_into {ctx}");
+                    let mut scratch = vec![i32::MAX; m * f];
+                    for skip_max in [None, Some(&skip_row_max[..])] {
+                        let mut out_i8 = vec![-5i8; m * f];
+                        reg.gemm_fused_into(
+                            a.data(),
+                            m,
+                            k,
+                            f,
+                            &packed,
+                            wd.data(),
+                            &epi,
+                            Some(&skip),
+                            skip_max,
+                            &mut out_i8,
+                            &mut scratch,
+                        );
+                        assert_eq!(
+                            &out_i8[..],
+                            want_fused.data(),
+                            "fused_into {ctx} max={}",
+                            skip_max.is_some()
+                        );
+                    }
+                    let mut out_i64 = vec![i64::MAX; m * f];
+                    let mut row_max = vec![-7i64; m];
+                    reg.gemm_fused_skip_into(
+                        a.data(),
+                        m,
+                        k,
+                        f,
+                        &packed,
+                        wd.data(),
+                        &epi,
+                        &mut out_i64,
+                        Some(&mut row_max),
+                        &mut scratch,
+                    );
+                    assert_eq!(&out_i64[..], want_skip.data(), "fused_skip_into {ctx}");
+                    let want_max: Vec<i64> = (0..m)
+                        .map(|r| {
+                            want_skip.data()[r * f..(r + 1) * f]
+                                .iter()
+                                .map(|s| s.saturating_abs())
+                                .max()
+                                .unwrap()
+                        })
+                        .collect();
+                    assert_eq!(row_max, want_max, "carried skip maxima {ctx}");
                 }
             }
         }
@@ -234,15 +292,16 @@ fn mixed_scheme_layers_carry_policies_and_logits_stay_bit_exact() {
     params.validate(&net).unwrap();
 
     // per-layer policies honored end to end, including the packed encodings
-    assert_eq!(params.convs["stem"].policy.w_bits(), 8);
+    let convs = params.convs();
+    assert_eq!(convs["stem"].policy.w_bits(), 8);
     assert!(
-        params.convs["stem"].packed.ternary.is_none() && params.convs["stem"].packed.i4.is_none(),
+        convs["stem"].packed.ternary.is_none() && convs["stem"].packed.i4.is_none(),
         "random i8 stem codes must not fit a sub-8-bit packing"
     );
-    assert_eq!(params.convs["s0b0c1"].policy.w_bits(), 2);
-    assert!(params.convs["s0b0c1"].packed.ternary.is_some());
-    assert_eq!(params.convs["s2b0c1"].policy.w_bits(), 4);
-    let tail = &params.convs["s2b0c1"].packed;
+    assert_eq!(convs["s0b0c1"].policy.w_bits(), 2);
+    assert!(convs["s0b0c1"].packed.ternary.is_some());
+    assert_eq!(convs["s2b0c1"].policy.w_bits(), 4);
+    let tail = &convs["s2b0c1"].packed;
     assert!(tail.i4.is_some() && tail.ternary.is_none(), "i4 tail packs i4 but not ternary");
     assert_eq!(params.scheme.policy_for("fc").w_bits(), 8);
 
@@ -270,13 +329,13 @@ fn registry_auto_uses_packed_engines_when_available() {
     let net = resnet_mini(8, &[4, 4, 4], 1, 3);
     let tern = QModelParams::synthetic(&net, 9, &Scheme::parse("8a2w_n4").unwrap());
     let reg = KernelRegistry::auto();
-    for p in tern.convs.values() {
+    for p in tern.convs().values() {
         assert_eq!(reg.select(&p.packed), dfp_infer::kernels::KernelKind::PackedTernary);
     }
     let i4 = QModelParams::synthetic(&net, 9, &Scheme::parse("8a4w_n4").unwrap());
     // 4-bit codes almost surely exceed ternary range somewhere
     assert!(i4
-        .convs
+        .convs()
         .values()
         .any(|p| reg.select(&p.packed) == dfp_infer::kernels::KernelKind::PackedI4));
 }

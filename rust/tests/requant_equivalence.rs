@@ -60,10 +60,10 @@ impl Gen for CaseGen {
 fn randomized_model(net: &dfp_infer::model::Network, seed: u64, scheme: &Scheme) -> QModelParams {
     let mut params = QModelParams::synthetic(net, seed, scheme);
     let mut rng = SplitMix64::new(seed ^ 0xBEEF);
-    let names: Vec<String> = params.convs.keys().cloned().collect();
+    let names: Vec<String> = params.convs().keys().cloned().collect();
     for n in &names {
         let (wq, policy, cout) = {
-            let p = &params.convs[n];
+            let p = &params.convs()[n];
             (p.wq.clone(), p.policy.clone(), p.w_scale.len())
         };
         let w_scale: Vec<f32> = (0..cout)
@@ -79,10 +79,11 @@ fn randomized_model(net: &dfp_infer::model::Network, seed: u64, scheme: &Scheme)
         let act_exp = -2 - rng.next_below(5) as i32;
         let rebuilt = QConvParams::new(wq, w_scale, bn_scale, bn_shift, act_exp, policy)
             .expect("finite randomized scales");
-        params.convs.insert(n.clone(), rebuilt);
+        // the invalidating setter: the epilogue cache is derived state, and
+        // this is the only mutation path, so it can never go stale
+        params.set_conv(n.clone(), rebuilt);
     }
-    // the epilogue cache is derived state; the in-place conv swap above
-    // invalidated it
+    // restore the load-time cached epilogues (set_conv cleared them)
     params.rebuild_epilogues(net);
     params
 }
