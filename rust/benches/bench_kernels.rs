@@ -29,6 +29,7 @@ use dfp_infer::model::{resnet101, resnet_mini_default};
 use dfp_infer::nn::{gemm_f32, im2col_into};
 use dfp_infer::opcount;
 use dfp_infer::scheme::Scheme;
+use dfp_infer::telemetry;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::util::SplitMix64;
 
@@ -333,6 +334,28 @@ fn main() {
         .unwrap_or(0.0);
     println!("1x1 direct vs im2col: {conv1x1_direct_speedup:.2}x");
 
+    println!("\n== E5.9: telemetry overhead on the steady-state forward ==");
+    // the per-layer profiler + engine counters are on by default; the
+    // overhead budget for keeping them on in production is <= 2% (ratio
+    // of the same warmed steady-state forward with the kernel-level hooks
+    // enabled vs disabled — the workspace profile stores are always live)
+    b.bench("forward telemetry on (batch 2)", fwd_units, || {
+        forward_quant_into(&qparams, &mini, &x_fwd, &reg_auto1, &mut fwd_ws, &mut fwd_logits);
+        fwd_logits[0]
+    });
+    telemetry::set_enabled(false);
+    b.bench("forward telemetry off (batch 2)", fwd_units, || {
+        forward_quant_into(&qparams, &mini, &x_fwd, &reg_auto1, &mut fwd_ws, &mut fwd_logits);
+        fwd_logits[0]
+    });
+    telemetry::set_enabled(true);
+    let profiling_overhead =
+        b.ratio("forward telemetry on (batch 2)", "forward telemetry off (batch 2)").unwrap_or(0.0);
+    println!(
+        "telemetry-on vs telemetry-off forward: {:+.2}% overhead",
+        (profiling_overhead - 1.0) * 100.0
+    );
+
     let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     let extras = vec![
         ("bench", Json::str("bench_kernels")),
@@ -342,6 +365,7 @@ fn main() {
         ("simd_epilogue_apply_speedup", Json::num(epi_speedup)),
         ("workspace_reuse_speedup", Json::num(workspace_reuse_speedup)),
         ("conv1x1_direct_speedup", Json::num(conv1x1_direct_speedup)),
+        ("profiling_overhead", Json::num(profiling_overhead)),
         ("resnet_mini_layers", Json::Arr(layer_rows)),
         ("simd_vs_scalar_layers", Json::Arr(simd_rows)),
     ];

@@ -1,32 +1,77 @@
-//! Bench E7 — end-to-end serving latency/throughput per precision class
-//! against the real AOT artifacts (skips gracefully if absent).
+//! Bench E7 — end-to-end serving latency/throughput per precision class on
+//! the in-process low-precision executor (synthetic weights, so it runs
+//! anywhere — no AOT artifacts required; `dfp-infer serve` covers the
+//! artifact-backed path). Besides the stdout report it writes
+//! `BENCH_serving.json`: one row per precision class with throughput and
+//! p50/p95/p99 latency, plus the engine-counter deltas attributed to each
+//! class — the serving-level perf baseline subsequent PRs diff against.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use dfp_infer::coordinator::{
-    Coordinator, CoordinatorConfig, ExecutorFactory, PjrtExecutor, PrecisionClass, Request, Router,
+    Coordinator, CoordinatorConfig, Executor, ExecutorFactory, LpExecutor, PrecisionClass, Request,
+    Router,
 };
 use dfp_infer::data;
+use dfp_infer::json::Json;
+use dfp_infer::kernels::KernelRegistry;
+use dfp_infer::lpinfer::QModelParams;
+use dfp_infer::model::resnet_mini_default;
 use dfp_infer::runtime::Manifest;
+use dfp_infer::scheme::Scheme;
+use dfp_infer::telemetry;
 use dfp_infer::util::{Summary, Timer};
 
-fn main() {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP bench_serving: run `make artifacts` first");
-        return;
-    }
-    let n: usize = std::env::var("BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(96);
-    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
-    let router = Router::from_manifest(&manifest).unwrap();
-    let sizes: BTreeMap<String, Vec<usize>> = manifest
-        .variants
+/// The served variant ladder: scheme name + the (w_bits, cluster) the
+/// manifest advertises for routing. Fast routes to the ternary N=64 model,
+/// Balanced to 4-bit, Accurate to full i8.
+const VARIANTS: [(&str, u32, usize); 3] =
+    [("8a2w_n64@stem=i8", 2, 64), ("8a4w_n4@stem=i8", 4, 4), ("8a8w_n4", 8, 4)];
+
+const BATCH_SIZES: [usize; 2] = [1, 8];
+
+fn manifest_json() -> String {
+    let vs: Vec<String> = VARIANTS
         .iter()
-        .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
+        .map(|(name, bits, cluster)| {
+            format!(
+                r#""{name}": {{"files": {{"1": "-", "8": "-"}}, "eval_acc": 0.0, "w_bits": {bits}, "cluster": {cluster}}}"#
+            )
+        })
         .collect();
-    let factories: Vec<ExecutorFactory> = vec![PjrtExecutor::factory(dir, true)];
+    format!(
+        r#"{{"img": 24, "classes": 10, "batch_sizes": [1, 8], "variants": {{{}}}}}"#,
+        vs.join(", ")
+    )
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n: usize = std::env::var("BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 24 } else { 96 });
+
+    let manifest = Manifest::from_json_text(&manifest_json()).unwrap();
+    let router = Router::from_manifest(&manifest).unwrap();
+    let sizes: BTreeMap<String, Vec<usize>> = VARIANTS
+        .iter()
+        .map(|(v, _, _)| (v.to_string(), BATCH_SIZES.to_vec()))
+        .collect();
+
+    let factory: ExecutorFactory = Box::new(|| {
+        let net = resnet_mini_default();
+        let mut variants = BTreeMap::new();
+        for (name, _, _) in VARIANTS {
+            let scheme = Scheme::parse(name)?;
+            variants.insert(name.to_string(), QModelParams::synthetic(&net, 7, &scheme));
+        }
+        let exec = LpExecutor::new(net, variants, KernelRegistry::new(None, 1), BATCH_SIZES.to_vec())?;
+        Ok(Box::new(exec) as Box<dyn Executor>)
+    });
     let coord = Coordinator::start(
-        factories,
+        vec![factory],
         router,
         &sizes,
         manifest.img,
@@ -35,12 +80,20 @@ fn main() {
     .unwrap();
 
     let protos = data::prototypes();
+    // warm each routed variant once so plan/arena builds stay off the clock
+    for class in [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate] {
+        let (img, _) = data::sample(&protos, 5, 0, 1.0);
+        coord.infer(img, class).unwrap();
+    }
+
     println!("== E7: closed-loop serving, {n} requests per precision class ==");
+    let mut cases = Vec::new();
     for (name, class) in [
-        ("fast (ternary N=64)", PrecisionClass::Fast),
-        ("balanced (4-bit)", PrecisionClass::Balanced),
-        ("accurate (fp32)", PrecisionClass::Accurate),
+        ("fast", PrecisionClass::Fast),
+        ("balanced", PrecisionClass::Balanced),
+        ("accurate", PrecisionClass::Accurate),
     ] {
+        let eng0 = telemetry::engine().snapshot();
         let mut lat = Summary::new();
         let t = Timer::new();
         let mut rxs = Vec::new();
@@ -56,17 +109,44 @@ fn main() {
                 }
             }
         }
+        let mut variant = String::new();
         for rx in rxs {
             let r = rx.recv().unwrap();
+            variant = r.variant;
             lat.add(r.e2e_us / 1e3);
         }
         let wall = t.elapsed_s();
-        println!(
-            "{name:<22} {:>7.1} req/s   latency(ms) {}",
-            n as f64 / wall,
-            lat.report("ms")
-        );
+        let rps = n as f64 / wall;
+        let eng = telemetry::engine().snapshot().since(&eng0);
+        println!("{name:<10} -> {variant:<18} {rps:>7.1} req/s   latency(ms) {}", lat.report("ms"));
+        cases.push(Json::obj(vec![
+            ("class", Json::str(name)),
+            ("variant", Json::str(variant)),
+            ("requests", Json::num(n as f64)),
+            ("throughput_rps", Json::num(rps)),
+            ("mean_ms", Json::num(lat.mean())),
+            ("p50_ms", Json::num(lat.percentile(50.0))),
+            ("p95_ms", Json::num(lat.percentile(95.0))),
+            ("p99_ms", Json::num(lat.percentile(99.0))),
+            ("max_ms", Json::num(lat.max())),
+            ("engine", eng.to_json()),
+        ]));
     }
-    println!("\n== coordinator metrics ==\n{}", coord.metrics().report());
+
+    let m = coord.metrics();
+    println!("\n== coordinator metrics ==\n{}", m.report());
     coord.shutdown();
+
+    let out =
+        std::env::var("BENCH_SERVING_JSON_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("network", Json::str("resnet-mini")),
+        ("requests_per_class", Json::num(n as f64)),
+        ("occupancy", Json::num(m.occupancy())),
+        ("cases", Json::arr(cases)),
+        ("engine_total", m.engine.to_json()),
+    ]);
+    std::fs::write(Path::new(&out), json.to_string_pretty()).unwrap();
+    println!("wrote {out}");
 }

@@ -4,6 +4,7 @@
 
 use std::sync::Mutex;
 
+use crate::telemetry::{self, EngineSnapshot};
 use crate::util::Summary;
 
 /// Snapshot of the metrics at a point in time.
@@ -22,6 +23,9 @@ pub struct MetricsSnapshot {
     pub e2e_us_p95: f64,
     pub e2e_us_p99: f64,
     pub e2e_us_mean: f64,
+    /// engine-level counters (global [`telemetry::engine`] image taken with
+    /// this snapshot — forwards, kernel dispatch mix, skip/SIMD rates)
+    pub engine: EngineSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -39,7 +43,8 @@ impl MetricsSnapshot {
             "requests={} rejected={} batches={} occupancy={:.1}%\n\
              queue  p50={:.0}us p99={:.0}us\n\
              exec   p50={:.0}us p99={:.0}us\n\
-             e2e    mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us",
+             e2e    mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us\n\
+             {}",
             self.requests,
             self.rejected,
             self.batches,
@@ -52,6 +57,7 @@ impl MetricsSnapshot {
             self.e2e_us_p50,
             self.e2e_us_p95,
             self.e2e_us_p99,
+            self.engine.report(),
         )
     }
 }
@@ -117,6 +123,7 @@ impl Metrics {
             e2e_us_p95: m.e2e_us.percentile(95.0),
             e2e_us_p99: m.e2e_us.percentile(99.0),
             e2e_us_mean: m.e2e_us.mean(),
+            engine: telemetry::engine().snapshot(),
         }
     }
 }
@@ -148,6 +155,14 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.occupancy(), 0.0);
         assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn test_report_carries_engine_section() {
+        // the engine image rides along with every snapshot (global counters,
+        // so only the presence of the section is asserted here)
+        let s = Metrics::new().snapshot();
+        assert!(s.report().contains("engine forwards="), "{}", s.report());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::dfp::requant::{fx_rescale, Requantizer, BIAS_FRAC, SKIP_FRAC};
+use crate::telemetry::{record_epilogue_block, EpilogueBlock};
 
 use super::simd::SimdTier;
 
@@ -335,6 +336,7 @@ impl ResolvedEpilogue {
                     }
                 };
                 if skip_ok {
+                    record_epilogue_block(EpilogueBlock::Simd);
                     match tier {
                         #[cfg(target_arch = "x86_64")]
                         // SAFETY: tier == Avx2 implies AVX2 was detected.
@@ -350,7 +352,12 @@ impl ResolvedEpilogue {
                     }
                     return;
                 }
+                record_epilogue_block(EpilogueBlock::SkipLimit);
+            } else {
+                record_epilogue_block(EpilogueBlock::EnvelopeMiss);
             }
+        } else {
+            record_epilogue_block(EpilogueBlock::ScalarTier);
         }
         self.apply_i8_range(acc, row0, rows, f, 0, f, skip, out);
     }
@@ -399,24 +406,28 @@ impl ResolvedEpilogue {
         debug_assert_eq!(acc.len(), rows * f);
         debug_assert_eq!(out.len(), rows * f);
         if tier != SimdTier::Scalar {
-            if let Some(lanes) = &self.simd {
-                if lanes.skip_out_ok {
-                    match tier {
-                        #[cfg(target_arch = "x86_64")]
-                        // SAFETY: tier == Avx2 implies AVX2 was detected.
-                        SimdTier::Avx2 => unsafe {
-                            super::simd::avx2::apply_skip(self, lanes, acc, rows, f, out)
-                        },
-                        #[cfg(target_arch = "aarch64")]
-                        // SAFETY: NEON is baseline on aarch64.
-                        SimdTier::Neon => unsafe {
-                            super::simd::neon::apply_skip(self, lanes, acc, rows, f, out)
-                        },
-                        _ => self.apply_skip_range(acc, rows, f, 0, f, out),
-                    }
-                    return;
+            // a missing lane set and a non-shift `shift - SKIP_FRAC` are both
+            // envelope misses: the layer's constants keep the vector path out
+            if let Some(lanes) = self.simd.as_ref().filter(|l| l.skip_out_ok) {
+                record_epilogue_block(EpilogueBlock::Simd);
+                match tier {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: tier == Avx2 implies AVX2 was detected.
+                    SimdTier::Avx2 => unsafe {
+                        super::simd::avx2::apply_skip(self, lanes, acc, rows, f, out)
+                    },
+                    #[cfg(target_arch = "aarch64")]
+                    // SAFETY: NEON is baseline on aarch64.
+                    SimdTier::Neon => unsafe {
+                        super::simd::neon::apply_skip(self, lanes, acc, rows, f, out)
+                    },
+                    _ => self.apply_skip_range(acc, rows, f, 0, f, out),
                 }
+                return;
             }
+            record_epilogue_block(EpilogueBlock::EnvelopeMiss);
+        } else {
+            record_epilogue_block(EpilogueBlock::ScalarTier);
         }
         self.apply_skip_range(acc, rows, f, 0, f, out);
     }

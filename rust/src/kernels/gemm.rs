@@ -66,10 +66,12 @@ pub(crate) fn i8_row_block(
     out: &mut [i32],
     zero_skip: bool,
 ) {
+    let mut skipped = 0u64;
     for r in 0..rows {
         let arow = &ad[(row0 + r) * k..(row0 + r + 1) * k];
         let orow = &mut out[r * f..(r + 1) * f];
         let skip_zeros = zero_skip && row_worth_skipping(arow);
+        skipped += u64::from(skip_zeros);
         for (kk, &av) in arow.iter().enumerate() {
             if skip_zeros && av == 0 {
                 continue;
@@ -80,6 +82,9 @@ pub(crate) fn i8_row_block(
                 *o += av * i32::from(bv);
             }
         }
+    }
+    if zero_skip {
+        crate::telemetry::record_rows(rows as u64, skipped);
     }
 }
 

@@ -257,7 +257,9 @@ impl KernelRegistry {
         run: &mut dyn FnMut(&(dyn Fn(usize, usize, &mut [i32]) + Sync)),
     ) {
         let tier = self.tier;
-        match self.select(packed) {
+        let kind = self.select(packed);
+        crate::telemetry::record_gemm(kind);
+        match kind {
             KernelKind::PackedTernary => {
                 let w = packed.ternary.as_ref().expect("selected");
                 assert_eq!((k, f), (w.k, w.f), "{entry}: ({k},{f}) vs packed ({}, {})", w.k, w.f);

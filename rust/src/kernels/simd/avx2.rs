@@ -95,10 +95,12 @@ pub(crate) unsafe fn i8_row_block(
     zero_skip: bool,
 ) {
     let vecs = f / 8;
+    let mut skipped = 0u64;
     for r in 0..rows {
         let arow = &ad[(row0 + r) * k..(row0 + r + 1) * k];
         let orow = &mut out[r * f..(r + 1) * f];
         let skip_zeros = zero_skip && row_worth_skipping(arow);
+        skipped += u64::from(skip_zeros);
         for (kk, &av8) in arow.iter().enumerate() {
             if skip_zeros && av8 == 0 {
                 continue;
@@ -121,6 +123,9 @@ pub(crate) unsafe fn i8_row_block(
                 orow[j] += av * i32::from(brow[j]);
             }
         }
+    }
+    if zero_skip {
+        crate::telemetry::record_rows(rows as u64, skipped);
     }
 }
 

@@ -85,6 +85,7 @@ impl ThreadPool {
         }
         // floor division keeps every block >= min_rows (the doc contract)
         let blocks = self.threads.min((rows / min_rows.max(1)).max(1));
+        crate::telemetry::record_pool_run(blocks as u64);
         if blocks == 1 {
             body(0, rows, out, aux);
             return;

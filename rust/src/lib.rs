@@ -31,6 +31,11 @@
 //!   tensor between layers (an f32 reference path remains for validation);
 //!   `plan` builds the load-time `ForwardPlan` + `ForwardWorkspace` arena
 //!   for the zero-allocation steady-state forward (1×1 convs skip im2col).
+//! * [`telemetry`]   — engine observability: per-forward `ForwardProfile`
+//!   slots carried in the workspace (zero-allocation steady state intact),
+//!   drained into the global atomic `EngineMetrics`; kernel counters
+//!   (rows skipped, dispatch, epilogue fallbacks, pool fan-out) feed the
+//!   `profile` CLI, `serve --stats-every` and the serving bench.
 //! * [`nn`]          — pure-Rust f32 reference pipeline (baseline).
 //! * [`opcount`]     — analytic op-count / energy model (§3.3, 16× claim).
 //! * [`model`]       — network descriptions incl. exact ResNet-18/50/101 tables.
@@ -54,6 +59,7 @@ pub mod opcount;
 pub mod quant;
 pub mod runtime;
 pub mod scheme;
+pub mod telemetry;
 pub mod tensor;
 pub mod testing;
 pub mod util;

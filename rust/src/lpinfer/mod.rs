@@ -27,6 +27,7 @@ pub mod plan;
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -36,6 +37,7 @@ use crate::kernels::{KernelRegistry, LayerRequant, PackedLayer, ResolvedEpilogue
 use crate::model::{ConvLayer, Network};
 use crate::nn::{im2col, im2col_into};
 use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
+use crate::telemetry::{self, ForwardProfile};
 use crate::tensor::Tensor;
 
 pub use crate::kernels::{gemm_i8, gemm_i8_dense};
@@ -680,6 +682,9 @@ fn conv_operand<'a>(
 
 /// One conv through the workspace path: [`conv_operand`], then the fused
 /// borrowed-output GEMM with the `acc` arena as accumulator scratch.
+/// Fills the profile row `li` (this conv's network layer index): the
+/// im2col/GEMM time split by plain stores, and the zero-skip row tallies
+/// attributed from global counter deltas (exact single-threaded).
 #[allow(clippy::too_many_arguments)]
 fn run_conv(
     reg: &KernelRegistry,
@@ -696,10 +701,20 @@ fn run_conv(
     skip: Option<&[i64]>,
     skip_max: Option<&[i64]>,
     out: &mut [i8],
+    prof: &mut ForwardProfile,
+    li: usize,
 ) {
+    let (rp0, rs0) = telemetry::rows_now();
+    let t0 = Instant::now();
     let m = n * d.m;
     let a = conv_operand(reg, l, d, n, h, w, input, cols);
+    let col_ns = t0.elapsed().as_nanos() as u64;
     reg.gemm_fused_into(a, m, d.k, d.f, &p.packed, p.wq.data(), epi, skip, skip_max, out, acc);
+    prof.im2col_ns[li] = col_ns;
+    prof.gemm_ns[li] = (t0.elapsed().as_nanos() as u64).saturating_sub(col_ns);
+    let (rp1, rs1) = telemetry::rows_now();
+    prof.rows_probed[li] = rp1.wrapping_sub(rp0);
+    prof.rows_skipped[li] = rs1.wrapping_sub(rs0);
 }
 
 /// [`run_conv`] onto the i64 residual lane (projection convs), carrying the
@@ -719,10 +734,20 @@ fn run_conv_skip(
     acc: &mut [i32],
     out: &mut [i64],
     row_max: &mut [i64],
+    prof: &mut ForwardProfile,
+    li: usize,
 ) {
+    let (rp0, rs0) = telemetry::rows_now();
+    let t0 = Instant::now();
     let m = n * d.m;
     let a = conv_operand(reg, l, d, n, h, w, input, cols);
+    let col_ns = t0.elapsed().as_nanos() as u64;
     reg.gemm_fused_skip_into(a, m, d.k, d.f, &p.packed, p.wq.data(), epi, out, Some(row_max), acc);
+    prof.im2col_ns[li] = col_ns;
+    prof.gemm_ns[li] = (t0.elapsed().as_nanos() as u64).saturating_sub(col_ns);
+    let (rp1, rs1) = telemetry::rows_now();
+    prof.rows_probed[li] = rp1.wrapping_sub(rp0);
+    prof.rows_skipped[li] = rs1.wrapping_sub(rs0);
 }
 
 /// Forward a f32 image batch through the integer pipeline with the default
@@ -772,6 +797,7 @@ pub fn forward_quant_into(
     ws: &mut ForwardWorkspace,
     logits: &mut [f32],
 ) {
+    let t_total = Instant::now();
     let (n, h, w) = (x.dim(0), x.dim(1), x.dim(2));
     let ncls = params.fc_b.len();
     assert_eq!(logits.len(), n * ncls, "logits buffer is not {n}x{ncls}");
@@ -791,17 +817,37 @@ pub fn forward_quant_into(
     );
     assert_eq!(x.dim(3), plan.in_c, "input channels != stem cin");
     ws.ensure(plan, n);
-    let ForwardWorkspace { xq, act_a, act_b, cols, acc, skip, skip_max, sums, fq, fc_acc } = ws;
+    let ForwardWorkspace { xq, act_a, act_b, cols, acc, skip, skip_max, sums, fq, fc_acc, profile } =
+        ws;
 
     // quantize input image to int8 DFP (pipeline entry: f32 is allowed here)
+    let t = Instant::now();
     let xq = &mut xq[..n * plan.xq_elems];
     requant_into(x.data(), params.in_exp, xq);
+    profile.quantize_ns = t.elapsed().as_nanos() as u64;
 
     let stem_l = &net.layers[0];
     let sd = &plan.dims[0];
     let stem_p = &params.convs[&stem_l.name];
     let stem_epi = own_epi(params, &stem_l.name, stem_p, params.in_exp);
-    run_conv(reg, stem_l, sd, stem_p, &stem_epi, n, h, w, xq, cols, acc, None, None, &mut act_a[..n * sd.m * sd.f]);
+    run_conv(
+        reg,
+        stem_l,
+        sd,
+        stem_p,
+        &stem_epi,
+        n,
+        h,
+        w,
+        xq,
+        cols,
+        acc,
+        None,
+        None,
+        &mut act_a[..n * sd.m * sd.f],
+        profile,
+        0,
+    );
     let (mut cur_h, mut cur_w, mut cur_f) = (sd.ho, sd.wo, sd.f);
     let mut exp_h = stem_p.act_exp;
 
@@ -838,10 +884,21 @@ pub fn forward_quant_into(
                     acc,
                     &mut skip[..skip_len],
                     &mut skip_max[..m2],
+                    profile,
+                    pi,
                 );
             }
             None => {
-                dequant_to_skip_into(&act_a[..cur_len], exp_h, exp2, d2.f, &mut skip[..skip_len], &mut skip_max[..m2])
+                let t = Instant::now();
+                dequant_to_skip_into(
+                    &act_a[..cur_len],
+                    exp_h,
+                    exp2,
+                    d2.f,
+                    &mut skip[..skip_len],
+                    &mut skip_max[..m2],
+                );
+                profile.skip_ns += t.elapsed().as_nanos() as u64;
             }
         }
         let e1 = own_epi(params, &c1_l.name, p1, exp_h);
@@ -861,6 +918,8 @@ pub fn forward_quant_into(
             None,
             None,
             &mut act_b[..m1 * d1.f],
+            profile,
+            step.c1,
         );
         let e2 = own_epi(params, &c2_l.name, p2, p1.act_exp);
         run_conv(
@@ -878,6 +937,8 @@ pub fn forward_quant_into(
             Some(&skip[..skip_len]),
             Some(&skip_max[..m2]),
             &mut act_a[..skip_len],
+            profile,
+            step.c2,
         );
         (cur_h, cur_w, cur_f) = (d2.ho, d2.wo, d2.f);
         exp_h = exp2;
@@ -885,6 +946,7 @@ pub fn forward_quant_into(
 
     // integer global average pool: i64 code sums requantized to feat_exp
     // through a scalar fixed-point multiplier (no f32 feature tensor)
+    let t = Instant::now();
     let c = cur_f;
     assert_eq!(c, params.fc_wq.dim(0), "final activation channels != fc_in");
     let hq = &act_a[..n * cur_h * cur_w * c];
@@ -906,8 +968,10 @@ pub fn forward_quant_into(
     for (q, &s) in fq.iter_mut().zip(sums.iter()) {
         *q = fx_rescale(s * i64::from(gap.mult), gap.shift).clamp(-127, 127) as i8;
     }
+    profile.gap_ns = t.elapsed().as_nanos() as u64;
 
     // integer FC; logits are the pipeline output, produced in f32
+    let t = Instant::now();
     let fc_acc = &mut fc_acc[..n * ncls];
     reg.gemm_into(fq, n, c, ncls, &params.fc_packed, params.fc_wq.data(), fc_acc);
     let fs = 2f32.powi(params.feat_exp);
@@ -917,6 +981,11 @@ pub fn forward_quant_into(
                 fc_acc[b * ncls + k] as f32 * (params.fc_scale[k] * fs) + params.fc_b[k];
         }
     }
+    profile.fc_ns = t.elapsed().as_nanos() as u64;
+    profile.total_ns = t_total.elapsed().as_nanos() as u64;
+    // end-of-forward drain into the global counters: a fixed number of
+    // relaxed adds, allocation-free (always on — see telemetry module doc)
+    telemetry::engine().drain(profile);
 }
 
 // ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@
 //! them once and later batches reuse the high-water mark.
 
 use crate::model::Network;
+use crate::telemetry::ForwardProfile;
 
 /// GEMM geometry of one conv layer, for a batch of one image.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -254,6 +255,9 @@ pub struct ForwardWorkspace {
     pub(crate) sums: Vec<i64>,
     pub(crate) fq: Vec<i8>,
     pub(crate) fc_acc: Vec<i32>,
+    /// per-forward telemetry slots — preallocated with the arena, filled
+    /// by plain stores on the hot path (see `telemetry::ForwardProfile`)
+    pub(crate) profile: ForwardProfile,
 }
 
 fn grow<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
@@ -282,6 +286,12 @@ impl ForwardWorkspace {
         grow(&mut self.sums, n * plan.feat_c);
         grow(&mut self.fq, n * plan.feat_c);
         grow(&mut self.fc_acc, n * plan.classes);
+        self.profile.begin(plan.dims.len(), n);
+    }
+
+    /// The profile of the most recent forward through this workspace.
+    pub fn profile(&self) -> &ForwardProfile {
+        &self.profile
     }
 
     /// Total bytes currently held by the arena (introspection / benches).

@@ -10,9 +10,16 @@
 //!              GEMM implementation and/or SIMD tier
 //!              (`<encoding>[+<tier>]`, e.g. `ternary+scalar`; the default
 //!              tier is the best the CPU supports), `--threads` sizes its
-//!              pool.
+//!              pool. `--stats-every <secs>` prints a periodic one-line
+//!              serving + engine-counter report while the load runs.
 //!   eval       evaluate artifact variants on the exported eval set
 //!              (same --executor/--kernel/--threads knobs as serve)
+//!   profile    run N forwards of the pure-Rust pipeline against a synthetic
+//!              model (`--network`/`--scheme`) or an artifact qweights
+//!              export (`--artifacts`/`--variant`) and report per-layer
+//!              time, rows skipped and *measured* multiply-elimination,
+//!              cross-checked against the analytic `opcount` census
+//!              (`--runs`, `--batch`, `--json <path>` for the JSON report)
 //!   opcount    print the §3.3 op-replacement table for a network
 //!   quantize   quantize a DFT weight file under a precision scheme
 //!              (rust-native Algorithms 1 & 2 + k-bit DFP)
@@ -31,6 +38,8 @@
 //!   dfp-infer quantize --weights models/weights_fp32.dft --scheme 8a2w_n4@stem=i8@fc=i8
 //!   dfp-infer serve --artifacts artifacts --requests 512 --workers 1
 //!   dfp-infer serve --executor lp --kernel ternary --threads 4 --scheme 8a2w_n4
+//!   dfp-infer serve --artifacts artifacts --stats-every 5
+//!   dfp-infer profile --network resnet-mini --runs 20 --json profile.json
 //!   dfp-infer eval --artifacts artifacts --variants fp32,8a2w_n4
 
 use std::path::Path;
@@ -43,12 +52,16 @@ use dfp_infer::coordinator::{
     Coordinator, Executor, ExecutorFactory, LpExecutor, PjrtExecutor, PrecisionClass, Request, Router,
 };
 use dfp_infer::io::read_dft;
+use dfp_infer::json::Json;
+use dfp_infer::kernels::KernelKind;
+use dfp_infer::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
 use dfp_infer::model;
 use dfp_infer::opcount;
 use dfp_infer::quant::{self, TernaryMode};
 use dfp_infer::scheme::{LayerPolicy, Scheme, WeightCodec};
+use dfp_infer::telemetry::{self, ForwardProfile};
 use dfp_infer::tensor::Tensor;
-use dfp_infer::util::Timer;
+use dfp_infer::util::{SplitMix64, Timer};
 use dfp_infer::{data, runtime};
 
 fn main() {
@@ -63,14 +76,17 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
+        Some("profile") => cmd_profile(&args),
         Some("opcount") => cmd_opcount(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (try serve|eval|opcount|quantize|info)"),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try serve|eval|profile|opcount|quantize|info)")
+        }
         None => {
             println!(
                 "dfp-infer — mixed low-precision inference with dynamic fixed point\n\
-                 usage: dfp-infer <serve|eval|opcount|quantize|info> [options]"
+                 usage: dfp-infer <serve|eval|profile|opcount|quantize|info> [options]"
             );
             Ok(())
         }
@@ -278,6 +294,213 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `profile`: N instrumented forwards of the pure-Rust pipeline, reported
+/// per layer (time, % of total, zero-skip rows, measured multiplies) and
+/// cross-checked against the analytic [`opcount::census`]. The measured
+/// multiply count reflects the kernel the registry *actually dispatches*
+/// per layer (`--kernel` shows what a forced encoding costs), amortizing
+/// one 8-bit scale multiply per N·K² weight block on the packed-ternary
+/// engine — exactly the census accounting, so `auto` dispatch reproduces
+/// the census fraction and any gap means dispatch diverged from the scheme.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let registry = cfg.kernel_registry();
+    let runs: usize = args.get_or("runs", 10)?;
+    anyhow::ensure!(runs >= 1, "--runs must be >= 1");
+    let batch: usize = args.get_or("batch", 1)?;
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1");
+
+    // model source: an artifact qweights export when --artifacts is given,
+    // otherwise a synthetic quantization of --network under --scheme
+    let (net, params, source) = if args.get_str("artifacts").is_some() {
+        let manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+        let net = model::resnet_mini_default();
+        let variant = match args.get_str("variant") {
+            Some(v) => v.to_string(),
+            None => match &cfg.scheme {
+                Some(s) => s.name(),
+                None => {
+                    let mut servable = LpExecutor::servable(&cfg.artifacts_dir, &manifest);
+                    servable.sort();
+                    servable.into_iter().next().context(
+                        "no lp-servable variant in the artifacts \
+                         (need a qweights_<variant>.dft, or pass --variant)",
+                    )?
+                }
+            },
+        };
+        let path = cfg.artifacts_dir.join(format!("qweights_{variant}.dft"));
+        let map = read_dft(&path).with_context(|| format!("reading {}", path.display()))?;
+        let params = QModelParams::from_tensors(&map, &net)?;
+        (net, params, format!("artifact variant '{variant}'"))
+    } else {
+        let name = args.str_or("network", "resnet-mini");
+        let net = model::by_name(name).with_context(|| format!("unknown network '{name}'"))?;
+        let scheme = match &cfg.scheme {
+            Some(s) => s.clone(),
+            None => Scheme::parse("8a2w_n4@stem=i8")?,
+        };
+        scheme.validate_for(&net)?;
+        let params = QModelParams::synthetic(&net, cfg.seed, &scheme);
+        (net, params, format!("synthetic {name}"))
+    };
+    println!(
+        "profiling {source} — scheme {}, kernel {} (tier {}), {} GEMM threads, batch {batch}, {runs} runs",
+        params.scheme,
+        cfg.kernel,
+        registry.tier(),
+        registry.pool().threads(),
+    );
+
+    let img = net.input_hw;
+    let mut rng = SplitMix64::new(cfg.seed ^ 0xD1F);
+    let x = Tensor::new(&[batch, img, img, 3], rng.normal(batch * img * img * 3))?;
+    let mut ws = ForwardWorkspace::new();
+    let mut logits = vec![0f32; batch * net.fc_out];
+    // warm-up: sizes the workspace arena and faults the buffers in, so the
+    // measured runs are the zero-allocation steady state
+    forward_quant_into(&params, &net, &x, &registry, &mut ws, &mut logits);
+
+    telemetry::engine().reset();
+    let mut agg = ForwardProfile::new();
+    for _ in 0..runs {
+        forward_quant_into(&params, &net, &x, &registry, &mut ws, &mut logits);
+        agg.accumulate(ws.profile());
+    }
+    let engine = telemetry::engine().snapshot();
+    let rf = runs as f64;
+    let ms_of = |ns: u64| ns as f64 / rf / 1e6;
+    let total_ms = ms_of(agg.total_ns);
+
+    // per-layer rows: measured time + skip tallies from the profile slots,
+    // measured multiplies from the kernel the registry actually dispatches
+    let mut rows: Vec<(String, KernelKind, f64, f64, u64, u64, u64, u64)> = Vec::new();
+    let mut measured_mults = 0u64;
+    for (i, l) in net.layers.iter().enumerate() {
+        let p = params.conv(&l.name).with_context(|| format!("missing conv '{}'", l.name))?;
+        let kind = registry.select(&p.packed);
+        let macs = l.macs();
+        let mults = match kind {
+            KernelKind::PackedTernary => macs.div_ceil((p.policy.cluster * l.kh * l.kw) as u64),
+            _ => macs,
+        };
+        measured_mults += mults;
+        rows.push((
+            l.name.clone(),
+            kind,
+            ms_of(agg.im2col_ns[i] + agg.gemm_ns[i]),
+            ms_of(agg.im2col_ns[i]),
+            agg.rows_probed[i] / runs as u64,
+            agg.rows_skipped[i] / runs as u64,
+            macs,
+            mults,
+        ));
+    }
+    // FC as its own row (K=1 in the census accounting; the profile has no
+    // per-layer skip slot for it — its rows land in the engine totals)
+    let fc_macs = (net.fc_in * net.fc_out) as u64;
+    let fc_kind = registry.select(&params.fc_packed);
+    let fc_mults = match fc_kind {
+        KernelKind::PackedTernary => {
+            fc_macs.div_ceil(params.scheme.policy_for("fc").cluster as u64)
+        }
+        _ => fc_macs,
+    };
+    measured_mults += fc_mults;
+    rows.push(("fc".into(), fc_kind, ms_of(agg.fc_ns), 0.0, 0, 0, fc_macs, fc_mults));
+
+    let census = opcount::census(&net, &params.scheme);
+    let measured_elim = 1.0 - measured_mults as f64 / census.total_macs as f64;
+    let census_elim = census.replaced_frac();
+    let delta = (measured_elim - census_elim).abs();
+
+    println!(
+        "\n{:<12} {:>9} {:>10} {:>10} {:>6} {:>11} {:>11} {:>6} {:>13} {:>13}",
+        "layer", "kernel", "ms", "im2col_ms", "%tot", "rows_probed", "rows_skip", "skip%", "macs", "mults"
+    );
+    for (name, kind, ms, col_ms, probed, skipped, macs, mults) in &rows {
+        let pct = if total_ms > 0.0 { 100.0 * ms / total_ms } else { 0.0 };
+        let skipf =
+            if *probed > 0 { 100.0 * *skipped as f64 / *probed as f64 } else { 0.0 };
+        println!(
+            "{name:<12} {:>9} {ms:>10.3} {col_ms:>10.3} {pct:>5.1}% {probed:>11} {skipped:>11} {skipf:>5.1}% {macs:>13} {mults:>13}",
+            kind.to_string(),
+        );
+    }
+    let sum_im2col: u64 = agg.im2col_ns[..agg.layers].iter().sum();
+    let sum_gemm: u64 = agg.gemm_ns[..agg.layers].iter().sum();
+    println!(
+        "\nstages (mean per forward): total {total_ms:.3}ms | quantize {:.3} | im2col {:.3} | \
+         gemm {:.3} | skip-lane {:.3} | gap {:.3} | fc {:.3}",
+        ms_of(agg.quantize_ns),
+        ms_of(sum_im2col),
+        ms_of(sum_gemm),
+        ms_of(agg.skip_ns),
+        ms_of(agg.gap_ns),
+        ms_of(agg.fc_ns),
+    );
+    println!(
+        "measured multiply-elimination {:.2}% vs census {:.2}% (delta {:.3}pp) — {} multiplies left of {} MACs",
+        100.0 * measured_elim,
+        100.0 * census_elim,
+        100.0 * delta,
+        measured_mults,
+        census.total_macs,
+    );
+    println!("{}", engine.report());
+
+    if let Some(path) = args.get_str("json") {
+        let layers_json: Vec<Json> = rows
+            .iter()
+            .map(|(name, kind, ms, col_ms, probed, skipped, macs, mults)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("kernel", Json::str(kind.to_string())),
+                    ("ms", Json::num(*ms)),
+                    ("im2col_ms", Json::num(*col_ms)),
+                    (
+                        "pct_of_total",
+                        Json::num(if total_ms > 0.0 { 100.0 * ms / total_ms } else { 0.0 }),
+                    ),
+                    ("rows_probed", Json::num(*probed as f64)),
+                    ("rows_skipped", Json::num(*skipped as f64)),
+                    ("macs", Json::num(*macs as f64)),
+                    ("mults", Json::num(*mults as f64)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("network", Json::str(net.name.clone())),
+            ("scheme", Json::str(params.scheme.to_string())),
+            ("kernel", Json::str(cfg.kernel.to_string())),
+            ("simd_tier", Json::str(registry.tier().to_string())),
+            ("threads", Json::num(registry.pool().threads() as f64)),
+            ("runs", Json::num(runs as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("total_ms", Json::num(total_ms)),
+            (
+                "stages_ms",
+                Json::obj(vec![
+                    ("quantize", Json::num(ms_of(agg.quantize_ns))),
+                    ("im2col", Json::num(ms_of(sum_im2col))),
+                    ("gemm", Json::num(ms_of(sum_gemm))),
+                    ("skip_lane", Json::num(ms_of(agg.skip_ns))),
+                    ("gap", Json::num(ms_of(agg.gap_ns))),
+                    ("fc", Json::num(ms_of(agg.fc_ns))),
+                ]),
+            ),
+            ("layers", Json::arr(layers_json)),
+            ("measured_mult_elimination", Json::num(measured_elim)),
+            ("census_mult_elimination", Json::num(census_elim)),
+            ("elimination_delta", Json::num(delta)),
+            ("engine", engine.to_json()),
+        ]);
+        std::fs::write(path, j.to_string_pretty()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
@@ -353,10 +576,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // synthetic closed-loop load: round-robin precision classes
     let n = cfg.requests;
+    // --stats-every <secs>: periodic one-line serving + engine report
+    // (engine counters are printed as deltas since the previous line)
+    let stats_every: f64 = args.get_or("stats-every", 0.0)?;
     println!("issuing {n} requests (ShapeSet noise={}) ...", cfg.noise);
     let protos = data::prototypes();
     let classes = [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate];
     let t = Timer::new();
+    let mut stats_t = Timer::new();
+    let mut last_engine = telemetry::engine().snapshot();
     let mut inflight = Vec::new();
     let mut correct = 0usize;
     let mut done = 0usize;
@@ -379,6 +607,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     }
                 }
             }
+        }
+        if stats_every > 0.0 && stats_t.elapsed_s() >= stats_every {
+            let m = coord.metrics();
+            println!(
+                "[stats {:>6}/{n} submitted] e2e p50={:.0}us p99={:.0}us occupancy={:.1}% | {}",
+                i + 1,
+                m.e2e_us_p50,
+                m.e2e_us_p99,
+                100.0 * m.occupancy(),
+                m.engine.since(&last_engine).report(),
+            );
+            last_engine = m.engine;
+            stats_t.reset();
         }
     }
     for (rx, lab) in inflight {

@@ -1,0 +1,658 @@
+//! Engine telemetry: per-forward profile slots + global atomic counters.
+//!
+//! Two layers, designed so the PR 5 zero-allocation steady state survives
+//! (asserted in `rust/tests/alloc_steady_state.rs`):
+//!
+//! * [`ForwardProfile`] — per-layer/per-stage slots owned by a
+//!   `ForwardWorkspace`. Preallocated when the workspace is sized
+//!   (`begin` grows monotonically, exactly like the arena buffers) and
+//!   filled by plain stores on the hot path; nothing here is shared or
+//!   atomic. After each forward the profile is **drained** into the
+//!   global [`EngineMetrics`] (a fixed number of relaxed `fetch_add`s —
+//!   no allocation, no locks).
+//! * [`EngineMetrics`] — a struct of `AtomicU64` counters. One global
+//!   instance ([`engine`]) aggregates across every forward and every
+//!   thread; unit tests construct local instances for exact accounting.
+//!   [`EngineSnapshot`] is a plain `Copy` image of the counters —
+//!   taking one never allocates, so tests can snapshot *inside* a
+//!   counted region; `report()`/`to_json()` (which do allocate) run
+//!   outside.
+//!
+//! Kernel-level hooks (row-skip tallies, GEMM dispatch, epilogue block
+//! classification, thread-pool fan-out) go through the gated free
+//! functions below: [`set_enabled`]`(false)` turns them into an early
+//! return so `bench_kernels` can measure the instrumentation overhead
+//! (`profiling_overhead` in `BENCH_kernels.json`). The per-workspace
+//! profile stores and the end-of-forward drain are *not* gated — they
+//! are a handful of operations per forward, far below measurement
+//! noise. Hot loops never call these per element: callers tally into
+//! locals and publish **one** `fetch_add` per row block / call.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::json::Json;
+use crate::kernels::KernelKind;
+
+// ---------------------------------------------------------------------------
+// Per-forward profile (workspace-owned, no atomics)
+// ---------------------------------------------------------------------------
+
+/// Per-stage / per-layer timing and skip slots for one forward pass.
+///
+/// One row per `ForwardPlan` conv step (network layer order), plus
+/// scalar slots for the non-conv stages. All times are wall-clock
+/// nanoseconds for the whole batch.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardProfile {
+    /// conv steps recorded this forward (rows `0..layers` are live)
+    pub layers: usize,
+    /// batch size of the profiled forward
+    pub batch: usize,
+    /// input f32 -> i8 quantization
+    pub quantize_ns: u64,
+    /// identity skip-lane rescale (blocks without a projection conv)
+    pub skip_ns: u64,
+    /// integer global average pool
+    pub gap_ns: u64,
+    /// FC GEMM + f32 logits
+    pub fc_ns: u64,
+    /// whole forward, entry to exit
+    pub total_ns: u64,
+    /// per conv: im2col time (0 for direct 1×1 layers)
+    pub im2col_ns: Vec<u64>,
+    /// per conv: fused GEMM + epilogue time
+    pub gemm_ns: Vec<u64>,
+    /// per conv: activation rows probed by the i8 zero-skip kernel
+    pub rows_probed: Vec<u64>,
+    /// per conv: rows the probe routed to the zero-skipping loop
+    pub rows_skipped: Vec<u64>,
+}
+
+impl ForwardProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size for a forward of `layers` conv steps at batch `batch` and
+    /// zero the live slots. Growth is monotonic (high-water, like the
+    /// workspace arena), so the steady state performs no allocation.
+    pub fn begin(&mut self, layers: usize, batch: usize) {
+        if self.im2col_ns.len() < layers {
+            self.im2col_ns.resize(layers, 0);
+            self.gemm_ns.resize(layers, 0);
+            self.rows_probed.resize(layers, 0);
+            self.rows_skipped.resize(layers, 0);
+        }
+        self.layers = layers;
+        self.batch = batch;
+        self.quantize_ns = 0;
+        self.skip_ns = 0;
+        self.gap_ns = 0;
+        self.fc_ns = 0;
+        self.total_ns = 0;
+        for v in [
+            &mut self.im2col_ns,
+            &mut self.gemm_ns,
+            &mut self.rows_probed,
+            &mut self.rows_skipped,
+        ] {
+            v[..layers].fill(0);
+        }
+    }
+
+    /// Total conv time (im2col + fused GEMM) over the live rows.
+    pub fn conv_ns(&self) -> u64 {
+        let l = self.layers;
+        self.im2col_ns[..l].iter().sum::<u64>() + self.gemm_ns[..l].iter().sum::<u64>()
+    }
+
+    /// Element-wise add of another profile's live slots (profiling CLI
+    /// aggregation across runs — not a hot-path operation).
+    pub fn accumulate(&mut self, other: &ForwardProfile) {
+        if self.im2col_ns.len() < other.layers {
+            self.im2col_ns.resize(other.layers, 0);
+            self.gemm_ns.resize(other.layers, 0);
+            self.rows_probed.resize(other.layers, 0);
+            self.rows_skipped.resize(other.layers, 0);
+        }
+        self.layers = self.layers.max(other.layers);
+        self.batch = other.batch;
+        self.quantize_ns += other.quantize_ns;
+        self.skip_ns += other.skip_ns;
+        self.gap_ns += other.gap_ns;
+        self.fc_ns += other.fc_ns;
+        self.total_ns += other.total_ns;
+        for i in 0..other.layers {
+            self.im2col_ns[i] += other.im2col_ns[i];
+            self.gemm_ns[i] += other.gemm_ns[i];
+            self.rows_probed[i] += other.rows_probed[i];
+            self.rows_skipped[i] += other.rows_skipped[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine counters (atomic, global or per-test instance)
+// ---------------------------------------------------------------------------
+
+/// How a fused-epilogue row block was ultimately executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpilogueBlock {
+    /// vector lane path taken
+    Simd,
+    /// registry tier is scalar — no vector path to take
+    ScalarTier,
+    /// `ResolvedEpilogue` envelope miss (`SimdLanes` absent for this
+    /// layer, or the lane set cannot produce this output kind)
+    EnvelopeMiss,
+    /// per-block skip magnitude exceeded the overflow-safe limit
+    SkipLimit,
+}
+
+/// Monotonic engine counters. All operations are relaxed atomics — the
+/// counters are statistics, not synchronization.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    forwards: AtomicU64,
+    forward_ns: AtomicU64,
+    quantize_ns: AtomicU64,
+    im2col_ns: AtomicU64,
+    gemm_ns: AtomicU64,
+    skip_ns: AtomicU64,
+    gap_ns: AtomicU64,
+    fc_ns: AtomicU64,
+    rows_probed: AtomicU64,
+    rows_skipped: AtomicU64,
+    gemm_ternary: AtomicU64,
+    gemm_i4: AtomicU64,
+    gemm_i8_skip: AtomicU64,
+    gemm_i8_dense: AtomicU64,
+    epi_simd_blocks: AtomicU64,
+    epi_scalar_tier_blocks: AtomicU64,
+    epi_envelope_miss_blocks: AtomicU64,
+    epi_skip_limit_blocks: AtomicU64,
+    pool_runs: AtomicU64,
+    pool_blocks: AtomicU64,
+}
+
+impl EngineMetrics {
+    pub const fn new() -> Self {
+        Self {
+            forwards: AtomicU64::new(0),
+            forward_ns: AtomicU64::new(0),
+            quantize_ns: AtomicU64::new(0),
+            im2col_ns: AtomicU64::new(0),
+            gemm_ns: AtomicU64::new(0),
+            skip_ns: AtomicU64::new(0),
+            gap_ns: AtomicU64::new(0),
+            fc_ns: AtomicU64::new(0),
+            rows_probed: AtomicU64::new(0),
+            rows_skipped: AtomicU64::new(0),
+            gemm_ternary: AtomicU64::new(0),
+            gemm_i4: AtomicU64::new(0),
+            gemm_i8_skip: AtomicU64::new(0),
+            gemm_i8_dense: AtomicU64::new(0),
+            epi_simd_blocks: AtomicU64::new(0),
+            epi_scalar_tier_blocks: AtomicU64::new(0),
+            epi_envelope_miss_blocks: AtomicU64::new(0),
+            epi_skip_limit_blocks: AtomicU64::new(0),
+            pool_runs: AtomicU64::new(0),
+            pool_blocks: AtomicU64::new(0),
+        }
+    }
+
+    pub fn on_gemm(&self, kind: KernelKind) {
+        let c = match kind {
+            KernelKind::PackedTernary => &self.gemm_ternary,
+            KernelKind::PackedI4 => &self.gemm_i4,
+            KernelKind::I8ZeroSkip => &self.gemm_i8_skip,
+            KernelKind::I8Dense => &self.gemm_i8_dense,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One call per `i8_row_block` invocation with the block's tallies.
+    pub fn on_rows(&self, probed: u64, skipped: u64) {
+        self.rows_probed.fetch_add(probed, Ordering::Relaxed);
+        self.rows_skipped.fetch_add(skipped, Ordering::Relaxed);
+    }
+
+    pub fn on_epilogue_block(&self, how: EpilogueBlock) {
+        let c = match how {
+            EpilogueBlock::Simd => &self.epi_simd_blocks,
+            EpilogueBlock::ScalarTier => &self.epi_scalar_tier_blocks,
+            EpilogueBlock::EnvelopeMiss => &self.epi_envelope_miss_blocks,
+            EpilogueBlock::SkipLimit => &self.epi_skip_limit_blocks,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One call per `run_row_blocks2` with the block count it fanned to.
+    pub fn on_pool_run(&self, blocks: u64) {
+        self.pool_runs.fetch_add(1, Ordering::Relaxed);
+        self.pool_blocks.fetch_add(blocks, Ordering::Relaxed);
+    }
+
+    /// Fold one forward's profile into the counters (end-of-forward
+    /// drain: a fixed number of relaxed adds, no allocation).
+    pub fn drain(&self, p: &ForwardProfile) {
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        self.forward_ns.fetch_add(p.total_ns, Ordering::Relaxed);
+        self.quantize_ns.fetch_add(p.quantize_ns, Ordering::Relaxed);
+        self.skip_ns.fetch_add(p.skip_ns, Ordering::Relaxed);
+        self.gap_ns.fetch_add(p.gap_ns, Ordering::Relaxed);
+        self.fc_ns.fetch_add(p.fc_ns, Ordering::Relaxed);
+        let l = p.layers;
+        self.im2col_ns.fetch_add(p.im2col_ns[..l].iter().sum(), Ordering::Relaxed);
+        self.gemm_ns.fetch_add(p.gemm_ns[..l].iter().sum(), Ordering::Relaxed);
+    }
+
+    /// Copy out every counter. Never allocates.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            forwards: self.forwards.load(Ordering::Relaxed),
+            forward_ns: self.forward_ns.load(Ordering::Relaxed),
+            quantize_ns: self.quantize_ns.load(Ordering::Relaxed),
+            im2col_ns: self.im2col_ns.load(Ordering::Relaxed),
+            gemm_ns: self.gemm_ns.load(Ordering::Relaxed),
+            skip_ns: self.skip_ns.load(Ordering::Relaxed),
+            gap_ns: self.gap_ns.load(Ordering::Relaxed),
+            fc_ns: self.fc_ns.load(Ordering::Relaxed),
+            rows_probed: self.rows_probed.load(Ordering::Relaxed),
+            rows_skipped: self.rows_skipped.load(Ordering::Relaxed),
+            gemm_ternary: self.gemm_ternary.load(Ordering::Relaxed),
+            gemm_i4: self.gemm_i4.load(Ordering::Relaxed),
+            gemm_i8_skip: self.gemm_i8_skip.load(Ordering::Relaxed),
+            gemm_i8_dense: self.gemm_i8_dense.load(Ordering::Relaxed),
+            epi_simd_blocks: self.epi_simd_blocks.load(Ordering::Relaxed),
+            epi_scalar_tier_blocks: self.epi_scalar_tier_blocks.load(Ordering::Relaxed),
+            epi_envelope_miss_blocks: self.epi_envelope_miss_blocks.load(Ordering::Relaxed),
+            epi_skip_limit_blocks: self.epi_skip_limit_blocks.load(Ordering::Relaxed),
+            pool_runs: self.pool_runs.load(Ordering::Relaxed),
+            pool_blocks: self.pool_blocks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter (`profile` CLI run boundaries, tests).
+    pub fn reset(&self) {
+        for c in [
+            &self.forwards,
+            &self.forward_ns,
+            &self.quantize_ns,
+            &self.im2col_ns,
+            &self.gemm_ns,
+            &self.skip_ns,
+            &self.gap_ns,
+            &self.fc_ns,
+            &self.rows_probed,
+            &self.rows_skipped,
+            &self.gemm_ternary,
+            &self.gemm_i4,
+            &self.gemm_i8_skip,
+            &self.gemm_i8_dense,
+            &self.epi_simd_blocks,
+            &self.epi_scalar_tier_blocks,
+            &self.epi_envelope_miss_blocks,
+            &self.epi_skip_limit_blocks,
+            &self.pool_runs,
+            &self.pool_blocks,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Plain-value image of [`EngineMetrics`] at a point in time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineSnapshot {
+    pub forwards: u64,
+    pub forward_ns: u64,
+    pub quantize_ns: u64,
+    pub im2col_ns: u64,
+    pub gemm_ns: u64,
+    pub skip_ns: u64,
+    pub gap_ns: u64,
+    pub fc_ns: u64,
+    pub rows_probed: u64,
+    pub rows_skipped: u64,
+    pub gemm_ternary: u64,
+    pub gemm_i4: u64,
+    pub gemm_i8_skip: u64,
+    pub gemm_i8_dense: u64,
+    pub epi_simd_blocks: u64,
+    pub epi_scalar_tier_blocks: u64,
+    pub epi_envelope_miss_blocks: u64,
+    pub epi_skip_limit_blocks: u64,
+    pub pool_runs: u64,
+    pub pool_blocks: u64,
+}
+
+impl EngineSnapshot {
+    /// Counter-wise `self - earlier` (both from the same monotonic
+    /// source, so saturating keeps racy reads sane).
+    pub fn since(&self, earlier: &EngineSnapshot) -> EngineSnapshot {
+        EngineSnapshot {
+            forwards: self.forwards.saturating_sub(earlier.forwards),
+            forward_ns: self.forward_ns.saturating_sub(earlier.forward_ns),
+            quantize_ns: self.quantize_ns.saturating_sub(earlier.quantize_ns),
+            im2col_ns: self.im2col_ns.saturating_sub(earlier.im2col_ns),
+            gemm_ns: self.gemm_ns.saturating_sub(earlier.gemm_ns),
+            skip_ns: self.skip_ns.saturating_sub(earlier.skip_ns),
+            gap_ns: self.gap_ns.saturating_sub(earlier.gap_ns),
+            fc_ns: self.fc_ns.saturating_sub(earlier.fc_ns),
+            rows_probed: self.rows_probed.saturating_sub(earlier.rows_probed),
+            rows_skipped: self.rows_skipped.saturating_sub(earlier.rows_skipped),
+            gemm_ternary: self.gemm_ternary.saturating_sub(earlier.gemm_ternary),
+            gemm_i4: self.gemm_i4.saturating_sub(earlier.gemm_i4),
+            gemm_i8_skip: self.gemm_i8_skip.saturating_sub(earlier.gemm_i8_skip),
+            gemm_i8_dense: self.gemm_i8_dense.saturating_sub(earlier.gemm_i8_dense),
+            epi_simd_blocks: self.epi_simd_blocks.saturating_sub(earlier.epi_simd_blocks),
+            epi_scalar_tier_blocks: self
+                .epi_scalar_tier_blocks
+                .saturating_sub(earlier.epi_scalar_tier_blocks),
+            epi_envelope_miss_blocks: self
+                .epi_envelope_miss_blocks
+                .saturating_sub(earlier.epi_envelope_miss_blocks),
+            epi_skip_limit_blocks: self
+                .epi_skip_limit_blocks
+                .saturating_sub(earlier.epi_skip_limit_blocks),
+            pool_runs: self.pool_runs.saturating_sub(earlier.pool_runs),
+            pool_blocks: self.pool_blocks.saturating_sub(earlier.pool_blocks),
+        }
+    }
+
+    /// Total GEMM dispatches, all encodings.
+    pub fn gemm_dispatches(&self) -> u64 {
+        self.gemm_ternary + self.gemm_i4 + self.gemm_i8_skip + self.gemm_i8_dense
+    }
+
+    /// Fraction of probed i8 rows that took the zero-skipping loop.
+    pub fn skip_row_frac(&self) -> f64 {
+        if self.rows_probed == 0 {
+            return 0.0;
+        }
+        self.rows_skipped as f64 / self.rows_probed as f64
+    }
+
+    /// Fraction of fused-epilogue row blocks that ran the vector path.
+    pub fn epi_simd_frac(&self) -> f64 {
+        let total = self.epi_simd_blocks
+            + self.epi_scalar_tier_blocks
+            + self.epi_envelope_miss_blocks
+            + self.epi_skip_limit_blocks;
+        if total == 0 {
+            return 0.0;
+        }
+        self.epi_simd_blocks as f64 / total as f64
+    }
+
+    /// Mean forward latency in milliseconds.
+    pub fn mean_forward_ms(&self) -> f64 {
+        if self.forwards == 0 {
+            return 0.0;
+        }
+        self.forward_ns as f64 / self.forwards as f64 / 1e6
+    }
+
+    /// Two-line human report (appended to the serving metrics report).
+    pub fn report(&self) -> String {
+        format!(
+            "engine forwards={} mean={:.2}ms gemm={}t/{}i4/{}i8s/{}i8d \
+             rows_skip={:.1}% epi_simd={:.1}% pool_blocks={}",
+            self.forwards,
+            self.mean_forward_ms(),
+            self.gemm_ternary,
+            self.gemm_i4,
+            self.gemm_i8_skip,
+            self.gemm_i8_dense,
+            100.0 * self.skip_row_frac(),
+            100.0 * self.epi_simd_frac(),
+            self.pool_blocks,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("forwards", Json::num(self.forwards as f64)),
+            ("forward_ns", Json::num(self.forward_ns as f64)),
+            ("quantize_ns", Json::num(self.quantize_ns as f64)),
+            ("im2col_ns", Json::num(self.im2col_ns as f64)),
+            ("gemm_ns", Json::num(self.gemm_ns as f64)),
+            ("skip_ns", Json::num(self.skip_ns as f64)),
+            ("gap_ns", Json::num(self.gap_ns as f64)),
+            ("fc_ns", Json::num(self.fc_ns as f64)),
+            ("rows_probed", Json::num(self.rows_probed as f64)),
+            ("rows_skipped", Json::num(self.rows_skipped as f64)),
+            ("gemm_ternary", Json::num(self.gemm_ternary as f64)),
+            ("gemm_i4", Json::num(self.gemm_i4 as f64)),
+            ("gemm_i8_skip", Json::num(self.gemm_i8_skip as f64)),
+            ("gemm_i8_dense", Json::num(self.gemm_i8_dense as f64)),
+            ("epi_simd_blocks", Json::num(self.epi_simd_blocks as f64)),
+            ("epi_scalar_tier_blocks", Json::num(self.epi_scalar_tier_blocks as f64)),
+            ("epi_envelope_miss_blocks", Json::num(self.epi_envelope_miss_blocks as f64)),
+            ("epi_skip_limit_blocks", Json::num(self.epi_skip_limit_blocks as f64)),
+            ("pool_runs", Json::num(self.pool_runs as f64)),
+            ("pool_blocks", Json::num(self.pool_blocks as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global instance + gated hooks
+// ---------------------------------------------------------------------------
+
+static ENGINE: EngineMetrics = EngineMetrics::new();
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// The process-wide engine counters.
+pub fn engine() -> &'static EngineMetrics {
+    &ENGINE
+}
+
+/// Whether the kernel-level hooks are live (default: yes).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle the kernel-level hooks. Per-workspace profile slots and the
+/// end-of-forward drain stay live either way — only the in-kernel
+/// counters (row tallies, dispatch/epilogue/pool counts) are gated, so
+/// benches can measure exactly the overhead the gate controls.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub(crate) fn record_gemm(kind: KernelKind) {
+    if enabled() {
+        ENGINE.on_gemm(kind);
+    }
+}
+
+#[inline]
+pub(crate) fn record_rows(probed: u64, skipped: u64) {
+    if enabled() {
+        ENGINE.on_rows(probed, skipped);
+    }
+}
+
+#[inline]
+pub(crate) fn record_epilogue_block(how: EpilogueBlock) {
+    if enabled() {
+        ENGINE.on_epilogue_block(how);
+    }
+}
+
+#[inline]
+pub(crate) fn record_pool_run(blocks: u64) {
+    if enabled() {
+        ENGINE.on_pool_run(blocks);
+    }
+}
+
+/// Current global `(rows_probed, rows_skipped)`. The forward pass reads
+/// deltas around each conv to attribute skip counts to profile rows —
+/// exact single-threaded; attribution between layers is approximate when
+/// forwards run concurrently (the totals stay exact).
+#[inline]
+pub(crate) fn rows_now() -> (u64, u64) {
+    (
+        ENGINE.rows_probed.load(Ordering::Relaxed),
+        ENGINE.rows_skipped.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(layers: usize) -> ForwardProfile {
+        let mut p = ForwardProfile::new();
+        p.begin(layers, 2);
+        p
+    }
+
+    #[test]
+    fn test_profile_begin_zeroes_and_grows_monotonically() {
+        let mut p = profile(3);
+        p.gemm_ns[1] = 42;
+        p.quantize_ns = 7;
+        let cap = p.gemm_ns.capacity();
+        p.begin(3, 1);
+        assert_eq!(p.gemm_ns[1], 0);
+        assert_eq!(p.quantize_ns, 0);
+        assert_eq!(p.batch, 1);
+        assert_eq!(p.gemm_ns.capacity(), cap, "same layer count must not reallocate");
+        // shrinking keeps the high-water buffers
+        p.begin(2, 1);
+        assert_eq!(p.layers, 2);
+        assert_eq!(p.gemm_ns.len(), 3);
+        // growing resizes
+        p.begin(5, 1);
+        assert_eq!(p.gemm_ns.len(), 5);
+    }
+
+    #[test]
+    fn test_profile_accumulate_sums_live_rows() {
+        let mut a = profile(2);
+        a.gemm_ns[0] = 10;
+        a.im2col_ns[1] = 5;
+        a.fc_ns = 3;
+        a.total_ns = 20;
+        let mut agg = ForwardProfile::new();
+        agg.accumulate(&a);
+        agg.accumulate(&a);
+        assert_eq!(agg.layers, 2);
+        assert_eq!(agg.gemm_ns[0], 20);
+        assert_eq!(agg.im2col_ns[1], 10);
+        assert_eq!(agg.fc_ns, 6);
+        assert_eq!(agg.total_ns, 40);
+        assert_eq!(agg.conv_ns(), 30);
+    }
+
+    #[test]
+    fn test_engine_accumulation_exact_on_local_instance() {
+        let m = EngineMetrics::new();
+        m.on_gemm(KernelKind::PackedTernary);
+        m.on_gemm(KernelKind::PackedTernary);
+        m.on_gemm(KernelKind::I8ZeroSkip);
+        m.on_rows(16, 5);
+        m.on_rows(4, 0);
+        m.on_epilogue_block(EpilogueBlock::Simd);
+        m.on_epilogue_block(EpilogueBlock::SkipLimit);
+        m.on_pool_run(4);
+        let s = m.snapshot();
+        assert_eq!(s.gemm_ternary, 2);
+        assert_eq!(s.gemm_i8_skip, 1);
+        assert_eq!(s.gemm_dispatches(), 3);
+        assert_eq!(s.rows_probed, 20);
+        assert_eq!(s.rows_skipped, 5);
+        assert!((s.skip_row_frac() - 0.25).abs() < 1e-12);
+        assert_eq!(s.epi_simd_blocks, 1);
+        assert_eq!(s.epi_skip_limit_blocks, 1);
+        assert!((s.epi_simd_frac() - 0.5).abs() < 1e-12);
+        assert_eq!((s.pool_runs, s.pool_blocks), (1, 4));
+    }
+
+    #[test]
+    fn test_drain_and_reset_semantics() {
+        let m = EngineMetrics::new();
+        let mut p = profile(2);
+        p.total_ns = 1_000_000;
+        p.quantize_ns = 100;
+        p.gemm_ns[0] = 300;
+        p.gemm_ns[1] = 200;
+        p.im2col_ns[0] = 50;
+        m.drain(&p);
+        m.drain(&p);
+        let s = m.snapshot();
+        assert_eq!(s.forwards, 2);
+        assert_eq!(s.forward_ns, 2_000_000);
+        assert_eq!(s.quantize_ns, 200);
+        assert_eq!(s.gemm_ns, 1000);
+        assert_eq!(s.im2col_ns, 100);
+        assert!((s.mean_forward_ms() - 1.0).abs() < 1e-12);
+        m.reset();
+        assert_eq!(m.snapshot(), EngineSnapshot::default());
+    }
+
+    #[test]
+    fn test_concurrent_counting_is_exact() {
+        let m = EngineMetrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let mut p = ForwardProfile::new();
+                    p.begin(1, 1);
+                    p.total_ns = 10;
+                    p.gemm_ns[0] = 1;
+                    for _ in 0..250 {
+                        m.on_rows(8, 3);
+                        m.on_gemm(KernelKind::I8Dense);
+                        m.drain(&p);
+                    }
+                });
+            }
+        });
+        let s = m.snapshot();
+        assert_eq!(s.rows_probed, 4 * 250 * 8);
+        assert_eq!(s.rows_skipped, 4 * 250 * 3);
+        assert_eq!(s.gemm_i8_dense, 1000);
+        assert_eq!(s.forwards, 1000);
+        assert_eq!(s.forward_ns, 10_000);
+        assert_eq!(s.gemm_ns, 1000);
+    }
+
+    #[test]
+    fn test_snapshot_since_delta() {
+        let m = EngineMetrics::new();
+        m.on_rows(10, 2);
+        let a = m.snapshot();
+        m.on_rows(5, 5);
+        m.on_pool_run(3);
+        let d = m.snapshot().since(&a);
+        assert_eq!(d.rows_probed, 5);
+        assert_eq!(d.rows_skipped, 5);
+        assert_eq!(d.pool_runs, 1);
+        assert_eq!(d.pool_blocks, 3);
+        assert_eq!(d.forwards, 0);
+    }
+
+    #[test]
+    fn test_report_and_json_surface() {
+        let m = EngineMetrics::new();
+        m.on_gemm(KernelKind::PackedTernary);
+        m.on_rows(10, 4);
+        let mut p = profile(1);
+        p.total_ns = 2_000_000;
+        m.drain(&p);
+        let s = m.snapshot();
+        let r = s.report();
+        assert!(r.contains("forwards=1"), "{r}");
+        assert!(r.contains("rows_skip=40.0%"), "{r}");
+        let j = s.to_json();
+        assert_eq!(j.get("forwards").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("gemm_ternary").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("rows_skipped").and_then(Json::as_f64), Some(4.0));
+    }
+}

@@ -1,14 +1,30 @@
 //! Streaming summary statistics (count/mean/min/max/percentiles).
 //!
-//! Used by the coordinator's metrics and the bench harness — we keep raw
-//! samples (bounded) so percentiles are exact, which matters when reporting
-//! p99 latency over a few thousand requests.
+//! Used by the coordinator's metrics and the bench harness. Counts and
+//! moments (`len`/`mean`/`min`/`max`/`stddev`) are exact running scalars
+//! over every sample ever added; percentiles come from a bounded
+//! reservoir of [`MAX_SAMPLES`] raw values — exact while the stream fits
+//! the reservoir (which covers the bench harness and the reported
+//! few-thousand-request windows), an unbiased uniform sample beyond it.
+//! Memory is therefore O(1) no matter how long a `serve` process runs.
+
+/// Reservoir capacity: percentiles are exact up to this many samples.
+pub const MAX_SAMPLES: usize = 4096;
 
 /// Collects f64 samples and reports summary statistics.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
     samples: Vec<f64>,
     sorted: bool,
+    /// samples ever added (>= samples.len() once the reservoir is full)
+    seen: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+    /// splitmix64 state for reservoir eviction (deterministic, seeded by
+    /// the first overflowing add)
+    rng: u64,
 }
 
 impl Summary {
@@ -17,44 +33,77 @@ impl Summary {
     }
 
     pub fn add(&mut self, v: f64) {
-        self.samples.push(v);
-        self.sorted = false;
+        if self.seen == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.seen += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        if self.samples.len() < MAX_SAMPLES {
+            self.samples.push(v);
+            self.sorted = false;
+            return;
+        }
+        // Vitter's algorithm R: keep each of the `seen` samples in the
+        // reservoir with probability MAX_SAMPLES/seen
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        let slot = (z % self.seen) as usize;
+        if slot < MAX_SAMPLES {
+            self.samples[slot] = v;
+            self.sorted = false;
+        }
     }
 
+    /// Samples ever added (the reservoir itself holds at most
+    /// [`MAX_SAMPLES`] of them).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.seen == 0
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.seen as f64
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        if self.seen == 0 {
+            return f64::INFINITY;
+        }
+        self.min
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        if self.seen == 0 {
+            return f64::NEG_INFINITY;
+        }
+        self.max
     }
 
     pub fn stddev(&self) -> f64 {
-        if self.samples.len() < 2 {
+        if self.seen < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
-            / (self.samples.len() - 1) as f64;
-        var.sqrt()
+        let n = self.seen as f64;
+        let var = (self.sum_sq - self.sum * self.sum / n) / (n - 1.0);
+        var.max(0.0).sqrt()
     }
 
-    /// Exact percentile by nearest-rank (q in [0, 100]).
+    /// Percentile by nearest-rank (q in [0, 100]) over the reservoir —
+    /// exact for streams up to [`MAX_SAMPLES`] samples.
     pub fn percentile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -131,5 +180,37 @@ mod tests {
         assert_eq!(s.percentile(50.0), 10.0);
         s.add(0.0);
         assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn test_reservoir_bounds_memory_with_exact_moments() {
+        let mut s = Summary::new();
+        let n = 10 * MAX_SAMPLES;
+        for i in 0..n {
+            s.add(i as f64);
+        }
+        assert_eq!(s.len(), n, "len counts every sample ever added");
+        assert_eq!(s.samples.len(), MAX_SAMPLES, "reservoir stays capped");
+        // moments are running scalars — exact regardless of eviction
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), (n - 1) as f64);
+        assert!((s.mean() - (n - 1) as f64 / 2.0).abs() < 1e-6);
+        // percentiles come from a uniform sample of [0, n): p50 within a
+        // loose tolerance, report shape unchanged
+        let p50 = s.percentile(50.0);
+        assert!((p50 / (n as f64) - 0.5).abs() < 0.1, "p50={p50}");
+        let r = s.report("us");
+        assert!(r.starts_with(&format!("n={n} ")), "{r}");
+    }
+
+    #[test]
+    fn test_exact_percentiles_up_to_capacity() {
+        let mut s = Summary::new();
+        for i in (0..MAX_SAMPLES).rev() {
+            s.add(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), (MAX_SAMPLES - 1) as f64);
+        assert_eq!(s.percentile(50.0), (((MAX_SAMPLES - 1) as f64) / 2.0).round());
     }
 }

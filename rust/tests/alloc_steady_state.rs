@@ -81,20 +81,33 @@ fn steady_state_forward_makes_zero_heap_allocations() {
     forward_quant_into(&params, &net, &x, &reg, &mut ws, &mut logits);
     assert_eq!(&logits[..], want.data(), "workspace path must match the allocating path");
 
-    // steady state: repeat requests through the warmed arena
+    // steady state: repeat requests through the warmed arena. The per-layer
+    // profiler and the engine counters are on (their defaults) — the zero
+    // bar below is the proof that telemetry rides the steady state for free,
+    // and snapshot() itself is allocation-free (it runs inside the window).
     logits.fill(0.0);
     let before = allocs();
+    let eng_before = dfp_infer::telemetry::engine().snapshot();
     for _ in 0..3 {
         forward_quant_into(&params, &net, &x, &reg, &mut ws, &mut logits);
     }
+    let eng_after = dfp_infer::telemetry::engine().snapshot();
     let after = allocs();
     assert_eq!(
         after - before,
         0,
-        "steady-state forward_quant_into allocated {} time(s) over 3 requests",
+        "steady-state forward_quant_into allocated {} time(s) over 3 requests (profiling on)",
         after - before
     );
     assert_eq!(&logits[..], want.data(), "steady-state logits must stay bit-exact");
+
+    // the same window must have been fully observed by the engine counters:
+    // 3 forwards, each dispatching one GEMM per conv (stem + 3 blocks of
+    // c1/c2 + the s1/s2 projections = 9) plus the FC
+    let d = eng_after.since(&eng_before);
+    assert_eq!(d.forwards, 3, "engine must count each steady-state forward");
+    assert_eq!(d.gemm_dispatches(), 30, "9 convs + fc per forward, 3 forwards");
+    assert!(d.forward_ns > 0, "per-forward wall time must accumulate");
 
     // a smaller batch through the same arena also stays allocation-free
     // (buffers are a high-water mark, never shrunk)
