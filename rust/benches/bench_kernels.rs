@@ -23,9 +23,10 @@ use dfp_infer::kernels::{
     PackedLayer, PackedTernaryMatrix, SimdTier, ThreadPool, TierChoice,
 };
 use dfp_infer::lpinfer::{
-    forward_quant_into, forward_quant_with, gemm_i8, gemm_i8_dense, ForwardWorkspace, QModelParams,
+    forward_quant_into, forward_quant_with, gemm_i8, gemm_i8_dense, ForwardPlan, ForwardWorkspace,
+    QModelParams,
 };
-use dfp_infer::model::{resnet101, resnet_mini_default};
+use dfp_infer::model::{resnet101, resnet50, resnet_mini_default};
 use dfp_infer::nn::{gemm_f32, im2col_into};
 use dfp_infer::opcount;
 use dfp_infer::scheme::Scheme;
@@ -356,6 +357,39 @@ fn main() {
         (profiling_overhead - 1.0) * 100.0
     );
 
+    println!("\n== E5.10: forward-plan build & planned activation arena (graph liveness) ==");
+    // the plan is built once per loaded model; its cost must stay trivial
+    // even at paper scale, and the liveness-colored arena must beat the
+    // legacy input + 2x-largest-output ping-pong sizing it replaced
+    let r50 = resnet50();
+    let plan_mini = ForwardPlan::build(&mini).expect("resnet-mini plans");
+    let plan_50 = ForwardPlan::build(&r50).expect("resnet-50 plans");
+    b.bench("plan build resnet-mini", plan_mini.n_steps() as f64, || {
+        ForwardPlan::build(&mini).unwrap().n_steps()
+    });
+    b.bench("plan build resnet-50", plan_50.n_steps() as f64, || {
+        ForwardPlan::build(&r50).unwrap().n_steps()
+    });
+    let mut plan_rows = Vec::new();
+    for (name, plan) in [("resnet-mini", &plan_mini), ("resnet-50", &plan_50)] {
+        // activation arena elements are i8 codes: 1 byte per element
+        let (planned, legacy) = (plan.planned_act_elems(), plan.legacy_act_elems());
+        println!(
+            "  {name:<12} {} steps, planned act arena {} KB vs legacy ping-pong {} KB ({:.2}x smaller)",
+            plan.n_steps(),
+            planned / 1024,
+            legacy / 1024,
+            legacy as f64 / planned as f64
+        );
+        plan_rows.push(Json::obj(vec![
+            ("network", Json::str(name)),
+            ("n_steps", Json::num(plan.n_steps() as f64)),
+            ("planned_act_bytes", Json::num(planned as f64)),
+            ("legacy_act_bytes", Json::num(legacy as f64)),
+            ("arena_savings", Json::num(legacy as f64 / planned as f64)),
+        ]));
+    }
+
     let out = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     let extras = vec![
         ("bench", Json::str("bench_kernels")),
@@ -368,6 +402,7 @@ fn main() {
         ("profiling_overhead", Json::num(profiling_overhead)),
         ("resnet_mini_layers", Json::Arr(layer_rows)),
         ("simd_vs_scalar_layers", Json::Arr(simd_rows)),
+        ("forward_plans", Json::Arr(plan_rows)),
     ];
     match b.write_json(std::path::Path::new(&out), extras) {
         Ok(()) => println!("\nwrote {out}"),

@@ -1,0 +1,446 @@
+//! The layer DAG: typed nodes, producer edges, and the (single) home of
+//! the residual-walk rule that turns a `model::Network` layer table into
+//! a graph.
+
+use std::fmt;
+
+use crate::model::Network;
+
+/// Index of a node in [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// What a node computes. Conv nodes index into `net.layers`; everything
+/// else is structural.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// The network input (one per graph, no producers).
+    Input,
+    /// Convolution of `net.layers[layer]` (stem, chain, or `*proj` shortcut).
+    Conv { layer: usize },
+    /// Max pool (the ImageNet stem pool). Exact on quantized codes: max
+    /// commutes with the monotone requantization.
+    Pool { k: usize, stride: usize, pad: usize },
+    /// Identity shortcut: re-aligns `inputs[0]` onto the residual lane of
+    /// a block that has no projection conv.
+    Skip,
+    /// Residual join: `inputs[0]` is the block's last chain conv,
+    /// `inputs[1]` the lane producer ([`Op::Skip`] or a `*proj` conv).
+    /// Semantics: add, then ReLU (He et al. post-activation ordering).
+    Add,
+    /// Global average pool to a (N, C) feature matrix.
+    Gap,
+    /// The final fully-connected classifier.
+    Fc,
+}
+
+/// One graph node with its producers and output geometry.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    /// Producer nodes, in operand order (see [`Op`] variants).
+    pub inputs: Vec<NodeId>,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub out_c: usize,
+}
+
+impl Node {
+    /// Output elements per image.
+    pub fn out_elems(&self) -> usize {
+        self.out_h * self.out_w * self.out_c
+    }
+}
+
+/// Why a layer table cannot be turned into a runnable graph. Every variant
+/// names the first offending layer so loaders and CLIs can surface it —
+/// plan building never silently degrades to an empty plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// The network has no conv layers at all.
+    EmptyNetwork { net: String },
+    /// A trailing run of convs never reaches a `residual = true` layer, so
+    /// the block (and everything after it) is unreachable by the walk.
+    DanglingTail { net: String, layer: String, index: usize },
+    /// A `*proj` layer appears inside a block's chain instead of directly
+    /// after its `residual = true` terminator.
+    ProjOutOfPlace { net: String, layer: String, index: usize },
+    /// A conv whose declared shape cannot consume its producer's output.
+    BadConv { net: String, layer: String, detail: String },
+    /// Computed output size disagrees with the layer table's declared
+    /// `out_hw` at the network's nominal input resolution.
+    GeometryMismatch { net: String, layer: String, declared: usize, computed: (usize, usize) },
+    /// The two inputs of a residual add have different shapes.
+    AddShapeMismatch {
+        net: String,
+        layer: String,
+        chain: (usize, usize, usize),
+        skip: (usize, usize, usize),
+    },
+    /// The stem pool's window does not fit its input.
+    BadPool { net: String, detail: String },
+    /// A structurally valid graph the lowering cannot execute (e.g. a node
+    /// whose output would have to live on the single skip lane twice).
+    Unsupported { net: String, node: String, detail: String },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::EmptyNetwork { net } => {
+                write!(f, "network '{net}' has no conv layers")
+            }
+            GraphError::DanglingTail { net, layer, index } => write!(
+                f,
+                "network '{net}': layer {index} '{layer}' starts a conv run that never reaches \
+                 a residual join (no `residual = true` terminator)"
+            ),
+            GraphError::ProjOutOfPlace { net, layer, index } => write!(
+                f,
+                "network '{net}': projection layer {index} '{layer}' sits inside a block chain; \
+                 '*proj' convs must directly follow their block's residual layer"
+            ),
+            GraphError::BadConv { net, layer, detail } => {
+                write!(f, "network '{net}': conv '{layer}': {detail}")
+            }
+            GraphError::GeometryMismatch { net, layer, declared, computed } => write!(
+                f,
+                "network '{net}': conv '{layer}' declares out_hw = {declared} but computes \
+                 {}x{} at the nominal input resolution",
+                computed.0, computed.1
+            ),
+            GraphError::AddShapeMismatch { net, layer, chain, skip } => write!(
+                f,
+                "network '{net}': residual add at '{layer}': chain output {}x{}x{} vs skip \
+                 {}x{}x{}",
+                chain.0, chain.1, chain.2, skip.0, skip.1, skip.2
+            ),
+            GraphError::BadPool { net, detail } => {
+                write!(f, "network '{net}': stem pool: {detail}")
+            }
+            GraphError::Unsupported { net, node, detail } => {
+                write!(f, "network '{net}': node '{node}': {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// An explicit layer DAG over a network's conv table.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    fn push(&mut self, op: Op, inputs: Vec<NodeId>, out_h: usize, out_w: usize, out_c: usize) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, op, inputs, out_h, out_w, out_c });
+        id
+    }
+
+    /// Append a conv node for `net.layers[layer]` consuming `src`,
+    /// validating channel agreement, window fit, and (at the nominal input
+    /// resolution) the declared `out_hw`.
+    fn push_conv(
+        &mut self,
+        net: &Network,
+        layer: usize,
+        src: NodeId,
+        nominal: bool,
+    ) -> Result<NodeId, GraphError> {
+        let l = &net.layers[layer];
+        let (h, w, c) = {
+            let s = &self.nodes[src];
+            (s.out_h, s.out_w, s.out_c)
+        };
+        let err = |detail: String| GraphError::BadConv {
+            net: net.name.clone(),
+            layer: l.name.clone(),
+            detail,
+        };
+        if l.cin != c {
+            return Err(err(format!("expects {} input channels, producer has {c}", l.cin)));
+        }
+        if l.stride == 0 {
+            return Err(err("stride must be >= 1".into()));
+        }
+        if h + 2 * l.pad < l.kh || w + 2 * l.pad < l.kw {
+            return Err(err(format!(
+                "{}x{} window does not fit {h}x{w} input with pad {}",
+                l.kh, l.kw, l.pad
+            )));
+        }
+        let ho = (h + 2 * l.pad - l.kh) / l.stride + 1;
+        let wo = (w + 2 * l.pad - l.kw) / l.stride + 1;
+        if nominal && (ho != l.out_hw || wo != l.out_hw) {
+            return Err(GraphError::GeometryMismatch {
+                net: net.name.clone(),
+                layer: l.name.clone(),
+                declared: l.out_hw,
+                computed: (ho, wo),
+            });
+        }
+        Ok(self.push(Op::Conv { layer }, vec![src], ho, wo, l.cout))
+    }
+
+    /// Build the DAG for `net` at input resolution `in_h`×`in_w` (the
+    /// nominal `net.input_hw` or any other size the conv windows fit).
+    ///
+    /// The walk: `layers[0]` is the stem, optionally followed by
+    /// `net.stem_pool`; after that, each **block** is a maximal run of
+    /// non-`proj` convs ending at the first `residual = true` layer,
+    /// optionally followed by one `*proj` conv that computes the block's
+    /// shortcut from the block input. The lane producer (projection conv,
+    /// or an identity [`Op::Skip`]) is emitted *before* the chain so the
+    /// deterministic scheduler prepares the lane first.
+    pub fn from_network(net: &Network, in_h: usize, in_w: usize) -> Result<Graph, GraphError> {
+        if net.layers.is_empty() {
+            return Err(GraphError::EmptyNetwork { net: net.name.clone() });
+        }
+        let mut g = Graph::default();
+        let in_c = net.layers[0].cin;
+        let input = g.push(Op::Input, vec![], in_h, in_w, in_c);
+        let nominal = in_h == net.input_hw && in_w == net.input_hw;
+
+        let mut cur = g.push_conv(net, 0, input, nominal)?;
+        if let Some(p) = &net.stem_pool {
+            let (h, w, c) = {
+                let s = &g.nodes[cur];
+                (s.out_h, s.out_w, s.out_c)
+            };
+            if p.k == 0 || p.stride == 0 || p.pad >= p.k {
+                return Err(GraphError::BadPool {
+                    net: net.name.clone(),
+                    detail: format!("degenerate {}x{} stride {} pad {}", p.k, p.k, p.stride, p.pad),
+                });
+            }
+            if h + 2 * p.pad < p.k || w + 2 * p.pad < p.k {
+                return Err(GraphError::BadPool {
+                    net: net.name.clone(),
+                    detail: format!("{}x{} window does not fit {h}x{w} stem output", p.k, p.k),
+                });
+            }
+            let ho = (h + 2 * p.pad - p.k) / p.stride + 1;
+            let wo = (w + 2 * p.pad - p.k) / p.stride + 1;
+            cur = g.push(Op::Pool { k: p.k, stride: p.stride, pad: p.pad }, vec![cur], ho, wo, c);
+        }
+
+        let mut i = 1;
+        while i < net.layers.len() {
+            // find the block terminator (first residual = true layer)
+            let mut end = None;
+            for (j, l) in net.layers.iter().enumerate().skip(i) {
+                if l.name.ends_with("proj") {
+                    return Err(GraphError::ProjOutOfPlace {
+                        net: net.name.clone(),
+                        layer: l.name.clone(),
+                        index: j,
+                    });
+                }
+                if l.residual {
+                    end = Some(j);
+                    break;
+                }
+            }
+            let Some(end) = end else {
+                return Err(GraphError::DanglingTail {
+                    net: net.name.clone(),
+                    layer: net.layers[i].name.clone(),
+                    index: i,
+                });
+            };
+            let has_proj =
+                net.layers.get(end + 1).map(|l| l.name.ends_with("proj")).unwrap_or(false);
+
+            let block_in = cur;
+            // lane producer first (see module docs)
+            let skip = if has_proj {
+                g.push_conv(net, end + 1, block_in, nominal)?
+            } else {
+                let (h, w, c) = {
+                    let s = &g.nodes[block_in];
+                    (s.out_h, s.out_w, s.out_c)
+                };
+                g.push(Op::Skip, vec![block_in], h, w, c)
+            };
+            let mut chain = block_in;
+            for j in i..=end {
+                chain = g.push_conv(net, j, chain, nominal)?;
+            }
+            let (ch, cw, cc) = {
+                let s = &g.nodes[chain];
+                (s.out_h, s.out_w, s.out_c)
+            };
+            let (sh, sw, sc) = {
+                let s = &g.nodes[skip];
+                (s.out_h, s.out_w, s.out_c)
+            };
+            if (ch, cw, cc) != (sh, sw, sc) {
+                return Err(GraphError::AddShapeMismatch {
+                    net: net.name.clone(),
+                    layer: net.layers[end].name.clone(),
+                    chain: (ch, cw, cc),
+                    skip: (sh, sw, sc),
+                });
+            }
+            cur = g.push(Op::Add, vec![chain, skip], ch, cw, cc);
+            i = end + 1 + usize::from(has_proj);
+        }
+
+        let feat_c = g.nodes[cur].out_c;
+        let gap = g.push(Op::Gap, vec![cur], 1, 1, feat_c);
+        g.push(Op::Fc, vec![gap], 1, 1, net.fc_out);
+        Ok(g)
+    }
+
+    /// Consumer lists: `consumers()[p]` holds every node that reads `p`,
+    /// in operand order of discovery.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &src in &n.inputs {
+                out[src].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Deterministic topological execution order (see [`super::schedule`]).
+    pub fn schedule(&self) -> Vec<NodeId> {
+        super::schedule::topo_order(self)
+    }
+
+    /// Short human label for a node (error messages, bench rows).
+    pub fn label(&self, net: &Network, id: NodeId) -> String {
+        match &self.nodes[id].op {
+            Op::Input => "input".into(),
+            Op::Conv { layer } => net.layers[*layer].name.clone(),
+            Op::Pool { k, stride, .. } => format!("maxpool{k}x{k}s{stride}"),
+            Op::Skip => "skip".into(),
+            Op::Add => "add".into(),
+            Op::Gap => "gap".into(),
+            Op::Fc => "fc".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{bottleneck_mini, resnet101, resnet18, resnet50, resnet_mini_default};
+
+    #[test]
+    fn test_mini_graph_shape_and_order() {
+        let net = resnet_mini_default();
+        let g = Graph::from_network(&net, 24, 24).unwrap();
+        // input + 9 convs + 1 identity skip + 3 adds + gap + fc
+        assert_eq!(g.nodes.len(), 1 + 9 + 1 + 3 + 1 + 1);
+        assert!(matches!(g.nodes[0].op, Op::Input));
+        // s0 block: identity skip is created before its chain convs
+        let skip_id =
+            g.nodes.iter().find(|n| matches!(n.op, Op::Skip)).map(|n| n.id).unwrap();
+        let s0c1 = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Conv { layer } if net.layers[layer].name == "s0b0c1"))
+            .map(|n| n.id)
+            .unwrap();
+        assert!(skip_id < s0c1);
+        let order = g.schedule();
+        assert_eq!(order.len(), g.nodes.len());
+        // smallest-id tie-break makes the schedule the identity permutation
+        // for chain-structured builders
+        let pos: Vec<usize> = {
+            let mut p = vec![0; order.len()];
+            for (t, &id) in order.iter().enumerate() {
+                p[id] = t;
+            }
+            p
+        };
+        for n in &g.nodes {
+            for &src in &n.inputs {
+                assert!(pos[src] < pos[n.id], "producer must schedule first");
+            }
+        }
+    }
+
+    #[test]
+    fn test_bottleneck_nets_build_with_pool() {
+        for (net, convs, blocks, projs) in [
+            (resnet50(), 53, 16, 4),
+            (resnet101(), 104, 33, 4),
+            (resnet18(), 20, 8, 3),
+            (bottleneck_mini(16, &[4, 8], 3), 9, 2, 2),
+        ] {
+            let g = Graph::from_network(&net, net.input_hw, net.input_hw).unwrap();
+            let n_conv = g.nodes.iter().filter(|n| matches!(n.op, Op::Conv { .. })).count();
+            let n_add = g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count();
+            let n_skip = g.nodes.iter().filter(|n| matches!(n.op, Op::Skip)).count();
+            let n_pool = g.nodes.iter().filter(|n| matches!(n.op, Op::Pool { .. })).count();
+            assert_eq!(n_conv, convs, "{}", net.name);
+            assert_eq!(n_add, blocks, "{}", net.name);
+            assert_eq!(n_skip, blocks - projs, "{}", net.name);
+            assert_eq!(n_pool, 1, "{}", net.name);
+            // final feature resolution of the He nets is 7x7
+            let gap = g.nodes.iter().find(|n| matches!(n.op, Op::Gap)).unwrap();
+            let last = &g.nodes[gap.inputs[0]];
+            if net.name.starts_with("resnet-") {
+                assert_eq!((last.out_h, last.out_w), (7, 7), "{}", net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn test_dangling_tail_is_a_typed_error() {
+        let mut net = resnet_mini_default();
+        net.layers.push(crate::model::ConvLayer {
+            name: "tail".into(),
+            kh: 3,
+            kw: 3,
+            cin: 128,
+            cout: 128,
+            stride: 1,
+            pad: 1,
+            out_hw: 6,
+            residual: false,
+            relu: true,
+        });
+        let err = Graph::from_network(&net, 24, 24).unwrap_err();
+        assert!(
+            matches!(&err, GraphError::DanglingTail { layer, .. } if layer == "tail"),
+            "{err}"
+        );
+        assert!(err.to_string().contains("tail"), "{err}");
+    }
+
+    #[test]
+    fn test_channel_mismatch_is_a_typed_error() {
+        let mut net = resnet_mini_default();
+        net.layers[1].cin = 7; // s0b0c1 no longer matches the stem's 32
+        let err = Graph::from_network(&net, 24, 24).unwrap_err();
+        assert!(matches!(&err, GraphError::BadConv { layer, .. } if layer == "s0b0c1"), "{err}");
+    }
+
+    #[test]
+    fn test_declared_geometry_is_checked_at_nominal_resolution() {
+        let mut net = resnet_mini_default();
+        net.layers[1].out_hw = 23;
+        let err = Graph::from_network(&net, 24, 24).unwrap_err();
+        assert!(matches!(err, GraphError::GeometryMismatch { declared: 23, .. }), "{err}");
+        // off-nominal inputs skip the declared-shape check (the walk still
+        // computes real geometry)
+        assert!(Graph::from_network(&net, 16, 16).is_ok());
+    }
+
+    #[test]
+    fn test_empty_network_is_a_typed_error() {
+        let mut net = resnet_mini_default();
+        net.layers.clear();
+        assert!(matches!(
+            Graph::from_network(&net, 24, 24),
+            Err(GraphError::EmptyNetwork { .. })
+        ));
+    }
+}

@@ -1,0 +1,157 @@
+//! Tensor lifetime analysis and arena interval coloring.
+//!
+//! The forward plan gives every intermediate tensor a live interval in
+//! schedule time — `[start, end]` inclusive, from the step that defines it
+//! to its last read — and asks this module to pack all tensors into one
+//! flat activation arena. Greedy first-fit interval coloring: place
+//! tensors in order of definition; each goes at the lowest offset whose
+//! byte range is free of every already-placed tensor with an overlapping
+//! lifetime. Two tensors may share bytes **iff** their intervals are
+//! disjoint — the invariant the planner's property tests check directly.
+//!
+//! Offsets are in elements per image; batched forwards scale every offset
+//! and size by the same batch factor, which preserves disjointness.
+//!
+//! ```
+//! use dfp_infer::graph::{color_intervals, Lifetime};
+//!
+//! // ping-pong pair + one long-lived skip source
+//! let reqs = [
+//!     Lifetime { size: 64, start: 0, end: 2 },  // A: defined, read by B and C
+//!     Lifetime { size: 64, start: 2, end: 3 },  // B: overlaps A at step 2
+//!     Lifetime { size: 64, start: 3, end: 4 },  // C: may reuse A's bytes
+//! ];
+//! let layout = color_intervals(&reqs);
+//! assert_eq!(layout.offsets, vec![0, 64, 0]);
+//! assert_eq!(layout.total, 128);
+//! ```
+
+/// One tensor's arena request: `size` elements, live over the inclusive
+/// step interval `[start, end]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lifetime {
+    pub size: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Lifetime {
+    /// Do two live intervals share any step?
+    pub fn overlaps(&self, other: &Lifetime) -> bool {
+        self.start <= other.end && other.start <= self.end
+    }
+}
+
+/// The packed arena: one offset per input [`Lifetime`], plus the arena's
+/// total element count (the planned peak).
+#[derive(Debug, Clone, Default)]
+pub struct ArenaLayout {
+    pub offsets: Vec<usize>,
+    pub total: usize,
+}
+
+/// Greedy first-fit interval coloring (see module docs). Deterministic:
+/// tensors are placed in order of `(start, index)`.
+pub fn color_intervals(reqs: &[Lifetime]) -> ArenaLayout {
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by_key(|&i| (reqs[i].start, i));
+    let mut offsets = vec![0usize; reqs.len()];
+    let mut placed: Vec<usize> = Vec::with_capacity(reqs.len());
+    let mut total = 0usize;
+    for &i in &order {
+        let r = &reqs[i];
+        // already-placed tensors alive at the same time, by offset
+        let mut busy: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|&&j| r.overlaps(&reqs[j]))
+            .map(|&j| (offsets[j], reqs[j].size))
+            .collect();
+        busy.sort_unstable();
+        let mut off = 0usize;
+        for (o, sz) in busy {
+            if off + r.size <= o {
+                break; // fits in the gap before this block
+            }
+            off = off.max(o + sz);
+        }
+        offsets[i] = off;
+        total = total.max(off + r.size);
+        placed.push(i);
+    }
+    ArenaLayout { offsets, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The invariant, checked exhaustively over a layout.
+    pub fn assert_disjoint(reqs: &[Lifetime], layout: &ArenaLayout) {
+        for a in 0..reqs.len() {
+            for b in a + 1..reqs.len() {
+                if !reqs[a].overlaps(&reqs[b]) {
+                    continue;
+                }
+                let (ao, bo) = (layout.offsets[a], layout.offsets[b]);
+                let clash = ao < bo + reqs[b].size && bo < ao + reqs[a].size;
+                assert!(
+                    !clash || reqs[a].size == 0 || reqs[b].size == 0,
+                    "live tensors {a} and {b} overlap in the arena"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_disjoint_lifetimes_share_bytes() {
+        let reqs = [
+            Lifetime { size: 100, start: 0, end: 1 },
+            Lifetime { size: 50, start: 1, end: 2 },
+            Lifetime { size: 100, start: 2, end: 3 },
+        ];
+        let l = color_intervals(&reqs);
+        assert_disjoint(&reqs, &l);
+        assert_eq!(l.offsets[0], 0);
+        assert_eq!(l.offsets[1], 100);
+        assert_eq!(l.offsets[2], 0, "tensor 2 reuses tensor 0's bytes");
+        assert_eq!(l.total, 150);
+    }
+
+    #[test]
+    fn test_long_lived_tensor_blocks_reuse() {
+        let reqs = [
+            Lifetime { size: 10, start: 0, end: 5 }, // alive throughout
+            Lifetime { size: 10, start: 1, end: 2 },
+            Lifetime { size: 10, start: 3, end: 4 },
+        ];
+        let l = color_intervals(&reqs);
+        assert_disjoint(&reqs, &l);
+        assert_eq!(l.offsets[1], 10);
+        assert_eq!(l.offsets[2], 10, "disjoint from 1, so it reuses its slot");
+        assert_eq!(l.total, 20);
+    }
+
+    #[test]
+    fn test_first_fit_takes_gaps() {
+        let reqs = [
+            Lifetime { size: 10, start: 0, end: 10 },
+            Lifetime { size: 20, start: 0, end: 2 },
+            Lifetime { size: 15, start: 3, end: 10 }, // fits where 1 was
+            Lifetime { size: 30, start: 4, end: 10 },
+        ];
+        let l = color_intervals(&reqs);
+        assert_disjoint(&reqs, &l);
+        assert_eq!(l.offsets[2], 10);
+        assert_eq!(l.total, 55);
+    }
+
+    #[test]
+    fn test_zero_sized_requests_are_harmless() {
+        let reqs = [
+            Lifetime { size: 0, start: 0, end: 9 },
+            Lifetime { size: 8, start: 0, end: 9 },
+        ];
+        let l = color_intervals(&reqs);
+        assert_eq!(l.total, 8);
+    }
+}

@@ -1,0 +1,43 @@
+//! Layer-graph IR, deterministic scheduling, and buffer liveness planning.
+//!
+//! [`ir`] turns a [`crate::model::Network`] layer table into an explicit
+//! DAG of typed nodes (conv / pool / residual add / skip / GAP / FC) with
+//! producer→consumer edges, rejecting unwalkable tables with a typed
+//! [`GraphError`] that names the first unsupported layer. The residual-walk
+//! rule (a block is a run of convs ending at `residual = true`, optionally
+//! followed by a `*proj` shortcut conv) lives **only here** — the forward
+//! plan, the epilogue cache and the reference interpreters all consume the
+//! graph instead of re-walking the layer table.
+//!
+//! [`schedule`] is a deterministic Kahn topological sort (smallest node id
+//! first among ready nodes). Because block builders emit the skip-lane
+//! producer before the chain convs, the schedule prepares each residual
+//! lane as early as possible, which both matches the legacy execution
+//! order bit-for-bit and minimizes tensor lifetimes.
+//!
+//! [`liveness`] does interval analysis over tensor lifetimes and packs
+//! them into one activation arena by greedy first-fit interval coloring:
+//! two tensors may share bytes iff their live step-intervals are disjoint.
+//! [`crate::lpinfer::ForwardPlan`] lowers the scheduled graph onto these
+//! planned offsets, which is what keeps the steady-state forward at zero
+//! heap allocations on arbitrary (bottleneck, pooled) residual nets.
+//!
+//! ```
+//! use dfp_infer::graph::Graph;
+//! use dfp_infer::model::resnet50;
+//!
+//! let net = resnet50();
+//! let g = Graph::from_network(&net, 224, 224).unwrap();
+//! // 53 convs + input + stem pool + 16 residual adds + 12 identity skips
+//! // + GAP + FC
+//! let order = g.schedule();
+//! assert_eq!(order.len(), g.nodes.len());
+//! ```
+
+pub mod ir;
+pub mod liveness;
+pub mod schedule;
+
+pub use ir::{Graph, GraphError, Node, NodeId, Op};
+pub use liveness::{color_intervals, ArenaLayout, Lifetime};
+pub use schedule::topo_order;

@@ -26,11 +26,17 @@
 //! * [`dfp`]         — dynamic fixed point numerics (shared-exponent int8),
 //!   the integer-only requantizer (`Requantizer`, fixed-point mult+shift)
 //!   and the 2-bit/4-bit storage packing the kernels consume.
+//! * [`graph`]       — layer DAG IR built from a `model::Network` (conv /
+//!   pool / residual-add / GAP / FC nodes, typed build errors naming the
+//!   first unsupported layer), deterministic topological scheduler, and
+//!   the buffer liveness planner (interval coloring of tensor lifetimes
+//!   onto one activation arena).
 //! * [`lpinfer`]     — pure-Rust integer inference pipeline: i8 activations,
 //!   i32 accumulators, fused integer requant, i64 residual lane — no f32
 //!   tensor between layers (an f32 reference path remains for validation);
-//!   `plan` builds the load-time `ForwardPlan` + `ForwardWorkspace` arena
-//!   for the zero-allocation steady-state forward (1×1 convs skip im2col).
+//!   `plan` lowers the scheduled graph to the load-time `ForwardPlan` +
+//!   `ForwardWorkspace` arena (planned buffer offsets, 1×1 convs skip
+//!   im2col) for the zero-allocation steady-state forward.
 //! * [`telemetry`]   — engine observability: per-forward `ForwardProfile`
 //!   slots carried in the workspace (zero-allocation steady state intact),
 //!   drained into the global atomic `EngineMetrics`; kernel counters
@@ -49,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dfp;
+pub mod graph;
 pub mod io;
 pub mod json;
 pub mod kernels;

@@ -11,11 +11,14 @@
 //! stay bit-exact across kernels and thread counts (property-tested in
 //! `rust/tests/kernels_equivalence.rs`).
 //!
-//! The serving entry point is [`forward_quant_into`]: the whole pipeline
-//! runs through a reusable [`ForwardWorkspace`] arena sized once at model
-//! load by the [`ForwardPlan`] (see the [`plan`] module and DESIGN.md
-//! §forward-plan) — pointwise (1×1/s1/p0) convs skip im2col entirely, and
-//! the steady state performs zero heap allocations per request.
+//! The serving entry point is [`forward_quant_into`]: an interpreter over
+//! the [`ForwardPlan`]'s scheduled step list, built at model load by
+//! lowering the layer DAG ([`crate::graph`]) and interval-coloring every
+//! activation lifetime into one arena (see the [`plan`] module and
+//! DESIGN.md §graph/§forward-plan) — pointwise (1×1/s1/p0) convs skip
+//! im2col entirely, and the steady state performs zero heap allocations
+//! per request. Unplannable layer tables fail at load with a typed
+//! [`GraphError`] naming the offending layer.
 //!
 //! The original f32 epilogue survives as [`forward_quant_ref`] — the
 //! op-for-op mirror of `python/compile/model.py::forward_quant(engine="sim")`
@@ -32,16 +35,19 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::dfp::{fx_rescale, round_half_even, Requantizer, REQUANT_VERSION, SKIP_FRAC};
+use crate::graph::GraphError;
 use crate::io::{AnyTensor, TensorMap};
 use crate::kernels::{KernelRegistry, LayerRequant, PackedLayer, ResolvedEpilogue};
 use crate::model::{ConvLayer, Network};
-use crate::nn::{im2col, im2col_into};
+use crate::nn::{im2col, im2col_into, maxpool2d, maxpool2d_into};
 use crate::scheme::{LayerPolicy, Scheme, WeightCodec};
 use crate::telemetry::{self, ForwardProfile};
 use crate::tensor::Tensor;
 
+use plan::{slot, slot_mut, split_src_dst, TensorRef};
+
 pub use crate::kernels::{gemm_i8, gemm_i8_dense};
-pub use plan::{BlockStep, ConvDims, ForwardPlan, ForwardWorkspace};
+pub use plan::{ConvDims, ExecStep, ForwardPlan, ForwardWorkspace};
 
 /// Quantized parameters for one conv layer.
 #[derive(Debug, Clone)]
@@ -144,8 +150,9 @@ pub struct QModelParams {
 /// Every [`ResolvedEpilogue`] the fused forward pass needs, keyed by layer:
 /// the own-grid epilogue (ReLU fused) for each non-projection conv, and the
 /// *consumer*-grid epilogue (no ReLU) for each projection conv feeding the
-/// integer residual lane. Built by walking the network's residual-block
-/// structure exactly like [`forward_quant_with`] does.
+/// integer residual lane. Derived from the [`ForwardPlan`]'s scheduled step
+/// list — the plan is the single source of truth for the residual-block
+/// structure; nothing here re-walks the layer table.
 ///
 /// The cache is derived state: after mutating `convs[*]` scales/requant in
 /// place, call [`QModelParams::rebuild_epilogues`] (loaders do this for
@@ -162,43 +169,47 @@ pub struct EpilogueCache {
 }
 
 impl EpilogueCache {
-    /// Resolve every epilogue for `convs` against the network topology.
+    /// Resolve every epilogue `plan`'s step list will ask for: each
+    /// [`ExecStep::Conv`] / [`ExecStep::ConvSkip`] layer gets its own-grid
+    /// epilogue keyed by the exponent of the activation it reads, and each
+    /// [`ExecStep::ConvToSkip`] projection gets its consumer-grid epilogue.
     /// Returns an empty cache (forward falls back to on-the-fly resolution)
-    /// when a layer the walk needs is missing from `convs`.
-    pub fn build(convs: &BTreeMap<String, QConvParams>, in_exp: i32, net: &Network) -> Self {
+    /// when a layer the plan schedules is missing from `convs`.
+    pub fn from_plan(
+        convs: &BTreeMap<String, QConvParams>,
+        in_exp: i32,
+        net: &Network,
+        plan: &ForwardPlan,
+    ) -> Self {
         let mut cache = Self::default();
-        // the first layer is the stem positionally, whatever its name —
-        // mirror the forward pass exactly
-        let Some(stem) = net.layers.first().and_then(|l| convs.get(&l.name)) else {
-            return cache;
-        };
-        let stem_name = net.layers[0].name.clone();
-        cache.own.insert(stem_name, (in_exp, stem.requant.resolve(in_exp, stem.act_exp, true)));
-        let mut exp_h = stem.act_exp;
-        let mut i = 1;
-        while i + 1 < net.layers.len() {
-            let c1 = &net.layers[i];
-            let c2 = &net.layers[i + 1];
-            let has_proj = net
-                .layers
-                .get(i + 2)
-                .map(|l| l.name.ends_with("proj"))
-                .unwrap_or(false);
-            let (Some(p1), Some(p2)) = (convs.get(&c1.name), convs.get(&c2.name)) else {
-                return Self::default();
-            };
-            let exp2 = p2.act_exp;
-            if has_proj {
-                let proj = &net.layers[i + 2];
-                let Some(pp) = convs.get(&proj.name) else {
-                    return Self::default();
-                };
-                cache.proj.insert(proj.name.clone(), (exp_h, exp2, pp.requant.resolve(exp_h, exp2, false)));
+        // the exponent governing a planned tensor's codes: the producing
+        // layer's act_exp, or the network input exponent
+        let exp_of = |t: &TensorRef| -> Option<i32> {
+            match t.exp_from {
+                None => Some(in_exp),
+                Some(li) => convs.get(&net.layers[li].name).map(|p| p.act_exp),
             }
-            cache.own.insert(c1.name.clone(), (exp_h, p1.requant.resolve(exp_h, p1.act_exp, true)));
-            cache.own.insert(c2.name.clone(), (p1.act_exp, p2.requant.resolve(p1.act_exp, exp2, true)));
-            exp_h = exp2;
-            i += if has_proj { 3 } else { 2 };
+        };
+        for s in &plan.steps {
+            match s {
+                ExecStep::Conv { layer, src, .. } | ExecStep::ConvSkip { layer, src, .. } => {
+                    let name = &net.layers[*layer].name;
+                    let (Some(p), Some(e)) = (convs.get(name), exp_of(src)) else {
+                        return Self::default();
+                    };
+                    cache.own.insert(name.clone(), (e, p.requant.resolve(e, p.act_exp, true)));
+                }
+                ExecStep::ConvToSkip { layer, src, target } => {
+                    let name = &net.layers[*layer].name;
+                    let tgt = convs.get(&net.layers[*target].name).map(|p| p.act_exp);
+                    let (Some(p), Some(e), Some(te)) = (convs.get(name), exp_of(src), tgt)
+                    else {
+                        return Self::default();
+                    };
+                    cache.proj.insert(name.clone(), (e, te, p.requant.resolve(e, te, false)));
+                }
+                ExecStep::IdentitySkip { .. } | ExecStep::Pool { .. } => {}
+            }
         }
         cache
     }
@@ -333,7 +344,9 @@ impl QModelParams {
         };
         // loaded codes must actually fit the scheme the export declares
         out.validate(net)?;
-        out.rebuild_epilogues(net);
+        out.rebuild_epilogues(net).with_context(|| {
+            format!("cannot build a forward plan for network '{}'", net.name)
+        })?;
         Ok(out)
     }
 
@@ -433,18 +446,25 @@ impl QModelParams {
             epilogues: EpilogueCache::default(),
             plan: ForwardPlan::default(),
         };
-        params.rebuild_epilogues(net);
+        params
+            .rebuild_epilogues(net)
+            .expect("synthetic model requires a plannable network");
         params
     }
 
-    /// Rebuild the load-time caches — the resolved-epilogue cache and the
-    /// [`ForwardPlan`] — from the current conv params and network. Loaders
-    /// call this; it is also how [`QModelParams::set_conv`] edits regain
-    /// their cached epilogues (until then the forward pass resolves on the
-    /// fly, with identical results).
-    pub fn rebuild_epilogues(&mut self, net: &Network) {
-        self.epilogues = EpilogueCache::build(&self.convs, self.in_exp, net);
-        self.plan = ForwardPlan::build(net);
+    /// Rebuild the load-time caches — the [`ForwardPlan`] and the
+    /// resolved-epilogue cache derived from its step list — from the
+    /// current conv params and network. Loaders call this; it is also how
+    /// [`QModelParams::set_conv`] edits regain their cached epilogues
+    /// (until then the forward pass resolves on the fly, with identical
+    /// results). Unplannable layer tables fail with a typed [`GraphError`]
+    /// naming the first unsupported layer — loaders surface it instead of
+    /// silently serving an empty plan.
+    pub fn rebuild_epilogues(&mut self, net: &Network) -> std::result::Result<(), GraphError> {
+        let plan = ForwardPlan::build(net)?;
+        self.epilogues = EpilogueCache::from_plan(&self.convs, self.in_exp, net, &plan);
+        self.plan = plan;
+        Ok(())
     }
 
     /// The load-time resolved-epilogue cache (read-only; see
@@ -807,149 +827,129 @@ pub fn forward_quant_into(
     let plan: &ForwardPlan = if params.plan.matches(net, h, w) {
         &params.plan
     } else {
-        local_plan = ForwardPlan::build_for(net, h, w);
+        local_plan = ForwardPlan::build_for(net, h, w).unwrap_or_else(|e| {
+            panic!("forward_quant: cannot plan network '{}': {e}", net.name)
+        });
         &local_plan
     };
-    assert!(
-        !plan.is_empty(),
-        "forward_quant: no forward plan for network '{}' — it is empty or not stem + (c1, c2[, proj])*",
-        net.name
-    );
     assert_eq!(x.dim(3), plan.in_c, "input channels != stem cin");
     ws.ensure(plan, n);
-    let ForwardWorkspace { xq, act_a, act_b, cols, acc, skip, skip_max, sums, fq, fc_acc, profile } =
-        ws;
+    let ForwardWorkspace { act, cols, acc, skip, skip_max, sums, fq, fc_acc, profile } = ws;
+    // the exponent governing a planned tensor's codes (BTreeMap lookup:
+    // allocation-free)
+    let exp_of = |t: &TensorRef| -> i32 {
+        match t.exp_from {
+            None => params.in_exp,
+            Some(li) => params.convs[&net.layers[li].name].act_exp,
+        }
+    };
 
-    // quantize input image to int8 DFP (pipeline entry: f32 is allowed here)
+    // quantize input image to int8 DFP (pipeline entry: f32 is allowed
+    // here) into the input's planned arena slot
     let t = Instant::now();
-    let xq = &mut xq[..n * plan.xq_elems];
-    requant_into(x.data(), params.in_exp, xq);
+    requant_into(x.data(), params.in_exp, slot_mut(act, n, &plan.input));
     profile.quantize_ns = t.elapsed().as_nanos() as u64;
 
-    let stem_l = &net.layers[0];
-    let sd = &plan.dims[0];
-    let stem_p = &params.convs[&stem_l.name];
-    let stem_epi = own_epi(params, &stem_l.name, stem_p, params.in_exp);
-    run_conv(
-        reg,
-        stem_l,
-        sd,
-        stem_p,
-        &stem_epi,
-        n,
-        h,
-        w,
-        xq,
-        cols,
-        acc,
-        None,
-        None,
-        &mut act_a[..n * sd.m * sd.f],
-        profile,
-        0,
-    );
-    let (mut cur_h, mut cur_w, mut cur_f) = (sd.ho, sd.wo, sd.f);
-    let mut exp_h = stem_p.act_exp;
-
-    // hq always lives in act_a: c1 writes act_b, c2 lands back in act_a
+    // interpret the scheduled step list over the planned arena offsets
     for step in &plan.steps {
-        let c1_l = &net.layers[step.c1];
-        let c2_l = &net.layers[step.c2];
-        let (d1, d2) = (&plan.dims[step.c1], &plan.dims[step.c2]);
-        let p1 = &params.convs[&c1_l.name];
-        let p2 = &params.convs[&c2_l.name];
-        let exp2 = p2.act_exp;
-        let cur_len = n * cur_h * cur_w * cur_f;
-        let m2 = n * d2.m;
-        let skip_len = m2 * d2.f;
-        // residual on the integer skip lane, targeted at c2's grid, with
-        // per-row maxima carried alongside for the vector-epilogue gate
-        match step.proj {
-            Some(pi) => {
-                let proj_l = &net.layers[pi];
-                let pd = &plan.dims[pi];
-                let pp = &params.convs[&proj_l.name];
-                let pepi = proj_epi(params, &proj_l.name, pp, exp_h, exp2);
-                run_conv_skip(
-                    reg,
-                    proj_l,
-                    pd,
-                    pp,
-                    &pepi,
-                    n,
-                    cur_h,
-                    cur_w,
-                    &act_a[..cur_len],
-                    cols,
-                    acc,
-                    &mut skip[..skip_len],
-                    &mut skip_max[..m2],
-                    profile,
-                    pi,
+        match step {
+            ExecStep::Conv { layer, src, dst } => {
+                let l = &net.layers[*layer];
+                let p = &params.convs[&l.name];
+                let e = own_epi(params, &l.name, p, exp_of(src));
+                let (xin, out) = split_src_dst(act, n, src, dst);
+                run_conv(
+                    reg, l, &plan.dims[*layer], p, &e, n, src.h, src.w, xin, cols, acc, None,
+                    None, out, profile, *layer,
                 );
             }
-            None => {
+            ExecStep::ConvSkip { layer, src, dst } => {
+                // the residual join, fused: the prepared i64 lane rides the
+                // epilogue with its per-row maxima for the vector gate
+                let l = &net.layers[*layer];
+                let d = &plan.dims[*layer];
+                let p = &params.convs[&l.name];
+                let e = own_epi(params, &l.name, p, exp_of(src));
+                let m = n * d.m;
+                let (xin, out) = split_src_dst(act, n, src, dst);
+                run_conv(
+                    reg,
+                    l,
+                    d,
+                    p,
+                    &e,
+                    n,
+                    src.h,
+                    src.w,
+                    xin,
+                    cols,
+                    acc,
+                    Some(&skip[..m * d.f]),
+                    Some(&skip_max[..m]),
+                    out,
+                    profile,
+                    *layer,
+                );
+            }
+            ExecStep::ConvToSkip { layer, src, target } => {
+                // projection conv straight onto the i64 lane, requantized
+                // to the consuming layer's activation grid
+                let l = &net.layers[*layer];
+                let d = &plan.dims[*layer];
+                let p = &params.convs[&l.name];
+                let tgt_exp = params.convs[&net.layers[*target].name].act_exp;
+                let e = proj_epi(params, &l.name, p, exp_of(src), tgt_exp);
+                let m = n * d.m;
+                run_conv_skip(
+                    reg,
+                    l,
+                    d,
+                    p,
+                    &e,
+                    n,
+                    src.h,
+                    src.w,
+                    slot(act, n, src),
+                    cols,
+                    acc,
+                    &mut skip[..m * d.f],
+                    &mut skip_max[..m],
+                    profile,
+                    *layer,
+                );
+            }
+            ExecStep::IdentitySkip { src, target } => {
                 let t = Instant::now();
+                let tgt_exp = params.convs[&net.layers[*target].name].act_exp;
+                let rows = n * src.h * src.w;
                 dequant_to_skip_into(
-                    &act_a[..cur_len],
-                    exp_h,
-                    exp2,
-                    d2.f,
-                    &mut skip[..skip_len],
-                    &mut skip_max[..m2],
+                    slot(act, n, src),
+                    exp_of(src),
+                    tgt_exp,
+                    src.c,
+                    &mut skip[..rows * src.c],
+                    &mut skip_max[..rows],
                 );
                 profile.skip_ns += t.elapsed().as_nanos() as u64;
             }
+            ExecStep::Pool { k, stride, pad, src, dst } => {
+                // exact on i8 codes: max commutes with the monotone requant
+                let t = Instant::now();
+                let (xin, out) = split_src_dst(act, n, src, dst);
+                maxpool2d_into(xin, n, src.h, src.w, src.c, *k, *stride, *pad, out);
+                profile.maxpool_ns += t.elapsed().as_nanos() as u64;
+            }
         }
-        let e1 = own_epi(params, &c1_l.name, p1, exp_h);
-        let m1 = n * d1.m;
-        run_conv(
-            reg,
-            c1_l,
-            d1,
-            p1,
-            &e1,
-            n,
-            cur_h,
-            cur_w,
-            &act_a[..cur_len],
-            cols,
-            acc,
-            None,
-            None,
-            &mut act_b[..m1 * d1.f],
-            profile,
-            step.c1,
-        );
-        let e2 = own_epi(params, &c2_l.name, p2, p1.act_exp);
-        run_conv(
-            reg,
-            c2_l,
-            d2,
-            p2,
-            &e2,
-            n,
-            d1.ho,
-            d1.wo,
-            &act_b[..m1 * d1.f],
-            cols,
-            acc,
-            Some(&skip[..skip_len]),
-            Some(&skip_max[..m2]),
-            &mut act_a[..skip_len],
-            profile,
-            step.c2,
-        );
-        (cur_h, cur_w, cur_f) = (d2.ho, d2.wo, d2.f);
-        exp_h = exp2;
     }
 
     // integer global average pool: i64 code sums requantized to feat_exp
     // through a scalar fixed-point multiplier (no f32 feature tensor)
     let t = Instant::now();
-    let c = cur_f;
+    let fin = &plan.final_act;
+    let exp_h = exp_of(fin);
+    let (cur_h, cur_w, c) = (fin.h, fin.w, fin.c);
     assert_eq!(c, params.fc_wq.dim(0), "final activation channels != fc_in");
-    let hq = &act_a[..n * cur_h * cur_w * c];
+    let hq = slot(act, n, fin);
     let sums = &mut sums[..n * c];
     sums.fill(0);
     for b in 0..n {
@@ -1036,6 +1036,22 @@ fn qconv_ref(
     ConvOut { q, z: zt }
 }
 
+/// Store a planned tensor's reference activations under its plan id.
+fn put_ref(ts: &mut Vec<Option<Tensor<i8>>>, t: usize, v: Tensor<i8>) {
+    if ts.len() <= t {
+        ts.resize(t + 1, None);
+    }
+    ts[t] = Some(v);
+}
+
+/// Plan for the reference/divergence interpreters, which have no silent
+/// fallback: an unplannable table is a caller error.
+fn ref_plan(net: &Network, x: &Tensor<f32>) -> ForwardPlan {
+    ForwardPlan::build_for(net, x.dim(1), x.dim(2)).unwrap_or_else(|e| {
+        panic!("forward_quant_ref: cannot plan network '{}': {e}", net.name)
+    })
+}
+
 /// [`forward_quant_ref_with`] with the default (auto, single-thread)
 /// registry.
 pub fn forward_quant_ref(params: &QModelParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
@@ -1053,41 +1069,70 @@ pub fn forward_quant_ref_with(
     x: &Tensor<f32>,
     reg: &KernelRegistry,
 ) -> Tensor<f32> {
-    let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
-
-    // the first layer is the stem positionally (same rule as forward_quant)
-    let stem_l = &net.layers[0];
-    let stem_p = &params.convs[&stem_l.name];
-    let stem = qconv_ref(&xq, params.in_exp, stem_l, stem_p, true, None, false, reg);
-    let mut hq = stem.q;
-    let mut exp_h = stem_p.act_exp;
-
-    let mut i = 1;
-    while i < net.layers.len() {
-        let c1 = &net.layers[i];
-        let c2 = &net.layers[i + 1];
-        let has_proj = net
-            .layers
-            .get(i + 2)
-            .map(|l| l.name.ends_with("proj"))
-            .unwrap_or(false);
-        // skip path in f32 (mirrors the python sim exactly)
-        let skip_f = if has_proj {
-            let proj = &net.layers[i + 2];
-            qconv_ref(&hq, exp_h, proj, &params.convs[&proj.name], false, None, true, reg)
-                .z
-                .expect("proj keeps f32")
-        } else {
-            let s = 2f32.powi(exp_h);
-            hq.map(|v| f32::from(v) * s)
-        };
-        let h1 = qconv_ref(&hq, exp_h, c1, &params.convs[&c1.name], true, None, false, reg);
-        let exp1 = params.convs[&c1.name].act_exp;
-        let h2 = qconv_ref(&h1.q, exp1, c2, &params.convs[&c2.name], true, Some(&skip_f), false, reg);
-        exp_h = params.convs[&c2.name].act_exp;
-        hq = h2.q;
-        i += if has_proj { 3 } else { 2 };
+    let plan = ref_plan(net, x);
+    let exp_of = |t: &TensorRef| -> i32 {
+        match t.exp_from {
+            None => params.in_exp,
+            Some(li) => params.convs[&net.layers[li].name].act_exp,
+        }
+    };
+    let mut ts: Vec<Option<Tensor<i8>>> = Vec::new();
+    put_ref(
+        &mut ts,
+        plan.input.t,
+        Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape"),
+    );
+    // pending f32 skip value (mirrors the python sim's residual exactly)
+    let mut skip_f: Option<Tensor<f32>> = None;
+    for step in &plan.steps {
+        match step {
+            ExecStep::Conv { layer, src, dst } => {
+                let l = &net.layers[*layer];
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                let q =
+                    qconv_ref(xin, exp_of(src), l, &params.convs[&l.name], true, None, false, reg)
+                        .q;
+                put_ref(&mut ts, dst.t, q);
+            }
+            ExecStep::ConvSkip { layer, src, dst } => {
+                let l = &net.layers[*layer];
+                let s = skip_f.take().expect("plan prepares the lane before the join");
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                let q = qconv_ref(
+                    xin,
+                    exp_of(src),
+                    l,
+                    &params.convs[&l.name],
+                    true,
+                    Some(&s),
+                    false,
+                    reg,
+                )
+                .q;
+                put_ref(&mut ts, dst.t, q);
+            }
+            ExecStep::ConvToSkip { layer, src, .. } => {
+                let l = &net.layers[*layer];
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                let z =
+                    qconv_ref(xin, exp_of(src), l, &params.convs[&l.name], false, None, true, reg)
+                        .z
+                        .expect("proj keeps f32");
+                skip_f = Some(z);
+            }
+            ExecStep::IdentitySkip { src, .. } => {
+                let s = 2f32.powi(exp_of(src));
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                skip_f = Some(xin.map(|v| f32::from(v) * s));
+            }
+            ExecStep::Pool { k, stride, pad, src, dst } => {
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                put_ref(&mut ts, dst.t, maxpool2d(xin, *k, *stride, *pad));
+            }
+        }
     }
+    let hq = ts[plan.final_act.t].take().expect("planned final activation");
+    let exp_h = exp_of(&plan.final_act);
 
     // global average pool (dequantized), requant features, integer FC
     let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
@@ -1168,57 +1213,80 @@ pub fn paths_divergence(
     x: &Tensor<f32>,
     reg: &KernelRegistry,
 ) -> PathsDivergence {
+    let plan = ref_plan(net, x);
+    let exp_of = |t: &TensorRef| -> i32 {
+        match t.exp_from {
+            None => params.in_exp,
+            Some(li) => params.convs[&net.layers[li].name].act_exp,
+        }
+    };
     let mut max_ulp = 0i32;
-
-    let xq = Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape");
-    // the first layer is the stem positionally (same rule as forward_quant)
-    let stem_l = &net.layers[0];
-    let stem_p = &params.convs[&stem_l.name];
-    let stem_ref = qconv_ref(&xq, params.in_exp, stem_l, stem_p, true, None, false, reg);
-    let stem_epi = own_epi(params, &stem_l.name, stem_p, params.in_exp);
-    let stem_fused = qconv_fused(&xq, stem_l, stem_p, &stem_epi, None, reg);
-    max_ulp = max_ulp.max(code_ulp(&stem_ref.q, &stem_fused));
-    let mut hq = stem_ref.q;
-    let mut exp_h = stem_p.act_exp;
-
-    let mut i = 1;
-    while i < net.layers.len() {
-        let c1 = &net.layers[i];
-        let c2 = &net.layers[i + 1];
-        let has_proj = net
-            .layers
-            .get(i + 2)
-            .map(|l| l.name.ends_with("proj"))
-            .unwrap_or(false);
-        let exp2 = params.convs[&c2.name].act_exp;
-        // both skip representations from the same reference activations
-        let (skip_f, skip_fx) = if has_proj {
-            let proj = &net.layers[i + 2];
-            let pp = &params.convs[&proj.name];
-            let zf = qconv_ref(&hq, exp_h, proj, pp, false, None, true, reg)
-                .z
-                .expect("proj keeps f32");
-            let pepi = proj_epi(params, &proj.name, pp, exp_h, exp2);
-            let fx = qconv_to_skip(&hq, proj, pp, &pepi, reg);
-            (zf, fx)
-        } else {
-            let s = 2f32.powi(exp_h);
-            (hq.map(|v| f32::from(v) * s), dequant_to_skip(&hq, exp_h, exp2))
-        };
-        let p1 = &params.convs[&c1.name];
-        let h1_ref = qconv_ref(&hq, exp_h, c1, p1, true, None, false, reg);
-        let e1 = own_epi(params, &c1.name, p1, exp_h);
-        let h1_fused = qconv_fused(&hq, c1, p1, &e1, None, reg);
-        max_ulp = max_ulp.max(code_ulp(&h1_ref.q, &h1_fused));
-        let p2 = &params.convs[&c2.name];
-        let h2_ref = qconv_ref(&h1_ref.q, p1.act_exp, c2, p2, true, Some(&skip_f), false, reg);
-        let e2 = own_epi(params, &c2.name, p2, p1.act_exp);
-        let h2_fused = qconv_fused(&h1_ref.q, c2, p2, &e2, Some(&skip_fx), reg);
-        max_ulp = max_ulp.max(code_ulp(&h2_ref.q, &h2_fused));
-        hq = h2_ref.q;
-        exp_h = exp2;
-        i += if has_proj { 3 } else { 2 };
+    // reference activations per planned tensor — both paths consume these,
+    // so divergence cannot cascade
+    let mut ts: Vec<Option<Tensor<i8>>> = Vec::new();
+    put_ref(
+        &mut ts,
+        plan.input.t,
+        Tensor::new(x.shape(), requant(x.data(), params.in_exp)).expect("input shape"),
+    );
+    // the pending skip value in both representations, from the same
+    // reference activations
+    let mut lane: Option<(Tensor<f32>, Tensor<i64>)> = None;
+    for step in &plan.steps {
+        match step {
+            ExecStep::Conv { layer, src, dst } => {
+                let l = &net.layers[*layer];
+                let p = &params.convs[&l.name];
+                let e_in = exp_of(src);
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                let r = qconv_ref(xin, e_in, l, p, true, None, false, reg);
+                let e = own_epi(params, &l.name, p, e_in);
+                let f = qconv_fused(xin, l, p, &e, None, reg);
+                max_ulp = max_ulp.max(code_ulp(&r.q, &f));
+                put_ref(&mut ts, dst.t, r.q);
+            }
+            ExecStep::ConvSkip { layer, src, dst } => {
+                let (sf, sx) = lane.take().expect("plan prepares the lane before the join");
+                let l = &net.layers[*layer];
+                let p = &params.convs[&l.name];
+                let e_in = exp_of(src);
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                let r = qconv_ref(xin, e_in, l, p, true, Some(&sf), false, reg);
+                let e = own_epi(params, &l.name, p, e_in);
+                let f = qconv_fused(xin, l, p, &e, Some(&sx), reg);
+                max_ulp = max_ulp.max(code_ulp(&r.q, &f));
+                put_ref(&mut ts, dst.t, r.q);
+            }
+            ExecStep::ConvToSkip { layer, src, target } => {
+                let l = &net.layers[*layer];
+                let p = &params.convs[&l.name];
+                let e_in = exp_of(src);
+                let tgt_exp = params.convs[&net.layers[*target].name].act_exp;
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                let zf = qconv_ref(xin, e_in, l, p, false, None, true, reg)
+                    .z
+                    .expect("proj keeps f32");
+                let pepi = proj_epi(params, &l.name, p, e_in, tgt_exp);
+                let fx = qconv_to_skip(xin, l, p, &pepi, reg);
+                lane = Some((zf, fx));
+            }
+            ExecStep::IdentitySkip { src, target } => {
+                let e_in = exp_of(src);
+                let tgt_exp = params.convs[&net.layers[*target].name].act_exp;
+                let s = 2f32.powi(e_in);
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                lane =
+                    Some((xin.map(|v| f32::from(v) * s), dequant_to_skip(xin, e_in, tgt_exp)));
+            }
+            ExecStep::Pool { k, stride, pad, src, dst } => {
+                // both paths pool the same i8 codes — divergence-free
+                let xin = ts[src.t].as_ref().expect("planned tensor");
+                put_ref(&mut ts, dst.t, maxpool2d(xin, *k, *stride, *pad));
+            }
+        }
     }
+    let hq = ts[plan.final_act.t].take().expect("planned final activation");
+    let exp_h = exp_of(&plan.final_act);
 
     // GAP lockstep: f32 mean+requant vs integer sum+fixed-point rescale
     let (n, ho, wo, c) = (hq.dim(0), hq.dim(1), hq.dim(2), hq.dim(3));
@@ -1348,6 +1416,53 @@ mod tests {
             let got = forward_quant_with(&params, &net, &x, &reg);
             assert_eq!(got.data(), want.data(), "kernel {kind}");
         }
+    }
+
+    #[test]
+    fn test_forward_quant_bottleneck_pool_invariant_and_tracks_reference() {
+        // ResNet-50-shaped blocks (1x1-3x3-1x1 + stem maxpool + projection
+        // and identity shortcuts) through the planned step interpreter
+        let net = crate::model::bottleneck_mini(16, &[4, 8], 3);
+        let params = QModelParams::synthetic(&net, 77, &scheme("8a2w_n4@stem=i8"));
+        params.validate(&net).unwrap();
+        let mut rng = SplitMix64::new(78);
+        let x = Tensor::new(&[2, 16, 16, 3], rng.normal(2 * 16 * 16 * 3)).unwrap();
+        let want = forward_quant(&params, &net, &x);
+        assert!(want.data().iter().all(|v| v.is_finite()));
+        for kind in crate::kernels::ALL_KERNELS {
+            for threads in [1usize, 2] {
+                let reg = KernelRegistry::new(Some(kind), threads);
+                let got = forward_quant_with(&params, &net, &x, &reg);
+                assert_eq!(got.data(), want.data(), "kernel {kind} threads {threads}");
+            }
+        }
+        let d = paths_divergence(&params, &net, &x, &KernelRegistry::auto());
+        assert!(d.max_code_ulp <= 1, "lockstep divergence {} > 1 code", d.max_code_ulp);
+    }
+
+    #[test]
+    fn test_load_surfaces_unplannable_net_as_typed_error() {
+        // satellite: a table the graph builder cannot express must fail the
+        // *load* with an error naming the layer — never a silent empty plan
+        let net = crate::model::resnet_mini(8, &[4, 4, 4], 1, 3);
+        let params = QModelParams::synthetic(&net, 13, &scheme("8a2w_n4"));
+        let mut map = params.to_tensors();
+        let mut bad = net.clone();
+        let mut tail = bad.layers[1].clone();
+        tail.name = "dangling".into();
+        bad.layers.push(tail);
+        // give the dangling layer real params so shape validation passes
+        // and the failure is the plan build itself
+        for suffix in
+            ["wq", "w_scale", "bn_scale", "bn_shift", "act_exp", "w_bits", "rq_mult", "rq_shift", "rq_bias"]
+        {
+            let v = map[&format!("s0b0c1.{suffix}")[..]].clone();
+            map.insert(format!("dangling.{suffix}"), v);
+        }
+        let err = QModelParams::from_tensors(&map, &bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("forward plan"), "{msg}");
+        assert!(msg.contains("dangling"), "{msg}");
     }
 
     #[test]
@@ -1619,6 +1734,7 @@ mod tests {
             layers: vec![conv("stem", 3, 3, 6, 1), conv("s0b0c1", 1, 6, 6, 0), c2],
             fc_in: 6,
             fc_out: 3,
+            stem_pool: None,
         }
     }
 
@@ -1712,7 +1828,7 @@ mod tests {
         // survive an in-place scale edit
         assert!(edited.epilogues.is_empty());
         rebuilt.set_conv(name, doubled);
-        rebuilt.rebuild_epilogues(&net);
+        rebuilt.rebuild_epilogues(&net).unwrap();
         assert!(!rebuilt.epilogues.is_empty());
         let mut rng = SplitMix64::new(62);
         let x = Tensor::new(&[2, 8, 8, 3], rng.normal(2 * 8 * 8 * 3)).unwrap();

@@ -1,34 +1,41 @@
 //! Forward planning: everything the integer forward pass will touch,
 //! computed **once** at model load instead of per request.
 //!
-//! [`ForwardPlan`] walks the [`Network`] a single time (alongside the
-//! [`super::EpilogueCache`] build) and records, per conv, the GEMM geometry
-//! `(m, k, f)`, the output spatial size, and whether the layer is a
-//! 1×1/stride-1/pad-0 conv whose im2col is the identity — plus the maximum
-//! per-image size of every scratch buffer any layer needs. A
-//! [`ForwardWorkspace`] then allocates those buffers once, and
-//! [`super::forward_quant_into`] runs the whole network through them:
+//! [`ForwardPlan::build_for`] builds the layer DAG ([`crate::graph`]),
+//! schedules it deterministically, and lowers the schedule to a flat list
+//! of [`ExecStep`]s over planned activation buffers:
 //!
-//! * `xq` — the quantized input image;
-//! * `act_a` / `act_b` — ping-pong i8 activation buffers (a residual block
-//!   reads the running activation from one, writes `c1` into the other, and
-//!   lands `c2` back in the first — two buffers cover any depth);
-//! * `cols` — im2col patch scratch (skipped entirely for pointwise convs:
-//!   the NHWC activation buffer *is* the GEMM operand);
-//! * `acc` — the i32 accumulator arena the fused GEMMs tile per row block;
-//! * `skip` / `skip_max` — the i64 residual lane and its per-row max
-//!   magnitudes (the SIMD epilogue's overflow gate reads the maxima instead
-//!   of re-scanning the lane);
+//! * every intermediate i8 activation (the quantized input included) gets
+//!   a live interval in schedule time, and the graph's liveness planner
+//!   ([`crate::graph::liveness`]) packs all of them into **one** `act`
+//!   arena by greedy interval coloring — the planned peak replaces the old
+//!   hand-sized `xq` + ping-pong `act_a`/`act_b` trio and never exceeds
+//!   their high-water sizing on the 2-conv block family;
+//! * residual adds are fused into the consuming conv ([`ExecStep::ConvSkip`]);
+//!   the block's shortcut is prepared on the single i64 `skip` lane by
+//!   [`ExecStep::ConvToSkip`] (projection) or [`ExecStep::IdentitySkip`]
+//!   (identity), scheduled before the block chain;
+//! * `cols` / `acc` — im2col patch scratch (skipped entirely for 1×1
+//!   pointwise convs: the NHWC activation buffer *is* the GEMM operand)
+//!   and the i32 accumulator arena, sized to their per-layer maxima;
 //! * `sums` / `fq` / `fc_acc` — GAP and FC scratch.
 //!
-//! In steady state (same batch size, model with load-built caches, a
+//! A [`ForwardWorkspace`] allocates those buffers once and
+//! [`super::forward_quant_into`] interprets the step list through them. In
+//! steady state (same batch size, model with load-built caches, a
 //! single-threaded registry) a forward pass through a reused workspace
 //! performs **zero heap allocations** — asserted by
 //! `rust/tests/alloc_steady_state.rs`. Multi-threaded registries reuse the
 //! same arenas for all tensor data; only the scoped thread spawns
 //! themselves allocate. Buffers grow monotonically: a larger batch resizes
 //! them once and later batches reuse the high-water mark.
+//!
+//! Unplannable layer tables (dangling tails, shape breaks, misplaced
+//! projections) are **typed errors** ([`GraphError`]) naming the offending
+//! layer — loaders and CLIs surface them instead of silently degrading to
+//! an empty plan.
 
+use crate::graph::{color_intervals, Graph, GraphError, Lifetime, NodeId, Op};
 use crate::model::Network;
 use crate::telemetry::ForwardProfile;
 
@@ -48,40 +55,80 @@ pub struct ConvDims {
     /// 1×1/stride-1/pad-0: the GEMM reads the activation buffer directly,
     /// no im2col (see [`crate::model::ConvLayer::is_pointwise`])
     pub direct: bool,
-    // input geometry, kept so [`ForwardPlan::matches`] can verify a plan
-    // against a network without re-walking allocations
+    // input geometry + structural role, kept so [`ForwardPlan::matches`]
+    // can compare a network against the *stored* schedule without
+    // re-walking anything
     kh: usize,
     kw: usize,
     cin: usize,
     stride: usize,
     pad: usize,
+    residual: bool,
+    proj: bool,
 }
 
-/// One residual block of the forward walk: indices into `net.layers`.
+/// A planned activation: which tensor (`t`), where it lives in the `act`
+/// arena (`off`, elements per image — scale by the batch), its geometry,
+/// and which layer's activation exponent governs its codes (`None` = the
+/// network input exponent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TensorRef {
+    pub(crate) t: usize,
+    pub(crate) off: usize,
+    pub(crate) h: usize,
+    pub(crate) w: usize,
+    pub(crate) c: usize,
+    pub(crate) exp_from: Option<usize>,
+}
+
+impl TensorRef {
+    pub(crate) fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// One step of the scheduled forward. `layer` / `target` index
+/// `net.layers`; residual adds are fused into [`ExecStep::ConvSkip`].
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct BlockStep {
-    pub c1: usize,
-    pub c2: usize,
-    /// projection conv feeding the residual lane (absent = identity skip)
-    pub proj: Option<usize>,
+pub enum ExecStep {
+    /// Plain conv (+BN+ReLU folded into the fused requant epilogue).
+    Conv { layer: usize, src: TensorRef, dst: TensorRef },
+    /// Conv that adds the prepared i64 skip lane before requantizing —
+    /// the residual join, fused.
+    ConvSkip { layer: usize, src: TensorRef, dst: TensorRef },
+    /// Projection conv whose output lands on the skip lane at the
+    /// fraction-bit alignment of consuming layer `target`.
+    ConvToSkip { layer: usize, src: TensorRef, target: usize },
+    /// Identity shortcut: re-align `src`'s codes onto the skip lane for
+    /// consuming layer `target`.
+    IdentitySkip { src: TensorRef, target: usize },
+    /// Stem max pool (exact on i8 codes: max commutes with the monotone
+    /// requantization).
+    Pool { k: usize, stride: usize, pad: usize, src: TensorRef, dst: TensorRef },
 }
 
-/// The load-time forward plan: per-layer GEMM geometry, the residual-block
-/// walk, and the per-image high-water size of every workspace buffer.
-/// Built by [`ForwardPlan::build`] (called from
-/// `QModelParams::rebuild_epilogues` at load); an empty default plan makes
-/// the forward pass derive one on the fly (hand-assembled params).
+/// The load-time forward plan: per-layer GEMM geometry, the scheduled step
+/// list over planned arena offsets, and the per-image high-water size of
+/// every scratch buffer. Built by [`ForwardPlan::build`] (called from
+/// `QModelParams::rebuild_epilogues` at load); the `Default` plan is empty
+/// and matches nothing.
 #[derive(Debug, Clone, Default)]
 pub struct ForwardPlan {
     /// parallel to `net.layers`
     pub(crate) dims: Vec<ConvDims>,
-    /// residual blocks after the stem
-    pub(crate) steps: Vec<BlockStep>,
+    /// the scheduled forward, between input quantization and GAP
+    pub(crate) steps: Vec<ExecStep>,
+    /// where the quantized input lives in the arena
+    pub(crate) input: TensorRef,
+    /// the activation GAP reads
+    pub(crate) final_act: TensorRef,
+    /// stem max pool spec `(k, stride, pad)`, if the network has one
+    pub(crate) pool: Option<(usize, usize, usize)>,
     pub(crate) in_h: usize,
     pub(crate) in_w: usize,
     pub(crate) in_c: usize,
     // per-image element counts of each workspace buffer
-    pub(crate) xq_elems: usize,
+    /// planned activation arena total (interval-colored peak)
     pub(crate) act_elems: usize,
     pub(crate) cols_elems: usize,
     pub(crate) acc_elems: usize,
@@ -106,136 +153,336 @@ fn conv_dims(l: &crate::model::ConvLayer, h: usize, w: usize) -> ConvDims {
         cin: l.cin,
         stride: l.stride,
         pad: l.pad,
+        residual: l.residual,
+        proj: l.name.ends_with("proj"),
     }
 }
 
 impl ForwardPlan {
     /// Plan for `net` at its nominal input size.
-    pub fn build(net: &Network) -> Self {
+    pub fn build(net: &Network) -> Result<Self, GraphError> {
         Self::build_for(net, net.input_hw, net.input_hw)
     }
 
     /// Plan for `net` fed `h × w` inputs (the forward pass falls back to
-    /// this when an input disagrees with the nominal geometry).
-    pub fn build_for(net: &Network, in_h: usize, in_w: usize) -> Self {
-        fn note(plan: &mut ForwardPlan, d: &ConvDims) {
-            let out = d.m * d.f;
-            plan.act_elems = plan.act_elems.max(out);
-            plan.acc_elems = plan.acc_elems.max(out);
-            if !d.direct {
-                plan.cols_elems = plan.cols_elems.max(d.m * d.k);
+    /// this when an input disagrees with the nominal geometry). Returns a
+    /// typed error naming the first unsupported layer for tables the graph
+    /// builder cannot express.
+    pub fn build_for(net: &Network, in_h: usize, in_w: usize) -> Result<Self, GraphError> {
+        let g = Graph::from_network(net, in_h, in_w)?;
+        let order = g.schedule();
+        let consumers = g.consumers();
+        let unsupported = |id: NodeId, detail: String| GraphError::Unsupported {
+            net: net.name.clone(),
+            node: g.label(net, id),
+            detail,
+        };
+
+        // residual-join roles: which conv feeds an Add as chain (fused
+        // requant-with-skip) and which node produces the lane value
+        let n_nodes = g.nodes.len();
+        let mut chain_add: Vec<Option<NodeId>> = vec![None; n_nodes];
+        let mut lane_add: Vec<Option<NodeId>> = vec![None; n_nodes];
+        for node in &g.nodes {
+            if let Op::Add = node.op {
+                chain_add[node.inputs[0]] = Some(node.id);
+                lane_add[node.inputs[1]] = Some(node.id);
             }
         }
+        // a fused or lane-feeding node's value must not be observable
+        // elsewhere: the pre-add chain output never materializes, and the
+        // lane holds exactly one pending value
+        for id in 0..n_nodes {
+            if (chain_add[id].is_some() || lane_add[id].is_some()) && consumers[id].len() != 1 {
+                return Err(unsupported(
+                    id,
+                    format!(
+                        "feeds a residual join but has {} consumers; fused residual \
+                         values cannot be read elsewhere",
+                        consumers[id].len()
+                    ),
+                ));
+            }
+        }
+        // the layer index whose activation exponent a lane producer must
+        // requantize to: the chain conv of its Add
+        let lane_target = |id: NodeId| -> Result<usize, GraphError> {
+            let add = lane_add[id].expect("caller checked");
+            match g.nodes[g.nodes[add].inputs[0]].op {
+                Op::Conv { layer } => Ok(layer),
+                _ => Err(unsupported(add, "residual chain input is not a conv".into())),
+            }
+        };
+
+        // --- lower the schedule to steps, recording tensor lifetimes ---
+        struct TInfo {
+            life: Lifetime,
+            h: usize,
+            w: usize,
+            c: usize,
+            exp_from: Option<usize>,
+        }
+        let mut tensors: Vec<TInfo> = Vec::new();
+        let mut tensor_of: Vec<Option<usize>> = vec![None; n_nodes];
+        let mut dims: Vec<Option<ConvDims>> = vec![None; net.layers.len()];
+        let mut steps: Vec<ExecStep> = Vec::new();
+        let mut lane: Option<usize> = None; // pending skip value's target layer
+        let mut final_node: Option<NodeId> = None;
+
+        // placeholder refs; arena offsets are patched in after coloring
+        let proto = |tensors: &[TInfo], t: usize| TensorRef {
+            t,
+            off: usize::MAX,
+            h: tensors[t].h,
+            w: tensors[t].w,
+            c: tensors[t].c,
+            exp_from: tensors[t].exp_from,
+        };
+
+        for &id in &order {
+            let node = &g.nodes[id];
+            let t_now = steps.len() + 1; // time 0 = input quantization
+            // the source activation most ops read
+            let src_t = node.inputs.first().and_then(|&s| tensor_of[s]);
+            match node.op {
+                Op::Input => {
+                    tensor_of[id] = Some(tensors.len());
+                    tensors.push(TInfo {
+                        life: Lifetime { size: node.out_elems(), start: 0, end: 0 },
+                        h: node.out_h,
+                        w: node.out_w,
+                        c: node.out_c,
+                        exp_from: None,
+                    });
+                }
+                Op::Conv { layer } => {
+                    let src_t = src_t
+                        .ok_or_else(|| unsupported(id, "conv reads a non-tensor value".into()))?;
+                    tensors[src_t].life.end = t_now;
+                    let src = proto(&tensors, src_t);
+                    let d = conv_dims(&net.layers[layer], src.h, src.w);
+                    if lane_add[id].is_some() {
+                        // projection: lands on the skip lane
+                        let target = lane_target(id)?;
+                        if let Some(prev) = lane {
+                            return Err(unsupported(
+                                id,
+                                format!(
+                                    "skip lane already holds a value for layer '{}'",
+                                    net.layers[prev].name
+                                ),
+                            ));
+                        }
+                        lane = Some(target);
+                        steps.push(ExecStep::ConvToSkip { layer, src, target });
+                    } else {
+                        let dst_t = tensors.len();
+                        tensors.push(TInfo {
+                            life: Lifetime { size: node.out_elems(), start: t_now, end: t_now },
+                            h: node.out_h,
+                            w: node.out_w,
+                            c: node.out_c,
+                            exp_from: Some(layer),
+                        });
+                        tensor_of[id] = Some(dst_t);
+                        let dst = proto(&tensors, dst_t);
+                        if chain_add[id].is_some() {
+                            if lane != Some(layer) {
+                                return Err(unsupported(
+                                    id,
+                                    "residual conv scheduled before its skip lane was \
+                                     prepared"
+                                        .into(),
+                                ));
+                            }
+                            lane = None;
+                            steps.push(ExecStep::ConvSkip { layer, src, dst });
+                        } else {
+                            steps.push(ExecStep::Conv { layer, src, dst });
+                        }
+                    }
+                    dims[layer] = Some(d);
+                }
+                Op::Skip => {
+                    let src_t = src_t
+                        .ok_or_else(|| unsupported(id, "skip reads a non-tensor value".into()))?;
+                    tensors[src_t].life.end = t_now;
+                    let target = lane_target(id)?;
+                    if let Some(prev) = lane {
+                        return Err(unsupported(
+                            id,
+                            format!(
+                                "skip lane already holds a value for layer '{}'",
+                                net.layers[prev].name
+                            ),
+                        ));
+                    }
+                    lane = Some(target);
+                    steps.push(ExecStep::IdentitySkip { src: proto(&tensors, src_t), target });
+                }
+                Op::Pool { k, stride, pad } => {
+                    let src_t = src_t
+                        .ok_or_else(|| unsupported(id, "pool reads a non-tensor value".into()))?;
+                    tensors[src_t].life.end = t_now;
+                    let src = proto(&tensors, src_t);
+                    let src_exp = tensors[src_t].exp_from;
+                    let dst_t = tensors.len();
+                    tensors.push(TInfo {
+                        life: Lifetime { size: node.out_elems(), start: t_now, end: t_now },
+                        h: node.out_h,
+                        w: node.out_w,
+                        c: node.out_c,
+                        exp_from: src_exp,
+                    });
+                    tensor_of[id] = Some(dst_t);
+                    let dst = proto(&tensors, dst_t);
+                    steps.push(ExecStep::Pool { k, stride, pad, src, dst });
+                }
+                Op::Add => {
+                    // fused into the chain conv: the add's value *is* the
+                    // ConvSkip's output tensor
+                    tensor_of[id] = tensor_of[node.inputs[0]];
+                }
+                Op::Gap => {
+                    let src_t = src_t
+                        .ok_or_else(|| unsupported(id, "gap reads a non-tensor value".into()))?;
+                    tensors[src_t].life.end = t_now;
+                    final_node = Some(node.inputs[0]);
+                    if node.out_c != net.fc_in {
+                        return Err(unsupported(
+                            id,
+                            format!(
+                                "final activation has {} channels but fc_in is {}",
+                                node.out_c, net.fc_in
+                            ),
+                        ));
+                    }
+                }
+                Op::Fc => {}
+            }
+        }
+        debug_assert!(lane.is_none(), "a prepared skip value was never consumed");
+        let Some(dims) = dims.into_iter().collect::<Option<Vec<_>>>() else {
+            unreachable!("graph builder visits every layer exactly once");
+        };
+
+        // --- pack tensor lifetimes into the activation arena ---
+        let reqs: Vec<Lifetime> = tensors.iter().map(|t| t.life).collect();
+        let layout = color_intervals(&reqs);
+        let patch = |r: &mut TensorRef| r.off = layout.offsets[r.t];
+        let mut input = proto(&tensors, tensor_of[order[0]].expect("input is a tensor"));
+        for s in &mut steps {
+            match s {
+                ExecStep::Conv { src, dst, .. }
+                | ExecStep::ConvSkip { src, dst, .. }
+                | ExecStep::Pool { src, dst, .. } => {
+                    patch(src);
+                    patch(dst);
+                }
+                ExecStep::ConvToSkip { src, .. } | ExecStep::IdentitySkip { src, .. } => {
+                    patch(src);
+                }
+            }
+        }
+        let final_t = final_node
+            .and_then(|n| tensor_of[n])
+            .expect("every graph ends in GAP over a tensor");
+        let mut final_act = proto(&tensors, final_t);
+        patch(&mut input);
+        patch(&mut final_act);
+
+        // --- scratch high-water marks ---
         let mut plan = ForwardPlan {
+            input,
+            final_act,
+            pool: net.stem_pool.map(|p| (p.k, p.stride, p.pad)),
             in_h,
             in_w,
-            in_c: net.layers.first().map(|l| l.cin).unwrap_or(0),
+            in_c: net.layers[0].cin,
+            act_elems: layout.total,
             feat_c: net.fc_in,
             classes: net.fc_out,
             ..ForwardPlan::default()
         };
-        plan.xq_elems = in_h * in_w * plan.in_c;
-        if net.layers.is_empty() {
-            return plan;
-        }
-        let stem = conv_dims(&net.layers[0], in_h, in_w);
-        note(&mut plan, &stem);
-        let (mut h, mut w) = (stem.ho, stem.wo);
-        let mut dims = vec![stem];
-        let mut steps = Vec::new();
-        let mut i = 1;
-        while i + 1 < net.layers.len() {
-            let has_proj = net
-                .layers
-                .get(i + 2)
-                .map(|l| l.name.ends_with("proj"))
-                .unwrap_or(false);
-            let d1 = conv_dims(&net.layers[i], h, w);
-            let d2 = conv_dims(&net.layers[i + 1], d1.ho, d1.wo);
-            note(&mut plan, &d1);
-            note(&mut plan, &d2);
-            plan.skip_elems = plan.skip_elems.max(d2.m * d2.f);
-            plan.skip_rows = plan.skip_rows.max(d2.m);
-            let (next_h, next_w) = (d2.ho, d2.wo);
-            let d2_f = d2.f;
-            dims.push(d1);
-            dims.push(d2);
-            if has_proj {
-                // the projection reads the *pre-block* activation grid
-                let dp = conv_dims(&net.layers[i + 2], h, w);
-                debug_assert_eq!(
-                    (dp.ho, dp.wo, dp.f),
-                    (next_h, next_w, d2_f),
-                    "projection grid must match the consuming layer"
-                );
-                note(&mut plan, &dp);
-                dims.push(dp);
-                steps.push(BlockStep { c1: i, c2: i + 1, proj: Some(i + 2) });
-            } else {
-                steps.push(BlockStep { c1: i, c2: i + 1, proj: None });
+        for d in &dims {
+            plan.acc_elems = plan.acc_elems.max(d.m * d.f);
+            if !d.direct {
+                plan.cols_elems = plan.cols_elems.max(d.m * d.k);
             }
-            (h, w) = (next_h, next_w);
-            i += if has_proj { 3 } else { 2 };
         }
-        // every layer must be visited exactly once; a net with a dangling
-        // unpaired tail layer yields the *empty* plan (same degrade rule as
-        // EpilogueCache::build, so Result-returning loaders stay Ok), and
-        // the forward pass then fails loudly instead of silently skipping
-        // the layer — matching the pre-plan loop, which panicked there
-        if dims.len() != net.layers.len() {
-            return ForwardPlan::default();
+        for s in &steps {
+            if let ExecStep::ConvSkip { layer, .. } = s {
+                let d = &dims[*layer];
+                plan.skip_elems = plan.skip_elems.max(d.m * d.f);
+                plan.skip_rows = plan.skip_rows.max(d.m);
+            }
         }
         plan.dims = dims;
         plan.steps = steps;
-        plan
+        Ok(plan)
     }
 
-    /// True when nothing was planned (default plan of hand-built params).
+    /// True when nothing was planned (the `Default` plan of hand-built
+    /// params).
     pub fn is_empty(&self) -> bool {
         self.dims.is_empty()
     }
 
-    /// Does this plan describe `net` fed `h × w` inputs? A pure, allocation-
-    /// free comparison: per-layer geometry and the residual-block walk must
-    /// both agree.
+    /// Number of scheduled execution steps (introspection / benches).
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Planned activation-arena elements per image — the interval-colored
+    /// peak over all simultaneously-live tensors.
+    pub fn planned_act_elems(&self) -> usize {
+        self.act_elems
+    }
+
+    /// What the pre-liveness sizing would have reserved per image: the
+    /// quantized input buffer plus two ping-pong buffers of the largest
+    /// layer output. The planned arena never exceeds this on 2-conv block
+    /// nets (locked by `tests/plan_liveness.rs`).
+    pub fn legacy_act_elems(&self) -> usize {
+        if self.dims.is_empty() {
+            return 0;
+        }
+        let max_out = self.dims.iter().map(|d| d.m * d.f).max().unwrap_or(0);
+        self.in_h * self.in_w * self.in_c + 2 * max_out
+    }
+
+    /// Does this plan describe `net` fed `h × w` inputs? A pure,
+    /// allocation-free comparison of the **stored** schedule against the
+    /// layer table: per-layer geometry and structural role (residual
+    /// terminator / projection), the stem pool spec, and the head. The
+    /// graph builder is deterministic in exactly these inputs, so agreeing
+    /// here means the stored step list is the one `build_for` would
+    /// produce — nothing is re-walked.
     pub fn matches(&self, net: &Network, h: usize, w: usize) -> bool {
-        if self.in_h != h
+        if self.is_empty()
+            || self.in_h != h
             || self.in_w != w
             || self.dims.len() != net.layers.len()
             || self.feat_c != net.fc_in
             || self.classes != net.fc_out
             || net.layers.first().map(|l| l.cin).unwrap_or(0) != self.in_c
+            || self.pool != net.stem_pool.map(|p| (p.k, p.stride, p.pad))
         {
             return false;
         }
-        for (d, l) in self.dims.iter().zip(&net.layers) {
-            if (d.kh, d.kw, d.cin, d.stride, d.pad, d.f)
-                != (l.kh, l.kw, l.cin, l.stride, l.pad, l.cout)
-            {
-                return false;
-            }
-        }
-        // the block walk is keyed on layer *names* (proj detection), which
-        // the geometry check above cannot see
-        let mut i = 1;
-        let mut s = 0;
-        while i + 1 < net.layers.len() {
-            let has_proj = net
-                .layers
-                .get(i + 2)
-                .map(|l| l.name.ends_with("proj"))
-                .unwrap_or(false);
-            let Some(step) = self.steps.get(s) else {
-                return false;
-            };
-            let want_proj = if has_proj { Some(i + 2) } else { None };
-            if step.c1 != i || step.c2 != i + 1 || step.proj != want_proj {
-                return false;
-            }
-            s += 1;
-            i += if has_proj { 3 } else { 2 };
-        }
-        s == self.steps.len()
+        self.dims.iter().zip(&net.layers).all(|(d, l)| {
+            (d.kh, d.kw, d.cin, d.stride, d.pad, d.f, d.residual, d.proj)
+                == (
+                    l.kh,
+                    l.kw,
+                    l.cin,
+                    l.stride,
+                    l.pad,
+                    l.cout,
+                    l.residual,
+                    l.name.ends_with("proj"),
+                )
+        })
     }
 }
 
@@ -245,9 +492,9 @@ impl ForwardPlan {
 /// per request.
 #[derive(Debug, Default)]
 pub struct ForwardWorkspace {
-    pub(crate) xq: Vec<i8>,
-    pub(crate) act_a: Vec<i8>,
-    pub(crate) act_b: Vec<i8>,
+    /// the single planned activation arena (input + every intermediate,
+    /// at interval-colored offsets)
+    pub(crate) act: Vec<i8>,
     pub(crate) cols: Vec<i8>,
     pub(crate) acc: Vec<i32>,
     pub(crate) skip: Vec<i64>,
@@ -266,6 +513,37 @@ fn grow<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
     }
 }
 
+/// Borrow a step's source and destination slots out of the `act` arena
+/// simultaneously. The liveness planner guarantees the ranges are
+/// disjoint; asserted here.
+pub(crate) fn split_src_dst<'a>(
+    act: &'a mut [i8],
+    n: usize,
+    src: &TensorRef,
+    dst: &TensorRef,
+) -> (&'a [i8], &'a mut [i8]) {
+    let (s0, s1) = (n * src.off, n * (src.off + src.elems()));
+    let (d0, d1) = (n * dst.off, n * (dst.off + dst.elems()));
+    if s1 <= d0 {
+        let (lo, hi) = act.split_at_mut(d0);
+        (&lo[s0..s1], &mut hi[..d1 - d0])
+    } else {
+        assert!(d1 <= s0, "liveness layout produced overlapping src/dst slots");
+        let (lo, hi) = act.split_at_mut(s0);
+        (&hi[..s1 - s0], &mut lo[d0..d1])
+    }
+}
+
+/// A tensor's slot in the arena, immutably.
+pub(crate) fn slot<'a>(act: &'a [i8], n: usize, t: &TensorRef) -> &'a [i8] {
+    &act[n * t.off..n * (t.off + t.elems())]
+}
+
+/// A tensor's slot in the arena, mutably.
+pub(crate) fn slot_mut<'a>(act: &'a mut [i8], n: usize, t: &TensorRef) -> &'a mut [i8] {
+    &mut act[n * t.off..n * (t.off + t.elems())]
+}
+
 impl ForwardWorkspace {
     /// An empty workspace; the first `ensure` sizes it.
     pub fn new() -> Self {
@@ -276,9 +554,7 @@ impl ForwardWorkspace {
     /// Monotonic: shrinking batches keep the high-water allocation, equal
     /// batches allocate nothing.
     pub fn ensure(&mut self, plan: &ForwardPlan, n: usize) {
-        grow(&mut self.xq, n * plan.xq_elems);
-        grow(&mut self.act_a, n * plan.act_elems);
-        grow(&mut self.act_b, n * plan.act_elems);
+        grow(&mut self.act, n * plan.act_elems);
         grow(&mut self.cols, n * plan.cols_elems);
         grow(&mut self.acc, n * plan.acc_elems);
         grow(&mut self.skip, n * plan.skip_elems);
@@ -296,9 +572,7 @@ impl ForwardWorkspace {
 
     /// Total bytes currently held by the arena (introspection / benches).
     pub fn allocated_bytes(&self) -> usize {
-        self.xq.len()
-            + self.act_a.len()
-            + self.act_b.len()
+        self.act.len()
             + self.cols.len()
             + self.fq.len()
             + 4 * (self.acc.len() + self.fc_acc.len())
@@ -309,12 +583,54 @@ impl ForwardWorkspace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::resnet_mini;
+    use crate::model::{bottleneck_mini, resnet50, resnet_mini};
+
+    /// No two simultaneously-live tensors of a plan may overlap in the
+    /// arena — the invariant the forward pass's split borrows rely on.
+    fn assert_steps_disjoint(plan: &ForwardPlan) {
+        // rebuild (ref, live interval) per tensor from the step list
+        let mut spans: Vec<(TensorRef, usize, usize)> = Vec::new();
+        let mut note = |r: &TensorRef, t: usize| {
+            if let Some(e) = spans.iter_mut().find(|(s, _, _)| s.t == r.t) {
+                e.1 = e.1.min(t);
+                e.2 = e.2.max(t);
+            } else {
+                spans.push((*r, t, t));
+            }
+        };
+        note(&plan.input, 0);
+        for (i, s) in plan.steps.iter().enumerate() {
+            let t = i + 1;
+            match s {
+                ExecStep::Conv { src, dst, .. }
+                | ExecStep::ConvSkip { src, dst, .. }
+                | ExecStep::Pool { src, dst, .. } => {
+                    note(src, t);
+                    note(dst, t);
+                }
+                ExecStep::ConvToSkip { src, .. } | ExecStep::IdentitySkip { src, .. } => {
+                    note(src, t)
+                }
+            }
+        }
+        note(&plan.final_act, plan.steps.len() + 1);
+        for a in 0..spans.len() {
+            for b in a + 1..spans.len() {
+                let (ra, sa, ea) = &spans[a];
+                let (rb, sb, eb) = &spans[b];
+                if sa <= eb && sb <= ea {
+                    let clash =
+                        ra.off < rb.off + rb.elems() && rb.off < ra.off + ra.elems();
+                    assert!(!clash, "live tensors {} and {} share arena bytes", ra.t, rb.t);
+                }
+            }
+        }
+    }
 
     #[test]
     fn test_plan_walk_and_sizes_on_resnet_mini() {
         let net = resnet_mini(8, &[4, 8, 8], 1, 3);
-        let plan = ForwardPlan::build(&net);
+        let plan = ForwardPlan::build(&net).unwrap();
         assert!(!plan.is_empty());
         assert_eq!(plan.dims.len(), net.layers.len());
         assert!(plan.matches(&net, 8, 8));
@@ -327,32 +643,75 @@ mod tests {
             assert_eq!(d.direct, l.is_pointwise(), "{}", l.name);
             assert_eq!(d.k, l.kh * l.kw * l.cin, "{}", l.name);
         }
-        // block walk covers every non-stem layer exactly once
+        // the step list covers every layer exactly once
         let mut seen = vec![false; net.layers.len()];
-        seen[0] = true;
         for s in &plan.steps {
-            for idx in [Some(s.c1), Some(s.c2), s.proj].into_iter().flatten() {
-                assert!(!seen[idx], "layer {idx} visited twice");
-                seen[idx] = true;
+            if let ExecStep::Conv { layer, .. }
+            | ExecStep::ConvSkip { layer, .. }
+            | ExecStep::ConvToSkip { layer, .. } = s
+            {
+                assert!(!seen[*layer], "layer {layer} stepped twice");
+                seen[*layer] = true;
             }
         }
-        assert!(seen.iter().all(|&v| v), "walk must cover all layers");
-        // buffer highwater marks cover every layer
+        assert!(seen.iter().all(|&v| v), "steps must cover all layers");
+        // buffer high-water marks cover every layer; the planned arena
+        // holds at least the largest single tensor
         for d in &plan.dims {
-            assert!(plan.act_elems >= d.m * d.f);
             assert!(plan.acc_elems >= d.m * d.f);
             if !d.direct {
                 assert!(plan.cols_elems >= d.m * d.k);
             }
         }
+        let max_out = plan.dims.iter().map(|d| d.m * d.f).max().unwrap();
+        assert!(plan.act_elems >= max_out);
+        assert!(plan.planned_act_elems() <= plan.legacy_act_elems());
         assert_eq!(plan.feat_c, net.fc_in);
         assert_eq!(plan.classes, net.fc_out);
+        assert_steps_disjoint(&plan);
+    }
+
+    #[test]
+    fn test_bottleneck_and_pool_plans_schedule_and_stay_disjoint() {
+        for net in
+            [bottleneck_mini(16, &[4, 8], 3), bottleneck_mini(8, &[2], 2), resnet50()]
+        {
+            let plan = ForwardPlan::build(&net).unwrap();
+            assert!(plan.matches(&net, net.input_hw, net.input_hw), "{}", net.name);
+            assert_eq!(plan.dims.len(), net.layers.len(), "{}", net.name);
+            // a pool step right after the stem conv
+            assert_eq!(plan.pool, Some((3, 2, 1)), "{}", net.name);
+            assert!(
+                matches!(plan.steps[1], ExecStep::Pool { k: 3, stride: 2, pad: 1, .. }),
+                "{}: {:?}",
+                net.name,
+                plan.steps[1]
+            );
+            // every block: lane prepared before its ConvSkip consumes it
+            let mut lane_ready = false;
+            for s in &plan.steps {
+                match s {
+                    ExecStep::ConvToSkip { .. } | ExecStep::IdentitySkip { .. } => {
+                        assert!(!lane_ready, "{}: lane double-armed", net.name);
+                        lane_ready = true;
+                    }
+                    ExecStep::ConvSkip { .. } => {
+                        assert!(lane_ready, "{}: join before lane", net.name);
+                        lane_ready = false;
+                    }
+                    _ => {}
+                }
+            }
+            assert!(!lane_ready, "{}: dangling lane value", net.name);
+            assert_steps_disjoint(&plan);
+            assert!(plan.planned_act_elems() > 0);
+        }
     }
 
     #[test]
     fn test_workspace_grow_only() {
         let net = resnet_mini(8, &[4, 8, 8], 1, 3);
-        let plan = ForwardPlan::build(&net);
+        let plan = ForwardPlan::build(&net).unwrap();
         let mut ws = ForwardWorkspace::new();
         ws.ensure(&plan, 2);
         let bytes2 = ws.allocated_bytes();
@@ -364,18 +723,20 @@ mod tests {
     }
 
     #[test]
-    fn test_plan_build_degrades_to_empty_on_dangling_tail_layer() {
-        // a layer the block walk cannot reach must never be silently
-        // skipped: the build degrades to the empty plan (loaders stay Ok)
-        // and the forward pass then refuses to run (loud assert), instead
-        // of producing logits that ignore the layer
+    fn test_plan_build_is_a_typed_error_on_dangling_tail_layer() {
+        // a layer the graph walk cannot reach must never be silently
+        // skipped: the build fails with an error naming the layer, and
+        // loaders surface it instead of producing logits that ignore it
         let mut net = resnet_mini(8, &[4, 4, 4], 1, 3);
         let mut tail = net.layers[1].clone();
         tail.name = "dangling".into();
         net.layers.push(tail);
-        let plan = ForwardPlan::build(&net);
-        assert!(plan.is_empty(), "unwalkable net must yield the empty plan");
-        assert!(!plan.matches(&net, 8, 8));
+        let err = ForwardPlan::build(&net).unwrap_err();
+        assert!(
+            matches!(&err, GraphError::DanglingTail { layer, .. } if layer == "dangling"),
+            "{err}"
+        );
+        assert!(err.to_string().contains("dangling"), "{err}");
     }
 
     #[test]
@@ -384,5 +745,38 @@ mod tests {
         let plan = ForwardPlan::default();
         assert!(plan.is_empty());
         assert!(!plan.matches(&net, 8, 8));
+    }
+
+    #[test]
+    fn test_matches_compares_stored_schedule_not_names_only() {
+        // satellite: matches() must be a pure comparison against what the
+        // plan stored — structural edits that change the schedule must
+        // flip it even when raw conv geometry stays identical
+        let net = resnet_mini(8, &[4, 8, 8], 1, 3);
+        let plan = ForwardPlan::build(&net).unwrap();
+        assert!(plan.matches(&net, 8, 8));
+
+        // renaming a projection re-routes the walk -> mismatch
+        let mut renamed = net.clone();
+        let pi = renamed.layers.iter().position(|l| l.name.ends_with("proj")).unwrap();
+        renamed.layers[pi].name = "s1b0shortcut".into();
+        assert!(!plan.matches(&renamed, 8, 8));
+
+        // flipping a residual terminator changes the block structure
+        let mut flipped = net.clone();
+        let ci = flipped.layers.iter().position(|l| l.residual).unwrap();
+        flipped.layers[ci].residual = false;
+        assert!(!plan.matches(&flipped, 8, 8));
+
+        // adding a stem pool changes every downstream tensor -> mismatch
+        let mut pooled = net.clone();
+        pooled.stem_pool = Some(crate::model::PoolLayer { k: 3, stride: 2, pad: 1 });
+        assert!(!plan.matches(&pooled, 8, 8));
+
+        // same structure under a different *non-structural* name matches:
+        // the schedule does not depend on chain-layer spelling
+        let mut respelled = net.clone();
+        respelled.layers[1].name = "renamed_c1".into();
+        assert!(plan.matches(&respelled, 8, 8));
     }
 }

@@ -54,7 +54,7 @@ use dfp_infer::coordinator::{
 use dfp_infer::io::read_dft;
 use dfp_infer::json::Json;
 use dfp_infer::kernels::KernelKind;
-use dfp_infer::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
+use dfp_infer::lpinfer::{forward_quant_into, ForwardPlan, ForwardWorkspace, QModelParams};
 use dfp_infer::model;
 use dfp_infer::opcount;
 use dfp_infer::quant::{self, TernaryMode};
@@ -341,6 +341,10 @@ fn cmd_profile(args: &Args) -> Result<()> {
             None => Scheme::parse("8a2w_n4@stem=i8")?,
         };
         scheme.validate_for(&net)?;
+        // surface an unplannable layer table as the typed graph error (the
+        // artifact path gets this for free from QModelParams::from_tensors)
+        ForwardPlan::build(&net)
+            .with_context(|| format!("cannot build a forward plan for network '{}'", net.name))?;
         let params = QModelParams::synthetic(&net, cfg.seed, &scheme);
         (net, params, format!("synthetic {name}"))
     };
@@ -431,10 +435,11 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let sum_gemm: u64 = agg.gemm_ns[..agg.layers].iter().sum();
     println!(
         "\nstages (mean per forward): total {total_ms:.3}ms | quantize {:.3} | im2col {:.3} | \
-         gemm {:.3} | skip-lane {:.3} | gap {:.3} | fc {:.3}",
+         gemm {:.3} | maxpool {:.3} | skip-lane {:.3} | gap {:.3} | fc {:.3}",
         ms_of(agg.quantize_ns),
         ms_of(sum_im2col),
         ms_of(sum_gemm),
+        ms_of(agg.maxpool_ns),
         ms_of(agg.skip_ns),
         ms_of(agg.gap_ns),
         ms_of(agg.fc_ns),
@@ -484,6 +489,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
                     ("quantize", Json::num(ms_of(agg.quantize_ns))),
                     ("im2col", Json::num(ms_of(sum_im2col))),
                     ("gemm", Json::num(ms_of(sum_gemm))),
+                    ("maxpool", Json::num(ms_of(agg.maxpool_ns))),
                     ("skip_lane", Json::num(ms_of(agg.skip_ns))),
                     ("gap", Json::num(ms_of(agg.gap_ns))),
                     ("fc", Json::num(ms_of(agg.fc_ns))),

@@ -47,12 +47,25 @@ impl ConvLayer {
     }
 }
 
+/// A max-pooling layer. The ImageNet ResNets put one 3×3/stride-2 max pool
+/// between the 7×7 stem and the first residual stage (112² → 56²); the
+/// paper's networks are not executable without it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolLayer {
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
 /// A network: ordered conv layers + a final FC.
 #[derive(Debug, Clone)]
 pub struct Network {
     pub name: String,
     pub input_hw: usize,
     pub layers: Vec<ConvLayer>,
+    /// Max pool between `layers[0]` (the stem) and the residual stages.
+    /// `None` for the mini family (whose stem keeps the input resolution).
+    pub stem_pool: Option<PoolLayer>,
     pub fc_in: usize,
     pub fc_out: usize,
 }
@@ -118,7 +131,46 @@ pub fn resnet_mini(img: usize, channels: &[usize], blocks_per_stage: usize, clas
         name: "resnet-mini".into(),
         input_hw: img,
         layers,
+        stem_pool: None,
         fc_in: *channels.last().unwrap(),
+        fc_out: classes,
+    }
+}
+
+/// A miniature bottleneck (1×1-3×3-1×1) ResNet with the ImageNet stem
+/// max pool — the ResNet-50/101 block structure at test scale, so the
+/// graph planner's bottleneck and pool paths are exercised by fast tests.
+/// One block per stage; `widths` are the per-stage bottleneck widths
+/// (output channels are 4×).
+pub fn bottleneck_mini(img: usize, widths: &[usize], classes: usize) -> Network {
+    let mut layers = vec![conv("stem", 3, 3, widths[0], 1, img)];
+    let mut cin = widths[0];
+    let mut hw = img / 2; // after the 3x3/s2 stem pool
+    for (s, &width) in widths.iter().enumerate() {
+        let cout = width * 4;
+        let stride = if s > 0 { 2 } else { 1 };
+        if stride == 2 {
+            hw /= 2;
+        }
+        let pre = format!("s{s}b0");
+        layers.push(conv(&format!("{pre}a"), 1, cin, width, stride, hw));
+        layers.push(conv(&format!("{pre}b"), 3, width, width, 1, hw));
+        let mut c = conv(&format!("{pre}c"), 1, width, cout, 1, hw);
+        c.residual = true;
+        layers.push(c);
+        if cin != cout || stride != 1 {
+            let mut p = conv(&format!("{pre}proj"), 1, cin, cout, stride, hw);
+            p.relu = false;
+            layers.push(p);
+        }
+        cin = cout;
+    }
+    Network {
+        name: "bottleneck-mini".into(),
+        input_hw: img,
+        layers,
+        stem_pool: Some(PoolLayer { k: 3, stride: 2, pad: 1 }),
+        fc_in: *widths.last().unwrap() * 4,
         fc_out: classes,
     }
 }
@@ -153,7 +205,14 @@ pub fn resnet18() -> Network {
             cin = ch;
         }
     }
-    Network { name: "resnet-18".into(), input_hw: 224, layers, fc_in: 512, fc_out: 1000 }
+    Network {
+        name: "resnet-18".into(),
+        input_hw: 224,
+        layers,
+        stem_pool: Some(PoolLayer { k: 3, stride: 2, pad: 1 }),
+        fc_in: 512,
+        fc_out: 1000,
+    }
 }
 
 /// Bottleneck ResNet: blocks of (1x1 reduce, 3x3, 1x1 expand).
@@ -180,7 +239,14 @@ fn resnet_bottleneck(name: &str, stage_blocks: [usize; 4]) -> Network {
             cin = cout;
         }
     }
-    Network { name: name.into(), input_hw: 224, layers, fc_in: 2048, fc_out: 1000 }
+    Network {
+        name: name.into(),
+        input_hw: 224,
+        layers,
+        stem_pool: Some(PoolLayer { k: 3, stride: 2, pad: 1 }),
+        fc_in: 2048,
+        fc_out: 1000,
+    }
 }
 
 /// ResNet-50 (3-4-6-3 bottleneck blocks).
@@ -259,5 +325,37 @@ mod tests {
     fn test_by_name() {
         assert!(by_name("resnet-101").is_some());
         assert!(by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn test_imagenet_nets_carry_stem_pool_geometry() {
+        // 224 -> conv1/s2 -> 112 -> 3x3/s2 pool -> 56 = stage-0 resolution;
+        // without the pool the declared layer table is not executable.
+        for net in [resnet18(), resnet50(), resnet101()] {
+            let p = net.stem_pool.expect("ImageNet ResNets have a stem max pool");
+            assert_eq!((p.k, p.stride, p.pad), (3, 2, 1), "{}", net.name);
+            assert_eq!(net.layers[0].out_hw, 112);
+            // pool output feeds the first stage at its input resolution
+            let pooled = (112 + 2 * p.pad - p.k) / p.stride + 1;
+            assert_eq!(pooled, net.layers[1].out_hw * net.layers[1].stride);
+        }
+        assert!(resnet_mini_default().stem_pool.is_none());
+    }
+
+    #[test]
+    fn test_bottleneck_mini_structure() {
+        let n = bottleneck_mini(16, &[4, 8], 3);
+        let names: Vec<&str> = n.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["stem", "s0b0a", "s0b0b", "s0b0c", "s0b0proj", "s1b0a", "s1b0b", "s1b0c", "s1b0proj"]
+        );
+        // stem keeps 16², pool halves to 8², stage 1 strides to 4²
+        assert_eq!(n.layers[0].out_hw, 16);
+        assert_eq!(n.layers[1].out_hw, 8);
+        assert_eq!(n.layers[5].out_hw, 4);
+        assert!(n.layers[3].residual && !n.layers[4].relu);
+        assert_eq!(n.fc_in, 32);
+        assert_eq!(n.stem_pool, Some(PoolLayer { k: 3, stride: 2, pad: 1 }));
     }
 }

@@ -1,13 +1,17 @@
 //! Pure-Rust f32 reference inference pipeline (the FP32 baseline the paper
-//! compares against), plus the shared im2col used by the integer pipeline.
+//! compares against), plus the shared im2col / max pool used by the
+//! integer pipeline.
 //!
-//! Operates on the resnet-mini family from [`crate::model`] with weights
-//! loaded from a DFT file produced by `python -m compile.train`.
+//! [`forward_fp`] interprets the layer DAG from [`crate::graph`], so it
+//! runs any plannable network — the resnet-mini family (with weights
+//! loaded from a DFT file produced by `python -m compile.train`) and the
+//! bottleneck/pooled ImageNet ResNets alike.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
+use crate::graph::{Graph, Op};
 use crate::io::TensorMap;
 use crate::kernels::ThreadPool;
 use crate::model::{ConvLayer, Network};
@@ -90,6 +94,73 @@ pub fn im2col_into<T: Element>(
         }
     });
     (ho, wo)
+}
+
+/// Borrowed-output 2-D max pool over an NHWC buffer: `k`×`k` window,
+/// `stride`, symmetric `pad`. Out-of-bounds window positions are
+/// **ignored** (the max runs over the in-bounds window only — the
+/// "-inf padding" convention), so the result on quantized i8 codes equals
+/// requantizing the f32 pool output: max commutes with the monotone
+/// per-tensor requantization. `out` may hold stale data; every output
+/// element is rewritten. No allocation — safe on the zero-alloc forward
+/// path. Returns `(ho, wo)`.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_into<T: Copy + PartialOrd>(
+    x: &[T],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [T],
+) -> (usize, usize) {
+    assert!(k >= 1 && stride >= 1 && pad < k, "maxpool: degenerate window");
+    assert!(h + 2 * pad >= k && w + 2 * pad >= k, "maxpool: window does not fit");
+    assert_eq!(x.len(), n * h * w * c, "maxpool: input is not (N,{h},{w},{c})");
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    assert!(out.len() >= n * ho * wo * c, "maxpool: out buffer too small");
+    for b in 0..n {
+        for oy in 0..ho {
+            let ys = (oy * stride).saturating_sub(pad);
+            let ye = (oy * stride + k - pad).min(h);
+            for ox in 0..wo {
+                let xs = (ox * stride).saturating_sub(pad);
+                let xe = (ox * stride + k - pad).min(w);
+                let orow = &mut out[((b * ho + oy) * wo + ox) * c..][..c];
+                let mut first = true;
+                for y in ys..ye {
+                    for xx in xs..xe {
+                        let src = &x[((b * h + y) * w + xx) * c..][..c];
+                        if first {
+                            orow.copy_from_slice(src);
+                            first = false;
+                        } else {
+                            for (o, &s) in orow.iter_mut().zip(src) {
+                                if s > *o {
+                                    *o = s;
+                                }
+                            }
+                        }
+                    }
+                }
+                debug_assert!(!first, "window covered no input element");
+            }
+        }
+    }
+    (ho, wo)
+}
+
+/// Allocating [`maxpool2d_into`] over an NHWC tensor (reference paths).
+pub fn maxpool2d<T: Element + PartialOrd>(x: &Tensor<T>, k: usize, stride: usize, pad: usize) -> Tensor<T> {
+    let (n, h, w, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::<T>::zeros(&[n, ho, wo, c]);
+    maxpool2d_into(x.data(), n, h, w, c, k, stride, pad, out.data_mut());
+    out
 }
 
 /// f32 GEMM: (M,K) x (K,F) -> (M,F). Row-major, k-inner loop ordered for
@@ -187,41 +258,54 @@ fn conv_bn(x: &Tensor<f32>, l: &ConvLayer, p: &ConvParams, relu: bool) -> Tensor
     y.reshape(&[n, ho, wo, cout]).expect("conv output reshape")
 }
 
-/// Forward a batch (NHWC f32) through the fp32 resnet-mini. Returns logits.
+/// Forward a batch (NHWC f32) through the fp32 network. Returns logits.
+///
+/// Interprets the layer DAG ([`crate::graph::Graph`]) in its deterministic
+/// schedule, so the same code runs the 2-conv mini family and the
+/// bottleneck/pooled ImageNet ResNets. Residual semantics: a conv feeding
+/// a residual add runs without ReLU; the add applies ReLU (He et al.
+/// post-activation).
 pub fn forward_fp(params: &FpParams, net: &Network, x: &Tensor<f32>) -> Tensor<f32> {
-    let layers: BTreeMap<&str, &ConvLayer> =
-        net.layers.iter().map(|l| (l.name.as_str(), l)).collect();
-    let conv = |name: &str, h: &Tensor<f32>, relu: bool| -> Tensor<f32> {
-        conv_bn(h, layers[name], &params.convs[name], relu)
-    };
-
-    let mut h = conv("stem", x, true);
-    // walk blocks in layer order: the model family is stem + (c1, c2[, proj])*
-    let mut i = 1;
-    while i < net.layers.len() {
-        let c1 = &net.layers[i];
-        let c2 = &net.layers[i + 1];
-        let has_proj = net
-            .layers
-            .get(i + 2)
-            .map(|l| l.name.ends_with("proj"))
-            .unwrap_or(false);
-        let skip = if has_proj {
-            conv(&net.layers[i + 2].name, &h, false)
-        } else {
-            h.clone()
-        };
-        let h1 = conv(&c1.name, &h, true);
-        let mut h2 = conv(&c2.name, &h1, false);
-        {
-            let hd = h2.data_mut();
-            for (v, &s) in hd.iter_mut().zip(skip.data()) {
-                *v = (*v + s).max(0.0);
+    let g = Graph::from_network(net, x.dim(1), x.dim(2))
+        .unwrap_or_else(|e| panic!("forward_fp: cannot plan network '{}': {e}", net.name));
+    let consumers = g.consumers();
+    let mut vals: Vec<Option<Tensor<f32>>> = vec![None; g.nodes.len()];
+    let mut h: Option<Tensor<f32>> = None; // the GAP input
+    for id in g.schedule() {
+        let node = &g.nodes[id];
+        let out = match node.op {
+            Op::Input => x.clone(),
+            Op::Conv { layer } => {
+                let l = &net.layers[layer];
+                let feeds_add =
+                    consumers[id].iter().any(|&cid| matches!(g.nodes[cid].op, Op::Add));
+                let src = vals[node.inputs[0]].as_ref().expect("producer scheduled first");
+                conv_bn(src, l, &params.convs[&l.name], l.relu && !feeds_add)
             }
-        }
-        h = h2;
-        i += if has_proj { 3 } else { 2 };
+            Op::Pool { k, stride, pad } => {
+                let src = vals[node.inputs[0]].as_ref().expect("producer scheduled first");
+                maxpool2d(src, k, stride, pad)
+            }
+            Op::Skip => vals[node.inputs[0]].clone().expect("producer scheduled first"),
+            Op::Add => {
+                let mut chain =
+                    vals[node.inputs[0]].clone().expect("producer scheduled first");
+                let skip = vals[node.inputs[1]].as_ref().expect("producer scheduled first");
+                let cd = chain.data_mut();
+                for (v, &s) in cd.iter_mut().zip(skip.data()) {
+                    *v = (*v + s).max(0.0);
+                }
+                chain
+            }
+            Op::Gap => {
+                h = vals[node.inputs[0]].clone();
+                continue;
+            }
+            Op::Fc => continue,
+        };
+        vals[id] = Some(out);
     }
+    let h = h.expect("every graph ends in GAP");
 
     // global average pool + fc
     let (n, ho, wo, c) = (h.dim(0), h.dim(1), h.dim(2), h.dim(3));
@@ -327,6 +411,40 @@ mod tests {
                 assert_eq!(&out[..], want.data(), "threads={threads} kh={kh} stride={stride}");
             }
         }
+    }
+
+    #[test]
+    fn test_maxpool_3x3_s2_p1_imagenet_stem_geometry() {
+        // 4x4 single-channel ramp; 3x3/s2/p1 -> 2x2, padding ignored
+        let x = Tensor::new(
+            &[1, 4, 4, 1],
+            (0..16).map(|v| v as f32).collect::<Vec<f32>>(),
+        )
+        .unwrap();
+        let y = maxpool2d(&x, 3, 2, 1);
+        assert_eq!(y.shape(), &[1, 2, 2, 1]);
+        // windows (in-bounds): rows/cols {0,1},{1,2,3} etc.
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn test_maxpool_i8_into_reuses_dirty_buffer_and_ignores_padding() {
+        // all-negative codes: a zero-padded pool would wrongly clamp to 0
+        let x: Vec<i8> = vec![-5, -3, -9, -1, -7, -2, -8, -6, -4];
+        let mut out = vec![127i8; 2 * 2];
+        let (ho, wo) = maxpool2d_into(&x, 1, 3, 3, 1, 3, 2, 1, &mut out);
+        assert_eq!((ho, wo), (2, 2));
+        // windows: {(-5,-3,-1,-7)}, {(-3,-9,-7,-2)}, {(-1,-7,-8,-6)}, {(-7,-2,-6,-4)}
+        assert_eq!(&out[..], &[-1, -2, -1, -2]);
+    }
+
+    #[test]
+    fn test_maxpool_channels_independent() {
+        let x = Tensor::new(&[1, 2, 2, 2], vec![1.0, 8.0, 2.0, 7.0, 3.0, 6.0, 4.0, 5.0])
+            .unwrap();
+        let y = maxpool2d(&x, 2, 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 1, 2]);
+        assert_eq!(y.data(), &[4.0, 8.0]);
     }
 
     #[test]

@@ -52,6 +52,9 @@ pub struct ForwardProfile {
     pub quantize_ns: u64,
     /// identity skip-lane rescale (blocks without a projection conv)
     pub skip_ns: u64,
+    /// stem max pool over i8 codes (0 for nets without one); distinct
+    /// from the engine's `pool_*` counters, which track the thread pool
+    pub maxpool_ns: u64,
     /// integer global average pool
     pub gap_ns: u64,
     /// FC GEMM + f32 logits
@@ -87,6 +90,7 @@ impl ForwardProfile {
         self.batch = batch;
         self.quantize_ns = 0;
         self.skip_ns = 0;
+        self.maxpool_ns = 0;
         self.gap_ns = 0;
         self.fc_ns = 0;
         self.total_ns = 0;
@@ -119,6 +123,7 @@ impl ForwardProfile {
         self.batch = other.batch;
         self.quantize_ns += other.quantize_ns;
         self.skip_ns += other.skip_ns;
+        self.maxpool_ns += other.maxpool_ns;
         self.gap_ns += other.gap_ns;
         self.fc_ns += other.fc_ns;
         self.total_ns += other.total_ns;

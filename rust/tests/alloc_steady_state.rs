@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use dfp_infer::kernels::KernelRegistry;
 use dfp_infer::lpinfer::{forward_quant_into, forward_quant_with, ForwardWorkspace, QModelParams};
-use dfp_infer::model::resnet_mini;
+use dfp_infer::model::{bottleneck_mini, resnet_mini};
 use dfp_infer::scheme::Scheme;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::util::SplitMix64;
@@ -119,4 +119,30 @@ fn steady_state_forward_makes_zero_heap_allocations() {
     let after = allocs();
     assert_eq!(after - before, 0, "smaller batch must reuse the high-water arena");
     assert_eq!(&logits1[..], want1.data());
+
+    // the bottleneck family (1x1-3x3-1x1 blocks, stem max pool, identity
+    // *and* projection shortcuts): every step kind of the planned-arena
+    // interpreter — Conv, ConvSkip, ConvToSkip, IdentitySkip, Pool — must
+    // hold the same zero-allocation bar
+    let bnet = bottleneck_mini(16, &[4, 8], 3);
+    let bparams = QModelParams::synthetic(&bnet, 95, &scheme);
+    assert!(!bparams.forward_plan().is_empty());
+    let xb = Tensor::new(&[n, 16, 16, 3], rng.normal(n * 16 * 16 * 3)).unwrap();
+    let wantb = forward_quant_with(&bparams, &bnet, &xb, &reg);
+    let mut wsb = ForwardWorkspace::new();
+    let mut logitsb = vec![0f32; n * bnet.fc_out];
+    forward_quant_into(&bparams, &bnet, &xb, &reg, &mut wsb, &mut logitsb);
+    assert_eq!(&logitsb[..], wantb.data(), "bottleneck workspace path must match");
+    let before = allocs();
+    for _ in 0..3 {
+        forward_quant_into(&bparams, &bnet, &xb, &reg, &mut wsb, &mut logitsb);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "bottleneck steady-state forward allocated {} time(s) over 3 requests",
+        after - before
+    );
+    assert_eq!(&logitsb[..], wantb.data(), "bottleneck steady-state logits must stay bit-exact");
 }

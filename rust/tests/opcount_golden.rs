@@ -1,0 +1,75 @@
+//! Golden op-census numbers for the paper-scale networks.
+//!
+//! The §3.3 claims are pure arithmetic over layer shapes, so they get
+//! exact golden values rather than tolerance bands: any change to the
+//! ResNet-50/101 layer tables, to the FC accounting, or to the per-block
+//! multiply amortization (`mults = ceil(macs / N·K²)`) shows up as a hard
+//! diff here. The paper's headline — ternary N=4 replaces ~85 % of
+//! ResNet-101 multiplies with 8-bit accumulations — is the anchor.
+
+use dfp_infer::model::{resnet101, resnet50};
+use dfp_infer::opcount::{census_ternary, table_3_3, ternary_scheme};
+
+#[test]
+fn resnet50_census_matches_golden() {
+    let net = resnet50();
+    assert_eq!(net.layers.len(), 53, "1 stem + 16 blocks x 3 + 4 projections");
+    assert_eq!(net.total_weights(), 25_502_912);
+
+    let c4 = census_ternary(&net, 4);
+    assert_eq!(c4.total_macs, 3_857_973_248);
+    assert_eq!(c4.mults, 641_961_984);
+    assert_eq!(c4.accums, 3_739_959_296);
+    assert!((c4.replaced_frac() - 0.8336).abs() < 5e-4, "N=4 replaced {}", c4.replaced_frac());
+
+    let c16 = census_ternary(&net, 16);
+    assert!((c16.replaced_frac() - 0.9355).abs() < 5e-4, "N=16 replaced {}", c16.replaced_frac());
+    let c64 = census_ternary(&net, 64);
+    assert!((c64.replaced_frac() - 0.9609).abs() < 5e-4, "N=64 replaced {}", c64.replaced_frac());
+}
+
+#[test]
+fn resnet101_census_matches_golden_and_paper_claim() {
+    let net = resnet101();
+    assert_eq!(net.layers.len(), 104, "1 stem + 33 blocks x 3 + 4 projections");
+    assert_eq!(net.total_weights(), 44_442_816);
+
+    let c4 = census_ternary(&net, 4);
+    assert_eq!(c4.total_macs, 7_570_194_432);
+    assert_eq!(c4.mults, 1_133_285_376);
+    assert_eq!(c4.accums, 7_452_180_480);
+    // the paper's §3.3 headline: N=4 "can potentially replace 85% of
+    // multiplications in Resnet-101"
+    assert!((c4.replaced_frac() - 0.8503).abs() < 5e-4, "N=4 replaced {}", c4.replaced_frac());
+
+    let c16 = census_ternary(&net, 16);
+    assert!((c16.replaced_frac() - 0.9509).abs() < 5e-4, "N=16 replaced {}", c16.replaced_frac());
+    let c64 = census_ternary(&net, 64);
+    assert!((c64.replaced_frac() - 0.9760).abs() < 5e-4, "N=64 replaced {}", c64.replaced_frac());
+}
+
+#[test]
+fn replacement_fraction_monotone_and_cross_network_ordering() {
+    // deeper net → 1x1/3x3 mix shifts → N=4 replaces slightly more on 101
+    let f50 = census_ternary(&resnet50(), 4).replaced_frac();
+    let f101 = census_ternary(&resnet101(), 4).replaced_frac();
+    assert!(f101 > f50, "ResNet-101 {f101} vs ResNet-50 {f50}");
+    for net in [resnet50(), resnet101()] {
+        let mut last = 0.0;
+        for n in [4usize, 16, 64] {
+            let f = census_ternary(&net, n).replaced_frac();
+            assert!(f > last, "{} N={n}: {f} <= {last}", net.name);
+            last = f;
+        }
+    }
+}
+
+#[test]
+fn table_rows_stay_greppable() {
+    // the CI smoke (and the README excerpt) grep these exact cells
+    let net = resnet101();
+    let schemes = [ternary_scheme(&net, 4), ternary_scheme(&net, 64)];
+    let t = table_3_3(&net, &schemes);
+    assert!(t.contains("| 8a2w_n4@conv1=i8 | 1133285376 | 7452180480 | 85.0% |"), "{t}");
+    assert!(t.contains("| 8a2w_n64@conv1=i8 |"), "{t}");
+}

@@ -1,0 +1,129 @@
+//! Property tests for the buffer liveness planner (DESIGN.md §graph).
+//!
+//! Two guarantees are load-bearing for the zero-allocation forward:
+//!
+//! 1. **Safety** — [`color_intervals`] never lets two simultaneously-live
+//!    tensors overlap in arena bytes, for *any* set of lifetimes, not just
+//!    the ones real networks produce. Checked over randomized interval
+//!    sets including adversarial shapes (nested, chained, all-overlapping).
+//! 2. **Economy** — on the real model families the planned arena never
+//!    exceeds the legacy high-water sizing (input + two ping-pong slabs of
+//!    the largest conv output), i.e. the planner is a pure win.
+
+use dfp_infer::graph::{color_intervals, ArenaLayout, Lifetime};
+use dfp_infer::lpinfer::ForwardPlan;
+use dfp_infer::model::{bottleneck_mini, resnet101, resnet18, resnet50, resnet_mini};
+use dfp_infer::util::SplitMix64;
+
+/// The planner's contract, checked pairwise: tensors whose live intervals
+/// overlap must occupy disjoint byte ranges, and every placement must fit
+/// inside the reported total.
+fn assert_layout_sound(reqs: &[Lifetime], layout: &ArenaLayout) {
+    assert_eq!(layout.offsets.len(), reqs.len());
+    for (i, r) in reqs.iter().enumerate() {
+        assert!(
+            layout.offsets[i] + r.size <= layout.total,
+            "tensor {i} ([{}, {}] size {}) placed past the arena total {}",
+            r.start,
+            r.end,
+            r.size,
+            layout.total
+        );
+    }
+    for a in 0..reqs.len() {
+        for b in a + 1..reqs.len() {
+            if !reqs[a].overlaps(&reqs[b]) || reqs[a].size == 0 || reqs[b].size == 0 {
+                continue;
+            }
+            let (ao, bo) = (layout.offsets[a], layout.offsets[b]);
+            let clash = ao < bo + reqs[b].size && bo < ao + reqs[a].size;
+            assert!(
+                !clash,
+                "live tensors {a} ([{}, {}] @ {ao}+{}) and {b} ([{}, {}] @ {bo}+{}) share bytes",
+                reqs[a].start,
+                reqs[a].end,
+                reqs[a].size,
+                reqs[b].start,
+                reqs[b].end,
+                reqs[b].size,
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_random_lifetimes_never_share_bytes_while_live() {
+    let mut rng = SplitMix64::new(0x11FE);
+    for case in 0..200u64 {
+        let n = 1 + rng.next_below(24) as usize;
+        let horizon = 1 + rng.next_below(32) as usize;
+        let reqs: Vec<Lifetime> = (0..n)
+            .map(|_| {
+                let start = rng.next_below(horizon as u64) as usize;
+                let end = start + rng.next_below((horizon - start) as u64 + 1) as usize;
+                // zero-sized requests allowed: they must stay harmless
+                let size = rng.next_below(65) as usize;
+                Lifetime { size, start, end }
+            })
+            .collect();
+        let layout = color_intervals(&reqs);
+        assert_layout_sound(&reqs, &layout);
+        // determinism: same requests, same layout
+        let again = color_intervals(&reqs);
+        assert_eq!(again.offsets, layout.offsets, "case {case} not deterministic");
+        assert_eq!(again.total, layout.total);
+    }
+}
+
+#[test]
+fn adversarial_interval_shapes_stay_sound() {
+    // everything alive at once: the arena must be the exact sum
+    let all: Vec<Lifetime> =
+        (0..8).map(|i| Lifetime { size: 16 + i, start: 0, end: 10 }).collect();
+    let l = color_intervals(&all);
+    assert_layout_sound(&all, &l);
+    assert_eq!(l.total, all.iter().map(|r| r.size).sum::<usize>());
+
+    // a strict chain: only neighbors overlap (at their shared step), so the
+    // true peak demand is the largest adjacent pair; first-fit is greedy,
+    // not optimal, but must land between that and the no-reuse sum
+    let chain: Vec<Lifetime> =
+        (0..8).map(|i| Lifetime { size: 8 * (i + 1), start: i, end: i + 1 }).collect();
+    let l = color_intervals(&chain);
+    assert_layout_sound(&chain, &l);
+    let sum: usize = chain.iter().map(|r| r.size).sum();
+    assert!(l.total >= 8 * 7 + 8 * 8 && l.total < sum, "total {}", l.total);
+
+    // nested intervals: outer blocks every inner from offset 0
+    let nested: Vec<Lifetime> = (0..6)
+        .map(|i| Lifetime { size: 10, start: i, end: 11 - i })
+        .collect();
+    let l = color_intervals(&nested);
+    assert_layout_sound(&nested, &l);
+}
+
+#[test]
+fn planned_arena_never_exceeds_legacy_high_water_on_model_families() {
+    let nets = [
+        resnet_mini(8, &[4, 8, 8], 1, 3),
+        resnet_mini(8, &[4, 8, 8], 2, 3),
+        resnet_mini(8, &[5, 9, 13], 1, 3),
+        resnet_mini(16, &[8, 16, 32], 2, 10),
+        bottleneck_mini(8, &[2], 2),
+        bottleneck_mini(16, &[4, 8], 3),
+        resnet18(),
+        resnet50(),
+        resnet101(),
+    ];
+    for net in &nets {
+        let plan = ForwardPlan::build(net)
+            .unwrap_or_else(|e| panic!("{} must be plannable: {e}", net.name));
+        assert!(plan.n_steps() > 0, "{}", net.name);
+        let (planned, legacy) = (plan.planned_act_elems(), plan.legacy_act_elems());
+        assert!(
+            planned <= legacy,
+            "{}: planned arena {planned} elems exceeds legacy high-water {legacy}",
+            net.name
+        );
+    }
+}

@@ -14,7 +14,7 @@
 
 use dfp_infer::kernels::{KernelRegistry, SimdTier, TierChoice, ALL_KERNELS};
 use dfp_infer::lpinfer::{forward_quant_with, paths_divergence, QConvParams, QModelParams};
-use dfp_infer::model::resnet_mini;
+use dfp_infer::model::{bottleneck_mini, resnet50, resnet_mini};
 use dfp_infer::scheme::Scheme;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::testing::{check, Gen};
@@ -84,7 +84,7 @@ fn randomized_model(net: &dfp_infer::model::Network, seed: u64, scheme: &Scheme)
         params.set_conv(n.clone(), rebuilt);
     }
     // restore the load-time cached epilogues (set_conv cleared them)
-    params.rebuild_epilogues(net);
+    params.rebuild_epilogues(net).expect("test nets are plannable");
     params
 }
 
@@ -157,6 +157,64 @@ fn fused_logits_bit_identical_across_kernels_tiers_and_threads() {
             }
         }
     }
+}
+
+#[test]
+fn bottleneck_lockstep_and_bit_identity() {
+    // ResNet-50-shaped bottleneck blocks (1x1-3x3-1x1, stem maxpool,
+    // projection *and* identity shortcuts) through the planned step
+    // interpreter, with the adversarial scale envelope
+    for (bi, net) in
+        [bottleneck_mini(16, &[4, 8], 3), bottleneck_mini(8, &[2], 2)].iter().enumerate()
+    {
+        let hw = net.input_hw;
+        for (i, variant) in ["8a2w_n4", "8a4w_n4", "8a2w_n4@stem=i8"].iter().enumerate() {
+            let scheme = Scheme::parse(variant).unwrap();
+            let params = randomized_model(net, 7000 + 100 * bi as u64 + i as u64, &scheme);
+            params.validate(net).unwrap();
+            let mut rng = SplitMix64::new(7100 + 10 * bi as u64 + i as u64);
+            let x = Tensor::new(&[2, hw, hw, 3], rng.normal(2 * hw * hw * 3)).unwrap();
+            let d = paths_divergence(&params, net, &x, &KernelRegistry::auto());
+            assert!(
+                d.max_code_ulp <= 1,
+                "{}: scheme={variant} lockstep divergence {} codes (bound 1)",
+                net.name,
+                d.max_code_ulp
+            );
+            let want = forward_quant_with(&params, net, &x, &KernelRegistry::auto());
+            assert!(want.data().iter().all(|v| v.is_finite()), "{variant}");
+            for kind in ALL_KERNELS {
+                for threads in [1usize, 2] {
+                    let reg = KernelRegistry::new(Some(kind), threads);
+                    let got = forward_quant_with(&params, net, &x, &reg);
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "{}: scheme={variant} kernel={kind} threads={threads}",
+                        net.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Full paper-scale lockstep: ResNet-50 at 224², ternary N=4 with an i8
+/// stem, through every requantization point of all 53 convs. Minutes of
+/// work — CI runs it in release mode via
+/// `cargo test --release --test requant_equivalence -- --ignored`.
+#[test]
+#[ignore = "paper-scale; run in release mode with -- --ignored"]
+fn full_scale_resnet50_lockstep_within_one_code() {
+    let net = resnet50();
+    let scheme = Scheme::parse("8a2w_n4@conv1=i8").unwrap();
+    let params = QModelParams::synthetic(&net, 224, &scheme);
+    params.validate(&net).unwrap();
+    let mut rng = SplitMix64::new(225);
+    let x = Tensor::new(&[1, 224, 224, 3], rng.normal(224 * 224 * 3)).unwrap();
+    let d = paths_divergence(&params, &net, &x, &KernelRegistry::new(None, 4));
+    assert!(d.max_code_ulp <= 1, "paper-scale lockstep divergence {} codes", d.max_code_ulp);
+    assert!(d.logit_max_abs_diff.is_finite());
 }
 
 #[test]
