@@ -3,10 +3,14 @@
 //! anywhere — no AOT artifacts required; `dfp-infer serve` covers the
 //! artifact-backed path). Besides the stdout report it writes
 //! `BENCH_serving.json`: one row per precision class with throughput and
-//! p50/p95/p99 latency, plus the engine-counter deltas attributed to each
-//! class — the serving-level perf baseline subsequent PRs diff against.
+//! p50/p95/p99 latency plus engine-counter deltas, a **saturation sweep**
+//! (closed-loop offered load at rising concurrency → per-level p50/p99 and
+//! the `throughput_knee` where added load stops buying throughput), and a
+//! **batch ladder** (per-image throughput at B=1 vs B=8 through one warmed
+//! workspace → `batch_speedup`) — the serving-level perf baseline
+//! subsequent PRs diff against.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
 
 use dfp_infer::coordinator::{
@@ -16,12 +20,13 @@ use dfp_infer::coordinator::{
 use dfp_infer::data;
 use dfp_infer::json::Json;
 use dfp_infer::kernels::KernelRegistry;
-use dfp_infer::lpinfer::QModelParams;
-use dfp_infer::model::resnet_mini_default;
+use dfp_infer::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
+use dfp_infer::model::{resnet_mini, resnet_mini_default};
 use dfp_infer::runtime::Manifest;
 use dfp_infer::scheme::Scheme;
 use dfp_infer::telemetry;
-use dfp_infer::util::{Summary, Timer};
+use dfp_infer::tensor::Tensor;
+use dfp_infer::util::{SplitMix64, Summary, Timer};
 
 /// The served variant ladder: scheme name + the (w_bits, cluster) the
 /// manifest advertises for routing. Fast routes to the ternary N=64 model,
@@ -44,6 +49,114 @@ fn manifest_json() -> String {
         r#"{{"img": 24, "classes": 10, "batch_sizes": [1, 8], "variants": {{{}}}}}"#,
         vs.join(", ")
     )
+}
+
+/// Closed-loop saturation sweep on the Fast class: hold `level` requests in
+/// flight, measure throughput and p50/p99 at each level, and report the
+/// knee — the smallest concurrency that already reaches ≥95% of the best
+/// observed throughput (beyond it, added offered load only buys latency).
+fn saturation_sweep(coord: &Coordinator, protos: &[Vec<f32>], quick: bool) -> Json {
+    let levels: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let per_level = if quick { 16 } else { 64 };
+    println!("\n== saturation sweep: fast class, {per_level} requests per concurrency level ==");
+    let mut rows = Vec::new();
+    let mut stats = Vec::new();
+    for &level in levels {
+        let mut lat = Summary::new();
+        let mut inflight: VecDeque<_> = VecDeque::with_capacity(level);
+        let t = Timer::new();
+        for i in 0..per_level {
+            let (img, _) = data::sample(protos, 5, (level * 10_000 + i) as u64, 1.0);
+            loop {
+                match coord.submit(Request { image: img.clone(), class: PrecisionClass::Fast }) {
+                    Ok(rx) => {
+                        inflight.push_back(rx);
+                        break;
+                    }
+                    // queue full: drain a completion, then retry the submit
+                    Err(_) => match inflight.pop_front() {
+                        Some(rx) => lat.add(rx.recv().unwrap().e2e_us / 1e3),
+                        None => std::thread::sleep(std::time::Duration::from_micros(100)),
+                    },
+                }
+            }
+            while inflight.len() >= level {
+                lat.add(inflight.pop_front().unwrap().recv().unwrap().e2e_us / 1e3);
+            }
+        }
+        for rx in inflight {
+            lat.add(rx.recv().unwrap().e2e_us / 1e3);
+        }
+        let rps = per_level as f64 / t.elapsed_s();
+        let (p50, p99) = (lat.percentile(50.0), lat.percentile(99.0));
+        println!("  c={level:<3} {rps:>7.1} req/s   p50 {p50:>7.2} ms   p99 {p99:>7.2} ms");
+        stats.push((level, rps));
+        rows.push(Json::obj(vec![
+            ("concurrency", Json::num(level as f64)),
+            ("throughput_rps", Json::num(rps)),
+            ("p50_ms", Json::num(p50)),
+            ("p99_ms", Json::num(p99)),
+        ]));
+    }
+    let best = stats.iter().fold(0f64, |b, &(_, rps)| b.max(rps));
+    let (knee_c, knee_rps) = stats.iter().copied().find(|&(_, rps)| rps >= 0.95 * best).unwrap_or((0, 0.0));
+    println!("  knee: c={knee_c} at {knee_rps:.1} req/s (best {best:.1})");
+    Json::obj(vec![
+        ("class", Json::str("fast")),
+        ("requests_per_level", Json::num(per_level as f64)),
+        ("levels", Json::arr(rows)),
+        ("knee_concurrency", Json::num(knee_c as f64)),
+        ("throughput_knee", Json::num(knee_rps)),
+    ])
+}
+
+/// Executor-level batch ladder: per-image throughput at B=1 vs B=8 through
+/// the same warmed workspace and a 2-thread registry, on the small test
+/// network where per-call costs (pool dispatch, plan traversal, profiler
+/// epoch) are a visible fraction — batching a GEMM over B·H·W rows
+/// amortizes them, so `batch_speedup` must come out above 1.
+fn batch_ladder(quick: bool) -> Json {
+    let net = resnet_mini(8, &[4, 8, 8], 1, 3);
+    let scheme = Scheme::parse("8a2w_n4@stem=i8").unwrap();
+    let params = QModelParams::synthetic(&net, 7, &scheme);
+    let reg = KernelRegistry::new(None, 2);
+    let mut rng = SplitMix64::new(11);
+    let images_per_leg = if quick { 64 } else { 512 };
+    let bs = [1usize, 8];
+    let xs: Vec<Tensor<f32>> = bs
+        .iter()
+        .map(|&b| Tensor::new(&[b, 8, 8, 3], rng.normal(b * 8 * 8 * 3)).unwrap())
+        .collect();
+    let mut ws = ForwardWorkspace::new();
+    let mut logits = vec![0f32; 8 * net.fc_out];
+    // warm the arena at the largest shape, then each leg's own shape
+    for (i, &b) in bs.iter().enumerate().rev() {
+        forward_quant_into(&params, &net, &xs[i], &reg, &mut ws, &mut logits[..b * net.fc_out]);
+    }
+    // best-of-3, legs interleaved so machine drift hits both equally
+    let mut ips = [0f64; 2];
+    for _round in 0..3 {
+        for (i, &b) in bs.iter().enumerate() {
+            let calls = (images_per_leg / b).max(1);
+            let t = Timer::new();
+            for _ in 0..calls {
+                forward_quant_into(&params, &net, &xs[i], &reg, &mut ws, &mut logits[..b * net.fc_out]);
+            }
+            ips[i] = ips[i].max((calls * b) as f64 / t.elapsed_s());
+        }
+    }
+    let speedup = ips[1] / ips[0];
+    println!("\n== batch ladder: resnet-mini-8, 2 threads ==");
+    println!("  B=1 {:>9.0} img/s   B=8 {:>9.0} img/s   speedup {speedup:.3}x", ips[0], ips[1]);
+    Json::obj(vec![
+        ("network", Json::str("resnet-mini-8")),
+        ("variant", Json::str("8a2w_n4@stem=i8")),
+        ("threads", Json::num(2.0)),
+        ("images_per_leg", Json::num(images_per_leg as f64)),
+        ("b1_images_per_s", Json::num(ips[0])),
+        ("b8_images_per_s", Json::num(ips[1])),
+        ("batch_speedup", Json::num(speedup)),
+    ])
 }
 
 fn main() {
@@ -133,6 +246,9 @@ fn main() {
         ]));
     }
 
+    let saturation = saturation_sweep(&coord, &protos, quick);
+    let ladder = batch_ladder(quick);
+
     let m = coord.metrics();
     println!("\n== coordinator metrics ==\n{}", m.report());
     coord.shutdown();
@@ -145,6 +261,8 @@ fn main() {
         ("requests_per_class", Json::num(n as f64)),
         ("occupancy", Json::num(m.occupancy())),
         ("cases", Json::arr(cases)),
+        ("saturation", saturation),
+        ("batch_ladder", ladder),
         ("engine_total", m.engine.to_json()),
     ]);
     std::fs::write(Path::new(&out), json.to_string_pretty()).unwrap();

@@ -23,8 +23,26 @@ pub type ExecutorFactory = Box<dyn FnOnce() -> Result<Box<dyn Executor>> + Send>
 /// Anything that can run a (variant, fixed-batch) forward pass. Constructed
 /// and used on a single worker thread (see [`ExecutorFactory`]).
 pub trait Executor {
-    /// x: (batch, img, img, 3) f32 -> logits (batch, classes).
-    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>>;
+    /// Borrowed-output forward: x (batch, img, img, 3) f32 -> `logits`
+    /// (batch × classes, row-major, fully overwritten). The serving hot
+    /// path — the coordinator's workers call this with a reusable
+    /// per-worker logits arena, so a steady-state request allocates no
+    /// logits tensor.
+    fn run_batch_into(
+        &mut self,
+        variant: &str,
+        batch: usize,
+        x: &Tensor<f32>,
+        logits: &mut [f32],
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper over [`Self::run_batch_into`]:
+    /// x (batch, img, img, 3) f32 -> logits (batch, classes).
+    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+        let mut logits = Tensor::<f32>::zeros(&[batch, self.classes()]);
+        self.run_batch_into(variant, batch, x, logits.data_mut())?;
+        Ok(logits)
+    }
 
     /// Available artifact batch sizes for a variant (ascending).
     fn batch_sizes(&self, variant: &str) -> Vec<usize>;
@@ -66,6 +84,26 @@ impl PjrtExecutor {
 }
 
 impl Executor for PjrtExecutor {
+    fn run_batch_into(
+        &mut self,
+        variant: &str,
+        batch: usize,
+        x: &Tensor<f32>,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        // PJRT owns its output buffers, so this path copies once; the
+        // tensor-returning override below stays copy-free
+        let out = self.engine.load(variant, batch)?.run(x)?;
+        anyhow::ensure!(
+            out.data().len() == logits.len(),
+            "PJRT returned {} logits for a {} slot buffer",
+            out.data().len(),
+            logits.len()
+        );
+        logits.copy_from_slice(out.data());
+        Ok(())
+    }
+
     fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
         self.engine.load(variant, batch)?.run(x)
     }
@@ -91,8 +129,10 @@ impl Executor for PjrtExecutor {
 /// Each executor owns one [`ForwardWorkspace`] arena, and the coordinator
 /// builds one executor per worker thread — so concurrent serving reuses a
 /// per-worker arena instead of allocating activation/im2col/accumulator
-/// tensors per request (after warm-up, a steady-state batch forwards with
-/// zero heap allocations on a single-threaded registry; see
+/// tensors per request. After warm-up, a steady-state batch through
+/// [`Executor::run_batch_into`] runs with zero heap allocations at any
+/// registry thread count — the GEMMs dispatch onto the persistent
+/// [`crate::kernels::WorkerPool`], which registry clones share (see
 /// `lpinfer::forward_quant_into`).
 pub struct LpExecutor {
     net: Network,
@@ -203,7 +243,13 @@ impl LpExecutor {
 }
 
 impl Executor for LpExecutor {
-    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+    fn run_batch_into(
+        &mut self,
+        variant: &str,
+        batch: usize,
+        x: &Tensor<f32>,
+        logits: &mut [f32],
+    ) -> Result<()> {
         let params = self
             .variants
             .get(variant)
@@ -214,11 +260,16 @@ impl Executor for LpExecutor {
             x.shape(),
             i = self.img
         );
-        // per-worker workspace arena: steady-state batches reuse the same
-        // buffers; only the logits tensor handed back is allocated here
-        let mut logits = Tensor::<f32>::zeros(&[batch, self.classes]);
-        forward_quant_into(params, &self.net, x, &self.registry, &mut self.workspace, logits.data_mut());
-        Ok(logits)
+        anyhow::ensure!(
+            logits.len() == batch * self.classes,
+            "logits buffer has {} slots for a {batch}x{} result",
+            logits.len(),
+            self.classes
+        );
+        // per-worker workspace arena + caller-owned logits: a warm
+        // steady-state batch runs this with zero heap allocations
+        forward_quant_into(params, &self.net, x, &self.registry, &mut self.workspace, logits);
+        Ok(())
     }
 
     fn batch_sizes(&self, variant: &str) -> Vec<usize> {
@@ -265,8 +316,15 @@ impl MockExecutor {
 }
 
 impl Executor for MockExecutor {
-    fn run_batch(&mut self, variant: &str, batch: usize, x: &Tensor<f32>) -> Result<Tensor<f32>> {
+    fn run_batch_into(
+        &mut self,
+        variant: &str,
+        batch: usize,
+        x: &Tensor<f32>,
+        logits: &mut [f32],
+    ) -> Result<()> {
         anyhow::ensure!(x.dim(0) == batch, "batch mismatch");
+        anyhow::ensure!(logits.len() == batch * self.classes, "logits buffer mismatch");
         self.executed.push((variant.to_string(), batch));
         if self.delay_us_per_image > 0 {
             std::thread::sleep(std::time::Duration::from_micros(
@@ -274,15 +332,14 @@ impl Executor for MockExecutor {
             ));
         }
         let px = self.img * self.img * 3;
-        let mut out = Tensor::<f32>::zeros(&[batch, self.classes]);
         for b in 0..batch {
             let mean: f32 =
                 x.data()[b * px..(b + 1) * px].iter().sum::<f32>() / px as f32;
             for c in 0..self.classes {
-                out.data_mut()[b * self.classes + c] = mean + c as f32;
+                logits[b * self.classes + c] = mean + c as f32;
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     fn batch_sizes(&self, variant: &str) -> Vec<usize> {

@@ -321,6 +321,9 @@ fn worker_loop(
     let img = exec.img();
     let classes = exec.classes();
     let px = img * img * 3;
+    // per-worker logits arena: grows to the largest artifact batch seen,
+    // then every further batch runs the executor allocation-free
+    let mut logits: Vec<f32> = Vec::new();
     loop {
         let msg = {
             let rx = job_rx.lock().unwrap();
@@ -337,15 +340,18 @@ fn worker_loop(
         for (i, p) in job.reqs.iter().enumerate() {
             x.data_mut()[i * px..(i + 1) * px].copy_from_slice(p.image.data());
         }
+        let want = job.artifact_batch * classes;
+        if logits.len() < want {
+            logits.resize(want, 0.0);
+        }
         let t_exec = Instant::now();
-        let result = exec.run_batch(&job.variant, job.artifact_batch, &x);
+        let result = exec.run_batch_into(&job.variant, job.artifact_batch, &x, &mut logits[..want]);
         let exec_us = t_exec.elapsed().as_micros() as f64;
         metrics.on_batch(occupied, padded, exec_us);
         match result {
-            Ok(logits) => {
-                let ld = logits.data();
+            Ok(()) => {
                 for (i, p) in job.reqs.into_iter().enumerate() {
-                    let row = &ld[i * classes..(i + 1) * classes];
+                    let row = &logits[i * classes..(i + 1) * classes];
                     let predicted = row
                         .iter()
                         .enumerate()

@@ -9,8 +9,11 @@
 //!   GEMM (2-bit codes decoded to ±1 lane masks, accumulated branch-free
 //!   as `(a & pos) - (a & neg)`) and the packed-i4 GEMM, cache-blocked
 //!   over (M, K, F) tiles;
-//! * [`threadpool`] — scoped worker pool parallelizing over output-row
-//!   blocks, sized from [`crate::config::Config`];
+//! * [`pool`] — [`WorkerPool`]: persistent parked worker threads with an
+//!   intrusive stack-allocated job queue, so submitting a GEMM's row
+//!   blocks allocates nothing and spawns nothing;
+//! * [`threadpool`] — the row-block splitter over that pool, sized from
+//!   [`crate::config::Config`]; clones share one `WorkerPool`;
 //! * [`simd`] — the SIMD execution tier: AVX2 (x86_64) / NEON (aarch64)
 //!   implementations of the ternary accumulate, the dense/sparse i8 inner
 //!   loop and the requant epilogue, behind runtime CPU-feature detection
@@ -35,6 +38,7 @@
 pub mod epilogue;
 pub mod gemm;
 pub mod packed;
+pub mod pool;
 pub mod registry;
 pub mod simd;
 pub mod threadpool;
@@ -42,6 +46,7 @@ pub mod threadpool;
 pub use epilogue::{LayerRequant, ResolvedEpilogue};
 pub use gemm::{gemm_i8, gemm_i8_dense, gemm_packed_i4, gemm_packed_ternary};
 pub use packed::{PackedI4Matrix, PackedLayer, PackedTernaryMatrix, PANEL_F};
+pub use pool::WorkerPool;
 pub use registry::{KernelChoice, KernelKind, KernelRegistry, ALL_KERNELS};
 pub use simd::{SimdTier, TierChoice};
 pub use threadpool::ThreadPool;

@@ -1,0 +1,470 @@
+//! Persistent parked-thread worker pool — the serving-spine replacement
+//! for the per-GEMM `std::thread::scope` spawns.
+//!
+//! A [`WorkerPool`] owns `width - 1` long-lived worker threads that park
+//! on a condvar between jobs (the submitting thread is the `width`-th
+//! worker: it always participates, so a job makes progress even when every
+//! pool thread is busy with another caller's job — two registries sharing
+//! one pool can never deadlock each other, and `width` greater than the
+//! physical core count degrades gracefully to oversubscription).
+//!
+//! A *job* is `n_blocks` independent block indices plus a borrowed
+//! `Fn(usize)` body. The job record lives on the **caller's stack**
+//! and is linked into an intrusive FIFO under the pool mutex — submitting
+//! a job allocates nothing, which is what extends the zero-allocation
+//! steady-state guarantee (DESIGN.md §forward-plan) to multi-threaded
+//! registries: with a persistent pool there is nothing left to spawn.
+//!
+//! Lifecycle:
+//! * **submit** — the caller links its stack job, wakes the parked
+//!   workers, then claims blocks of its own job until they run out;
+//! * **claim** — workers claim block indices from the queue head under
+//!   the mutex; the claim that takes a job's last block unlinks it, so a
+//!   job leaves the queue before its memory can go away;
+//! * **complete** — every finished block counts down the job's latch
+//!   (a `Mutex<usize>` + condvar); the caller waits on the latch, so it
+//!   cannot return (and pop the job's stack frame) while any worker still
+//!   holds a reference;
+//! * **panic** — a panicking block is caught on the worker, the first
+//!   payload is parked in the job, the latch still counts down (no hang),
+//!   and the caller re-raises the panic after the job completes. The
+//!   worker itself survives and goes back to parking;
+//! * **shutdown** — dropping the pool sets the shutdown flag, wakes
+//!   everyone and joins all workers. Jobs cannot outlive the pool: a
+//!   caller inside [`WorkerPool::run`] borrows the pool, so drop cannot
+//!   begin until every job has completed.
+//!
+//! Aliasing discipline for the raw `*mut Job` pointers: the queue only
+//! ever touches the `next_block`/`next` fields, and only under the queue
+//! mutex; executing blocks only touch `body`/`n_blocks` (immutable after
+//! submit) and the internally-synchronized `remaining`/`done`/`panic`.
+//! No code forms a reference to a whole `Job` after submission — all
+//! access is per-field through the raw pointer — so the queue's field
+//! writes never alias a reference another thread holds.
+
+use std::any::Any;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::ptr::{self, addr_of_mut};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One submitted job: the borrowed block body plus claim/completion
+/// state. Lives on the submitting caller's stack. The queue stores jobs
+/// as [`JobPtr`] — the lifetime parameter cast away — which is sound
+/// because the body stays borrowed until the latch reaches zero, which
+/// [`WorkerPool::run`] awaits before returning.
+struct Job<'a> {
+    body: &'a (dyn Fn(usize) + Sync + 'a),
+    n_blocks: usize,
+    /// next unclaimed block index (queue-mutex guarded)
+    next_block: usize,
+    /// intrusive FIFO link (queue-mutex guarded)
+    next: JobPtr,
+    /// blocks not yet finished; reaching zero releases the caller
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// first panic payload raised by any block of this job
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// A lifetime-erased pointer to a live, stack-resident [`Job`].
+type JobPtr = *mut Job<'static>;
+
+/// The intrusive job FIFO. Raw pointers are only dereferenced under the
+/// owning mutex, and a job is guaranteed live while linked (see the
+/// completion protocol in the module docs).
+struct Queue {
+    head: JobPtr,
+    tail: JobPtr,
+    shutdown: bool,
+}
+
+// SAFETY: the raw job pointers are only created from live stack jobs whose
+// owners wait for completion before invalidating them, and they are only
+// dereferenced while holding the mutex that owns this queue.
+unsafe impl Send for Queue {}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_ready: Condvar,
+}
+
+impl Queue {
+    /// Claim one block from the frontmost non-exhausted job. The claim
+    /// that takes a job's last block unlinks it. Returns the job and the
+    /// claimed index.
+    fn claim_head(&mut self) -> Option<(JobPtr, usize)> {
+        while !self.head.is_null() {
+            let job = self.head;
+            // SAFETY: linked jobs are live; claim fields are ours (mutex)
+            unsafe {
+                let idx = (*job).next_block;
+                if idx < (*job).n_blocks {
+                    (*job).next_block = idx + 1;
+                    if idx + 1 == (*job).n_blocks {
+                        self.pop_head();
+                    }
+                    return Some((job, idx));
+                }
+            }
+            self.pop_head();
+        }
+        None
+    }
+
+    /// Claim one block from a specific job (the caller helping its own
+    /// submission), unlinking it when the claim exhausts it.
+    ///
+    /// SAFETY (caller): `job` must be the caller's own live job.
+    unsafe fn claim_from(&mut self, job: JobPtr) -> Option<usize> {
+        // SAFETY: per contract, plus the queue mutex for the claim fields
+        unsafe {
+            let idx = (*job).next_block;
+            if idx >= (*job).n_blocks {
+                return None;
+            }
+            (*job).next_block = idx + 1;
+            if idx + 1 == (*job).n_blocks {
+                self.unlink(job);
+            }
+            Some(idx)
+        }
+    }
+
+    fn push(&mut self, job: JobPtr) {
+        // SAFETY: fresh live job / linked live tail, queue mutex held
+        unsafe {
+            (*job).next = ptr::null_mut();
+            if self.tail.is_null() {
+                self.head = job;
+            } else {
+                (*self.tail).next = job;
+            }
+        }
+        self.tail = job;
+    }
+
+    fn pop_head(&mut self) {
+        let job = self.head;
+        debug_assert!(!job.is_null());
+        // SAFETY: head is a linked live job
+        unsafe {
+            self.head = (*job).next;
+            if self.head.is_null() {
+                self.tail = ptr::null_mut();
+            }
+            (*job).next = ptr::null_mut();
+        }
+    }
+
+    /// Remove `job` wherever it sits (the caller-side exhaustion path —
+    /// the list holds at most one job per in-flight caller, so this walk
+    /// is O(concurrent callers)). A job already unlinked by a worker's
+    /// claim is simply not found; that is fine.
+    fn unlink(&mut self, job: JobPtr) {
+        let mut prev: JobPtr = ptr::null_mut();
+        let mut cur = self.head;
+        while !cur.is_null() {
+            // SAFETY: every linked job is live; queue mutex held
+            unsafe {
+                if cur == job {
+                    let next = (*cur).next;
+                    if prev.is_null() {
+                        self.head = next;
+                    } else {
+                        (*prev).next = next;
+                    }
+                    if self.tail == cur {
+                        self.tail = prev;
+                    }
+                    (*cur).next = ptr::null_mut();
+                    return;
+                }
+                prev = cur;
+                cur = (*cur).next;
+            }
+        }
+    }
+}
+
+/// Run one claimed block: catch a panicking body (parking the first
+/// payload in the job) and count the latch down either way.
+///
+/// SAFETY: `job` must be a live job whose latch has not yet reached zero
+/// (i.e. the caller of [`WorkerPool::run`] is still waiting on it), and
+/// `idx` a block index claimed exactly once.
+unsafe fn run_block(job: JobPtr, idx: usize) {
+    // SAFETY: body is immutable after submit; the sync fields are
+    // internally synchronized — see the module-doc aliasing rules
+    let body = unsafe { (*job).body };
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body(idx))) {
+        let panic_slot = unsafe { &(*job).panic };
+        panic_slot.lock().unwrap().get_or_insert(payload);
+    }
+    // latch countdown: the notify happens under the lock, so the caller
+    // can only observe zero after this worker has released every borrow
+    let (remaining, done) = unsafe { (&(*job).remaining, &(*job).done) };
+    let mut left = remaining.lock().unwrap();
+    *left -= 1;
+    if *left == 0 {
+        done.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if q.shutdown {
+            return;
+        }
+        match q.claim_head() {
+            Some((job, idx)) => {
+                drop(q);
+                // SAFETY: claimed from the live queue; the submitting
+                // caller waits on the latch we count down
+                unsafe { run_block(job, idx) };
+                q = shared.queue.lock().unwrap();
+            }
+            None => q = shared.work_ready.wait(q).unwrap(),
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads executing block-indexed
+/// jobs. Shared across [`super::KernelRegistry`] clones (and, through
+/// them, the coordinator's serving workers) via `Arc` — see the module
+/// docs for the lifecycle.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    width: usize,
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("width", &self.width)
+            .field("parked_workers", &self.workers.len())
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// A pool of total parallel width `width` (≥ 1): `width - 1` parked
+    /// worker threads plus the submitting caller. `width == 1` spawns
+    /// nothing and runs every job inline.
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { head: ptr::null_mut(), tail: ptr::null_mut(), shutdown: false }),
+            work_ready: Condvar::new(),
+        });
+        let workers = (0..width - 1)
+            .filter_map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dfp-gemm-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .ok()
+            })
+            .collect();
+        Self { shared, workers, width }
+    }
+
+    /// Total parallel width (parked workers + the submitting caller).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Run `body(0..n_blocks)` across the pool and the calling thread,
+    /// returning once every block has finished. Blocks are claimed
+    /// dynamically, so an uneven split self-balances. Allocation-free on
+    /// the submit/claim/complete path (the job record lives on this
+    /// stack frame). If any block panics, the first payload is re-raised
+    /// here after all blocks complete — the pool itself survives.
+    pub fn run(&self, n_blocks: usize, body: &(dyn Fn(usize) + Sync)) {
+        if n_blocks == 0 {
+            return;
+        }
+        if n_blocks == 1 || self.width == 1 {
+            // inline: no queue traffic, no cross-thread handoff
+            for i in 0..n_blocks {
+                body(i);
+            }
+            return;
+        }
+        let mut job = Job {
+            body,
+            n_blocks,
+            next_block: 0,
+            next: ptr::null_mut(),
+            remaining: Mutex::new(n_blocks),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        };
+        // Lifetime erasure: the cast forgets `body`'s borrow, which is
+        // sound because the latch wait below keeps this frame (and the
+        // borrow) alive until every block has finished. All access below
+        // goes through the raw pointer, per-field (module-doc aliasing
+        // rules); `job` itself is not named again.
+        let jp: JobPtr = addr_of_mut!(job).cast::<Job<'static>>();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(jp);
+            self.shared.work_ready.notify_all();
+        }
+        // the caller is a full participant: claim blocks of our own job
+        // until they run out (workers may be claiming concurrently)
+        loop {
+            // SAFETY: jp is our own live job
+            let claimed = unsafe { self.shared.queue.lock().unwrap().claim_from(jp) };
+            match claimed {
+                // SAFETY: our own live job; we have not passed the latch
+                Some(idx) => unsafe { run_block(jp, idx) },
+                None => break,
+            }
+        }
+        // wait until every block (ours and the workers') has counted down
+        {
+            // SAFETY: latch fields are internally synchronized
+            let (remaining, done) = unsafe { (&(*jp).remaining, &(*jp).done) };
+            let mut left = remaining.lock().unwrap();
+            while *left > 0 {
+                left = done.wait(left).unwrap();
+            }
+        }
+        // all claims happened ⇒ the job was unlinked by its last claim;
+        // no worker can still touch it past its latch countdown
+        // SAFETY: the job is exclusively ours again
+        let payload = unsafe { (*jp).panic.lock().unwrap().take() };
+        if let Some(payload) = payload {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn test_every_block_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for n_blocks in [1usize, 2, 3, 7, 16, 64] {
+            let hits: Vec<AtomicUsize> = (0..n_blocks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n_blocks, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "block {i} of {n_blocks}");
+            }
+        }
+    }
+
+    #[test]
+    fn test_width_one_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.width(), 1);
+        let tid = std::thread::current().id();
+        let ran = AtomicUsize::new(0);
+        pool.run(5, &|_| {
+            assert_eq!(std::thread::current().id(), tid, "width-1 pool must stay inline");
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn test_zero_blocks_is_a_no_op() {
+        WorkerPool::new(3).run(0, &|_| panic!("no block should run"));
+    }
+
+    #[test]
+    fn test_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("block 3 exploded");
+                }
+            });
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "block 3 exploded");
+        // the pool keeps serving after a propagated panic
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn test_drop_joins_parked_workers() {
+        // constructing and dropping pools (idle and just-used) must never
+        // deadlock or leak a worker past the join
+        for _ in 0..16 {
+            let pool = WorkerPool::new(3);
+            let count = AtomicUsize::new(0);
+            pool.run(6, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(count.load(Ordering::SeqCst), 6);
+            drop(pool);
+        }
+        drop(WorkerPool::new(8)); // never ran a job
+    }
+
+    #[test]
+    fn test_concurrent_submitters_share_one_pool() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        pool.run(8, &|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 50 * 8);
+    }
+
+    #[test]
+    fn test_width_far_beyond_core_count() {
+        // more workers than any test machine has cores: jobs still
+        // complete and the drop-join still terminates
+        let pool = WorkerPool::new(64);
+        let count = AtomicUsize::new(0);
+        for _ in 0..4 {
+            pool.run(128, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 4 * 128);
+    }
+}

@@ -178,6 +178,18 @@ impl KernelRegistry {
         Self::with_tier(choice.enc, choice.tier, threads)
     }
 
+    /// Like [`Self::with_tier`] but dispatching GEMMs on an existing
+    /// persistent [`WorkerPool`](super::pool::WorkerPool) instead of
+    /// spawning a fresh one — how multiple registries (or the serving
+    /// coordinator's workers) share one set of GEMM threads.
+    pub fn with_pool(
+        choice: Option<KernelKind>,
+        tier: TierChoice,
+        pool: std::sync::Arc<super::pool::WorkerPool>,
+    ) -> Self {
+        Self { choice, tier: tier.resolve(), pool: ThreadPool::shared(pool) }
+    }
+
     /// Parse a CLI/config kernel name; `"auto"` (or empty) means no force.
     pub fn parse(name: &str, threads: usize) -> Result<Self> {
         Ok(Self::with_choice(name.parse()?, threads))

@@ -1,17 +1,38 @@
-//! Scoped worker pool for data-parallel kernels.
+//! Row-block splitter over the persistent worker pool.
 //!
-//! Deliberately tiny: GEMM calls parallelize over disjoint output-row
-//! blocks, so each "job" is a `(row range, &mut output chunk)` pair and
-//! `std::thread::scope` gives us borrow-checked access to the shared
-//! operands without `Arc` or channels. Threads are spawned per call — a
-//! conv-layer GEMM runs for hundreds of microseconds to milliseconds, so
-//! spawn cost (~10 µs) is noise, and there are no idle workers burning CPU
-//! between requests on the serving path.
+//! GEMM calls parallelize over disjoint output-row blocks, so each "job"
+//! is a `(row range, &mut output chunk)` pair. [`ThreadPool`] owns the
+//! geometry — how many blocks a `(rows, min_rows)` problem splits into and
+//! where the row boundaries fall — and hands the block bodies to a shared
+//! [`WorkerPool`](super::pool::WorkerPool) of persistent parked threads
+//! (see `kernels/pool.rs` for the lifecycle). Submitting a job allocates
+//! nothing: the job record lives on the caller's stack and workers park on
+//! a condvar between GEMMs, which is what lets the zero-allocation
+//! steady-state guarantee (DESIGN.md §forward-plan) cover multi-threaded
+//! registries — there is no per-call spawn left to allocate.
+//!
+//! Cloning a `ThreadPool` (and thus a `KernelRegistry`) shares the
+//! underlying worker pool via `Arc`, so the serving coordinator's workers
+//! all feed one set of GEMM threads instead of stacking pools.
 
-/// A fixed-width scoped thread pool.
+use std::sync::Arc;
+
+use super::pool::WorkerPool;
+
+/// Covariant raw-pointer wrapper for handing disjoint sub-slices of one
+/// buffer to pool workers. Safety rests on the row-block geometry: every
+/// block index maps to a non-overlapping `[row0*cols, (row0+take)*cols)`
+/// range, so no two workers ever alias.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// A fixed-width thread pool splitting row-major buffers into contiguous
+/// row blocks. Cheap to clone — clones share one [`WorkerPool`].
 #[derive(Debug, Clone)]
 pub struct ThreadPool {
-    threads: usize,
+    pool: Arc<WorkerPool>,
 }
 
 impl Default for ThreadPool {
@@ -21,30 +42,43 @@ impl Default for ThreadPool {
 }
 
 impl ThreadPool {
-    /// `threads == 0` means "use all available cores".
+    /// `threads == 0` means "use all available cores". Spawns the
+    /// persistent workers (`threads - 1` of them — the submitting thread
+    /// is the last worker) immediately; they park until the first GEMM.
     pub fn new(threads: usize) -> Self {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(usize::from).unwrap_or(1)
         } else {
             threads
         };
-        Self { threads }
+        Self { pool: Arc::new(WorkerPool::new(threads)) }
+    }
+
+    /// Wrap an existing worker pool — two registries built this way
+    /// interleave their GEMMs on the same persistent threads.
+    pub fn shared(pool: Arc<WorkerPool>) -> Self {
+        Self { pool }
+    }
+
+    /// The shared persistent pool (for handing to [`Self::shared`]).
+    pub fn worker_pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.width()
     }
 
     /// Split a row-major `(rows, cols)` output buffer into contiguous row
     /// blocks and run `body(first_row, n_rows, block)` on each, in parallel
-    /// across up to `threads` scoped threads. Blocks never shrink below
+    /// across up to `threads` pool workers. Blocks never shrink below
     /// `min_rows` rows (small problems stay single-threaded), and the body
     /// must fill its block independently of every other block.
     ///
     /// With one block (single thread, or too few rows) the body runs inline
-    /// on the calling thread — no spawn, no heap allocation — which is what
-    /// lets the single-threaded `forward_quant` steady state stay
-    /// allocation-free end to end.
+    /// on the calling thread — no pool handoff — and with more the job is
+    /// submitted from the caller's stack: either way the steady-state
+    /// `forward_quant` path stays allocation-free end to end.
     pub fn run_row_blocks<T: Send>(
         &self,
         out: &mut [T],
@@ -84,30 +118,29 @@ impl ThreadPool {
             return;
         }
         // floor division keeps every block >= min_rows (the doc contract)
-        let blocks = self.threads.min((rows / min_rows.max(1)).max(1));
-        crate::telemetry::record_pool_run(blocks as u64);
-        if blocks == 1 {
+        let blocks = self.threads().min((rows / min_rows.max(1)).max(1));
+        let rows_per = rows.div_ceil(blocks);
+        let n_blocks = rows.div_ceil(rows_per);
+        crate::telemetry::record_pool_run(n_blocks as u64);
+        if n_blocks == 1 {
             body(0, rows, out, aux);
             return;
         }
-        let rows_per = rows.div_ceil(blocks);
-        std::thread::scope(|s| {
-            let body = &body;
-            let mut rest_out = out;
-            let mut rest_aux = aux;
-            let mut row0 = 0;
-            while row0 < rows {
-                let take = rows_per.min(rows - row0);
-                let tail = std::mem::take(&mut rest_out);
-                let (block_out, tail) = tail.split_at_mut(take * cols_out);
-                rest_out = tail;
-                let tail = std::mem::take(&mut rest_aux);
-                let (block_aux, tail) = tail.split_at_mut(take * cols_aux);
-                rest_aux = tail;
-                let first = row0;
-                s.spawn(move || body(first, take, block_out, block_aux));
-                row0 += take;
-            }
+        // disjoint row ranges per block index: workers rebuild their
+        // non-overlapping sub-slices from the shared base pointers
+        let out_base = SendPtr(out.as_mut_ptr());
+        let aux_base = SendPtr(aux.as_mut_ptr());
+        let body = &body;
+        self.pool.run(n_blocks, &move |i| {
+            let row0 = i * rows_per;
+            let take = rows_per.min(rows - row0);
+            // SAFETY: `[row0, row0+take)` ranges are pairwise disjoint
+            // across block indices and in-bounds (asserted above); the
+            // buffers outlive the job because `pool.run` completes before
+            // this frame returns.
+            let oblk = unsafe { std::slice::from_raw_parts_mut(out_base.0.add(row0 * cols_out), take * cols_out) };
+            let ablk = unsafe { std::slice::from_raw_parts_mut(aux_base.0.add(row0 * cols_aux), take * cols_aux) };
+            body(row0, take, oblk, ablk);
         });
     }
 }
@@ -185,5 +218,17 @@ mod tests {
             calls.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(calls.load(Ordering::SeqCst), 1); // 8 rows / min 8 => one block
+    }
+
+    #[test]
+    fn test_clones_share_one_worker_pool() {
+        let a = ThreadPool::new(4);
+        let b = a.clone();
+        assert!(Arc::ptr_eq(a.worker_pool(), b.worker_pool()));
+        let c = ThreadPool::shared(Arc::clone(a.worker_pool()));
+        assert!(Arc::ptr_eq(a.worker_pool(), c.worker_pool()));
+        // distinct constructions do not share
+        let d = ThreadPool::new(4);
+        assert!(!Arc::ptr_eq(a.worker_pool(), d.worker_pool()));
     }
 }

@@ -16,9 +16,12 @@
 //! lowering the layer DAG ([`crate::graph`]) and interval-coloring every
 //! activation lifetime into one arena (see the [`plan`] module and
 //! DESIGN.md §graph/§forward-plan) — pointwise (1×1/s1/p0) convs skip
-//! im2col entirely, and the steady state performs zero heap allocations
-//! per request. Unplannable layer tables fail at load with a typed
-//! [`GraphError`] naming the offending layer.
+//! im2col entirely, a batch of B images runs each conv as one GEMM over
+//! B·H·W rows (bit-identical to B single-image forwards, see
+//! `rust/tests/batch_equivalence.rs`), and the steady state performs zero
+//! heap allocations per request at any registry thread count. Unplannable
+//! layer tables fail at load with a typed [`GraphError`] naming the
+//! offending layer.
 //!
 //! The original f32 epilogue survives as [`forward_quant_ref`] — the
 //! op-for-op mirror of `python/compile/model.py::forward_quant(engine="sim")`
@@ -804,11 +807,16 @@ pub fn forward_quant_with(
 /// After the first call has sized the workspace for a batch shape, repeat
 /// calls with the same (or smaller) batch perform **zero heap allocations**
 /// when the model carries its load-built caches ([`EpilogueCache`] +
-/// [`ForwardPlan`]) and the registry is single-threaded (asserted by
-/// `rust/tests/alloc_steady_state.rs`; multi-threaded registries reuse the
-/// same arenas — only the scoped thread spawns allocate). Logits are
-/// bit-identical to [`forward_quant_with`] for every registry
-/// configuration and workspace history.
+/// [`ForwardPlan`]) — at any registry thread count, since threaded GEMMs
+/// dispatch onto the persistent [`crate::kernels::WorkerPool`] instead of
+/// spawning scoped threads (asserted for single-threaded, threaded, and
+/// threaded-batched registries by `rust/tests/alloc_steady_state.rs`).
+/// A batch of `n` images runs each conv as **one GEMM over `n·H·W` rows**,
+/// amortizing the packed-weight decode across the batch; batched logits
+/// are bit-identical to `n` independent single-image forwards
+/// (property-tested in `rust/tests/batch_equivalence.rs`) and to
+/// [`forward_quant_with`] for every registry configuration and workspace
+/// history.
 pub fn forward_quant_into(
     params: &QModelParams,
     net: &Network,

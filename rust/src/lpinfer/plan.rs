@@ -22,13 +22,15 @@
 //!
 //! A [`ForwardWorkspace`] allocates those buffers once and
 //! [`super::forward_quant_into`] interprets the step list through them. In
-//! steady state (same batch size, model with load-built caches, a
-//! single-threaded registry) a forward pass through a reused workspace
-//! performs **zero heap allocations** — asserted by
-//! `rust/tests/alloc_steady_state.rs`. Multi-threaded registries reuse the
-//! same arenas for all tensor data; only the scoped thread spawns
-//! themselves allocate. Buffers grow monotonically: a larger batch resizes
-//! them once and later batches reuse the high-water mark.
+//! steady state (same batch size, model with load-built caches) a forward
+//! pass through a reused workspace performs **zero heap allocations** at
+//! any registry thread count — multi-threaded GEMMs dispatch row blocks
+//! onto the persistent [`crate::kernels::WorkerPool`] from a
+//! stack-resident job record, so there is no per-call spawn left to
+//! allocate. Asserted for both a single-threaded and a threaded registry
+//! (batched, B=4) by `rust/tests/alloc_steady_state.rs`. Buffers grow
+//! monotonically: a larger batch resizes them once and later batches
+//! reuse the high-water mark.
 //!
 //! Unplannable layer tables (dangling tails, shape breaks, misplaced
 //! projections) are **typed errors** ([`GraphError`]) naming the offending

@@ -159,6 +159,7 @@ pub enum EpilogueBlock {
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
     forwards: AtomicU64,
+    images: AtomicU64,
     forward_ns: AtomicU64,
     quantize_ns: AtomicU64,
     im2col_ns: AtomicU64,
@@ -184,6 +185,7 @@ impl EngineMetrics {
     pub const fn new() -> Self {
         Self {
             forwards: AtomicU64::new(0),
+            images: AtomicU64::new(0),
             forward_ns: AtomicU64::new(0),
             quantize_ns: AtomicU64::new(0),
             im2col_ns: AtomicU64::new(0),
@@ -242,6 +244,7 @@ impl EngineMetrics {
     /// drain: a fixed number of relaxed adds, no allocation).
     pub fn drain(&self, p: &ForwardProfile) {
         self.forwards.fetch_add(1, Ordering::Relaxed);
+        self.images.fetch_add(p.batch as u64, Ordering::Relaxed);
         self.forward_ns.fetch_add(p.total_ns, Ordering::Relaxed);
         self.quantize_ns.fetch_add(p.quantize_ns, Ordering::Relaxed);
         self.skip_ns.fetch_add(p.skip_ns, Ordering::Relaxed);
@@ -256,6 +259,7 @@ impl EngineMetrics {
     pub fn snapshot(&self) -> EngineSnapshot {
         EngineSnapshot {
             forwards: self.forwards.load(Ordering::Relaxed),
+            images: self.images.load(Ordering::Relaxed),
             forward_ns: self.forward_ns.load(Ordering::Relaxed),
             quantize_ns: self.quantize_ns.load(Ordering::Relaxed),
             im2col_ns: self.im2col_ns.load(Ordering::Relaxed),
@@ -282,6 +286,7 @@ impl EngineMetrics {
     pub fn reset(&self) {
         for c in [
             &self.forwards,
+            &self.images,
             &self.forward_ns,
             &self.quantize_ns,
             &self.im2col_ns,
@@ -311,6 +316,9 @@ impl EngineMetrics {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineSnapshot {
     pub forwards: u64,
+    /// images summed across drained forwards (batch sizes accumulate,
+    /// so throughput is measured per image, not per batch call)
+    pub images: u64,
     pub forward_ns: u64,
     pub quantize_ns: u64,
     pub im2col_ns: u64,
@@ -338,6 +346,7 @@ impl EngineSnapshot {
     pub fn since(&self, earlier: &EngineSnapshot) -> EngineSnapshot {
         EngineSnapshot {
             forwards: self.forwards.saturating_sub(earlier.forwards),
+            images: self.images.saturating_sub(earlier.images),
             forward_ns: self.forward_ns.saturating_sub(earlier.forward_ns),
             quantize_ns: self.quantize_ns.saturating_sub(earlier.quantize_ns),
             im2col_ns: self.im2col_ns.saturating_sub(earlier.im2col_ns),
@@ -399,12 +408,21 @@ impl EngineSnapshot {
         self.forward_ns as f64 / self.forwards as f64 / 1e6
     }
 
+    /// Mean images per drained forward (the served batch size).
+    pub fn mean_batch(&self) -> f64 {
+        if self.forwards == 0 {
+            return 0.0;
+        }
+        self.images as f64 / self.forwards as f64
+    }
+
     /// Two-line human report (appended to the serving metrics report).
     pub fn report(&self) -> String {
         format!(
-            "engine forwards={} mean={:.2}ms gemm={}t/{}i4/{}i8s/{}i8d \
+            "engine forwards={} images={} mean={:.2}ms gemm={}t/{}i4/{}i8s/{}i8d \
              rows_skip={:.1}% epi_simd={:.1}% pool_blocks={}",
             self.forwards,
+            self.images,
             self.mean_forward_ms(),
             self.gemm_ternary,
             self.gemm_i4,
@@ -419,6 +437,7 @@ impl EngineSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("forwards", Json::num(self.forwards as f64)),
+            ("images", Json::num(self.images as f64)),
             ("forward_ns", Json::num(self.forward_ns as f64)),
             ("quantize_ns", Json::num(self.quantize_ns as f64)),
             ("im2col_ns", Json::num(self.im2col_ns as f64)),

@@ -8,10 +8,14 @@
 //! the logits write all run inside the arena.
 //!
 //! Measured with a counting global allocator wrapping the system one. The
-//! guarantee holds for a single-threaded registry (multi-threaded runs
-//! reuse the same arenas for all tensor data, but `std::thread::scope`
-//! spawns allocate stacks); the model must carry its load-built caches
-//! (epilogue cache + forward plan), which every loader provides.
+//! guarantee holds at **any registry thread count**: multi-threaded GEMMs
+//! dispatch row blocks onto the persistent `WorkerPool` from a
+//! stack-resident job record (workers are spawned once, at registry
+//! construction), so no spawn, channel send or box touches the heap on the
+//! request path. Both a single-threaded and a threaded registry — the
+//! latter with a B=4 batched forward — are asserted below. The model must
+//! carry its load-built caches (epilogue cache + forward plan), which
+//! every loader provides.
 //!
 //! This file deliberately contains a single #[test]: the counter is global,
 //! and a concurrently running sibling test would pollute the measurement.
@@ -68,7 +72,7 @@ fn steady_state_forward_makes_zero_heap_allocations() {
     let params = QModelParams::synthetic(&net, 90, &scheme);
     assert!(!params.epilogues().is_empty(), "zero-alloc steady state needs the load-built caches");
     assert!(!params.forward_plan().is_empty());
-    let reg = KernelRegistry::new(None, 1); // single-threaded: no spawns
+    let reg = KernelRegistry::new(None, 1); // single-threaded baseline; threaded window below
     let mut rng = SplitMix64::new(91);
     let n = 2usize;
     let x = Tensor::new(&[n, 8, 8, 3], rng.normal(n * 8 * 8 * 3)).unwrap();
@@ -145,4 +149,31 @@ fn steady_state_forward_makes_zero_heap_allocations() {
         after - before
     );
     assert_eq!(&logitsb[..], wantb.data(), "bottleneck steady-state logits must stay bit-exact");
+
+    // the threaded path: GEMM row blocks now dispatch onto the persistent
+    // WorkerPool from a stack-resident job record, and the latch/queue are
+    // futex-backed — nothing on the request path touches the heap, so the
+    // zero bar holds at threads > 1 exactly as it does single-threaded.
+    // B=4 makes every stride-1 conv wide enough (4·8·8 = 256 rows) that
+    // the splitter genuinely fans out instead of collapsing to one block.
+    let reg2 = KernelRegistry::new(None, 2); // workers spawn here, before the window
+    let b = 4usize;
+    let x4 = Tensor::new(&[b, 8, 8, 3], rng.normal(b * 8 * 8 * 3)).unwrap();
+    let want4 = forward_quant_with(&params, &net, &x4, &reg2);
+    let mut ws4 = ForwardWorkspace::new();
+    let mut logits4 = vec![0f32; b * net.fc_out];
+    forward_quant_into(&params, &net, &x4, &reg2, &mut ws4, &mut logits4);
+    assert_eq!(&logits4[..], want4.data(), "threaded batched workspace path must match");
+    let before = allocs();
+    for _ in 0..3 {
+        forward_quant_into(&params, &net, &x4, &reg2, &mut ws4, &mut logits4);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "threaded B=4 steady-state forward allocated {} time(s) over 3 requests",
+        after - before
+    );
+    assert_eq!(&logits4[..], want4.data(), "threaded batched logits must stay bit-exact");
 }

@@ -1,0 +1,146 @@
+//! Batch-equivalence property suite: a batched forward over B images must
+//! produce logits bit-identical to B independent single-image forwards,
+//! across every kernel encoding, SIMD tier, thread count and clustering
+//! scheme — and the persistent worker pool must stay correct when two
+//! registries share it under concurrent GEMM traffic.
+//!
+//! This is the lockdown for the batched `ForwardPlan` path: a batch of B
+//! images runs each convolution as ONE im2col GEMM over B·H·W rows, so any
+//! cross-image leakage (wrong row offsets, shared-scratch clobbering, a
+//! pool block straddling an image boundary incorrectly) shows up as a
+//! bitwise logits mismatch here.
+
+use std::sync::Arc;
+
+use dfp_infer::kernels::{KernelRegistry, SimdTier, TierChoice, WorkerPool, ALL_KERNELS};
+use dfp_infer::lpinfer::{forward_quant_with, QModelParams};
+use dfp_infer::model::{bottleneck_mini, resnet_mini, Network};
+use dfp_infer::scheme::Scheme;
+use dfp_infer::tensor::Tensor;
+use dfp_infer::util::SplitMix64;
+
+/// Tier settings every test machine can exercise: forced scalar plus the
+/// best detected tier (which is also scalar on machines without SIMD).
+fn test_tiers() -> [TierChoice; 2] {
+    [TierChoice::Forced(SimdTier::Scalar), TierChoice::Auto]
+}
+
+/// Deterministic batch of `b` images for `net`, plus the same images as
+/// `b` standalone single-image tensors (bit-identical pixel data).
+fn batch_and_singles(net: &Network, b: usize, seed: u64) -> (Tensor<f32>, Vec<Tensor<f32>>) {
+    let img = net.input_hw;
+    let per = img * img * 3;
+    let mut rng = SplitMix64::new(seed);
+    let pixels = rng.normal(b * per);
+    let batch = Tensor::new(&[b, img, img, 3], pixels.clone()).unwrap();
+    let singles = (0..b)
+        .map(|i| Tensor::new(&[1, img, img, 3], pixels[i * per..(i + 1) * per].to_vec()).unwrap())
+        .collect();
+    (batch, singles)
+}
+
+/// Reference logits: `b` independent single-image forwards, concatenated
+/// in batch order. Computed with a forced-scalar single-threaded registry
+/// so the oracle itself has no batching, no SIMD and no pool involvement.
+fn singles_oracle(params: &QModelParams, net: &Network, singles: &[Tensor<f32>], classes: usize) -> Vec<f32> {
+    let reg = KernelRegistry::with_tier(None, TierChoice::Forced(SimdTier::Scalar), 1);
+    let mut out = Vec::with_capacity(singles.len() * classes);
+    for x in singles {
+        let logits = forward_quant_with(params, net, x, &reg);
+        assert_eq!(logits.shape(), &[1, classes]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+        out.extend_from_slice(logits.data());
+    }
+    out
+}
+
+#[test]
+fn batched_forward_bit_identical_to_singles_across_registry_configs() {
+    // resnet-mini over every clustering width the paper sweeps (N in
+    // {4,16,64}) plus the 4-bit encoding, with a mixed i8 stem so the
+    // dense, ternary-packed and i4-packed GEMM paths all carry the batch
+    let net = resnet_mini(8, &[4, 4, 4], 1, 3);
+    let classes = 3;
+    for (i, variant) in ["8a2w_n4@stem=i8", "8a2w_n16", "8a2w_n64", "8a4w_n4"].iter().enumerate() {
+        let scheme = Scheme::parse(variant).unwrap();
+        let params = QModelParams::synthetic(&net, 2000 + i as u64, &scheme);
+        params.validate(&net).unwrap();
+        for b in [1usize, 2, 4, 8] {
+            let (batch, singles) = batch_and_singles(&net, b, 0x5EED ^ ((b as u64) << 8) ^ i as u64);
+            let want = singles_oracle(&params, &net, &singles, classes);
+            for kind in ALL_KERNELS {
+                for tier in test_tiers() {
+                    for threads in [1usize, 2, 4] {
+                        let reg = KernelRegistry::with_tier(Some(kind), tier, threads);
+                        let got = forward_quant_with(&params, &net, &batch, &reg);
+                        assert_eq!(got.shape(), &[b, classes]);
+                        assert_eq!(
+                            got.data(),
+                            &want[..],
+                            "scheme={variant} B={b} kernel={kind} tier={tier} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_forward_bit_identical_on_bottleneck_stem_pool_family() {
+    // the ResNet-50-style family from the graph planner: 1x1-3x3-1x1
+    // bottlenecks behind a 3x3/s2 stem max pool — the pool window indexing
+    // must shift per image exactly like the im2col row offsets do
+    let net = bottleneck_mini(16, &[4, 8], 3);
+    let classes = 3;
+    let scheme = Scheme::parse("8a2w_n4@stem=i8").unwrap();
+    let params = QModelParams::synthetic(&net, 95, &scheme);
+    params.validate(&net).unwrap();
+    for b in [1usize, 2, 4, 8] {
+        let (batch, singles) = batch_and_singles(&net, b, 0xB077 + b as u64);
+        let want = singles_oracle(&params, &net, &singles, classes);
+        for kind in ALL_KERNELS {
+            for threads in [1usize, 2, 4] {
+                let reg = KernelRegistry::with_tier(Some(kind), TierChoice::Auto, threads);
+                let got = forward_quant_with(&params, &net, &batch, &reg);
+                assert_eq!(got.shape(), &[b, classes]);
+                assert_eq!(got.data(), &want[..], "bottleneck B={b} kernel={kind} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn two_registries_sharing_one_pool_interleave_safely() {
+    // Pool-robustness satellite: two kernel registries built over ONE
+    // persistent WorkerPool, driven from two OS threads that fire batched
+    // forwards concurrently. Every forward must stay bit-identical to its
+    // single-owner baseline — no cross-registry block mixup, no deadlock.
+    let net = resnet_mini(8, &[4, 4, 4], 1, 3);
+    let scheme = Scheme::parse("8a2w_n4").unwrap();
+    let params = QModelParams::synthetic(&net, 7, &scheme);
+    let (batch, singles) = batch_and_singles(&net, 4, 0xC0FFEE);
+    let want = singles_oracle(&params, &net, &singles, 3);
+
+    let pool = Arc::new(WorkerPool::new(4));
+    let reg_a = KernelRegistry::with_pool(None, TierChoice::Auto, Arc::clone(&pool));
+    let reg_b = KernelRegistry::with_pool(None, TierChoice::Forced(SimdTier::Scalar), Arc::clone(&pool));
+
+    std::thread::scope(|s| {
+        for (name, reg) in [("auto", &reg_a), ("scalar", &reg_b)] {
+            let (params, net, batch, want) = (&params, &net, &batch, &want);
+            s.spawn(move || {
+                for round in 0..8 {
+                    let got = forward_quant_with(params, net, batch, reg);
+                    assert_eq!(got.data(), &want[..], "registry={name} round={round}");
+                }
+            });
+        }
+    });
+    drop(reg_a);
+    drop(reg_b);
+    // the shared pool must still be serviceable and shut down cleanly
+    let reg = KernelRegistry::with_pool(None, TierChoice::Auto, pool);
+    let got = forward_quant_with(&params, &net, &batch, &reg);
+    assert_eq!(got.data(), &want[..]);
+}

@@ -1,0 +1,108 @@
+//! Steady-state allocation accounting for the serving executor.
+//!
+//! [`LpExecutor`] owns one `ForwardWorkspace` arena per worker, and the
+//! coordinator hands `Executor::run_batch_into` a reusable per-worker
+//! logits buffer — so after one warm-up batch, a steady-state request must
+//! perform **zero heap allocations** end to end, at B > 1 and with a
+//! multi-threaded kernel registry (the GEMMs dispatch row blocks onto the
+//! persistent `WorkerPool` from a stack-resident job record).
+//!
+//! This file deliberately contains a single #[test]: the counter is global,
+//! and a concurrently running sibling test would pollute the measurement.
+//! (`alloc_steady_state.rs` covers the raw `forward_quant_into` path; this
+//! one covers the executor/coordinator serving path on top of it.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dfp_infer::coordinator::{Executor, LpExecutor};
+use dfp_infer::kernels::KernelRegistry;
+use dfp_infer::lpinfer::QModelParams;
+use dfp_infer::model::resnet_mini;
+use dfp_infer::scheme::Scheme;
+use dfp_infer::tensor::Tensor;
+use dfp_infer::util::SplitMix64;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System` unchanged; the counter is a
+// relaxed atomic increment with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn executor_steady_state_batches_make_zero_heap_allocations() {
+    let net = resnet_mini(8, &[4, 8, 8], 1, 3);
+    let scheme = Scheme::parse("8a2w_n4@stem=i8").unwrap();
+    let params = QModelParams::synthetic(&net, 90, &scheme);
+    let variants: BTreeMap<String, QModelParams> = [("8a2w_n4".to_string(), params)].into_iter().collect();
+    // threaded registry: the steady-state bar must hold across the pool
+    let mut exec = LpExecutor::new(net.clone(), variants, KernelRegistry::new(None, 2), vec![1, 4]).unwrap();
+
+    let b = 4usize;
+    let mut rng = SplitMix64::new(91);
+    let x = Tensor::new(&[b, 8, 8, 3], rng.normal(b * 8 * 8 * 3)).unwrap();
+
+    // the allocating wrapper is the oracle (and also warms nothing: it
+    // builds a fresh logits tensor per call, exactly what serving avoids)
+    let want = exec.run_batch("8a2w_n4", b, &x).unwrap();
+    assert_eq!(want.shape(), &[b, 3]);
+    assert!(want.data().iter().all(|v| v.is_finite()));
+
+    // per-worker logits arena, as coordinator::worker_loop keeps it
+    let mut logits = vec![0f32; b * net.fc_out];
+    // warm-up: sizes the executor's workspace arena for this batch shape
+    exec.run_batch_into("8a2w_n4", b, &x, &mut logits).unwrap();
+    assert_eq!(&logits[..], want.data(), "borrowed-output path must match the allocating wrapper");
+
+    logits.fill(0.0);
+    let before = allocs();
+    for _ in 0..3 {
+        exec.run_batch_into("8a2w_n4", b, &x, &mut logits).unwrap();
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state executor batch (B={b}, 2 threads) allocated {} time(s) over 3 requests",
+        after - before
+    );
+    assert_eq!(&logits[..], want.data(), "steady-state logits must stay bit-exact");
+
+    // a smaller batch through the same arena also stays allocation-free
+    let x1 = Tensor::new(&[1, 8, 8, 3], rng.normal(8 * 8 * 3)).unwrap();
+    let want1 = exec.run_batch("8a2w_n4", 1, &x1).unwrap();
+    let before = allocs();
+    exec.run_batch_into("8a2w_n4", 1, &x1, &mut logits[..net.fc_out]).unwrap();
+    let after = allocs();
+    assert_eq!(after - before, 0, "smaller batch must reuse the executor's high-water arena");
+    assert_eq!(&logits[..net.fc_out], want1.data());
+}
