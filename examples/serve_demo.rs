@@ -52,7 +52,7 @@ fn main() -> Result<()> {
     for i in 0..n {
         let (img, label) = data::sample(&protos, 7, i as u64, 1.0);
         let rx = loop {
-            match coord.submit(Request { image: img.clone(), class: classes[i % 3] }) {
+            match coord.submit(Request::new(img.clone(), classes[i % 3])) {
                 Ok(rx) => break rx,
                 Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
             }
@@ -62,7 +62,7 @@ fn main() -> Result<()> {
     let mut correct = [0usize; 3];
     let mut count = [0usize; 3];
     for (rx, label, cls) in rxs {
-        let r = rx.recv()?;
+        let r = rx.recv()??;
         per_class[cls].add(r.e2e_us);
         correct[cls] += usize::from(r.predicted == label);
         count[cls] += 1;

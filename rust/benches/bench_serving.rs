@@ -14,47 +14,25 @@ use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
 
 use dfp_infer::coordinator::{
-    Coordinator, CoordinatorConfig, Executor, ExecutorFactory, LpExecutor, PrecisionClass, Request,
-    Router,
+    Coordinator, CoordinatorConfig, ExecutorFactory, LpExecutor, PrecisionClass, Request, Router,
 };
 use dfp_infer::data;
 use dfp_infer::json::Json;
 use dfp_infer::kernels::KernelRegistry;
 use dfp_infer::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
-use dfp_infer::model::{resnet_mini, resnet_mini_default};
-use dfp_infer::runtime::Manifest;
+use dfp_infer::model::resnet_mini;
 use dfp_infer::scheme::Scheme;
 use dfp_infer::telemetry;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::util::{SplitMix64, Summary, Timer};
 
-/// The served variant ladder: scheme name + the (w_bits, cluster) the
-/// manifest advertises for routing. Fast routes to the ternary N=64 model,
-/// Balanced to 4-bit, Accurate to full i8.
-const VARIANTS: [(&str, u32, usize); 3] =
-    [("8a2w_n64@stem=i8", 2, 64), ("8a4w_n4@stem=i8", 4, 4), ("8a8w_n4", 8, 4)];
-
-const BATCH_SIZES: [usize; 2] = [1, 8];
-
-fn manifest_json() -> String {
-    let vs: Vec<String> = VARIANTS
-        .iter()
-        .map(|(name, bits, cluster)| {
-            format!(
-                r#""{name}": {{"files": {{"1": "-", "8": "-"}}, "eval_acc": 0.0, "w_bits": {bits}, "cluster": {cluster}}}"#
-            )
-        })
-        .collect();
-    format!(
-        r#"{{"img": 24, "classes": 10, "batch_sizes": [1, 8], "variants": {{{}}}}}"#,
-        vs.join(", ")
-    )
-}
-
 /// Closed-loop saturation sweep on the Fast class: hold `level` requests in
 /// flight, measure throughput and p50/p99 at each level, and report the
 /// knee — the smallest concurrency that already reaches ≥95% of the best
 /// observed throughput (beyond it, added offered load only buys latency).
+/// Each level's row also carries the resilience-counter deltas (shed /
+/// deadline-missed / degraded / worker-panic) so overload behavior is
+/// visible per load level, not just in aggregate.
 fn saturation_sweep(coord: &Coordinator, protos: &[Vec<f32>], quick: bool) -> Json {
     let levels: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
     let per_level = if quick { 16 } else { 64 };
@@ -64,30 +42,32 @@ fn saturation_sweep(coord: &Coordinator, protos: &[Vec<f32>], quick: bool) -> Js
     for &level in levels {
         let mut lat = Summary::new();
         let mut inflight: VecDeque<_> = VecDeque::with_capacity(level);
+        let m0 = coord.metrics();
         let t = Timer::new();
         for i in 0..per_level {
             let (img, _) = data::sample(protos, 5, (level * 10_000 + i) as u64, 1.0);
             loop {
-                match coord.submit(Request { image: img.clone(), class: PrecisionClass::Fast }) {
+                match coord.submit(Request::new(img.clone(), PrecisionClass::Fast)) {
                     Ok(rx) => {
                         inflight.push_back(rx);
                         break;
                     }
                     // queue full: drain a completion, then retry the submit
                     Err(_) => match inflight.pop_front() {
-                        Some(rx) => lat.add(rx.recv().unwrap().e2e_us / 1e3),
+                        Some(rx) => lat.add(rx.recv().unwrap().unwrap().e2e_us / 1e3),
                         None => std::thread::sleep(std::time::Duration::from_micros(100)),
                     },
                 }
             }
             while inflight.len() >= level {
-                lat.add(inflight.pop_front().unwrap().recv().unwrap().e2e_us / 1e3);
+                lat.add(inflight.pop_front().unwrap().recv().unwrap().unwrap().e2e_us / 1e3);
             }
         }
         for rx in inflight {
-            lat.add(rx.recv().unwrap().e2e_us / 1e3);
+            lat.add(rx.recv().unwrap().unwrap().e2e_us / 1e3);
         }
         let rps = per_level as f64 / t.elapsed_s();
+        let m1 = coord.metrics();
         let (p50, p99) = (lat.percentile(50.0), lat.percentile(99.0));
         println!("  c={level:<3} {rps:>7.1} req/s   p50 {p50:>7.2} ms   p99 {p99:>7.2} ms");
         stats.push((level, rps));
@@ -96,6 +76,10 @@ fn saturation_sweep(coord: &Coordinator, protos: &[Vec<f32>], quick: bool) -> Js
             ("throughput_rps", Json::num(rps)),
             ("p50_ms", Json::num(p50)),
             ("p99_ms", Json::num(p99)),
+            ("shed", Json::num((m1.shed - m0.shed) as f64)),
+            ("deadline_missed", Json::num((m1.deadline_missed - m0.deadline_missed) as f64)),
+            ("degraded", Json::num((m1.degraded - m0.degraded) as f64)),
+            ("worker_panics", Json::num((m1.worker_panics - m0.worker_panics) as f64)),
         ]));
     }
     let best = stats.iter().fold(0f64, |b, &(_, rps)| b.max(rps));
@@ -166,23 +150,14 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(if quick { 24 } else { 96 });
 
-    let manifest = Manifest::from_json_text(&manifest_json()).unwrap();
+    let manifest = LpExecutor::synthetic_manifest();
     let router = Router::from_manifest(&manifest).unwrap();
-    let sizes: BTreeMap<String, Vec<usize>> = VARIANTS
+    let sizes: BTreeMap<String, Vec<usize>> = LpExecutor::SYNTHETIC_LADDER
         .iter()
-        .map(|(v, _, _)| (v.to_string(), BATCH_SIZES.to_vec()))
+        .map(|(v, _, _)| (v.to_string(), LpExecutor::SYNTHETIC_BATCH_SIZES.to_vec()))
         .collect();
 
-    let factory: ExecutorFactory = Box::new(|| {
-        let net = resnet_mini_default();
-        let mut variants = BTreeMap::new();
-        for (name, _, _) in VARIANTS {
-            let scheme = Scheme::parse(name)?;
-            variants.insert(name.to_string(), QModelParams::synthetic(&net, 7, &scheme));
-        }
-        let exec = LpExecutor::new(net, variants, KernelRegistry::new(None, 1), BATCH_SIZES.to_vec())?;
-        Ok(Box::new(exec) as Box<dyn Executor>)
-    });
+    let factory: ExecutorFactory = LpExecutor::synthetic_factory(7, KernelRegistry::new(None, 1));
     let coord = Coordinator::start(
         vec![factory],
         router,
@@ -213,7 +188,7 @@ fn main() {
         for i in 0..n {
             let (img, _) = data::sample(&protos, 5, i as u64, 1.0);
             loop {
-                match coord.submit(Request { image: img.clone(), class }) {
+                match coord.submit(Request::new(img.clone(), class)) {
                     Ok(rx) => {
                         rxs.push(rx);
                         break;
@@ -224,7 +199,7 @@ fn main() {
         }
         let mut variant = String::new();
         for rx in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().unwrap();
             variant = r.variant;
             lat.add(r.e2e_us / 1e3);
         }
@@ -260,6 +235,11 @@ fn main() {
         ("network", Json::str("resnet-mini")),
         ("requests_per_class", Json::num(n as f64)),
         ("occupancy", Json::num(m.occupancy())),
+        ("shed", Json::num(m.shed as f64)),
+        ("deadline_missed", Json::num(m.deadline_missed as f64)),
+        ("degraded", Json::num(m.degraded as f64)),
+        ("worker_panics", Json::num(m.worker_panics as f64)),
+        ("quarantined", Json::num(m.quarantined as f64)),
         ("cases", Json::arr(cases)),
         ("saturation", saturation),
         ("batch_ladder", ladder),

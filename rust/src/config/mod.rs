@@ -39,6 +39,15 @@ pub struct Config {
     /// precision scheme to serve/eval/quantize (`--scheme 8a2w_n4@stem=i8`);
     /// `None` means "all exported variants"
     pub scheme: Option<Scheme>,
+    /// queued requests at which admissions degrade to the next-cheaper
+    /// precision class (0 = disabled)
+    pub degrade_watermark: usize,
+    /// queued requests at which admissions are shed with a typed
+    /// `Overloaded` error (0 = disabled)
+    pub shed_watermark: usize,
+    /// per-request completion deadline the load generator attaches
+    /// (`--deadline-ms`, 0 = none)
+    pub deadline_ms: u64,
 }
 
 impl Default for Config {
@@ -54,6 +63,9 @@ impl Default for Config {
             threads: 1,
             kernel: KernelChoice::auto(),
             scheme: None,
+            degrade_watermark: 0,
+            shed_watermark: 0,
+            deadline_ms: 0,
         }
     }
 }
@@ -104,6 +116,15 @@ impl Config {
                 None => Scheme::from_json(v).context("config: scheme")?,
             });
         }
+        if let Some(v) = j.get("degrade_watermark").and_then(Json::as_i64) {
+            self.degrade_watermark = v as usize;
+        }
+        if let Some(v) = j.get("shed_watermark").and_then(Json::as_i64) {
+            self.shed_watermark = v as usize;
+        }
+        if let Some(v) = j.get("deadline_ms").and_then(Json::as_i64) {
+            self.deadline_ms = v as u64;
+        }
         Ok(())
     }
 
@@ -125,6 +146,9 @@ impl Config {
         if let Some(v) = a.get_str("scheme") {
             self.scheme = Some(Scheme::parse(v)?);
         }
+        self.degrade_watermark = a.get_or("degrade-watermark", self.degrade_watermark)?;
+        self.shed_watermark = a.get_or("shed-watermark", self.shed_watermark)?;
+        self.deadline_ms = a.get_or("deadline-ms", self.deadline_ms)?;
         Ok(())
     }
 
@@ -146,10 +170,19 @@ impl Config {
     }
 
     pub fn to_coordinator(&self) -> crate::coordinator::CoordinatorConfig {
+        use crate::coordinator::{DegradeConfig, WATERMARK_DISABLED};
+        // CLI convention: watermark 0 means "off"
+        let mark = |v: usize| if v == 0 { WATERMARK_DISABLED } else { v };
         crate::coordinator::CoordinatorConfig {
             max_queue: self.max_queue,
             max_wait_us: self.max_wait_us,
             tick_us: 200,
+            degrade: DegradeConfig {
+                degrade_watermark: mark(self.degrade_watermark),
+                shed_watermark: mark(self.shed_watermark),
+                p99_target_us: 0.0,
+            },
+            ..Default::default()
         }
     }
 }
@@ -189,6 +222,41 @@ mod tests {
         let c = Config::resolve(&a).unwrap();
         assert_eq!(c.workers, 2);
         assert_eq!(c.max_wait_us, 99);
+    }
+
+    #[test]
+    fn test_resilience_knobs_resolve_and_map_to_watermarks() {
+        use crate::coordinator::WATERMARK_DISABLED;
+        // defaults: everything off
+        let d = Config::default();
+        assert_eq!(d.degrade_watermark, 0);
+        assert_eq!(d.shed_watermark, 0);
+        assert_eq!(d.deadline_ms, 0);
+        let cc = d.to_coordinator();
+        assert_eq!(cc.degrade.degrade_watermark, WATERMARK_DISABLED);
+        assert_eq!(cc.degrade.shed_watermark, WATERMARK_DISABLED);
+
+        // CLI flags flow through to the coordinator config
+        let a = Args::parse_from(
+            ["--degrade-watermark", "8", "--shed-watermark", "32", "--deadline-ms", "50"]
+                .iter()
+                .map(|s| s.to_string()),
+            false,
+        )
+        .unwrap();
+        let c = Config::resolve(&a).unwrap();
+        assert_eq!(c.deadline_ms, 50);
+        let cc = c.to_coordinator();
+        assert_eq!(cc.degrade.degrade_watermark, 8);
+        assert_eq!(cc.degrade.shed_watermark, 32);
+
+        // JSON file form
+        let p = std::env::temp_dir().join(format!("dfp_cfg_res_{}.json", std::process::id()));
+        std::fs::write(&p, r#"{"degrade_watermark": 4, "shed_watermark": 9, "deadline_ms": 7}"#)
+            .unwrap();
+        let f = Config::from_file(&p).unwrap();
+        assert_eq!((f.degrade_watermark, f.shed_watermark, f.deadline_ms), (4, 9, 7));
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -3,37 +3,86 @@
 //! The serving artifacts are compiled at fixed batch sizes (1/8/32 by
 //! default); the batcher decides *when* to flush a variant's pending queue
 //! and *which* artifact batch to run: flush when the queue can fill the
-//! largest artifact, or when the oldest request has waited `max_wait_us`
-//! (deadline-bounded batching, the vLLM-style latency/throughput knob).
+//! largest artifact, when the oldest request has waited `max_wait_us`
+//! (deadline-bounded batching, the vLLM-style latency/throughput knob), or
+//! when the tightest per-request deadline in the queue can no longer
+//! absorb another full batching wait.
+//!
+//! Construction is fallible with a typed [`PolicyError`] — bad config must
+//! surface as an error to the caller, never abort the serving process.
+
+/// Typed configuration errors for [`BatchPolicy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyError {
+    /// the artifact batch-size list was empty
+    EmptySizes,
+    /// a batch size of zero was supplied
+    ZeroBatchSize,
+}
+
+impl std::fmt::Display for PolicyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PolicyError::EmptySizes => write!(f, "batch policy needs at least one batch size"),
+            PolicyError::ZeroBatchSize => write!(f, "batch sizes must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for PolicyError {}
 
 /// Batching policy configuration.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
-    /// available artifact batch sizes, ascending (e.g. [1, 8, 32])
-    pub sizes: Vec<usize>,
+    /// available artifact batch sizes, ascending (e.g. [1, 8, 32]);
+    /// validated non-empty and nonzero at construction
+    sizes: Vec<usize>,
     /// flush deadline for the oldest queued request
     pub max_wait_us: u64,
 }
 
 impl BatchPolicy {
-    pub fn new(mut sizes: Vec<usize>, max_wait_us: u64) -> Self {
+    /// Build a policy over the available artifact batch sizes. Returns a
+    /// typed [`PolicyError`] on an empty or zero-containing size list
+    /// instead of panicking — the coordinator surfaces it at startup.
+    pub fn new(mut sizes: Vec<usize>, max_wait_us: u64) -> Result<Self, PolicyError> {
         sizes.sort_unstable();
         sizes.dedup();
-        assert!(!sizes.is_empty(), "need at least one batch size");
-        Self { sizes, max_wait_us }
+        if sizes.is_empty() {
+            return Err(PolicyError::EmptySizes);
+        }
+        if sizes[0] == 0 {
+            return Err(PolicyError::ZeroBatchSize);
+        }
+        Ok(Self { sizes, max_wait_us })
+    }
+
+    /// The validated, ascending artifact batch sizes.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
     }
 
     pub fn max_batch(&self) -> usize {
-        *self.sizes.last().unwrap()
+        // non-empty by construction; 1 is the safe floor either way
+        self.sizes.last().copied().unwrap_or(1)
     }
 
     /// Decide whether to flush now. Returns the artifact batch size to run
     /// (taking `min(pending, chosen)` requests, padding the rest).
     ///
     /// * queue can fill the largest artifact -> run it full (throughput);
-    /// * oldest request past deadline -> run the smallest artifact that
-    ///   covers the whole queue (latency), padding as needed.
-    pub fn plan(&self, pending: usize, oldest_age_us: u64) -> Option<usize> {
+    /// * oldest request past `max_wait_us` -> run the smallest artifact
+    ///   that covers the whole queue (latency), padding as needed;
+    /// * `min_headroom_us` (tightest per-request deadline budget left in
+    ///   the queue, if any request carries a deadline) no longer covers
+    ///   another full batching wait -> flush now, for the same best-fit
+    ///   artifact, so the request still has its headroom for execution.
+    pub fn plan(
+        &self,
+        pending: usize,
+        oldest_age_us: u64,
+        min_headroom_us: Option<u64>,
+    ) -> Option<usize> {
         if pending == 0 {
             return None;
         }
@@ -42,6 +91,11 @@ impl BatchPolicy {
         }
         if oldest_age_us >= self.max_wait_us {
             return Some(self.best_fit(pending));
+        }
+        if let Some(headroom) = min_headroom_us {
+            if headroom <= self.max_wait_us {
+                return Some(self.best_fit(pending));
+            }
         }
         None
     }
@@ -68,35 +122,47 @@ mod tests {
     use super::*;
 
     fn policy() -> BatchPolicy {
-        BatchPolicy::new(vec![8, 1, 32], 2_000)
+        BatchPolicy::new(vec![8, 1, 32], 2_000).unwrap()
     }
 
     #[test]
     fn test_sizes_sorted_deduped() {
-        let p = BatchPolicy::new(vec![8, 8, 1], 100);
-        assert_eq!(p.sizes, vec![1, 8]);
+        let p = BatchPolicy::new(vec![8, 8, 1], 100).unwrap();
+        assert_eq!(p.sizes(), &[1, 8]);
         assert_eq!(p.max_batch(), 8);
     }
 
     #[test]
     fn test_no_flush_when_empty() {
-        assert_eq!(policy().plan(0, 999_999), None);
+        assert_eq!(policy().plan(0, 999_999, None), None);
     }
 
     #[test]
     fn test_flush_full_batch_immediately() {
         let p = policy();
-        assert_eq!(p.plan(32, 0), Some(32));
-        assert_eq!(p.plan(100, 0), Some(32));
+        assert_eq!(p.plan(32, 0, None), Some(32));
+        assert_eq!(p.plan(100, 0, None), Some(32));
     }
 
     #[test]
     fn test_deadline_flush_best_fit() {
         let p = policy();
-        assert_eq!(p.plan(3, 1_999), None); // young queue: keep batching
-        assert_eq!(p.plan(3, 2_000), Some(8));
-        assert_eq!(p.plan(1, 5_000), Some(1));
-        assert_eq!(p.plan(9, 2_000), Some(32));
+        assert_eq!(p.plan(3, 1_999, None), None); // young queue: keep batching
+        assert_eq!(p.plan(3, 2_000, None), Some(8));
+        assert_eq!(p.plan(1, 5_000, None), Some(1));
+        assert_eq!(p.plan(9, 2_000, None), Some(32));
+    }
+
+    #[test]
+    fn test_request_deadline_forces_early_flush() {
+        let p = policy();
+        // young queue, but a request can't absorb another full wait window
+        assert_eq!(p.plan(3, 0, Some(1_500)), Some(8));
+        assert_eq!(p.plan(3, 0, Some(2_000)), Some(8));
+        // plenty of deadline headroom: keep batching
+        assert_eq!(p.plan(3, 0, Some(50_000)), None);
+        // no deadlines in the queue: unchanged behavior
+        assert_eq!(p.plan(3, 0, None), None);
     }
 
     #[test]
@@ -112,8 +178,10 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn test_empty_sizes_rejected() {
-        BatchPolicy::new(vec![], 1);
+    fn test_bad_config_is_a_typed_error_not_a_panic() {
+        assert_eq!(BatchPolicy::new(vec![], 1).unwrap_err(), PolicyError::EmptySizes);
+        assert_eq!(BatchPolicy::new(vec![0, 4], 1).unwrap_err(), PolicyError::ZeroBatchSize);
+        assert!(!PolicyError::EmptySizes.to_string().is_empty());
+        assert!(!PolicyError::ZeroBatchSize.to_string().is_empty());
     }
 }

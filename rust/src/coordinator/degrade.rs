@@ -1,0 +1,254 @@
+//! Overload degradation policy — the paper's §3.3 accuracy/performance
+//! ladder (ternary N=64 replaces ~98% of multiplications at lower
+//! accuracy; 4-bit stays within 2% of FP32) used as a *graceful
+//! degradation* axis for serving.
+//!
+//! Admission control walks a three-state machine per request:
+//!
+//! * **admit** — queue below the degrade watermark and recent latency
+//!   under the target: serve the class the client asked for;
+//! * **degrade** — queue past the degrade watermark (or recent per-class
+//!   p99 past `p99_target_us`): rewrite the admission to the next-cheaper
+//!   rung of the router ladder and mark the response `degraded`;
+//! * **shed** — queue past the hard shed watermark: answer immediately
+//!   with [`crate::coordinator::ServeError::Overloaded`] instead of
+//!   queueing unboundedly.
+//!
+//! The policy itself is pure (watermark comparisons), so it is trivially
+//! unit-testable; the [`LoadTracker`] supplies the "recent p99 per
+//! precision class" signal from a fixed ring of completed-request
+//! latencies (no allocation after construction, lock held only for the
+//! ring write / copy).
+
+use std::sync::Mutex;
+
+use crate::coordinator::PrecisionClass;
+
+/// Watermark configuration for the overload state machine. The defaults
+/// disable both mechanisms (`usize::MAX` watermarks), preserving plain
+/// bounded-queue backpressure; `dfp-infer serve` exposes them as
+/// `--degrade-watermark` / `--shed-watermark`.
+#[derive(Debug, Clone)]
+pub struct DegradeConfig {
+    /// queued requests at or past this: admissions degrade one ladder rung
+    pub degrade_watermark: usize,
+    /// queued requests at or past this: admissions are shed (`Overloaded`)
+    pub shed_watermark: usize,
+    /// recent per-class p99 (microseconds) past this also degrades
+    /// admissions; `0.0` disables the latency signal
+    pub p99_target_us: f64,
+}
+
+/// Watermark value meaning "disabled".
+pub const WATERMARK_DISABLED: usize = usize::MAX;
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        Self {
+            degrade_watermark: WATERMARK_DISABLED,
+            shed_watermark: WATERMARK_DISABLED,
+            p99_target_us: 0.0,
+        }
+    }
+}
+
+/// The admission decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// serve at the requested class
+    Serve,
+    /// serve, but degraded to the next-cheaper distinct ladder rung
+    Degrade,
+    /// answer `Overloaded` now rather than queue
+    Shed,
+}
+
+/// Pure watermark policy: maps (queue depth, recent p99) to an
+/// [`Admission`]. The caller resolves *which* cheaper class via
+/// [`crate::coordinator::Router::next_cheaper`].
+#[derive(Debug, Clone, Default)]
+pub struct DegradePolicy {
+    cfg: DegradeConfig,
+}
+
+impl DegradePolicy {
+    pub fn new(cfg: DegradeConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &DegradeConfig {
+        &self.cfg
+    }
+
+    /// Decide how to admit a request given the current total queued depth
+    /// and the admitted class's recent p99 (microseconds; pass `0.0` when
+    /// unknown).
+    pub fn admit(&self, queued: usize, recent_p99_us: f64) -> Admission {
+        if queued >= self.cfg.shed_watermark {
+            return Admission::Shed;
+        }
+        if queued >= self.cfg.degrade_watermark {
+            return Admission::Degrade;
+        }
+        if self.cfg.p99_target_us > 0.0 && recent_p99_us > self.cfg.p99_target_us {
+            return Admission::Degrade;
+        }
+        Admission::Serve
+    }
+}
+
+const TRACKER_RING: usize = 128;
+
+/// Fixed-size ring of recent end-to-end latencies per precision class,
+/// feeding the degrade policy's p99 signal. Writers (coordinator workers)
+/// push one sample per completed request; the dispatcher reads a windowed
+/// p99. All storage is allocated at construction.
+#[derive(Debug)]
+pub struct LoadTracker {
+    rings: [Mutex<Ring>; 3],
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+    filled: usize,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Self { buf: vec![0.0; TRACKER_RING], next: 0, filled: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.buf[self.next] = v;
+        self.next = (self.next + 1) % self.buf.len();
+        self.filled = (self.filled + 1).min(self.buf.len());
+    }
+
+    fn p99(&self) -> f64 {
+        if self.filled == 0 {
+            return 0.0;
+        }
+        let mut window: Vec<f64> = self.buf[..self.filled].to_vec();
+        window.sort_by(f64::total_cmp);
+        let idx = ((self.filled as f64) * 0.99).ceil() as usize;
+        window[idx.clamp(1, self.filled) - 1]
+    }
+}
+
+impl Default for LoadTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LoadTracker {
+    pub fn new() -> Self {
+        Self { rings: [Mutex::new(Ring::new()), Mutex::new(Ring::new()), Mutex::new(Ring::new())] }
+    }
+
+    fn ring(&self, class: PrecisionClass) -> &Mutex<Ring> {
+        let idx = match class {
+            PrecisionClass::Fast => 0,
+            PrecisionClass::Balanced => 1,
+            PrecisionClass::Accurate => 2,
+        };
+        &self.rings[idx]
+    }
+
+    /// Record one completed request's end-to-end latency for `class`.
+    pub fn record(&self, class: PrecisionClass, e2e_us: f64) {
+        let mut r = match self.ring(class).lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        r.push(e2e_us);
+    }
+
+    /// Recent p99 (microseconds) for `class`; `0.0` before any sample.
+    pub fn p99(&self, class: PrecisionClass) -> f64 {
+        let r = match self.ring(class).lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        r.p99()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_default_policy_never_degrades_or_sheds() {
+        let p = DegradePolicy::default();
+        assert_eq!(p.admit(0, 0.0), Admission::Serve);
+        assert_eq!(p.admit(1_000_000, 1e12), Admission::Serve);
+    }
+
+    #[test]
+    fn test_watermark_state_machine() {
+        let p = DegradePolicy::new(DegradeConfig {
+            degrade_watermark: 4,
+            shed_watermark: 8,
+            p99_target_us: 0.0,
+        });
+        assert_eq!(p.admit(0, 0.0), Admission::Serve);
+        assert_eq!(p.admit(3, 0.0), Admission::Serve);
+        assert_eq!(p.admit(4, 0.0), Admission::Degrade);
+        assert_eq!(p.admit(7, 0.0), Admission::Degrade);
+        assert_eq!(p.admit(8, 0.0), Admission::Shed);
+        assert_eq!(p.admit(999, 0.0), Admission::Shed);
+    }
+
+    #[test]
+    fn test_p99_signal_degrades_admissions() {
+        let p = DegradePolicy::new(DegradeConfig {
+            degrade_watermark: WATERMARK_DISABLED,
+            shed_watermark: WATERMARK_DISABLED,
+            p99_target_us: 5_000.0,
+        });
+        assert_eq!(p.admit(0, 4_999.0), Admission::Serve);
+        assert_eq!(p.admit(0, 5_001.0), Admission::Degrade);
+        // the latency signal never sheds on its own — only the hard
+        // queue watermark does
+        assert_eq!(p.admit(0, 1e12), Admission::Degrade);
+    }
+
+    #[test]
+    fn test_tracker_p99_orders_classes_independently() {
+        let t = LoadTracker::new();
+        assert_eq!(t.p99(PrecisionClass::Fast), 0.0);
+        for i in 0..100 {
+            t.record(PrecisionClass::Fast, f64::from(i));
+            t.record(PrecisionClass::Accurate, 1_000.0 + f64::from(i));
+        }
+        let fast = t.p99(PrecisionClass::Fast);
+        let acc = t.p99(PrecisionClass::Accurate);
+        assert!(fast >= 90.0 && fast <= 99.0, "fast p99 {fast}");
+        assert!(acc >= 1_090.0 && acc <= 1_099.0, "accurate p99 {acc}");
+        // balanced never saw a sample
+        assert_eq!(t.p99(PrecisionClass::Balanced), 0.0);
+    }
+
+    #[test]
+    fn test_tracker_ring_wraps_to_recent_window() {
+        let t = LoadTracker::new();
+        // old slow samples fully displaced by fast ones
+        for _ in 0..TRACKER_RING {
+            t.record(PrecisionClass::Balanced, 1e6);
+        }
+        for _ in 0..TRACKER_RING {
+            t.record(PrecisionClass::Balanced, 10.0);
+        }
+        assert_eq!(t.p99(PrecisionClass::Balanced), 10.0);
+    }
+
+    #[test]
+    fn test_single_sample_p99() {
+        let t = LoadTracker::new();
+        t.record(PrecisionClass::Fast, 42.0);
+        assert_eq!(t.p99(PrecisionClass::Fast), 42.0);
+    }
+}

@@ -240,6 +240,56 @@ impl LpExecutor {
     pub fn variants(&self) -> Vec<&str> {
         self.variants.keys().map(String::as_str).collect()
     }
+
+    /// The synthetic serving ladder: the paper's §3.3 accuracy/performance
+    /// rungs as (scheme name, w_bits, cluster) — ternary N=64 for Fast,
+    /// 4-bit for Balanced, full i8 for Accurate. Shared by `bench_serving`,
+    /// `serve --synthetic` and the resilience CI smoke so they all route
+    /// over the same three-variant ladder.
+    pub const SYNTHETIC_LADDER: [(&'static str, u32, usize); 3] =
+        [("8a2w_n64@stem=i8", 2, 64), ("8a4w_n4@stem=i8", 4, 4), ("8a8w_n4", 8, 4)];
+
+    /// Batch sizes advertised by the synthetic ladder.
+    pub const SYNTHETIC_BATCH_SIZES: [usize; 2] = [1, 8];
+
+    /// Manifest describing [`Self::SYNTHETIC_LADDER`] on the default
+    /// resnet-mini geometry (no artifact files — only the lp pipeline can
+    /// serve it).
+    pub fn synthetic_manifest() -> crate::runtime::Manifest {
+        let vs: Vec<String> = Self::SYNTHETIC_LADDER
+            .iter()
+            .map(|(name, bits, cluster)| {
+                format!(
+                    r#""{name}": {{"files": {{"1": "-", "8": "-"}}, "eval_acc": 0.0, "w_bits": {bits}, "cluster": {cluster}}}"#
+                )
+            })
+            .collect();
+        let net = crate::model::resnet_mini_default();
+        let text = format!(
+            r#"{{"img": {}, "classes": {}, "batch_sizes": [1, 8], "variants": {{{}}}}}"#,
+            net.input_hw,
+            net.fc_out,
+            vs.join(", ")
+        );
+        crate::runtime::Manifest::from_json_text(&text)
+            .expect("synthetic manifest is valid by construction")
+    }
+
+    /// Factory serving [`Self::SYNTHETIC_LADDER`] from seeded synthetic
+    /// weights — runs anywhere, no artifacts on disk.
+    pub fn synthetic_factory(seed: u64, registry: KernelRegistry) -> ExecutorFactory {
+        Box::new(move || {
+            let net = crate::model::resnet_mini_default();
+            let mut variants = BTreeMap::new();
+            for (name, _, _) in Self::SYNTHETIC_LADDER {
+                let scheme = crate::scheme::Scheme::parse(name)?;
+                variants.insert(name.to_string(), QModelParams::synthetic(&net, seed, &scheme));
+            }
+            let exec =
+                LpExecutor::new(net, variants, registry, Self::SYNTHETIC_BATCH_SIZES.to_vec())?;
+            Ok(Box::new(exec) as Box<dyn Executor>)
+        })
+    }
 }
 
 impl Executor for LpExecutor {
@@ -423,6 +473,20 @@ mod tests {
             let want = crate::lpinfer::forward_quant(&params, &net, &x);
             let got = e.run_batch(variant, batch, &x).unwrap();
             assert_eq!(got.data(), want.data(), "variant {variant} batch {batch}");
+        }
+    }
+
+    #[test]
+    fn test_synthetic_ladder_manifest_routes_three_distinct_variants() {
+        let m = LpExecutor::synthetic_manifest();
+        assert_eq!(m.variants.len(), 3);
+        let r = crate::coordinator::Router::from_manifest(&m).unwrap();
+        assert_eq!(r.active_variants().len(), 3);
+        let exec = (LpExecutor::synthetic_factory(7, KernelRegistry::new(None, 1)))().unwrap();
+        assert_eq!(exec.img(), m.img);
+        assert_eq!(exec.classes(), m.classes);
+        for (name, _, _) in LpExecutor::SYNTHETIC_LADDER {
+            assert_eq!(exec.batch_sizes(name), LpExecutor::SYNTHETIC_BATCH_SIZES.to_vec());
         }
     }
 

@@ -1,8 +1,12 @@
 //! Serving metrics: per-stage latency summaries + counters, shared between
 //! the coordinator threads via a mutex (contention is negligible next to
-//! model execution).
+//! model execution). Besides throughput/latency, the resilience layer
+//! tallies its overload state machine here: shed admissions, deadline
+//! misses, degraded serves, caught worker panics and quarantined
+//! executors — so a saturation sweep can distinguish "slow" from
+//! "shedding".
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::telemetry::{self, EngineSnapshot};
 use crate::util::Summary;
@@ -12,6 +16,17 @@ use crate::util::Summary;
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub rejected: u64,
+    /// admissions shed past the hard overload watermark (typed
+    /// `ServeError::Overloaded` replies, not queue-full rejections)
+    pub shed: u64,
+    /// requests answered `DeadlineExceeded` instead of being executed
+    pub deadline_missed: u64,
+    /// responses served at a cheaper precision class than requested
+    pub degraded: u64,
+    /// executor panics caught and converted to `ExecutorFailed` replies
+    pub worker_panics: u64,
+    /// executors quarantined after consecutive panics
+    pub quarantined: u64,
     pub batches: u64,
     pub padded_slots: u64,
     pub occupied_slots: u64,
@@ -41,6 +56,7 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} rejected={} batches={} occupancy={:.1}%\n\
+             shed={} deadline_missed={} degraded={} worker_panics={} quarantined={}\n\
              queue  p50={:.0}us p99={:.0}us\n\
              exec   p50={:.0}us p99={:.0}us\n\
              e2e    mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us\n\
@@ -49,6 +65,11 @@ impl MetricsSnapshot {
             self.rejected,
             self.batches,
             100.0 * self.occupancy(),
+            self.shed,
+            self.deadline_missed,
+            self.degraded,
+            self.worker_panics,
+            self.quarantined,
             self.queue_us_p50,
             self.queue_us_p99,
             self.exec_us_p50,
@@ -66,6 +87,11 @@ impl MetricsSnapshot {
 struct Inner {
     requests: u64,
     rejected: u64,
+    shed: u64,
+    deadline_missed: u64,
+    degraded: u64,
+    worker_panics: u64,
+    quarantined: u64,
     batches: u64,
     padded_slots: u64,
     occupied_slots: u64,
@@ -85,16 +111,45 @@ impl Metrics {
         Self::default()
     }
 
+    /// Lock the inner state, recovering from poisoning: a worker that
+    /// panicked elsewhere must never take serving metrics down with it.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     pub fn on_submit(&self) {
-        self.inner.lock().unwrap().requests += 1;
+        self.lock().requests += 1;
     }
 
     pub fn on_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.lock().rejected += 1;
+    }
+
+    pub fn on_shed(&self) {
+        self.lock().shed += 1;
+    }
+
+    pub fn on_deadline_miss(&self) {
+        self.lock().deadline_missed += 1;
+    }
+
+    pub fn on_degraded(&self) {
+        self.lock().degraded += 1;
+    }
+
+    pub fn on_worker_panic(&self) {
+        self.lock().worker_panics += 1;
+    }
+
+    pub fn on_quarantine(&self) {
+        self.lock().quarantined += 1;
     }
 
     pub fn on_batch(&self, occupied: usize, padded: usize, exec_us: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.batches += 1;
         m.occupied_slots += occupied as u64;
         m.padded_slots += padded as u64;
@@ -102,16 +157,21 @@ impl Metrics {
     }
 
     pub fn on_response(&self, queue_us: f64, e2e_us: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.queue_us.add(queue_us);
         m.e2e_us.add(e2e_us);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         MetricsSnapshot {
             requests: m.requests,
             rejected: m.rejected,
+            shed: m.shed,
+            deadline_missed: m.deadline_missed,
+            degraded: m.degraded,
+            worker_panics: m.worker_panics,
+            quarantined: m.quarantined,
             batches: m.batches,
             padded_slots: m.padded_slots,
             occupied_slots: m.occupied_slots,
@@ -151,10 +211,37 @@ mod tests {
     }
 
     #[test]
+    fn test_resilience_counters() {
+        let m = Metrics::new();
+        m.on_shed();
+        m.on_shed();
+        m.on_deadline_miss();
+        m.on_degraded();
+        m.on_degraded();
+        m.on_degraded();
+        m.on_worker_panic();
+        m.on_quarantine();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.degraded, 3);
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.quarantined, 1);
+        let r = s.report();
+        assert!(r.contains("shed=2"), "{r}");
+        assert!(r.contains("deadline_missed=1"), "{r}");
+        assert!(r.contains("degraded=3"), "{r}");
+        assert!(r.contains("worker_panics=1"), "{r}");
+        assert!(r.contains("quarantined=1"), "{r}");
+    }
+
+    #[test]
     fn test_empty_snapshot() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.occupancy(), 0.0);
         assert_eq!(s.requests, 0);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.deadline_missed, 0);
     }
 
     #[test]

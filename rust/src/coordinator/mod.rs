@@ -3,13 +3,25 @@
 //! deadline-bounded dynamic batching onto fixed-batch AOT artifacts,
 //! a worker pool over PJRT executables, bounded-queue backpressure and
 //! per-stage latency metrics. Python is never on this path.
+//!
+//! Overload resilience rides on the same precision ladder: past a
+//! configurable queue watermark (or latency target) admissions are
+//! *degraded* to the next-cheaper variant instead of queued, past a hard
+//! watermark they are *shed* with a typed error, expired per-request
+//! deadlines are answered instead of executed, and worker panics are
+//! caught and converted into [`ServeError::ExecutorFailed`] replies —
+//! the invariant being that **every** admitted request receives exactly
+//! one reply: a [`Response`] or a [`ServeError`], never a silently
+//! dropped channel.
 
 pub mod batcher;
+pub mod degrade;
 pub mod executor;
 pub mod metrics;
 pub mod router;
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -18,7 +30,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-pub use batcher::BatchPolicy;
+pub use batcher::{BatchPolicy, PolicyError};
+pub use degrade::{Admission, DegradeConfig, DegradePolicy, LoadTracker, WATERMARK_DISABLED};
 pub use executor::{Executor, ExecutorFactory, LpExecutor, MockExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{PrecisionClass, Router};
@@ -34,19 +47,78 @@ pub struct CoordinatorConfig {
     pub max_wait_us: u64,
     /// dispatcher poll tick
     pub tick_us: u64,
+    /// overload watermarks (disabled by default)
+    pub degrade: DegradeConfig,
+    /// quarantine an executor after this many *consecutive* panics
+    pub quarantine_after: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { max_queue: 1024, max_wait_us: 2_000, tick_us: 200 }
+        Self {
+            max_queue: 1024,
+            max_wait_us: 2_000,
+            tick_us: 200,
+            degrade: DegradeConfig::default(),
+            quarantine_after: 3,
+        }
     }
 }
+
+/// Typed serving errors — one of these (or a [`Response`]) is the reply
+/// every submitted request is guaranteed to receive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// the request's deadline expired before execution started
+    DeadlineExceeded,
+    /// admission queue full, or load past the shed watermark
+    Overloaded,
+    /// the executor returned an error or panicked on this batch
+    ExecutorFailed(String),
+    /// the coordinator is draining and no longer admits requests
+    ShuttingDown,
+    /// the request was malformed (wrong image shape, unroutable class)
+    InvalidRequest(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded => write!(f, "request deadline exceeded before execution"),
+            ServeError::Overloaded => write!(f, "coordinator overloaded (request shed)"),
+            ServeError::ExecutorFailed(msg) => write!(f, "executor failed: {msg}"),
+            ServeError::ShuttingDown => write!(f, "coordinator is shutting down"),
+            ServeError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a submitted request resolves to: exactly one of these arrives on
+/// the receiver returned by [`Coordinator::submit`].
+pub type ServeResult = std::result::Result<Response, ServeError>;
 
 /// An inference request.
 pub struct Request {
     /// (img, img, 3) f32 image
     pub image: Tensor<f32>,
     pub class: PrecisionClass,
+    /// optional completion deadline; expired requests are answered
+    /// [`ServeError::DeadlineExceeded`] instead of executed
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(image: Tensor<f32>, class: PrecisionClass) -> Self {
+        Self { image, class, deadline: None }
+    }
+
+    /// Attach a deadline `budget` from now.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(Instant::now() + budget);
+        self
+    }
 }
 
 /// An inference response.
@@ -55,15 +127,54 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub predicted: usize,
     pub variant: String,
+    /// the precision class actually served (differs from the requested
+    /// class when `degraded`)
+    pub class: PrecisionClass,
+    /// true when overload degraded this request to a cheaper class
+    pub degraded: bool,
     pub batch: usize,
     pub queue_us: f64,
     pub e2e_us: f64,
 }
 
+/// Single-use reply handle enforcing the no-lost-replies invariant
+/// *structurally*: if a `ReplyOnce` is dropped anywhere (a request stuck
+/// in a channel at shutdown, a job abandoned by a dying worker) without
+/// an explicit reply, its drop glue sends [`ServeError::ShuttingDown`] —
+/// so a submitted request can never end up with a silently dropped
+/// channel.
+struct ReplyOnce {
+    tx: Option<Sender<ServeResult>>,
+}
+
+impl ReplyOnce {
+    fn new(tx: Sender<ServeResult>) -> Self {
+        Self { tx: Some(tx) }
+    }
+
+    fn send(mut self, r: ServeResult) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(r);
+        }
+    }
+}
+
+impl Drop for ReplyOnce {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
 struct Pending {
     image: Tensor<f32>,
-    reply: Sender<Response>,
+    reply: ReplyOnce,
     submitted: Instant,
+    deadline: Option<Instant>,
+    /// the class actually being served (post-degradation)
+    class: PrecisionClass,
+    degraded: bool,
 }
 
 struct BatchJob {
@@ -77,27 +188,26 @@ enum WorkerMsg {
     Stop,
 }
 
+/// Outcome of a deadline-bounded [`Coordinator::shutdown_within`] drain.
+#[derive(Debug, Clone, Copy)]
+pub struct DrainReport {
+    /// all threads flushed their queues and joined within the deadline
+    pub drained: bool,
+    /// threads joined before the deadline
+    pub joined: usize,
+    /// threads still running at the deadline (detached, not blocked on)
+    pub leaked: usize,
+}
+
 /// The running coordinator (owns dispatcher + worker threads).
 pub struct Coordinator {
-    submit_tx: SyncSender<(Request, Sender<Response>)>,
+    submit_tx: SyncSender<(Request, ReplyOnce)>,
     metrics: Arc<Metrics>,
     router: Router,
     stopping: Arc<AtomicBool>,
-    threads: Vec<JoinHandle<()>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
     img: usize,
 }
-
-/// Error returned when the admission queue is full.
-#[derive(Debug)]
-pub struct Busy;
-
-impl std::fmt::Display for Busy {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "coordinator queue full (backpressure)")
-    }
-}
-
-impl std::error::Error for Busy {}
 
 impl Coordinator {
     /// Start with one executor factory per worker thread. PJRT state is not
@@ -106,6 +216,9 @@ impl Coordinator {
     ///
     /// `sizes` maps each routable variant to its available artifact batch
     /// sizes (from the manifest); `img` is the expected input side length.
+    /// A routable variant with no artifacts is tolerated as long as at
+    /// least one variant has them — requests targeting it fall back down
+    /// the precision ladder (and count as degraded).
     pub fn start(
         factories: Vec<ExecutorFactory>,
         router: Router,
@@ -117,19 +230,29 @@ impl Coordinator {
             bail!("need at least one executor factory");
         }
 
-        // per-variant batch policies from the manifest's artifact set
+        // per-variant batch policies from the manifest's artifact set;
+        // artifact-less variants get no policy and are served by ladder
+        // fallback instead
         let mut policies: BTreeMap<String, BatchPolicy> = BTreeMap::new();
         for v in router.active_variants() {
             let s = sizes.get(v).cloned().unwrap_or_default();
             if s.is_empty() {
-                bail!("variant '{v}' has no artifacts");
+                continue;
             }
-            policies.insert(v.to_string(), BatchPolicy::new(s, cfg.max_wait_us));
+            policies.insert(
+                v.to_string(),
+                BatchPolicy::new(s, cfg.max_wait_us)
+                    .with_context(|| format!("batch policy for variant '{v}'"))?,
+            );
+        }
+        if policies.is_empty() {
+            bail!("no routable variant has artifacts");
         }
 
         let metrics = Arc::new(Metrics::new());
+        let tracker = Arc::new(LoadTracker::new());
         let stopping = Arc::new(AtomicBool::new(false));
-        let (submit_tx, submit_rx) = mpsc::sync_channel::<(Request, Sender<Response>)>(cfg.max_queue);
+        let (submit_tx, submit_rx) = mpsc::sync_channel::<(Request, ReplyOnce)>(cfg.max_queue);
         let (job_tx, job_rx) = mpsc::channel::<WorkerMsg>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
@@ -141,7 +264,9 @@ impl Coordinator {
         for (wid, factory) in factories.into_iter().enumerate() {
             let job_rx = Arc::clone(&job_rx);
             let metrics = Arc::clone(&metrics);
+            let tracker = Arc::clone(&tracker);
             let init_tx = init_tx.clone();
+            let quarantine_after = cfg.quarantine_after.max(1);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("dfp-worker-{wid}"))
@@ -156,7 +281,7 @@ impl Coordinator {
                                 return;
                             }
                         };
-                        worker_loop(&mut *exec, &job_rx, &metrics);
+                        worker_loop(&mut *exec, &job_rx, &metrics, &tracker, quarantine_after);
                     })
                     .context("spawning worker")?,
             );
@@ -173,46 +298,62 @@ impl Coordinator {
         {
             let router = router.clone();
             let metrics = Arc::clone(&metrics);
+            let tracker = Arc::clone(&tracker);
             let stopping = Arc::clone(&stopping);
+            let degrade = DegradePolicy::new(cfg.degrade.clone());
             let tick = Duration::from_micros(cfg.tick_us);
             threads.push(
                 std::thread::Builder::new()
                     .name("dfp-dispatcher".into())
                     .spawn(move || {
-                        dispatcher_loop(
-                            &submit_rx, &job_tx, &router, &policies, &metrics, &stopping, tick,
+                        let ctx = DispatchCtx {
+                            router,
+                            policies,
+                            degrade,
+                            tracker,
+                            metrics,
+                            tick,
                             n_workers,
-                        );
+                        };
+                        dispatcher_loop(&submit_rx, &job_tx, &ctx, &stopping);
                     })
                     .context("spawning dispatcher")?,
             );
         }
 
-        Ok(Self { submit_tx, metrics, router, stopping, threads, img })
+        Ok(Self { submit_tx, metrics, router, stopping, threads: Mutex::new(threads), img })
     }
 
-    /// Submit a request; returns a channel that will receive the response.
-    /// Fails fast with [`Busy`] when the admission queue is full.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+    /// Submit a request; returns a channel that will receive exactly one
+    /// [`ServeResult`]. Fails fast (typed) when the request is malformed,
+    /// the admission queue is full, or the coordinator is draining.
+    pub fn submit(&self, req: Request) -> std::result::Result<Receiver<ServeResult>, ServeError> {
         if req.image.shape() != [self.img, self.img, 3] {
-            bail!("image shape {:?} != ({i}, {i}, 3)", req.image.shape(), i = self.img);
+            return Err(ServeError::InvalidRequest(format!(
+                "image shape {:?} != ({i}, {i}, 3)",
+                req.image.shape(),
+                i = self.img
+            )));
+        }
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
         }
         let (tx, rx) = mpsc::channel();
         self.metrics.on_submit();
-        match self.submit_tx.try_send((req, tx)) {
+        match self.submit_tx.try_send((req, ReplyOnce::new(tx))) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
                 self.metrics.on_reject();
-                Err(Busy.into())
+                Err(ServeError::Overloaded)
             }
-            Err(TrySendError::Disconnected(_)) => bail!("coordinator stopped"),
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
         }
     }
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, image: Tensor<f32>, class: PrecisionClass) -> Result<Response> {
-        let rx = self.submit(Request { image, class })?;
-        rx.recv().context("coordinator dropped request")
+        let rx = self.submit(Request::new(image, class))?;
+        Ok(rx.recv().context("coordinator dropped request")??)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -223,89 +364,205 @@ impl Coordinator {
         &self.router
     }
 
-    /// Drain and stop all threads.
-    pub fn shutdown(mut self) {
+    /// Graceful drain with the default 5 s deadline. See
+    /// [`Self::shutdown_within`].
+    pub fn shutdown(&self) -> DrainReport {
+        self.shutdown_within(Duration::from_secs(5))
+    }
+
+    /// Deadline-bounded graceful drain: stop admissions, let the dispatcher
+    /// flush every pending queue to the workers, and join all threads —
+    /// but never block past `deadline`. Threads still running at the
+    /// deadline are left to a background reaper (reported as `leaked`,
+    /// never blocked on again). Idempotent: later calls see no threads and
+    /// return a trivially-drained report.
+    pub fn shutdown_within(&self, deadline: Duration) -> DrainReport {
         self.stopping.store(true, Ordering::SeqCst);
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        let threads: Vec<JoinHandle<()>> = {
+            let mut g = match self.threads.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            g.drain(..).collect()
+        };
+        let n = threads.len();
+        if n == 0 {
+            return DrainReport { drained: true, joined: 0, leaked: 0 };
+        }
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        std::thread::spawn(move || {
+            for t in threads {
+                let _ = t.join();
+                let _ = done_tx.send(());
+            }
+        });
+        let until = Instant::now() + deadline;
+        let mut joined = 0usize;
+        while joined < n {
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            match done_rx.recv_timeout(until - now) {
+                Ok(()) => joined += 1,
+                Err(_) => break,
+            }
+        }
+        DrainReport { drained: joined == n, joined, leaked: n - joined }
+    }
+}
+
+/// Immutable dispatcher context (policies + shared handles).
+struct DispatchCtx {
+    router: Router,
+    policies: BTreeMap<String, BatchPolicy>,
+    degrade: DegradePolicy,
+    tracker: Arc<LoadTracker>,
+    metrics: Arc<Metrics>,
+    tick: Duration,
+    n_workers: usize,
+}
+
+impl DispatchCtx {
+    /// Resolve the class to serve a request at: the routed variant if it
+    /// has artifacts, else walk down the precision ladder to the first
+    /// variant that does. `None` when nothing below (or at) `class` is
+    /// servable.
+    fn resolve(&self, class: PrecisionClass) -> Option<(PrecisionClass, String)> {
+        let mut c = class;
+        loop {
+            if let Some(v) = self.router.try_route(c) {
+                if self.policies.contains_key(v) {
+                    return Some((c, v.to_string()));
+                }
+            }
+            c = c.cheaper()?;
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Admit one request into the per-variant queues, applying deadline,
+/// shed and degradation policy. Replies immediately (typed) when the
+/// request cannot be queued.
+fn admit(
+    req: Request,
+    reply: ReplyOnce,
+    queues: &mut BTreeMap<String, Vec<Pending>>,
+    ctx: &DispatchCtx,
+) {
+    let now = Instant::now();
+    if req.deadline.is_some_and(|d| d <= now) {
+        ctx.metrics.on_deadline_miss();
+        reply.send(Err(ServeError::DeadlineExceeded));
+        return;
+    }
+    let queued: usize = queues.values().map(Vec::len).sum();
+    let admission = ctx.degrade.admit(queued, ctx.tracker.p99(req.class));
+    let target = match admission {
+        Admission::Shed => {
+            ctx.metrics.on_shed();
+            reply.send(Err(ServeError::Overloaded));
+            return;
+        }
+        Admission::Degrade => ctx.router.next_cheaper(req.class).unwrap_or(req.class),
+        Admission::Serve => req.class,
+    };
+    let Some((served, variant)) = ctx.resolve(target) else {
+        reply.send(Err(ServeError::ExecutorFailed(format!(
+            "no servable variant at or below class '{target}'"
+        ))));
+        return;
+    };
+    let degraded = served != req.class;
+    if degraded {
+        ctx.metrics.on_degraded();
+    }
+    queues.entry(variant).or_default().push(Pending {
+        image: req.image,
+        reply,
+        submitted: now,
+        deadline: req.deadline,
+        class: served,
+        degraded,
+    });
+}
+
 fn dispatcher_loop(
-    submit_rx: &Receiver<(Request, Sender<Response>)>,
+    submit_rx: &Receiver<(Request, ReplyOnce)>,
     job_tx: &Sender<WorkerMsg>,
-    router: &Router,
-    policies: &BTreeMap<String, BatchPolicy>,
-    _metrics: &Metrics,
+    ctx: &DispatchCtx,
     stopping: &AtomicBool,
-    tick: Duration,
-    n_workers: usize,
 ) {
     let mut queues: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
+    let mut disconnected = false;
     loop {
         // admit up to the tick deadline
-        match submit_rx.recv_timeout(tick) {
+        match submit_rx.recv_timeout(ctx.tick) {
             Ok((req, reply)) => {
-                let variant = router.route(req.class).to_string();
-                queues.entry(variant).or_default().push(Pending {
-                    image: req.image,
-                    reply,
-                    submitted: Instant::now(),
-                });
+                admit(req, reply, &mut queues, ctx);
                 // keep draining whatever is immediately available
                 while let Ok((req, reply)) = submit_rx.try_recv() {
-                    let variant = router.route(req.class).to_string();
-                    queues.entry(variant).or_default().push(Pending {
-                        image: req.image,
-                        reply,
-                        submitted: Instant::now(),
-                    });
+                    admit(req, reply, &mut queues, ctx);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+        }
+
+        // sweep expired deadlines out of every queue before planning
+        let now = Instant::now();
+        for q in queues.values_mut() {
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].deadline.is_some_and(|d| d <= now) {
+                    let p = q.remove(i);
+                    ctx.metrics.on_deadline_miss();
+                    p.reply.send(Err(ServeError::DeadlineExceeded));
+                } else {
+                    i += 1;
+                }
+            }
         }
 
         // flush per-variant queues per policy
         for (variant, q) in queues.iter_mut() {
-            let policy = &policies[variant];
+            let policy = &ctx.policies[variant];
             loop {
                 let oldest_us = q
                     .first()
                     .map(|p| p.submitted.elapsed().as_micros() as u64)
                     .unwrap_or(0);
-                let Some(bsz) = policy.plan(q.len(), oldest_us) else { break };
+                // tightest remaining per-request deadline budget in the
+                // queue, if any request carries one
+                let headroom = q
+                    .iter()
+                    .filter_map(|p| p.deadline)
+                    .map(|d| d.saturating_duration_since(now).as_micros() as u64)
+                    .min();
+                let Some(bsz) = policy.plan(q.len(), oldest_us, headroom) else { break };
                 let take = q.len().min(bsz);
                 let reqs: Vec<Pending> = q.drain(..take).collect();
-                let _ = job_tx.send(WorkerMsg::Job(BatchJob {
-                    variant: variant.clone(),
-                    artifact_batch: bsz,
-                    reqs,
-                }));
+                send_job(job_tx, variant, bsz, reqs);
             }
         }
 
-        if stopping.load(Ordering::SeqCst) {
+        if stopping.load(Ordering::SeqCst) || disconnected {
+            // stop admitting, but first drain anything already accepted
+            // into the channel — those requests hold a reply promise
+            while let Ok((req, reply)) = submit_rx.try_recv() {
+                admit(req, reply, &mut queues, ctx);
+            }
             // flush leftovers at their best-fit batch, then stop workers
             for (variant, q) in queues.iter_mut() {
-                if q.is_empty() {
-                    continue;
-                }
-                let policy = &policies[variant];
+                let policy = &ctx.policies[variant];
                 while !q.is_empty() {
                     let bsz = policy.best_fit(q.len());
                     let take = q.len().min(bsz);
                     let reqs: Vec<Pending> = q.drain(..take).collect();
-                    let _ = job_tx.send(WorkerMsg::Job(BatchJob {
-                        variant: variant.clone(),
-                        artifact_batch: bsz,
-                        reqs,
-                    }));
+                    send_job(job_tx, variant, bsz, reqs);
                 }
             }
-            for _ in 0..n_workers {
+            for _ in 0..ctx.n_workers {
                 let _ = job_tx.send(WorkerMsg::Stop);
             }
             break;
@@ -313,10 +570,34 @@ fn dispatcher_loop(
     }
 }
 
+/// Hand a batch to the worker pool; if every worker is gone (all
+/// quarantined or crashed), the send fails and each request gets a typed
+/// reply instead of a dropped channel.
+fn send_job(job_tx: &Sender<WorkerMsg>, variant: &str, artifact_batch: usize, reqs: Vec<Pending>) {
+    let job = BatchJob { variant: variant.to_string(), artifact_batch, reqs };
+    if let Err(mpsc::SendError(WorkerMsg::Job(job))) = job_tx.send(WorkerMsg::Job(job)) {
+        for p in job.reqs {
+            p.reply.send(Err(ServeError::ExecutorFailed("no live workers".into())));
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
 fn worker_loop(
     exec: &mut dyn Executor,
     job_rx: &Arc<Mutex<Receiver<WorkerMsg>>>,
     metrics: &Metrics,
+    tracker: &LoadTracker,
+    quarantine_after: usize,
 ) {
     let img = exec.img();
     let classes = exec.classes();
@@ -324,20 +605,39 @@ fn worker_loop(
     // per-worker logits arena: grows to the largest artifact batch seen,
     // then every further batch runs the executor allocation-free
     let mut logits: Vec<f32> = Vec::new();
+    let mut consecutive_panics = 0usize;
     loop {
         let msg = {
-            let rx = job_rx.lock().unwrap();
+            let rx = match job_rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
             rx.recv()
         };
         let job = match msg {
             Ok(WorkerMsg::Job(j)) => j,
             Ok(WorkerMsg::Stop) | Err(_) => break,
         };
-        let occupied = job.reqs.len();
-        let padded = job.artifact_batch - occupied;
+        // requests can expire while queued in the job channel under
+        // overload — answer them here instead of spending executor time
+        let now = Instant::now();
+        let mut live: Vec<Pending> = Vec::with_capacity(job.reqs.len());
+        for p in job.reqs {
+            if p.deadline.is_some_and(|d| d <= now) {
+                metrics.on_deadline_miss();
+                p.reply.send(Err(ServeError::DeadlineExceeded));
+            } else {
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let occupied = live.len();
+        let padded = job.artifact_batch - occupied.min(job.artifact_batch);
         // assemble the (possibly padded) input batch
         let mut x = Tensor::<f32>::zeros(&[job.artifact_batch, img, img, 3]);
-        for (i, p) in job.reqs.iter().enumerate() {
+        for (i, p) in live.iter().enumerate() {
             x.data_mut()[i * px..(i + 1) * px].copy_from_slice(p.image.data());
         }
         let want = job.artifact_batch * classes;
@@ -345,34 +645,61 @@ fn worker_loop(
             logits.resize(want, 0.0);
         }
         let t_exec = Instant::now();
-        let result = exec.run_batch_into(&job.variant, job.artifact_batch, &x, &mut logits[..want]);
+        // isolate the executor: a panicking batch must fail *its* requests,
+        // not the worker (idiom shared with kernels::WorkerPool)
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            exec.run_batch_into(&job.variant, job.artifact_batch, &x, &mut logits[..want])
+        }));
         let exec_us = t_exec.elapsed().as_micros() as f64;
         metrics.on_batch(occupied, padded, exec_us);
         match result {
-            Ok(()) => {
-                for (i, p) in job.reqs.into_iter().enumerate() {
+            Ok(Ok(())) => {
+                consecutive_panics = 0;
+                for (i, p) in live.into_iter().enumerate() {
                     let row = &logits[i * classes..(i + 1) * classes];
                     let predicted = row
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(j, _)| j)
                         .unwrap_or(0);
                     let e2e_us = p.submitted.elapsed().as_micros() as f64;
                     let queue_us = e2e_us - exec_us;
                     metrics.on_response(queue_us.max(0.0), e2e_us);
-                    let _ = p.reply.send(Response {
+                    tracker.record(p.class, e2e_us);
+                    p.reply.send(Ok(Response {
                         logits: row.to_vec(),
                         predicted,
                         variant: job.variant.clone(),
+                        class: p.class,
+                        degraded: p.degraded,
                         batch: job.artifact_batch,
                         queue_us: queue_us.max(0.0),
                         e2e_us,
-                    });
+                    }));
                 }
             }
-            Err(_) => {
-                // drop the reply senders: clients see a disconnected channel
+            Ok(Err(e)) => {
+                consecutive_panics = 0;
+                let msg = format!("{e:#}");
+                for p in live {
+                    p.reply.send(Err(ServeError::ExecutorFailed(msg.clone())));
+                }
+            }
+            Err(payload) => {
+                metrics.on_worker_panic();
+                consecutive_panics += 1;
+                let msg = format!("executor panicked: {}", panic_message(payload.as_ref()));
+                for p in live {
+                    p.reply.send(Err(ServeError::ExecutorFailed(msg.clone())));
+                }
+                if consecutive_panics >= quarantine_after {
+                    // quarantine: this executor keeps failing back-to-back;
+                    // exit so surviving workers (or the dispatcher's
+                    // no-live-workers reply path) take over
+                    metrics.on_quarantine();
+                    break;
+                }
             }
         }
     }
@@ -422,6 +749,8 @@ mod tests {
         // mock logits = mean + class index -> argmax = last class
         assert_eq!(r.predicted, 3);
         assert_eq!(r.variant, "fp32");
+        assert_eq!(r.class, PrecisionClass::Accurate);
+        assert!(!r.degraded);
         assert!((r.logits[0] - 1.0).abs() < 1e-6);
         c.shutdown();
     }
@@ -439,9 +768,10 @@ mod tests {
         let c = start_mock(1, CoordinatorConfig { max_wait_us: 50_000, ..Default::default() });
         // submit 4 concurrently: should form one full batch of 4
         let rxs: Vec<_> = (0..4)
-            .map(|i| c.submit(Request { image: image(i as f32), class: PrecisionClass::Fast }).unwrap())
+            .map(|i| c.submit(Request::new(image(i as f32), PrecisionClass::Fast)).unwrap())
             .collect();
-        let resps: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let resps: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
         assert!(resps.iter().all(|r| r.batch == 4), "batches: {:?}", resps.iter().map(|r| r.batch).collect::<Vec<_>>());
         let m = c.metrics();
         assert_eq!(m.requests, 4);
@@ -462,7 +792,10 @@ mod tests {
     fn test_shape_validation() {
         let c = start_mock(1, Default::default());
         let bad = Tensor::<f32>::zeros(&[4, 4, 3]);
-        assert!(c.submit(Request { image: bad, class: PrecisionClass::Fast }).is_err());
+        match c.submit(Request::new(bad, PrecisionClass::Fast)) {
+            Err(ServeError::InvalidRequest(msg)) => assert!(msg.contains("shape"), "{msg}"),
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
         c.shutdown();
     }
 
@@ -481,15 +814,18 @@ mod tests {
             router,
             &mock_sizes(),
             8,
-            CoordinatorConfig { max_queue: 2, max_wait_us: 100, tick_us: 100 },
+            CoordinatorConfig { max_queue: 2, max_wait_us: 100, tick_us: 100, ..Default::default() },
         )
         .unwrap();
         let mut rejected = 0;
         let mut rxs = Vec::new();
         for _ in 0..50 {
-            match c.submit(Request { image: image(1.0), class: PrecisionClass::Accurate }) {
+            match c.submit(Request::new(image(1.0), PrecisionClass::Accurate)) {
                 Ok(rx) => rxs.push(rx),
-                Err(_) => rejected += 1,
+                Err(e) => {
+                    assert_eq!(e, ServeError::Overloaded);
+                    rejected += 1;
+                }
             }
         }
         assert!(rejected > 0, "expected backpressure rejections");
@@ -505,15 +841,15 @@ mod tests {
         let c = start_mock(2, CoordinatorConfig { max_wait_us: 200, ..Default::default() });
         let rxs: Vec<_> = (0..16)
             .map(|i| {
-                c.submit(Request {
-                    image: image(i as f32),
-                    class: if i % 2 == 0 { PrecisionClass::Fast } else { PrecisionClass::Accurate },
-                })
+                c.submit(Request::new(
+                    image(i as f32),
+                    if i % 2 == 0 { PrecisionClass::Fast } else { PrecisionClass::Accurate },
+                ))
                 .unwrap()
             })
             .collect();
         for rx in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().unwrap();
             assert_eq!(r.predicted, 3);
         }
         assert_eq!(c.metrics().requests, 16);
@@ -525,12 +861,135 @@ mod tests {
         let c = start_mock(1, CoordinatorConfig { max_wait_us: 10_000_000, ..Default::default() });
         // these can't hit the deadline before shutdown; shutdown must flush
         let rxs: Vec<_> = (0..2)
-            .map(|_| c.submit(Request { image: image(1.0), class: PrecisionClass::Fast }).unwrap())
+            .map(|_| c.submit(Request::new(image(1.0), PrecisionClass::Fast)).unwrap())
             .collect();
         std::thread::sleep(Duration::from_millis(5));
+        let report = c.shutdown();
+        assert!(report.drained, "drain timed out: {report:?}");
+        assert_eq!(report.leaked, 0);
+        for rx in rxs {
+            rx.recv().expect("reply must arrive").expect("pending request dropped at shutdown");
+        }
+    }
+
+    #[test]
+    fn test_shutdown_is_idempotent_and_rejects_new_submits() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        assert!(c.shutdown().drained);
+        // second drain is a no-op
+        let again = c.shutdown();
+        assert!(again.drained);
+        assert_eq!(again.joined, 0);
+        // admissions are closed
+        assert_eq!(
+            c.submit(Request::new(image(1.0), PrecisionClass::Fast)).unwrap_err(),
+            ServeError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn test_expired_deadline_gets_typed_reply_without_execution() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        let rx = c
+            .submit(Request::new(image(1.0), PrecisionClass::Fast).with_deadline(Duration::ZERO))
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        let m = c.metrics();
+        assert_eq!(m.deadline_missed, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_degrade_watermark_serves_cheaper_class() {
+        // degrade from the first queued request on: accurate traffic must
+        // come back served as the cheaper rung, marked degraded
+        let cfg = CoordinatorConfig {
+            max_wait_us: 100,
+            degrade: DegradeConfig { degrade_watermark: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let c = start_mock(1, cfg);
+        let r = c.infer(image(1.0), PrecisionClass::Accurate).unwrap();
+        assert!(r.degraded);
+        assert_eq!(r.class, PrecisionClass::Balanced);
+        assert_eq!(r.variant, "8a2w_n4"); // balanced routes to the 2-bit variant here
+        assert!(c.metrics().degraded >= 1);
+        // fast is already the cheapest rung: served as asked, not degraded
+        let f = c.infer(image(1.0), PrecisionClass::Fast).unwrap();
+        assert!(!f.degraded);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_shed_watermark_rejects_with_typed_error() {
+        let cfg = CoordinatorConfig {
+            max_wait_us: 60_000_000, // never flush on age: force queue buildup
+            degrade: DegradeConfig { shed_watermark: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let c = start_mock(1, cfg);
+        let rxs: Vec<_> = (0..6)
+            .map(|_| c.submit(Request::new(image(1.0), PrecisionClass::Fast)).unwrap())
+            .collect();
+        let mut shed = 0;
+        let mut served = 0;
+        // shutdown flushes whatever was admitted below the watermark
         c.shutdown();
         for rx in rxs {
-            assert!(rx.recv().is_ok(), "pending request dropped at shutdown");
+            match rx.recv().expect("every request must get a reply") {
+                Ok(_) => served += 1,
+                Err(ServeError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
         }
+        assert_eq!(served + shed, 6);
+        assert!(shed > 0, "expected sheds past the watermark");
+        assert_eq!(c.metrics().shed, shed);
+    }
+
+    #[test]
+    fn test_variant_without_artifacts_falls_back_down_the_ladder() {
+        // fp32 (accurate) has no artifact sizes: accurate requests must be
+        // served by the cheaper variant instead of failing at startup
+        let m = Manifest::from_json_text(MANIFEST).unwrap();
+        let router = Router::from_manifest(&m).unwrap();
+        let sizes: BTreeMap<String, Vec<usize>> =
+            [("8a2w_n4".to_string(), vec![1, 4])].into_iter().collect();
+        let factory: ExecutorFactory = Box::new(|| {
+            Ok(Box::new(MockExecutor::new(8, 4, &[("fp32", &[1, 4]), ("8a2w_n4", &[1, 4])]))
+                as Box<dyn Executor>)
+        });
+        let c = Coordinator::start(
+            vec![factory],
+            router,
+            &sizes,
+            8,
+            CoordinatorConfig { max_wait_us: 100, ..Default::default() },
+        )
+        .unwrap();
+        let r = c.infer(image(1.0), PrecisionClass::Accurate).unwrap();
+        assert_eq!(r.variant, "8a2w_n4");
+        assert!(r.degraded, "ladder fallback must be reported as degraded");
+        assert_ne!(r.class, PrecisionClass::Accurate);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_start_fails_only_when_no_variant_has_artifacts() {
+        let m = Manifest::from_json_text(MANIFEST).unwrap();
+        let router = Router::from_manifest(&m).unwrap();
+        let factory: ExecutorFactory = Box::new(|| {
+            Ok(Box::new(MockExecutor::new(8, 4, &[("fp32", &[1]), ("8a2w_n4", &[1])]))
+                as Box<dyn Executor>)
+        });
+        let empty: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        assert!(Coordinator::start(
+            vec![factory],
+            router,
+            &empty,
+            8,
+            CoordinatorConfig::default()
+        )
+        .is_err());
     }
 }

@@ -20,6 +20,35 @@ pub enum PrecisionClass {
     Accurate,
 }
 
+impl PrecisionClass {
+    /// The next-cheaper rung of the paper's §3.3 accuracy/performance
+    /// ladder (Accurate -> Balanced -> Fast), or `None` when already at
+    /// the cheapest class. This is the axis the overload degradation
+    /// policy walks: under pressure a request is served at the cheaper
+    /// precision rather than shed.
+    pub fn cheaper(self) -> Option<PrecisionClass> {
+        match self {
+            PrecisionClass::Accurate => Some(PrecisionClass::Balanced),
+            PrecisionClass::Balanced => Some(PrecisionClass::Fast),
+            PrecisionClass::Fast => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecisionClass::Fast => "fast",
+            PrecisionClass::Balanced => "balanced",
+            PrecisionClass::Accurate => "accurate",
+        }
+    }
+}
+
+impl std::fmt::Display for PrecisionClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 impl std::str::FromStr for PrecisionClass {
     type Err = anyhow::Error;
 
@@ -28,7 +57,7 @@ impl std::str::FromStr for PrecisionClass {
             "fast" => Ok(Self::Fast),
             "balanced" => Ok(Self::Balanced),
             "accurate" => Ok(Self::Accurate),
-            other => bail!("unknown precision class '{other}'"),
+            other => bail!("unknown precision class '{other}' (try fast|balanced|accurate)"),
         }
     }
 }
@@ -80,7 +109,31 @@ impl Router {
     }
 
     pub fn route(&self, class: PrecisionClass) -> &str {
-        &self.table[&class]
+        // the table is total by construction (`from_manifest` fills every
+        // class); `try_route` keeps even a malformed table panic-free
+        self.try_route(class).expect("router table missing a precision class")
+    }
+
+    /// Non-panicking lookup (the table is total by construction, so this
+    /// only returns `None` for a corrupted table).
+    pub fn try_route(&self, class: PrecisionClass) -> Option<&str> {
+        self.table.get(&class).map(String::as_str)
+    }
+
+    /// The degradation ladder: the next-cheaper class whose routed variant
+    /// actually *differs* from `class`'s (rungs that collapse onto the
+    /// same variant buy nothing and are skipped). `None` when `class` is
+    /// already served by the cheapest distinct variant.
+    pub fn next_cheaper(&self, class: PrecisionClass) -> Option<PrecisionClass> {
+        let current = self.try_route(class)?;
+        let mut c = class;
+        while let Some(n) = c.cheaper() {
+            if self.try_route(n).is_some_and(|v| v != current) {
+                return Some(n);
+            }
+            c = n;
+        }
+        None
     }
 
     /// All distinct variants the router can send traffic to.
@@ -159,5 +212,66 @@ mod tests {
     fn test_class_parsing() {
         assert_eq!("fast".parse::<PrecisionClass>().unwrap(), PrecisionClass::Fast);
         assert!("turbo".parse::<PrecisionClass>().is_err());
+        // the unknown-class error names the valid alternatives
+        let err = "turbo".parse::<PrecisionClass>().unwrap_err().to_string();
+        assert!(err.contains("fast|balanced|accurate"), "{err}");
+    }
+
+    #[test]
+    fn test_class_display_roundtrip() {
+        for c in [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate] {
+            assert_eq!(c.to_string().parse::<PrecisionClass>().unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn test_empty_variant_ladder_is_a_typed_error() {
+        let empty = r#"{"img": 24, "classes": 10, "batch_sizes": [1], "variants": {}}"#;
+        let err = Router::from_manifest(&Manifest::from_json_text(empty).unwrap());
+        assert!(err.is_err(), "empty ladder must not build a router");
+    }
+
+    #[test]
+    fn test_cheaper_ladder_order() {
+        assert_eq!(PrecisionClass::Accurate.cheaper(), Some(PrecisionClass::Balanced));
+        assert_eq!(PrecisionClass::Balanced.cheaper(), Some(PrecisionClass::Fast));
+        assert_eq!(PrecisionClass::Fast.cheaper(), None);
+    }
+
+    #[test]
+    fn test_next_cheaper_walks_to_distinct_variants() {
+        let r = router();
+        // fp32 -> 8a4w_n4 -> 8a2w_n64: every rung is a distinct variant
+        assert_eq!(r.next_cheaper(PrecisionClass::Accurate), Some(PrecisionClass::Balanced));
+        assert_eq!(r.next_cheaper(PrecisionClass::Balanced), Some(PrecisionClass::Fast));
+        assert_eq!(r.next_cheaper(PrecisionClass::Fast), None);
+    }
+
+    #[test]
+    fn test_next_cheaper_skips_collapsed_rungs() {
+        // balanced and fast collapse onto the same variant: degrading
+        // accurate must skip straight past the no-op rung, and degrading
+        // balanced has nowhere cheaper to go
+        let two = r#"{"img": 24, "classes": 10, "batch_sizes": [1],
+          "variants": {
+            "fp32":    {"files": {"1": "a"}, "eval_acc": 0.9, "w_bits": 32, "cluster": 0},
+            "8a4w_n4": {"files": {"1": "b"}, "eval_acc": 0.9, "w_bits": 4,  "cluster": 4}
+          }}"#;
+        let r = Router::from_manifest(&Manifest::from_json_text(two).unwrap()).unwrap();
+        assert_eq!(r.route(PrecisionClass::Balanced), r.route(PrecisionClass::Fast));
+        assert_eq!(r.next_cheaper(PrecisionClass::Accurate), Some(PrecisionClass::Balanced));
+        assert_eq!(r.next_cheaper(PrecisionClass::Balanced), None);
+        assert_eq!(r.next_cheaper(PrecisionClass::Fast), None);
+    }
+
+    #[test]
+    fn test_single_variant_has_no_degradation_target() {
+        let one = r#"{"img": 24, "classes": 10, "batch_sizes": [1],
+          "variants": {"only": {"files": {"1": "a"}, "eval_acc": 0.5, "w_bits": 8, "cluster": 4}}}"#;
+        let r = Router::from_manifest(&Manifest::from_json_text(one).unwrap()).unwrap();
+        for c in [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate] {
+            assert_eq!(r.next_cheaper(c), None);
+            assert_eq!(r.try_route(c), Some("only"));
+        }
     }
 }

@@ -9,6 +9,11 @@
 //! Layer map (see DESIGN.md):
 //! * [`coordinator`] — request router, dynamic batcher, worker pool (L3);
 //!   executors: PJRT (`pjrt` feature) or the pure-Rust `LpExecutor`.
+//!   Overload-resilient: per-request deadlines, watermark-driven
+//!   precision degradation down the §3.3 ladder, typed load shedding,
+//!   panic-isolated workers with quarantine, deadline-bounded drain —
+//!   every accepted request resolves with exactly one `ServeResult`
+//!   (see DESIGN.md §coordinator; chaos harness in [`testing::chaos`]).
 //! * [`runtime`]     — PJRT client wrapper: load HLO text artifacts, execute
 //!   (stubbed without the `pjrt` feature — the `xla` crate is not vendorable).
 //! * [`kernels`]     — packed-ternary execution engine: column-blocked 2-bit /

@@ -49,7 +49,8 @@ use anyhow::{bail, Context, Result};
 use dfp_infer::cli::Args;
 use dfp_infer::config::Config;
 use dfp_infer::coordinator::{
-    Coordinator, Executor, ExecutorFactory, LpExecutor, PjrtExecutor, PrecisionClass, Request, Router,
+    Coordinator, Executor, ExecutorFactory, LpExecutor, PjrtExecutor, PrecisionClass, Request,
+    Router, ServeError,
 };
 use dfp_infer::io::read_dft;
 use dfp_infer::json::Json;
@@ -509,67 +510,88 @@ fn cmd_profile(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
-    let mut manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
-    // --scheme pins serving to one precision scheme (all routes collapse)
-    if let Some(s) = &cfg.scheme {
-        let name = s.name();
-        anyhow::ensure!(
-            manifest.variants.contains_key(&name),
-            "scheme '{name}' is not an exported variant (have {:?})",
-            manifest.variants.keys().collect::<Vec<_>>()
-        );
-        println!("pinned to scheme {name}");
-        manifest.variants.retain(|n, _| *n == name);
-    }
-    let servable = LpExecutor::servable(&cfg.artifacts_dir, &manifest);
-    // auto: a pjrt-enabled build keeps the old (full-variant) behavior;
-    // the offline build falls back to lp whenever it can serve anything
-    let use_lp = match args.str_or("executor", "auto") {
-        "lp" => true,
-        "pjrt" => false,
-        "auto" => !cfg!(feature = "pjrt") && !servable.is_empty(),
-        other => bail!("unknown executor '{other}' (try auto|lp|pjrt)"),
-    };
     let registry = cfg.kernel_registry();
     let t = Timer::new();
-    let (router, sizes, factories): (
+    let (router, sizes, factories, img): (
         Router,
         std::collections::BTreeMap<String, Vec<usize>>,
         Vec<ExecutorFactory>,
-    ) = if use_lp {
-        // pure-Rust path: serve the variants with a qweights export
-        let mut m = manifest.clone();
-        m.variants.retain(|n, _| servable.contains(n));
+        usize,
+    ) = if args.has_flag("synthetic") {
+        // --synthetic: artifact-free serving over the seeded §3.3 ladder
+        // (ternary N=64 / 4-bit / full i8) — used by the resilience CI
+        // smoke and for trying the overload knobs without exports
+        let m = LpExecutor::synthetic_manifest();
         println!(
-            "executor: lpinfer (kernel {}, simd tier {}, {} GEMM threads) over {:?}",
+            "executor: lpinfer synthetic ladder (kernel {}, simd tier {}, {} GEMM threads) over {:?}",
             cfg.kernel,
             registry.tier(),
             registry.pool().threads(),
             m.variants.keys().collect::<Vec<_>>()
         );
         let router = Router::from_manifest(&m)?;
-        let sizes = m
-            .variants
-            .keys()
-            .map(|v| (v.clone(), m.batch_sizes.clone()))
-            .collect();
+        let sizes = m.variants.keys().map(|v| (v.clone(), m.batch_sizes.clone())).collect();
         let factories = (0..cfg.workers.max(1))
-            .map(|_| LpExecutor::factory(cfg.artifacts_dir.clone(), registry.clone()))
+            .map(|_| LpExecutor::synthetic_factory(cfg.seed, registry.clone()))
             .collect();
-        (router, sizes, factories)
+        (router, sizes, factories, m.img)
     } else {
-        println!("executor: pjrt");
-        let router = Router::from_manifest(&manifest)?;
-        let sizes = manifest
-            .variants
-            .iter()
-            .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
-            .collect();
-        let factories = (0..cfg.workers.max(1))
-            .map(|_| PjrtExecutor::factory(cfg.artifacts_dir.clone(), true))
-            .collect();
-        (router, sizes, factories)
+        println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
+        let mut manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+        // --scheme pins serving to one precision scheme (all routes collapse)
+        if let Some(s) = &cfg.scheme {
+            let name = s.name();
+            anyhow::ensure!(
+                manifest.variants.contains_key(&name),
+                "scheme '{name}' is not an exported variant (have {:?})",
+                manifest.variants.keys().collect::<Vec<_>>()
+            );
+            println!("pinned to scheme {name}");
+            manifest.variants.retain(|n, _| *n == name);
+        }
+        let servable = LpExecutor::servable(&cfg.artifacts_dir, &manifest);
+        // auto: a pjrt-enabled build keeps the old (full-variant) behavior;
+        // the offline build falls back to lp whenever it can serve anything
+        let use_lp = match args.str_or("executor", "auto") {
+            "lp" => true,
+            "pjrt" => false,
+            "auto" => !cfg!(feature = "pjrt") && !servable.is_empty(),
+            other => bail!("unknown executor '{other}' (try auto|lp|pjrt)"),
+        };
+        if use_lp {
+            // pure-Rust path: serve the variants with a qweights export
+            let mut m = manifest.clone();
+            m.variants.retain(|n, _| servable.contains(n));
+            println!(
+                "executor: lpinfer (kernel {}, simd tier {}, {} GEMM threads) over {:?}",
+                cfg.kernel,
+                registry.tier(),
+                registry.pool().threads(),
+                m.variants.keys().collect::<Vec<_>>()
+            );
+            let router = Router::from_manifest(&m)?;
+            let sizes = m
+                .variants
+                .keys()
+                .map(|v| (v.clone(), m.batch_sizes.clone()))
+                .collect();
+            let factories = (0..cfg.workers.max(1))
+                .map(|_| LpExecutor::factory(cfg.artifacts_dir.clone(), registry.clone()))
+                .collect();
+            (router, sizes, factories, manifest.img)
+        } else {
+            println!("executor: pjrt");
+            let router = Router::from_manifest(&manifest)?;
+            let sizes = manifest
+                .variants
+                .iter()
+                .map(|(v, i)| (v.clone(), i.files.keys().copied().collect()))
+                .collect();
+            let factories = (0..cfg.workers.max(1))
+                .map(|_| PjrtExecutor::factory(cfg.artifacts_dir.clone(), true))
+                .collect();
+            (router, sizes, factories, manifest.img)
+        }
     };
     println!(
         "routes: fast->{} balanced->{} accurate->{}",
@@ -577,7 +599,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         router.route(PrecisionClass::Balanced),
         router.route(PrecisionClass::Accurate)
     );
-    let coord = Coordinator::start(factories, router.clone(), &sizes, manifest.img, cfg.to_coordinator())?;
+    let coord = Coordinator::start(factories, router.clone(), &sizes, img, cfg.to_coordinator())?;
     println!("coordinator up ({} workers, warmup {:.1}s)", cfg.workers.max(1), t.elapsed_s());
 
     // synthetic closed-loop load: round-robin precision classes
@@ -588,40 +610,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("issuing {n} requests (ShapeSet noise={}) ...", cfg.noise);
     let protos = data::prototypes();
     let classes = [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate];
+    let deadline = (cfg.deadline_ms > 0)
+        .then(|| std::time::Duration::from_millis(cfg.deadline_ms));
     let t = Timer::new();
     let mut stats_t = Timer::new();
     let mut last_engine = telemetry::engine().snapshot();
     let mut inflight = Vec::new();
     let mut correct = 0usize;
     let mut done = 0usize;
+    let mut degraded = 0usize;
+    let mut errors = 0usize;
+    // one reply per request, served or typed-failed — tally both
+    let settle = |reply: Result<dfp_infer::coordinator::ServeResult, _>,
+                      lab: usize,
+                      correct: &mut usize,
+                      done: &mut usize,
+                      degraded: &mut usize,
+                      errors: &mut usize| {
+        match reply {
+            Ok(Ok(r)) => {
+                *correct += usize::from(r.predicted == lab);
+                *degraded += usize::from(r.degraded);
+                *done += 1;
+            }
+            Ok(Err(_)) | Err(_) => *errors += 1,
+        }
+    };
     for i in 0..n {
         let (img, label) = data::sample(&protos, cfg.seed, i as u64, cfg.noise);
         let class = classes[i % classes.len()];
         loop {
-            match coord.submit(Request { image: img.clone(), class }) {
+            let mut req = Request::new(img.clone(), class);
+            if let Some(d) = deadline {
+                req = req.with_deadline(d);
+            }
+            match coord.submit(req) {
                 Ok(rx) => {
                     inflight.push((rx, label));
                     break;
                 }
-                Err(_) => {
+                Err(ServeError::Overloaded) => {
                     // backpressure: drain one response and retry
-                    if let Some((rx, lab)) = inflight.pop() {
-                        if let Ok(r) = rx.recv() {
-                            correct += usize::from(r.predicted == lab);
-                            done += 1;
-                        }
+                    match inflight.pop() {
+                        Some((rx, lab)) => settle(
+                            rx.recv(),
+                            lab,
+                            &mut correct,
+                            &mut done,
+                            &mut degraded,
+                            &mut errors,
+                        ),
+                        None => std::thread::sleep(std::time::Duration::from_micros(100)),
                     }
                 }
+                Err(e) => bail!("submit failed: {e}"),
             }
         }
         if stats_every > 0.0 && stats_t.elapsed_s() >= stats_every {
             let m = coord.metrics();
             println!(
-                "[stats {:>6}/{n} submitted] e2e p50={:.0}us p99={:.0}us occupancy={:.1}% | {}",
+                "[stats {:>6}/{n} submitted] e2e p50={:.0}us p99={:.0}us occupancy={:.1}% \
+                 shed={} degraded={} dl_miss={} panics={} | {}",
                 i + 1,
                 m.e2e_us_p50,
                 m.e2e_us_p99,
                 100.0 * m.occupancy(),
+                m.shed,
+                m.degraded,
+                m.deadline_missed,
+                m.worker_panics,
                 m.engine.since(&last_engine).report(),
             );
             last_engine = m.engine;
@@ -629,24 +686,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     for (rx, lab) in inflight {
-        if let Ok(r) = rx.recv() {
-            correct += usize::from(r.predicted == lab);
-            done += 1;
-        }
+        settle(rx.recv(), lab, &mut correct, &mut done, &mut degraded, &mut errors);
     }
     let wall = t.elapsed_s();
     let m = coord.metrics();
     println!("\n== serving summary ==");
     println!("{}", m.report());
     println!(
-        "completed {}/{} ({} correct, acc {:.3})  wall {:.2}s  throughput {:.1} req/s",
+        "completed {}/{} ({} correct, acc {:.3}, {} degraded, {} typed errors)  wall {:.2}s  throughput {:.1} req/s",
         done,
         n,
         correct,
         correct as f64 / done.max(1) as f64,
+        degraded,
+        errors,
         wall,
         done as f64 / wall
     );
-    coord.shutdown();
+    let report = coord.shutdown();
+    if !report.drained {
+        eprintln!("warning: shutdown drain timed out ({} threads leaked)", report.leaked);
+    }
     Ok(())
 }

@@ -1,0 +1,155 @@
+//! Deterministic fault injection for the serving coordinator.
+//!
+//! [`FaultyExecutor`] wraps any [`Executor`] and injects failures on a
+//! fixed, seedless schedule driven by a call counter — panic every Nth
+//! batch, error every Mth, add fixed latency — so resilience tests
+//! (`rust/tests/serving_resilience.rs`) reproduce exactly across runs and
+//! machines. No randomness: the Kth `run_batch_into` call always behaves
+//! the same way.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::Executor;
+use crate::tensor::Tensor;
+
+/// Fault schedule for a [`FaultyExecutor`]. All mechanisms are off by
+/// default; a zero period disables that fault.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosConfig {
+    /// panic on every Nth `run_batch_into` call (1-based: with
+    /// `panic_every = 3`, calls 3, 6, 9, ... panic)
+    pub panic_every: usize,
+    /// return an `Err` on every Mth call (checked after the panic rule)
+    pub error_every: usize,
+    /// fixed latency added to every call (including faulty ones)
+    pub added_latency: Duration,
+}
+
+impl ChaosConfig {
+    pub fn panic_every(n: usize) -> Self {
+        Self { panic_every: n, ..Default::default() }
+    }
+
+    pub fn error_every(n: usize) -> Self {
+        Self { error_every: n, ..Default::default() }
+    }
+}
+
+/// [`Executor`] wrapper injecting deterministic faults per
+/// [`ChaosConfig`]. Delegates everything else to the inner executor.
+pub struct FaultyExecutor<E: Executor> {
+    inner: E,
+    cfg: ChaosConfig,
+    calls: usize,
+}
+
+impl<E: Executor> FaultyExecutor<E> {
+    pub fn new(inner: E, cfg: ChaosConfig) -> Self {
+        Self { inner, cfg, calls: 0 }
+    }
+
+    /// Total `run_batch_into` calls observed (faulty ones included).
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: Executor> Executor for FaultyExecutor<E> {
+    fn run_batch_into(
+        &mut self,
+        variant: &str,
+        batch: usize,
+        x: &Tensor<f32>,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        self.calls += 1;
+        if !self.cfg.added_latency.is_zero() {
+            std::thread::sleep(self.cfg.added_latency);
+        }
+        if self.cfg.panic_every > 0 && self.calls % self.cfg.panic_every == 0 {
+            panic!("chaos: injected panic on call {}", self.calls);
+        }
+        if self.cfg.error_every > 0 && self.calls % self.cfg.error_every == 0 {
+            anyhow::bail!("chaos: injected error on call {}", self.calls);
+        }
+        self.inner.run_batch_into(variant, batch, x, logits)
+    }
+
+    fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        self.inner.batch_sizes(variant)
+    }
+
+    fn img(&self) -> usize {
+        self.inner.img()
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExecutor;
+
+    fn mock() -> MockExecutor {
+        MockExecutor::new(4, 3, &[("v", &[1, 2])])
+    }
+
+    fn input(batch: usize) -> Tensor<f32> {
+        Tensor::new(&[batch, 4, 4, 3], vec![1.0; batch * 48]).unwrap()
+    }
+
+    #[test]
+    fn test_panic_schedule_is_deterministic() {
+        let mut e = FaultyExecutor::new(mock(), ChaosConfig::panic_every(3));
+        let x = input(1);
+        let mut logits = vec![0.0; 3];
+        for call in 1..=9 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                e.run_batch_into("v", 1, &x, &mut logits)
+            }));
+            if call % 3 == 0 {
+                assert!(r.is_err(), "call {call} must panic");
+            } else {
+                assert!(r.unwrap().is_ok(), "call {call} must succeed");
+            }
+        }
+        assert_eq!(e.calls(), 9);
+        // only the non-panicking calls reached the inner executor
+        assert_eq!(e.inner().executed.len(), 6);
+    }
+
+    #[test]
+    fn test_error_schedule() {
+        let mut e = FaultyExecutor::new(mock(), ChaosConfig::error_every(2));
+        let x = input(1);
+        let mut logits = vec![0.0; 3];
+        assert!(e.run_batch_into("v", 1, &x, &mut logits).is_ok());
+        let err = e.run_batch_into("v", 1, &x, &mut logits).unwrap_err();
+        assert!(err.to_string().contains("injected error"), "{err}");
+        assert!(e.run_batch_into("v", 1, &x, &mut logits).is_ok());
+    }
+
+    #[test]
+    fn test_no_faults_is_transparent() {
+        let mut plain = mock();
+        let mut wrapped = FaultyExecutor::new(mock(), ChaosConfig::default());
+        let x = input(2);
+        let mut a = vec![0.0; 6];
+        let mut b = vec![0.0; 6];
+        plain.run_batch_into("v", 2, &x, &mut a).unwrap();
+        wrapped.run_batch_into("v", 2, &x, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(wrapped.batch_sizes("v"), vec![1, 2]);
+        assert_eq!(wrapped.img(), 4);
+        assert_eq!(wrapped.classes(), 3);
+    }
+}

@@ -5,6 +5,8 @@
 //! before panicking with a reproducible seed. Used by
 //! `rust/tests/proptests.rs` on the coordinator/quantizer invariants.
 
+pub mod chaos;
+
 use crate::util::SplitMix64;
 
 /// A value generator with optional shrinking.

@@ -48,14 +48,14 @@ fn serves_mixed_precision_load_end_to_end() {
         labels.push(label);
         rxs.push(
             coord
-                .submit(Request { image: img, class: classes[i % 3] })
+                .submit(Request::new(img, classes[i % 3]))
                 .unwrap(),
         );
     }
     let mut correct = 0;
     let mut variants_seen = std::collections::BTreeSet::new();
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let r = rx.recv().expect("response");
+        let r = rx.recv().expect("response").expect("typed serve result");
         assert_eq!(r.logits.len(), 10);
         assert!(r.logits.iter().all(|v| v.is_finite()));
         variants_seen.insert(r.variant.clone());
@@ -84,10 +84,10 @@ fn metrics_latency_ordering_holds_under_load() {
     let mut rxs = Vec::new();
     for i in 0..16 {
         let (img, _) = data::sample(&protos, 1, i as u64, 1.0);
-        rxs.push(coord.submit(Request { image: img, class: PrecisionClass::Accurate }).unwrap());
+        rxs.push(coord.submit(Request::new(img, PrecisionClass::Accurate)).unwrap());
     }
     for rx in rxs {
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap().unwrap();
         assert!(r.e2e_us >= r.queue_us, "e2e {} < queue {}", r.e2e_us, r.queue_us);
     }
     let m = coord.metrics();

@@ -144,8 +144,8 @@ fn prop_batch_policy_invariants() {
         }
     }
     check(300, &PolicyGen, |(sizes, pending, age)| {
-        let p = BatchPolicy::new(sizes.clone(), 2_000);
-        match p.plan(*pending, *age) {
+        let p = BatchPolicy::new(sizes.clone(), 2_000).expect("non-empty positive sizes");
+        match p.plan(*pending, *age, None) {
             None => {
                 if *pending >= p.max_batch() {
                     return Err("full queue not flushed".into());
@@ -155,7 +155,7 @@ fn prop_batch_policy_invariants() {
                 }
             }
             Some(b) => {
-                if !p.sizes.contains(&b) {
+                if !p.sizes().contains(&b) {
                     return Err(format!("planned batch {b} not an artifact size"));
                 }
                 if *pending == 0 {

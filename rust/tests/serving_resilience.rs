@@ -1,0 +1,338 @@
+//! Resilience suite for the serving coordinator: the invariant under test
+//! is that **every submitted request receives exactly one reply** — a
+//! `Response` or a typed `ServeError` — under injected executor panics,
+//! 10× overload, expired deadlines, quarantine, and shutdown races.
+//! Faults come from `testing::chaos::FaultyExecutor` on a deterministic
+//! schedule, so failures reproduce exactly.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dfp_infer::coordinator::{
+    Coordinator, CoordinatorConfig, DegradeConfig, Executor, ExecutorFactory, MockExecutor,
+    PrecisionClass, Request, Router, ServeError, ServeResult,
+};
+use dfp_infer::runtime::Manifest;
+use dfp_infer::tensor::Tensor;
+use dfp_infer::testing::chaos::{ChaosConfig, FaultyExecutor};
+
+const MANIFEST: &str = r#"{
+  "img": 8, "classes": 4, "batch_sizes": [1, 4],
+  "variants": {
+    "fp32":    {"files": {"1": "a", "4": "b"}, "eval_acc": 0.9, "w_bits": 32, "cluster": 0},
+    "8a4w_n4": {"files": {"1": "c", "4": "d"}, "eval_acc": 0.88, "w_bits": 4, "cluster": 4},
+    "8a2w_n4": {"files": {"1": "e", "4": "f"}, "eval_acc": 0.8,  "w_bits": 2, "cluster": 4}
+  }
+}"#;
+
+const VARIANTS: [&str; 3] = ["fp32", "8a4w_n4", "8a2w_n4"];
+
+fn sizes() -> BTreeMap<String, Vec<usize>> {
+    VARIANTS.iter().map(|v| (v.to_string(), vec![1, 4])).collect()
+}
+
+fn mock() -> MockExecutor {
+    MockExecutor::new(8, 4, &[("fp32", &[1, 4]), ("8a4w_n4", &[1, 4]), ("8a2w_n4", &[1, 4])])
+}
+
+fn start(factories: Vec<ExecutorFactory>, cfg: CoordinatorConfig) -> Coordinator {
+    let m = Manifest::from_json_text(MANIFEST).unwrap();
+    let router = Router::from_manifest(&m).unwrap();
+    Coordinator::start(factories, router, &sizes(), 8, cfg).unwrap()
+}
+
+fn image(v: f32) -> Tensor<f32> {
+    Tensor::new(&[8, 8, 3], vec![v; 192]).unwrap()
+}
+
+/// The no-hang guard: a reply must arrive well within the suite budget.
+fn recv_one(rx: &Receiver<ServeResult>) -> ServeResult {
+    rx.recv_timeout(Duration::from_secs(10)).expect("request lost: no reply within 10s")
+}
+
+#[test]
+fn test_no_request_lost_under_panics_at_10x_overload() {
+    // every 3rd batch on each worker panics; offered load is ~10x what a
+    // tiny admission queue absorbs, so Overloaded submit errors are part
+    // of the expected outcome set
+    let factories: Vec<ExecutorFactory> = (0..2)
+        .map(|_| {
+            Box::new(|| {
+                let mut inner = mock();
+                inner.delay_us_per_image = 200;
+                Ok(Box::new(FaultyExecutor::new(inner, ChaosConfig::panic_every(3)))
+                    as Box<dyn Executor>)
+            }) as ExecutorFactory
+        })
+        .collect();
+    let c = start(
+        factories,
+        CoordinatorConfig {
+            max_queue: 16,
+            max_wait_us: 500,
+            quarantine_after: 1_000, // isolate panics without quarantining
+            ..Default::default()
+        },
+    );
+    let classes =
+        [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate];
+    let total = 160;
+    let mut rxs = Vec::new();
+    let mut rejected = 0u32;
+    for i in 0..total {
+        match c.submit(Request::new(image(i as f32), classes[i % 3])) {
+            Ok(rx) => rxs.push(rx),
+            Err(ServeError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        // no pacing: keep offered load far past capacity
+    }
+    let mut served = 0u32;
+    let mut failed = 0u32;
+    for rx in &rxs {
+        match recv_one(rx) {
+            Ok(r) => {
+                assert_eq!(r.predicted, 3); // mock argmax = last class
+                served += 1;
+            }
+            Err(ServeError::ExecutorFailed(msg)) => {
+                assert!(msg.contains("panic"), "unexpected failure: {msg}");
+                failed += 1;
+            }
+            Err(e) => panic!("unexpected reply: {e}"),
+        }
+    }
+    assert_eq!(served + failed + rejected, total as u32, "a request went unaccounted");
+    assert!(served > 0, "panicking executors must not take down all traffic");
+    assert!(failed > 0, "panic injection never fired");
+    let m = c.metrics();
+    assert!(m.worker_panics > 0);
+    assert_eq!(m.quarantined, 0);
+    let report = c.shutdown();
+    assert!(report.drained, "shutdown failed to drain in time: {report:?}");
+}
+
+#[test]
+fn test_expired_deadlines_are_answered_not_executed() {
+    let factory: ExecutorFactory = Box::new(|| {
+        let mut slow = mock();
+        slow.delay_us_per_image = 5_000;
+        Ok(Box::new(slow) as Box<dyn Executor>)
+    });
+    let c = start(
+        vec![factory],
+        CoordinatorConfig { max_wait_us: 500, ..Default::default() },
+    );
+    // a burst with 1ms deadlines against a 5ms/image executor: the head
+    // of the burst is served, the tail expires in queue
+    let rxs: Vec<_> = (0..12)
+        .map(|i| {
+            c.submit(
+                Request::new(image(i as f32), PrecisionClass::Fast)
+                    .with_deadline(Duration::from_millis(1)),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut expired = 0;
+    let mut served = 0;
+    for rx in &rxs {
+        match recv_one(rx) {
+            Ok(_) => served += 1,
+            Err(ServeError::DeadlineExceeded) => expired += 1,
+            Err(e) => panic!("unexpected reply: {e}"),
+        }
+    }
+    assert_eq!(served + expired, 12);
+    assert!(expired > 0, "no deadline ever expired under a 5ms/image executor");
+    assert_eq!(c.metrics().deadline_missed, expired as u64);
+    // an already-expired deadline short-circuits before queueing
+    let rx = c
+        .submit(Request::new(image(0.0), PrecisionClass::Fast).with_deadline(Duration::ZERO))
+        .unwrap();
+    assert_eq!(recv_one(&rx).unwrap_err(), ServeError::DeadlineExceeded);
+    c.shutdown();
+}
+
+#[test]
+fn test_overload_degrades_then_sheds_along_the_ladder() {
+    let factory: ExecutorFactory = Box::new(|| {
+        let mut slow = mock();
+        slow.delay_us_per_image = 2_000;
+        Ok(Box::new(slow) as Box<dyn Executor>)
+    });
+    let c = start(
+        vec![factory],
+        CoordinatorConfig {
+            max_wait_us: 500,
+            degrade: DegradeConfig {
+                degrade_watermark: 2,
+                shed_watermark: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = (0..40)
+        .map(|i| c.submit(Request::new(image(i as f32), PrecisionClass::Accurate)).unwrap())
+        .collect();
+    let mut degraded = 0;
+    let mut full = 0;
+    let mut shed = 0;
+    for rx in &rxs {
+        match recv_one(rx) {
+            Ok(r) if r.degraded => {
+                assert_ne!(r.class, PrecisionClass::Accurate);
+                assert_ne!(r.variant, "fp32");
+                degraded += 1;
+            }
+            Ok(r) => {
+                assert_eq!(r.variant, "fp32");
+                full += 1;
+            }
+            Err(ServeError::Overloaded) => shed += 1,
+            Err(e) => panic!("unexpected reply: {e}"),
+        }
+    }
+    assert_eq!(degraded + full + shed, 40);
+    assert!(degraded > 0, "queue past the degrade watermark never degraded");
+    let m = c.metrics();
+    assert_eq!(m.degraded, degraded as u64);
+    assert_eq!(m.shed, shed as u64);
+    c.shutdown();
+}
+
+#[test]
+fn test_quarantine_after_consecutive_panics_with_survivor() {
+    // worker 0 always panics and must be quarantined after 2 strikes;
+    // worker 1 is healthy and keeps the service alive
+    let always_faulty: ExecutorFactory = Box::new(|| {
+        Ok(Box::new(FaultyExecutor::new(mock(), ChaosConfig::panic_every(1)))
+            as Box<dyn Executor>)
+    });
+    let healthy: ExecutorFactory = Box::new(|| Ok(Box::new(mock()) as Box<dyn Executor>));
+    let c = start(
+        vec![always_faulty, healthy],
+        CoordinatorConfig { max_wait_us: 200, quarantine_after: 2, ..Default::default() },
+    );
+    // drive traffic until the faulty worker has struck out
+    let mut failures = 0;
+    for i in 0..60 {
+        let rx = c.submit(Request::new(image(i as f32), PrecisionClass::Fast)).unwrap();
+        if recv_one(&rx).is_err() {
+            failures += 1;
+        }
+        if c.metrics().quarantined > 0 {
+            break;
+        }
+    }
+    let m = c.metrics();
+    assert!(m.quarantined >= 1, "faulty worker never quarantined (failures={failures})");
+    assert!(m.worker_panics >= 2);
+    // post-quarantine: the healthy worker serves everything
+    for i in 0..10 {
+        let rx = c.submit(Request::new(image(i as f32), PrecisionClass::Balanced)).unwrap();
+        recv_one(&rx).expect("healthy worker must serve after quarantine");
+    }
+    assert!(c.shutdown().drained);
+}
+
+#[test]
+fn test_all_workers_quarantined_yields_typed_errors_not_hangs() {
+    let always_faulty: ExecutorFactory = Box::new(|| {
+        Ok(Box::new(FaultyExecutor::new(mock(), ChaosConfig::panic_every(1)))
+            as Box<dyn Executor>)
+    });
+    let c = start(
+        vec![always_faulty],
+        CoordinatorConfig { max_wait_us: 200, quarantine_after: 1, ..Default::default() },
+    );
+    // first request trips the quarantine; every reply stays typed
+    for i in 0..8 {
+        let rx = c.submit(Request::new(image(i as f32), PrecisionClass::Fast)).unwrap();
+        match recv_one(&rx) {
+            Err(ServeError::ExecutorFailed(_)) | Err(ServeError::ShuttingDown) => {}
+            other => panic!("expected a typed failure, got {other:?}"),
+        }
+    }
+    let m = c.metrics();
+    assert_eq!(m.quarantined, 1);
+    assert!(c.shutdown().drained, "drain must not wait on a quarantined worker");
+}
+
+#[test]
+fn test_injected_errors_reply_without_panicking_worker() {
+    let factory: ExecutorFactory = Box::new(|| {
+        Ok(Box::new(FaultyExecutor::new(mock(), ChaosConfig::error_every(2)))
+            as Box<dyn Executor>)
+    });
+    let c = start(
+        vec![factory],
+        CoordinatorConfig { max_wait_us: 200, ..Default::default() },
+    );
+    let mut served = 0;
+    let mut failed = 0;
+    for i in 0..10 {
+        let rx = c.submit(Request::new(image(i as f32), PrecisionClass::Fast)).unwrap();
+        match recv_one(&rx) {
+            Ok(_) => served += 1,
+            Err(ServeError::ExecutorFailed(msg)) => {
+                assert!(msg.contains("injected error"), "{msg}");
+                failed += 1;
+            }
+            Err(e) => panic!("unexpected reply: {e}"),
+        }
+    }
+    assert_eq!(served + failed, 10);
+    assert!(served > 0 && failed > 0);
+    // errors are not panics: no quarantine, no panic counter
+    let m = c.metrics();
+    assert_eq!(m.worker_panics, 0);
+    assert_eq!(m.quarantined, 0);
+    c.shutdown();
+}
+
+#[test]
+fn test_shutdown_races_with_inflight_submits() {
+    let factory: ExecutorFactory = Box::new(|| {
+        let mut slow = mock();
+        slow.delay_us_per_image = 300;
+        Ok(Box::new(slow) as Box<dyn Executor>)
+    });
+    let c = Arc::new(start(
+        vec![factory],
+        CoordinatorConfig { max_wait_us: 300, ..Default::default() },
+    ));
+    let submitters: Vec<_> = (0..4)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                let mut rxs = Vec::new();
+                for i in 0..200 {
+                    match c.submit(Request::new(image(i as f32), PrecisionClass::Fast)) {
+                        Ok(rx) => rxs.push(rx),
+                        // overload or the shutdown door closing: both typed
+                        Err(ServeError::Overloaded) | Err(ServeError::ShuttingDown) => {}
+                        Err(e) => panic!("thread {t}: unexpected submit error: {e}"),
+                    }
+                }
+                rxs
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10));
+    let report = c.shutdown_within(Duration::from_secs(10));
+    assert!(report.drained, "drain timed out: {report:?}");
+    // every accepted submit — including any that raced the drain — must
+    // still resolve to exactly one typed reply
+    for h in submitters {
+        for rx in h.join().unwrap() {
+            match recv_one(&rx) {
+                Ok(_) | Err(ServeError::ShuttingDown) => {}
+                Err(e) => panic!("unexpected reply during shutdown race: {e}"),
+            }
+        }
+    }
+}
