@@ -31,7 +31,7 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import data as D
-from .dft import read_dft, write_dft
+from .dft import ArtifactError, read_dft, write_dft
 from .model import (
     ModelSpec, QuantConfig, build_qmodel, eval_fp, eval_qmodel, forward_fp,
     forward_quant,
@@ -108,6 +108,23 @@ def export_qweights(path: str, qm) -> None:
     t["meta.w_bits"] = np.array([qm.cfg.w_bits], np.int32)
     t["meta.requant_version"] = np.array([REQUANT_VERSION], np.int32)
     write_dft(path, t)
+    _verify_export(path, t)
+
+
+def _verify_export(path: str, written: dict) -> None:
+    """Read an export straight back, re-verifying every v2 checksum.
+
+    The read walks the same FNV-1a validation the rust loader uses, so a
+    torn write or filesystem corruption fails here at export time instead
+    of at serve time on another machine.
+    """
+    back = read_dft(path)
+    if set(back) != set(written):
+        missing = sorted(set(written) ^ set(back))
+        raise ArtifactError(f"{path}: read-back tensor set mismatch: {missing}")
+    for name, arr in written.items():
+        if not np.array_equal(back[name], np.ascontiguousarray(arr)):
+            raise ArtifactError(f"{path}: read-back payload mismatch in '{name}'")
 
 
 def main():
@@ -165,8 +182,10 @@ def main():
         }
 
     # eval data for the rust drivers (images f32, labels i32)
-    write_dft(os.path.join(args.out, "eval_data.dft"),
-              {"images": ex[:256], "labels": ey[:256].astype(np.int32)})
+    eval_t = {"images": ex[:256], "labels": ey[:256].astype(np.int32)}
+    eval_path = os.path.join(args.out, "eval_data.dft")
+    write_dft(eval_path, eval_t)
+    _verify_export(eval_path, eval_t)
 
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)

@@ -1,7 +1,7 @@
 """DFT — tiny binary tensor container for python <-> rust interchange.
 
-Layout (little endian):
-    magic   b"DFT1"
+v2 layout (little endian), the format `write_dft` emits:
+    magic   b"DFT2"
     u32     tensor count
     per tensor:
         u16     name length, then utf-8 name bytes
@@ -9,9 +9,13 @@ Layout (little endian):
         u8      ndim
         u32*    dims
         u64     payload byte length, then raw row-major data
+        u64     FNV-1a 64 of the record (name-length field through payload)
+    u64     FNV-1a 64 of every preceding byte (whole-file trailer)
 
-The rust reader/writer lives in rust/src/io/; integration tests round-trip
-files written by each side through the other.
+v1 (b"DFT1") is the same layout without either checksum; `read_dft` still
+accepts it. The rust reader/writer lives in rust/src/io/; integration tests
+round-trip files written by each side through the other, and checksums are
+verified on every v2 read so a corrupt export fails at load, not at serve.
 """
 
 from __future__ import annotations
@@ -21,7 +25,12 @@ from typing import Dict
 
 import numpy as np
 
-MAGIC = b"DFT1"
+MAGIC_V1 = b"DFT1"
+MAGIC_V2 = b"DFT2"
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_U64 = (1 << 64) - 1
 
 _DTYPE_TAGS = {
     np.dtype(np.float32): 0,
@@ -33,41 +42,125 @@ _DTYPE_TAGS = {
 _TAG_DTYPES = {v: k for k, v in _DTYPE_TAGS.items()}
 
 
+def fnv1a(data: bytes) -> int:
+    """FNV-1a 64-bit hash — the DFT v2 integrity checksum (mirrors rust)."""
+    h = _FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * _FNV_PRIME) & _U64
+    return h
+
+
+class ArtifactError(ValueError):
+    """A DFT file failed structural or checksum validation."""
+
+
+def _encode_record(name: str, arr: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _DTYPE_TAGS:
+        raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+    nb = name.encode("utf-8")
+    parts = [struct.pack("<H", len(nb)), nb,
+             struct.pack("<BB", _DTYPE_TAGS[arr.dtype], arr.ndim)]
+    for d in arr.shape:
+        parts.append(struct.pack("<I", d))
+    raw = arr.tobytes()
+    parts.append(struct.pack("<Q", len(raw)))
+    parts.append(raw)
+    return b"".join(parts)
+
+
 def write_dft(path: str, tensors: Dict[str, np.ndarray]) -> None:
-    """Write a name->array mapping. Arrays are cast-checked, not converted."""
+    """Write a name->array mapping as DFT v2 (checksummed)."""
+    buf = bytearray()
+    buf += MAGIC_V2
+    buf += struct.pack("<I", len(tensors))
+    for name, arr in tensors.items():
+        rec = _encode_record(name, arr)
+        buf += rec
+        buf += struct.pack("<Q", fnv1a(rec))
+    buf += struct.pack("<Q", fnv1a(bytes(buf)))
     with open(path, "wb") as f:
-        f.write(MAGIC)
+        f.write(bytes(buf))
+
+
+def write_dft_v1(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write the legacy v1 layout (no checksums) — kept for compat tests."""
+    with open(path, "wb") as f:
+        f.write(MAGIC_V1)
         f.write(struct.pack("<I", len(tensors)))
         for name, arr in tensors.items():
-            arr = np.ascontiguousarray(arr)
-            if arr.dtype not in _DTYPE_TAGS:
-                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
-            nb = name.encode("utf-8")
-            f.write(struct.pack("<H", len(nb)))
-            f.write(nb)
-            f.write(struct.pack("<BB", _DTYPE_TAGS[arr.dtype], arr.ndim))
-            for d in arr.shape:
-                f.write(struct.pack("<I", d))
-            raw = arr.tobytes()
-            f.write(struct.pack("<Q", len(raw)))
-            f.write(raw)
+            f.write(_encode_record(name, arr))
 
 
 def read_dft(path: str) -> Dict[str, np.ndarray]:
-    """Read a .dft file back into a name->array mapping."""
-    out: Dict[str, np.ndarray] = {}
+    """Read a .dft file (v1 or v2) into a name->array mapping.
+
+    v2 checksums (per-tensor and whole-file) are always verified; any
+    mismatch, truncation, or unknown version raises ArtifactError naming
+    the path (and tensor where known).
+    """
     with open(path, "rb") as f:
-        if f.read(4) != MAGIC:
-            raise ValueError(f"{path}: bad magic")
-        (count,) = struct.unpack("<I", f.read(4))
-        for _ in range(count):
-            (nlen,) = struct.unpack("<H", f.read(2))
-            name = f.read(nlen).decode("utf-8")
-            tag, ndim = struct.unpack("<BB", f.read(2))
-            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
-            (blen,) = struct.unpack("<Q", f.read(8))
-            data = f.read(blen)
-            dt = _TAG_DTYPES[tag]
-            arr = np.frombuffer(data, dtype=dt).reshape(dims).copy()
-            out[name] = arr
+        raw = f.read()
+
+    magic = raw[:4]
+    if magic == MAGIC_V1:
+        version = 1
+    elif magic == MAGIC_V2:
+        version = 2
+    elif magic[:3] == b"DFT":
+        raise ArtifactError(f"{path}: unsupported DFT format version {magic[3:4]!r}")
+    else:
+        raise ArtifactError(f"{path}: bad magic {magic!r} (not a DFT file)")
+
+    if version == 2:
+        if len(raw) < 16:
+            raise ArtifactError(f"{path}: truncated at offset {len(raw)}")
+        (stored,) = struct.unpack("<Q", raw[-8:])
+        computed = fnv1a(raw[:-8])
+        if stored != computed:
+            raise ArtifactError(
+                f"{path}: whole-file checksum mismatch "
+                f"(stored {stored:#018x}, computed {computed:#018x})")
+        body_end = len(raw) - 8
+    else:
+        body_end = len(raw)
+
+    pos = 4
+
+    def take(n: int) -> bytes:
+        nonlocal pos
+        if pos + n > len(raw):
+            raise ArtifactError(f"{path}: truncated at offset {pos}")
+        s = raw[pos:pos + n]
+        pos += n
+        return s
+
+    (count,) = struct.unpack("<I", take(4))
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        start = pos
+        (nlen,) = struct.unpack("<H", take(2))
+        name = take(nlen).decode("utf-8")
+        tag, ndim = struct.unpack("<BB", take(2))
+        if tag not in _TAG_DTYPES:
+            raise ArtifactError(f"{path}: tensor '{name}': unknown dtype tag {tag}")
+        dims = struct.unpack(f"<{ndim}I", take(4 * ndim)) if ndim else ()
+        (blen,) = struct.unpack("<Q", take(8))
+        data = take(blen)
+        dt = _TAG_DTYPES[tag]
+        expected = int(np.prod(dims, dtype=np.int64)) * dt.itemsize
+        if blen != expected:
+            raise ArtifactError(
+                f"{path}: tensor '{name}': payload {blen} bytes != shape {list(dims)} * dtype")
+        if version == 2:
+            computed = fnv1a(raw[start:pos])
+            (stored,) = struct.unpack("<Q", take(8))
+            if stored != computed:
+                raise ArtifactError(
+                    f"{path}: checksum mismatch in tensor '{name}' "
+                    f"(stored {stored:#018x}, computed {computed:#018x})")
+        out[name] = np.frombuffer(data, dtype=dt).reshape(dims).copy()
+    if pos != body_end:
+        raise ArtifactError(
+            f"{path}: corrupt: {body_end - pos} trailing bytes after last tensor record")
     return out

@@ -5,13 +5,16 @@
 //! `BENCH_serving.json`: one row per precision class with throughput and
 //! p50/p95/p99 latency plus engine-counter deltas, a **saturation sweep**
 //! (closed-loop offered load at rising concurrency → per-level p50/p99 and
-//! the `throughput_knee` where added load stops buying throughput), and a
+//! the `throughput_knee` where added load stops buying throughput), a
 //! **batch ladder** (per-image throughput at B=1 vs B=8 through one warmed
-//! workspace → `batch_speedup`) — the serving-level perf baseline
-//! subsequent PRs diff against.
+//! workspace → `batch_speedup`), and a **swap tax** leg (Fast-class p99
+//! with artifact hot-swaps fired mid-stream vs an undisturbed baseline →
+//! `swap_p99_delta`) — the serving-level perf baseline subsequent PRs
+//! diff against.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
+use std::sync::Arc;
 
 use dfp_infer::coordinator::{
     Coordinator, CoordinatorConfig, ExecutorFactory, LpExecutor, PrecisionClass, Request, Router,
@@ -20,7 +23,7 @@ use dfp_infer::data;
 use dfp_infer::json::Json;
 use dfp_infer::kernels::KernelRegistry;
 use dfp_infer::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
-use dfp_infer::model::resnet_mini;
+use dfp_infer::model::{resnet_mini, resnet_mini_default};
 use dfp_infer::scheme::Scheme;
 use dfp_infer::telemetry;
 use dfp_infer::tensor::Tensor;
@@ -94,6 +97,68 @@ fn saturation_sweep(coord: &Coordinator, protos: &[Vec<f32>], quick: bool) -> Js
     ])
 }
 
+/// Hot-swap tax: the same closed-loop Fast-class stream twice — once
+/// undisturbed, once with full artifact reloads (export → checksum verify →
+/// deep validation → two-phase commit) fired every quarter of the run.
+/// Reload preparation happens off the hot path, so the p99 delta between
+/// the legs is the cost a swap imposes on in-flight traffic; it lands in
+/// the JSON as `swap_p99_delta` for CI to diff against.
+fn swap_leg(coord: &Coordinator, protos: &[Vec<f32>], quick: bool) -> Json {
+    let n = if quick { 24 } else { 96 };
+    let dir = std::env::temp_dir().join(format!("dfp_bench_swap_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // same seed as the serving store: identical weights, so the legs differ
+    // only in whether generations churn underneath the stream
+    LpExecutor::export_synthetic_artifacts(&dir, 7).unwrap();
+    println!("\n== swap tax: fast class, {n} requests per leg ==");
+    let mut p99 = [0f64; 2];
+    let mut swaps = 0u64;
+    for (leg, label) in [(0usize, "baseline"), (1, "with swaps")] {
+        let mut lat = Summary::new();
+        let mut inflight: VecDeque<_> = VecDeque::with_capacity(4);
+        for i in 0..n {
+            let (img, _) = data::sample(protos, 5, (90_000 + leg * n + i) as u64, 1.0);
+            loop {
+                match coord.submit(Request::new(img.clone(), PrecisionClass::Fast)) {
+                    Ok(rx) => {
+                        inflight.push_back(rx);
+                        break;
+                    }
+                    Err(_) => match inflight.pop_front() {
+                        Some(rx) => lat.add(rx.recv().unwrap().unwrap().e2e_us / 1e3),
+                        None => std::thread::sleep(std::time::Duration::from_micros(100)),
+                    },
+                }
+            }
+            if leg == 1 && i % (n / 4).max(1) == 0 {
+                coord.reload(&dir).expect("hot-swap of a valid artifact set");
+                swaps += 1;
+            }
+            while inflight.len() >= 4 {
+                lat.add(inflight.pop_front().unwrap().recv().unwrap().unwrap().e2e_us / 1e3);
+            }
+        }
+        for rx in inflight {
+            lat.add(rx.recv().unwrap().unwrap().e2e_us / 1e3);
+        }
+        p99[leg] = lat.percentile(99.0);
+        println!("  {label:<11} p50 {:>7.2} ms   p99 {:>7.2} ms", lat.percentile(50.0), p99[leg]);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    let delta = p99[1] - p99[0];
+    println!("  swap tax: {swaps} reloads, p99 delta {delta:+.2} ms (now at generation {})",
+        coord.serving_generation());
+    Json::obj(vec![
+        ("class", Json::str("fast")),
+        ("requests_per_leg", Json::num(n as f64)),
+        ("swaps", Json::num(swaps as f64)),
+        ("generation", Json::num(coord.serving_generation() as f64)),
+        ("baseline_p99_ms", Json::num(p99[0])),
+        ("swap_p99_ms", Json::num(p99[1])),
+        ("swap_p99_delta", Json::num(delta)),
+    ])
+}
+
 /// Executor-level batch ladder: per-image throughput at B=1 vs B=8 through
 /// the same warmed workspace and a 2-thread registry, on the small test
 /// network where per-call costs (pool dispatch, plan traversal, profiler
@@ -157,7 +222,15 @@ fn main() {
         .map(|(v, _, _)| (v.to_string(), LpExecutor::SYNTHETIC_BATCH_SIZES.to_vec()))
         .collect();
 
-    let factory: ExecutorFactory = LpExecutor::synthetic_factory(7, KernelRegistry::new(None, 1));
+    // the workers share one VariantStore so the swap-tax leg can hot-swap
+    // artifacts under them mid-stream
+    let store = LpExecutor::synthetic_store(7);
+    let factory: ExecutorFactory = LpExecutor::store_factory(
+        resnet_mini_default(),
+        Arc::clone(&store),
+        KernelRegistry::new(None, 1),
+        LpExecutor::SYNTHETIC_BATCH_SIZES.to_vec(),
+    );
     let coord = Coordinator::start(
         vec![factory],
         router,
@@ -166,6 +239,7 @@ fn main() {
         CoordinatorConfig { max_wait_us: 3_000, ..Default::default() },
     )
     .unwrap();
+    coord.install_reload_hook(LpExecutor::reload_hook(store));
 
     let protos = data::prototypes();
     // warm each routed variant once so plan/arena builds stay off the clock
@@ -222,6 +296,7 @@ fn main() {
     }
 
     let saturation = saturation_sweep(&coord, &protos, quick);
+    let swap = swap_leg(&coord, &protos, quick);
     let ladder = batch_ladder(quick);
 
     let m = coord.metrics();
@@ -242,6 +317,7 @@ fn main() {
         ("quarantined", Json::num(m.quarantined as f64)),
         ("cases", Json::arr(cases)),
         ("saturation", saturation),
+        ("swap", swap),
         ("batch_ladder", ladder),
         ("engine_total", m.engine.to_json()),
     ]);

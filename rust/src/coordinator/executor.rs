@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -15,6 +16,9 @@ use crate::lpinfer::{forward_quant_into, ForwardWorkspace, QModelParams};
 use crate::model::Network;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+
+use super::router::Router;
+use super::swap::{PreparedSwap, ReloadHook, SwapError, VariantSet, VariantStore};
 
 /// Factory that builds an executor *on the worker's own thread* — PJRT
 /// handles are not `Send`, so only the factory crosses threads.
@@ -136,7 +140,10 @@ impl Executor for PjrtExecutor {
 /// `lpinfer::forward_quant_into`).
 pub struct LpExecutor {
     net: Network,
-    variants: BTreeMap<String, QModelParams>,
+    /// shared hot-swappable weight slot — every worker's executor holds the
+    /// same store, so a published generation is visible to all of them at
+    /// their next batch without copying a single weight
+    store: Arc<VariantStore>,
     registry: KernelRegistry,
     workspace: ForwardWorkspace,
     sizes: Vec<usize>,
@@ -145,17 +152,38 @@ pub struct LpExecutor {
 }
 
 impl LpExecutor {
-    /// Build from in-memory params (tests, synthetic serving).
+    /// Build from in-memory params (tests, synthetic serving). The params
+    /// are wrapped into a private [`VariantStore`]; use [`Self::with_store`]
+    /// to share one store (and hot-swap it) across executors.
     pub fn new(
         net: Network,
         variants: BTreeMap<String, QModelParams>,
         registry: KernelRegistry,
+        sizes: Vec<usize>,
+    ) -> Result<Self> {
+        let variants: BTreeMap<String, Arc<QModelParams>> =
+            variants.into_iter().map(|(name, p)| (name, Arc::new(p))).collect();
+        let store = Arc::new(VariantStore::new(VariantSet::new(variants)));
+        Self::with_store(net, store, registry, sizes)
+    }
+
+    /// Build over a shared [`VariantStore`]: the coordinator's per-worker
+    /// executors all hold the same store, and [`Self::reload_hook`]
+    /// publishes new generations into it. The store's *current* set is
+    /// validated against `net` here; later generations are validated by
+    /// whoever publishes them (the reload hook validates fully before
+    /// commit).
+    pub fn with_store(
+        net: Network,
+        store: Arc<VariantStore>,
+        registry: KernelRegistry,
         mut sizes: Vec<usize>,
     ) -> Result<Self> {
-        if variants.is_empty() {
+        let current = store.current();
+        if current.variants.is_empty() {
             bail!("LpExecutor needs at least one variant");
         }
-        for (name, p) in &variants {
+        for (name, p) in &current.variants {
             p.validate(&net).with_context(|| format!("variant '{name}'"))?;
         }
         sizes.sort_unstable();
@@ -164,7 +192,12 @@ impl LpExecutor {
             sizes = vec![1, 8, 32];
         }
         let (img, classes) = (net.input_hw, net.fc_out);
-        Ok(Self { net, variants, registry, workspace: ForwardWorkspace::new(), sizes, img, classes })
+        Ok(Self { net, store, registry, workspace: ForwardWorkspace::new(), sizes, img, classes })
+    }
+
+    /// The shared weight slot this executor serves from.
+    pub fn store(&self) -> Arc<VariantStore> {
+        Arc::clone(&self.store)
     }
 
     /// The manifest variants this executor could serve from `dir`: sub-8-bit
@@ -183,9 +216,15 @@ impl LpExecutor {
             .collect()
     }
 
-    /// Load every quantized variant the manifest lists for which a
-    /// `qweights_<variant>.dft` export exists next to it.
-    pub fn from_artifacts(dir: &Path, registry: KernelRegistry) -> Result<Self> {
+    /// Load + deep-validate every lp-servable variant in `dir`: manifest
+    /// (typed parse errors naming the file), geometry cross-check, DFT
+    /// checksums, packed-code ranges, requant envelopes and scheme
+    /// consistency — everything that must hold before a set may serve.
+    /// The single load path shared by [`Self::from_artifacts`],
+    /// [`Self::reload_hook`] and the `verify-artifact` CLI.
+    pub fn load_variant_set(
+        dir: &Path,
+    ) -> Result<(crate::runtime::Manifest, BTreeMap<String, Arc<QModelParams>>)> {
         let manifest = crate::runtime::Manifest::load(&dir.join("manifest.json"))?;
         let net = crate::model::resnet_mini_default();
         if manifest.img != net.input_hw || manifest.classes != net.fc_out {
@@ -204,7 +243,8 @@ impl LpExecutor {
             let path = dir.join(format!("qweights_{name}.dft"));
             let map = crate::io::read_dft(&path)
                 .with_context(|| format!("reading {}", path.display()))?;
-            let params = QModelParams::from_tensors(&map, &net)?;
+            let params = QModelParams::from_tensors(&map, &net)
+                .with_context(|| format!("validating {}", path.display()))?;
             // a scheme-named variant must be consistent end to end: the
             // manifest metadata must agree with the name, and the qweights
             // export must realize the same default policy
@@ -221,12 +261,25 @@ impl LpExecutor {
                     params.scheme
                 );
             }
-            variants.insert(name.clone(), params);
+            variants.insert(name.clone(), Arc::new(params));
         }
         if variants.is_empty() {
             bail!("no qweights_<variant>.dft exports found in {}", dir.display());
         }
-        Self::new(net, variants, registry, manifest.batch_sizes.clone())
+        Ok((manifest, variants))
+    }
+
+    /// Load every quantized variant the manifest lists for which a
+    /// `qweights_<variant>.dft` export exists next to it.
+    pub fn from_artifacts(dir: &Path, registry: KernelRegistry) -> Result<Self> {
+        let (manifest, variants) = Self::load_variant_set(dir)?;
+        let store = Arc::new(VariantStore::new(VariantSet::new(variants)));
+        Self::with_store(
+            crate::model::resnet_mini_default(),
+            store,
+            registry,
+            manifest.batch_sizes.clone(),
+        )
     }
 
     /// Factory for [`crate::coordinator::Coordinator::start`].
@@ -236,9 +289,61 @@ impl LpExecutor {
         })
     }
 
-    /// Names of the variants this executor can serve.
-    pub fn variants(&self) -> Vec<&str> {
-        self.variants.keys().map(String::as_str).collect()
+    /// Load `dir` once into a shared store for a multi-worker coordinator;
+    /// returns the manifest alongside so the caller can build the router.
+    pub fn shared_store_from_artifacts(
+        dir: &Path,
+    ) -> Result<(crate::runtime::Manifest, Arc<VariantStore>)> {
+        let (manifest, variants) = Self::load_variant_set(dir)?;
+        Ok((manifest, Arc::new(VariantStore::new(VariantSet::new(variants)))))
+    }
+
+    /// Factory over a shared [`VariantStore`]: all workers serve the same
+    /// weight slot, which is what makes [`Self::reload_hook`] hot-swaps
+    /// visible to the whole pool at once.
+    pub fn store_factory(
+        net: Network,
+        store: Arc<VariantStore>,
+        registry: KernelRegistry,
+        sizes: Vec<usize>,
+    ) -> ExecutorFactory {
+        Box::new(move || {
+            Ok(Box::new(LpExecutor::with_store(net, store, registry, sizes)?) as Box<dyn Executor>)
+        })
+    }
+
+    /// [`ReloadHook`] for [`crate::coordinator::Coordinator::reload`] over a
+    /// shared store: loads + deep-validates the new artifact directory off
+    /// the hot path ([`Self::load_variant_set`] — checksums, packed codes,
+    /// requant envelopes, scheme cross-checks), and on success hands back a
+    /// commit that publishes the set into `store`. Any failure is a typed
+    /// [`SwapError::Rejected`] naming the directory, with nothing published.
+    pub fn reload_hook(store: Arc<VariantStore>) -> ReloadHook {
+        Box::new(move |dir: &Path| {
+            let reject = |reason: String| SwapError::Rejected { path: dir.to_path_buf(), reason };
+            let (manifest, variants) =
+                Self::load_variant_set(dir).map_err(|e| reject(format!("{e:#}")))?;
+            let router = Router::from_manifest(&manifest).map_err(|e| reject(format!("{e:#}")))?;
+            let names: Vec<String> = variants.keys().cloned().collect();
+            let sizes: BTreeMap<String, Vec<usize>> = names
+                .iter()
+                .map(|n| (n.clone(), manifest.batch_sizes.clone()))
+                .collect();
+            let store = Arc::clone(&store);
+            Ok(PreparedSwap {
+                router,
+                sizes,
+                variants: names,
+                commit: Box::new(move |generation| {
+                    store.publish(VariantSet::new(variants), generation);
+                }),
+            })
+        })
+    }
+
+    /// Names of the variants in the serving generation.
+    pub fn variants(&self) -> Vec<String> {
+        self.store.current().variants.keys().cloned().collect()
     }
 
     /// The synthetic serving ladder: the paper's §3.3 accuracy/performance
@@ -275,20 +380,61 @@ impl LpExecutor {
             .expect("synthetic manifest is valid by construction")
     }
 
+    /// Shared store holding [`Self::SYNTHETIC_LADDER`] from seeded synthetic
+    /// weights — hand it to [`Self::store_factory`] per worker (plus
+    /// [`Self::reload_hook`] on the coordinator for hot-swap coverage).
+    pub fn synthetic_store(seed: u64) -> Arc<VariantStore> {
+        let net = crate::model::resnet_mini_default();
+        let mut variants = BTreeMap::new();
+        for (name, _, _) in Self::SYNTHETIC_LADDER {
+            let scheme = crate::scheme::Scheme::parse(name).expect("ladder scheme parses");
+            variants
+                .insert(name.to_string(), Arc::new(QModelParams::synthetic(&net, seed, &scheme)));
+        }
+        Arc::new(VariantStore::new(VariantSet::new(variants)))
+    }
+
     /// Factory serving [`Self::SYNTHETIC_LADDER`] from seeded synthetic
-    /// weights — runs anywhere, no artifacts on disk.
+    /// weights — runs anywhere, no artifacts on disk. Each call builds its
+    /// own store; use [`Self::synthetic_store`] + [`Self::store_factory`]
+    /// when the pool must share (and hot-swap) one slot.
     pub fn synthetic_factory(seed: u64, registry: KernelRegistry) -> ExecutorFactory {
-        Box::new(move || {
-            let net = crate::model::resnet_mini_default();
-            let mut variants = BTreeMap::new();
-            for (name, _, _) in Self::SYNTHETIC_LADDER {
-                let scheme = crate::scheme::Scheme::parse(name)?;
-                variants.insert(name.to_string(), QModelParams::synthetic(&net, seed, &scheme));
-            }
-            let exec =
-                LpExecutor::new(net, variants, registry, Self::SYNTHETIC_BATCH_SIZES.to_vec())?;
-            Ok(Box::new(exec) as Box<dyn Executor>)
-        })
+        Self::store_factory(
+            crate::model::resnet_mini_default(),
+            Self::synthetic_store(seed),
+            registry,
+            Self::SYNTHETIC_BATCH_SIZES.to_vec(),
+        )
+    }
+
+    /// Write [`Self::SYNTHETIC_LADDER`] to `dir` as a real artifact set —
+    /// checksummed DFT v2 `qweights_<variant>.dft` exports plus a
+    /// `manifest.json` — loadable by [`Self::from_artifacts`] and
+    /// [`Self::reload_hook`]. The fixture generator for the CI round-trip
+    /// (export → verify → corrupt → reject) and hot-swap tests.
+    pub fn export_synthetic_artifacts(dir: &Path, seed: u64) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let net = crate::model::resnet_mini_default();
+        let mut vs = Vec::new();
+        for (name, bits, cluster) in Self::SYNTHETIC_LADDER {
+            let scheme = crate::scheme::Scheme::parse(name)?;
+            let params = QModelParams::synthetic(&net, seed, &scheme);
+            crate::io::write_dft(&dir.join(format!("qweights_{name}.dft")), &params.to_tensors())?;
+            vs.push(format!(
+                r#""{name}": {{"files": {{"1": "-", "8": "-"}}, "eval_acc": 0.0, "w_bits": {bits}, "cluster": {cluster}, "requant_version": {}}}"#,
+                crate::dfp::REQUANT_VERSION
+            ));
+        }
+        let manifest = format!(
+            r#"{{"img": {}, "classes": {}, "batch_sizes": [1, 8], "variants": {{{}}}}}"#,
+            net.input_hw,
+            net.fc_out,
+            vs.join(", ")
+        );
+        std::fs::write(dir.join("manifest.json"), manifest)
+            .with_context(|| format!("writing manifest to {}", dir.display()))?;
+        Ok(())
     }
 }
 
@@ -300,9 +446,11 @@ impl Executor for LpExecutor {
         x: &Tensor<f32>,
         logits: &mut [f32],
     ) -> Result<()> {
+        // the Arc pins this batch's weights: a concurrent hot-swap retires
+        // the generation, but these params live until the batch drains
         let params = self
-            .variants
-            .get(variant)
+            .store
+            .lookup(variant)
             .with_context(|| format!("LpExecutor has no variant '{variant}'"))?;
         anyhow::ensure!(
             x.shape() == [batch, self.img, self.img, 3],
@@ -318,12 +466,12 @@ impl Executor for LpExecutor {
         );
         // per-worker workspace arena + caller-owned logits: a warm
         // steady-state batch runs this with zero heap allocations
-        forward_quant_into(params, &self.net, x, &self.registry, &mut self.workspace, logits);
+        forward_quant_into(&params, &self.net, x, &self.registry, &mut self.workspace, logits);
         Ok(())
     }
 
     fn batch_sizes(&self, variant: &str) -> Vec<usize> {
-        if self.variants.contains_key(variant) {
+        if self.store.lookup(variant).is_some() {
             self.sizes.clone()
         } else {
             Vec::new()
@@ -510,5 +658,82 @@ mod tests {
             let y = e.run_batch("v", 1, &x).unwrap();
             assert_eq!(y.data(), want.data(), "kernel {kind}");
         }
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("dfp_exec_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn test_export_synthetic_artifacts_round_trip() {
+        let dir = temp_dir("roundtrip");
+        LpExecutor::export_synthetic_artifacts(&dir, 7).unwrap();
+        // every ladder rung exported + loadable through the checksummed path
+        let (manifest, variants) = LpExecutor::load_variant_set(&dir).unwrap();
+        assert_eq!(variants.len(), LpExecutor::SYNTHETIC_LADDER.len());
+        assert_eq!(manifest.batch_sizes, vec![1, 8]);
+        for (name, _, _) in LpExecutor::SYNTHETIC_LADDER {
+            assert_eq!(manifest.variants[name].requant_version, crate::dfp::REQUANT_VERSION);
+        }
+        // and the loaded executor matches the in-memory synthetic weights
+        let mut from_disk =
+            LpExecutor::from_artifacts(&dir, KernelRegistry::new(None, 1)).unwrap();
+        let factory = LpExecutor::synthetic_factory(7, KernelRegistry::new(None, 1));
+        let mut from_mem = factory().unwrap();
+        let net = crate::model::resnet_mini_default();
+        let mut rng = crate::util::SplitMix64::new(5);
+        let x = Tensor::new(
+            &[1, net.input_hw, net.input_hw, 3],
+            rng.normal(net.input_hw * net.input_hw * 3),
+        )
+        .unwrap();
+        let (name, _, _) = LpExecutor::SYNTHETIC_LADDER[0];
+        let a = from_disk.run_batch(name, 1, &x).unwrap();
+        let b = from_mem.run_batch(name, 1, &x).unwrap();
+        assert_eq!(a.data(), b.data(), "disk round-trip must be bit-exact");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn test_reload_hook_publishes_into_shared_store() {
+        let dir = temp_dir("reload");
+        LpExecutor::export_synthetic_artifacts(&dir, 99).unwrap();
+        let store = LpExecutor::synthetic_store(1);
+        let net = crate::model::resnet_mini_default();
+        let mut exec = LpExecutor::with_store(
+            net.clone(),
+            Arc::clone(&store),
+            KernelRegistry::new(None, 1),
+            vec![1, 8],
+        )
+        .unwrap();
+        let mut rng = crate::util::SplitMix64::new(5);
+        let x = Tensor::new(
+            &[1, net.input_hw, net.input_hw, 3],
+            rng.normal(net.input_hw * net.input_hw * 3),
+        )
+        .unwrap();
+        let (name, _, _) = LpExecutor::SYNTHETIC_LADDER[0];
+        let before = exec.run_batch(name, 1, &x).unwrap();
+
+        let hook = LpExecutor::reload_hook(Arc::clone(&store));
+        let prepared = hook(&dir).unwrap();
+        assert_eq!(prepared.variants.len(), LpExecutor::SYNTHETIC_LADDER.len());
+        (prepared.commit)(1);
+        assert_eq!(store.generation(), 1);
+        // the *same* executor now serves the swapped-in weights
+        let after = exec.run_batch(name, 1, &x).unwrap();
+        assert_ne!(before.data(), after.data(), "swap must change served weights");
+
+        // a poisoned directory is rejected with a typed error naming it,
+        // and nothing is published
+        let missing = dir.join("nope");
+        let err = hook(&missing).unwrap_err();
+        assert!(matches!(err, SwapError::Rejected { .. }), "{err}");
+        assert!(err.to_string().contains("nope"), "{err}");
+        assert_eq!(store.generation(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

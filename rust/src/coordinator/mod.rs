@@ -13,16 +13,23 @@
 //! the invariant being that **every** admitted request receives exactly
 //! one reply: a [`Response`] or a [`ServeError`], never a silently
 //! dropped channel.
+//!
+//! The routing table (router + per-variant batch policies) lives behind an
+//! [`ArcCell`] so [`Coordinator::reload`] can hot-swap a fully-validated
+//! new artifact generation atomically — see the [`swap`] module for the
+//! two-phase commit, drain and rollback semantics.
 
 pub mod batcher;
 pub mod degrade;
 pub mod executor;
 pub mod metrics;
 pub mod router;
+pub mod swap;
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -35,6 +42,10 @@ pub use degrade::{Admission, DegradeConfig, DegradePolicy, LoadTracker, WATERMAR
 pub use executor::{Executor, ExecutorFactory, LpExecutor, MockExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{PrecisionClass, Router};
+pub use swap::{
+    ArcCell, PreparedSwap, ReloadHook, RoutingState, SwapError, SwapReport, VariantSet,
+    VariantStore,
+};
 
 use crate::tensor::Tensor;
 
@@ -203,7 +214,14 @@ pub struct DrainReport {
 pub struct Coordinator {
     submit_tx: SyncSender<(Request, ReplyOnce)>,
     metrics: Arc<Metrics>,
-    router: Router,
+    /// router + batch policies, swapped atomically by [`Self::reload`]
+    routing: Arc<ArcCell<RoutingState>>,
+    /// prepares a new artifact generation off the hot path; the lock also
+    /// serializes concurrent reloads
+    reload_hook: Mutex<Option<ReloadHook>>,
+    /// generation counter for swapped routing states (0 = startup)
+    generation: AtomicU64,
+    max_wait_us: u64,
     stopping: Arc<AtomicBool>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     img: usize,
@@ -295,8 +313,13 @@ impl Coordinator {
         }
 
         // ---- dispatcher ---------------------------------------------------
+        let routing = Arc::new(ArcCell::new(Arc::new(RoutingState {
+            router,
+            policies,
+            generation: 0,
+        })));
         {
-            let router = router.clone();
+            let routing = Arc::clone(&routing);
             let metrics = Arc::clone(&metrics);
             let tracker = Arc::clone(&tracker);
             let stopping = Arc::clone(&stopping);
@@ -307,8 +330,7 @@ impl Coordinator {
                     .name("dfp-dispatcher".into())
                     .spawn(move || {
                         let ctx = DispatchCtx {
-                            router,
-                            policies,
+                            routing,
                             degrade,
                             tracker,
                             metrics,
@@ -321,7 +343,17 @@ impl Coordinator {
             );
         }
 
-        Ok(Self { submit_tx, metrics, router, stopping, threads: Mutex::new(threads), img })
+        Ok(Self {
+            submit_tx,
+            metrics,
+            routing,
+            reload_hook: Mutex::new(None),
+            generation: AtomicU64::new(0),
+            max_wait_us: cfg.max_wait_us,
+            stopping,
+            threads: Mutex::new(threads),
+            img,
+        })
     }
 
     /// Submit a request; returns a channel that will receive exactly one
@@ -360,8 +392,80 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    pub fn router(&self) -> &Router {
-        &self.router
+    /// Snapshot of the current routing state (router + batch policies).
+    /// The snapshot stays coherent across a concurrent [`Self::reload`].
+    pub fn routing(&self) -> Arc<RoutingState> {
+        self.routing.load()
+    }
+
+    /// The artifact generation currently serving (0 until the first
+    /// successful [`Self::reload`]).
+    pub fn serving_generation(&self) -> u64 {
+        self.routing.load().generation
+    }
+
+    /// Install the hook [`Self::reload`] uses to load + validate a new
+    /// artifact directory off the hot path (see `LpExecutor::reload_hook`).
+    pub fn install_reload_hook(&self, hook: ReloadHook) {
+        let mut g = match self.reload_hook.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *g = Some(hook);
+    }
+
+    /// Atomically hot-swap serving onto the artifact set in `dir`.
+    ///
+    /// Two-phase: the hook loads and **fully validates** the new set off
+    /// the hot path (any failure returns a typed [`SwapError`] with the old
+    /// generation untouched — no partial ladders); then the weights are
+    /// published to the shared store and the routing table is swapped in
+    /// one pointer store. In-flight batches drain on the `Arc`s they
+    /// already hold; queued requests whose variant vanished are re-admitted
+    /// by the dispatcher against the new ladder.
+    pub fn reload(&self, dir: &Path) -> std::result::Result<SwapReport, SwapError> {
+        let guard = match self.reload_hook.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let hook = guard.as_ref().ok_or(SwapError::Unsupported)?;
+        let t = Instant::now();
+        let prepared = hook(dir)?;
+        // batch policies for the new ladder; a failure here is still a
+        // clean rollback — nothing has been published yet
+        let mut policies: BTreeMap<String, BatchPolicy> = BTreeMap::new();
+        for v in prepared.router.active_variants() {
+            let s = prepared.sizes.get(v).cloned().unwrap_or_default();
+            if s.is_empty() {
+                continue;
+            }
+            let p = BatchPolicy::new(s, self.max_wait_us).map_err(|e| SwapError::Rejected {
+                path: dir.to_path_buf(),
+                reason: format!("batch policy for variant '{v}': {e}"),
+            })?;
+            policies.insert(v.to_string(), p);
+        }
+        if policies.is_empty() {
+            return Err(SwapError::Rejected {
+                path: dir.to_path_buf(),
+                reason: "no routable variant in the new set has batch sizes".into(),
+            });
+        }
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        // commit order matters: weights first (jobs queued under the old
+        // routing still resolve via the store's prev-generation fallback),
+        // then routing — from here on new admissions see the new ladder
+        (prepared.commit)(generation);
+        self.routing.store(Arc::new(RoutingState {
+            router: prepared.router,
+            policies,
+            generation,
+        }));
+        Ok(SwapReport {
+            generation,
+            variants: prepared.variants,
+            prepare_us: t.elapsed().as_micros() as u64,
+        })
     }
 
     /// Graceful drain with the default 5 s deadline. See
@@ -412,10 +516,11 @@ impl Coordinator {
     }
 }
 
-/// Immutable dispatcher context (policies + shared handles).
+/// Dispatcher context: shared handles plus the hot-swappable routing slot.
 struct DispatchCtx {
-    router: Router,
-    policies: BTreeMap<String, BatchPolicy>,
+    /// router + batch policies; reloaded atomically by [`Coordinator::reload`],
+    /// so the dispatcher snapshots it once per tick
+    routing: Arc<ArcCell<RoutingState>>,
     degrade: DegradePolicy,
     tracker: Arc<LoadTracker>,
     metrics: Arc<Metrics>,
@@ -423,31 +528,14 @@ struct DispatchCtx {
     n_workers: usize,
 }
 
-impl DispatchCtx {
-    /// Resolve the class to serve a request at: the routed variant if it
-    /// has artifacts, else walk down the precision ladder to the first
-    /// variant that does. `None` when nothing below (or at) `class` is
-    /// servable.
-    fn resolve(&self, class: PrecisionClass) -> Option<(PrecisionClass, String)> {
-        let mut c = class;
-        loop {
-            if let Some(v) = self.router.try_route(c) {
-                if self.policies.contains_key(v) {
-                    return Some((c, v.to_string()));
-                }
-            }
-            c = c.cheaper()?;
-        }
-    }
-}
-
 /// Admit one request into the per-variant queues, applying deadline,
-/// shed and degradation policy. Replies immediately (typed) when the
-/// request cannot be queued.
+/// shed and degradation policy against the routing snapshot `rs`.
+/// Replies immediately (typed) when the request cannot be queued.
 fn admit(
     req: Request,
     reply: ReplyOnce,
     queues: &mut BTreeMap<String, Vec<Pending>>,
+    rs: &RoutingState,
     ctx: &DispatchCtx,
 ) {
     let now = Instant::now();
@@ -464,10 +552,10 @@ fn admit(
             reply.send(Err(ServeError::Overloaded));
             return;
         }
-        Admission::Degrade => ctx.router.next_cheaper(req.class).unwrap_or(req.class),
+        Admission::Degrade => rs.router.next_cheaper(req.class).unwrap_or(req.class),
         Admission::Serve => req.class,
     };
-    let Some((served, variant)) = ctx.resolve(target) else {
+    let Some((served, variant)) = rs.resolve(target) else {
         reply.send(Err(ServeError::ExecutorFailed(format!(
             "no servable variant at or below class '{target}'"
         ))));
@@ -487,6 +575,30 @@ fn admit(
     });
 }
 
+/// Re-admit a request whose queued variant vanished in a hot-swap:
+/// re-resolve its class against the new routing state and move it to the
+/// surviving queue, or answer it typed when the new ladder cannot serve it.
+fn readmit(
+    p: Pending,
+    queues: &mut BTreeMap<String, Vec<Pending>>,
+    rs: &RoutingState,
+    ctx: &DispatchCtx,
+) {
+    match rs.resolve(p.class) {
+        Some((served, variant)) => {
+            let degraded = p.degraded || served != p.class;
+            if degraded && !p.degraded {
+                ctx.metrics.on_degraded();
+            }
+            queues.entry(variant).or_default().push(Pending { class: served, degraded, ..p });
+        }
+        None => p.reply.send(Err(ServeError::ExecutorFailed(format!(
+            "variant for class '{}' removed by artifact reload",
+            p.class
+        )))),
+    }
+}
+
 fn dispatcher_loop(
     submit_rx: &Receiver<(Request, ReplyOnce)>,
     job_tx: &Sender<WorkerMsg>,
@@ -496,13 +608,33 @@ fn dispatcher_loop(
     let mut queues: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
     let mut disconnected = false;
     loop {
+        // snapshot the routing state once per tick: admissions, planning
+        // and orphan handling within a tick see one coherent ladder even
+        // while a reload swaps the slot concurrently
+        let rs = ctx.routing.load();
+
+        // a hot-swap may have removed variants whose queues hold requests;
+        // re-admit those against the new ladder before anything else
+        let orphaned: Vec<String> = queues
+            .iter()
+            .filter(|(v, q)| !q.is_empty() && !rs.policies.contains_key(*v))
+            .map(|(v, _)| v.clone())
+            .collect();
+        for v in orphaned {
+            if let Some(q) = queues.remove(&v) {
+                for p in q {
+                    readmit(p, &mut queues, &rs, ctx);
+                }
+            }
+        }
+
         // admit up to the tick deadline
         match submit_rx.recv_timeout(ctx.tick) {
             Ok((req, reply)) => {
-                admit(req, reply, &mut queues, ctx);
+                admit(req, reply, &mut queues, &rs, ctx);
                 // keep draining whatever is immediately available
                 while let Ok((req, reply)) = submit_rx.try_recv() {
-                    admit(req, reply, &mut queues, ctx);
+                    admit(req, reply, &mut queues, &rs, ctx);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -524,9 +656,11 @@ fn dispatcher_loop(
             }
         }
 
-        // flush per-variant queues per policy
+        // flush per-variant queues per policy; a queue whose variant has no
+        // policy in this snapshot (swapped away mid-tick) waits for the
+        // orphan pass at the top of the next iteration
         for (variant, q) in queues.iter_mut() {
-            let policy = &ctx.policies[variant];
+            let Some(policy) = rs.policies.get(variant) else { continue };
             loop {
                 let oldest_us = q
                     .first()
@@ -550,11 +684,25 @@ fn dispatcher_loop(
             // stop admitting, but first drain anything already accepted
             // into the channel — those requests hold a reply promise
             while let Ok((req, reply)) = submit_rx.try_recv() {
-                admit(req, reply, &mut queues, ctx);
+                admit(req, reply, &mut queues, &rs, ctx);
+            }
+            // queues orphaned by a mid-drain swap are re-admitted first so
+            // every leftover flushes at a real artifact batch size
+            let orphaned: Vec<String> = queues
+                .iter()
+                .filter(|(v, q)| !q.is_empty() && !rs.policies.contains_key(*v))
+                .map(|(v, _)| v.clone())
+                .collect();
+            for v in orphaned {
+                if let Some(q) = queues.remove(&v) {
+                    for p in q {
+                        readmit(p, &mut queues, &rs, ctx);
+                    }
+                }
             }
             // flush leftovers at their best-fit batch, then stop workers
             for (variant, q) in queues.iter_mut() {
-                let policy = &ctx.policies[variant];
+                let Some(policy) = rs.policies.get(variant) else { continue };
                 while !q.is_empty() {
                     let bsz = policy.best_fit(q.len());
                     let take = q.len().min(bsz);
@@ -991,5 +1139,75 @@ mod tests {
             CoordinatorConfig::default()
         )
         .is_err());
+    }
+
+    #[test]
+    fn test_reload_without_hook_is_typed_unsupported() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        match c.reload(std::path::Path::new("/tmp/nowhere")) {
+            Err(SwapError::Unsupported) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        assert_eq!(c.serving_generation(), 0);
+        c.shutdown();
+    }
+
+    /// Hook that swaps routing to a ladder with only the cheap variant.
+    fn cheap_only_hook() -> ReloadHook {
+        Box::new(|_dir: &std::path::Path| {
+            let m = Manifest::from_json_text(
+                r#"{
+                  "img": 8, "classes": 4, "batch_sizes": [1, 4],
+                  "variants": {
+                    "8a2w_n4": {"files": {"1": "c", "4": "d"}, "eval_acc": 0.8, "w_bits": 2, "cluster": 4}
+                  }
+                }"#,
+            )
+            .unwrap();
+            let router = Router::from_manifest(&m).unwrap();
+            let sizes: BTreeMap<String, Vec<usize>> =
+                [("8a2w_n4".to_string(), vec![1, 4])].into_iter().collect();
+            Ok(PreparedSwap {
+                router,
+                sizes,
+                variants: vec!["8a2w_n4".to_string()],
+                commit: Box::new(|_generation| {}),
+            })
+        })
+    }
+
+    #[test]
+    fn test_reload_swaps_routing_atomically() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        assert_eq!(c.infer(image(1.0), PrecisionClass::Accurate).unwrap().variant, "fp32");
+        c.install_reload_hook(cheap_only_hook());
+        let report = c.reload(std::path::Path::new("/tmp/gen1")).unwrap();
+        assert_eq!(report.generation, 1);
+        assert_eq!(report.variants, vec!["8a2w_n4".to_string()]);
+        assert_eq!(c.serving_generation(), 1);
+        // accurate traffic now ladder-falls to the only remaining variant
+        let r = c.infer(image(1.0), PrecisionClass::Accurate).unwrap();
+        assert_eq!(r.variant, "8a2w_n4");
+        assert!(r.degraded, "ladder fallback after swap must report degraded");
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_failed_reload_rolls_back_and_keeps_serving() {
+        let c = start_mock(1, CoordinatorConfig { max_wait_us: 100, ..Default::default() });
+        c.install_reload_hook(Box::new(|dir: &std::path::Path| {
+            Err(SwapError::Rejected {
+                path: dir.to_path_buf(),
+                reason: "checksum mismatch in tensor 'c1.wq'".into(),
+            })
+        }));
+        let err = c.reload(std::path::Path::new("/tmp/poisoned")).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        // previous generation untouched: still serving the full ladder
+        assert_eq!(c.serving_generation(), 0);
+        let r = c.infer(image(1.0), PrecisionClass::Accurate).unwrap();
+        assert_eq!(r.variant, "fp32");
+        assert!(!r.degraded);
+        c.shutdown();
     }
 }

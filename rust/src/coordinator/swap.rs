@@ -1,0 +1,303 @@
+//! Atomic artifact hot-swap — the trustworthy half of the serving
+//! lifecycle. A running [`Coordinator`](super::Coordinator) can be pointed
+//! at a *new* artifact directory without dropping a request:
+//!
+//! 1. the new set is loaded and **fully validated off the hot path**
+//!    (checksums, packed-code ranges, requant envelopes, scheme
+//!    cross-checks — everything `QModelParams::from_tensors` enforces);
+//! 2. the validated set is *published* into the shared [`VariantStore`] —
+//!    one pointer swap; workers pick it up at their next batch while
+//!    batches already in flight keep the old `Arc` until they drain;
+//! 3. the routing table ([`RoutingState`]: router + batch policies) is
+//!    swapped through an [`ArcCell`], so the dispatcher plans the next tick
+//!    against the new ladder.
+//!
+//! Any failure in step 1 or 2 returns a typed [`SwapError`] and leaves the
+//! previous generation serving untouched — there is no state in which half
+//! a ladder is new and half old. The store keeps the previous generation
+//! around so jobs queued under the old routing still resolve by name even
+//! when the new set dropped a variant (the dispatcher re-admits such
+//! queues, but a job already handed to a worker needs the fallback).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+use crate::lpinfer::QModelParams;
+
+use super::batcher::BatchPolicy;
+use super::router::{PrecisionClass, Router};
+
+// ------------------------------------------------------------------ ArcCell
+
+/// Hand-rolled `arc_swap`: a shared slot holding an `Arc<T>` that readers
+/// `load()` (cheap clone under a read lock, never blocked by other readers)
+/// and a writer atomically replaces with `store()`. In-flight users keep
+/// whatever `Arc` they loaded — the old value lives until the last clone
+/// drops, which is exactly the drain semantics hot-swap needs.
+#[derive(Debug)]
+pub struct ArcCell<T> {
+    slot: RwLock<Arc<T>>,
+}
+
+impl<T> ArcCell<T> {
+    pub fn new(value: Arc<T>) -> Self {
+        Self { slot: RwLock::new(value) }
+    }
+
+    /// Snapshot the current value. The returned `Arc` stays valid across
+    /// any number of later [`ArcCell::store`] calls.
+    pub fn load(&self) -> Arc<T> {
+        match self.slot.read() {
+            Ok(g) => Arc::clone(&g),
+            Err(poisoned) => Arc::clone(&poisoned.into_inner()),
+        }
+    }
+
+    /// Atomically publish a new value; readers that loaded before keep the
+    /// old one, readers that load after see the new one.
+    pub fn store(&self, value: Arc<T>) {
+        match self.slot.write() {
+            Ok(mut g) => *g = value,
+            Err(poisoned) => *poisoned.into_inner() = value,
+        }
+    }
+}
+
+// -------------------------------------------------------------- VariantSet
+
+/// One immutable generation of loaded model variants. Shared (`Arc` per
+/// param set) between every worker's executor, so publishing a new
+/// generation is a pointer swap, not a weight copy.
+#[derive(Debug, Clone, Default)]
+pub struct VariantSet {
+    /// generation counter assigned at publish time (0 = the startup set)
+    pub generation: u64,
+    pub variants: BTreeMap<String, Arc<QModelParams>>,
+}
+
+impl VariantSet {
+    pub fn new(variants: BTreeMap<String, Arc<QModelParams>>) -> Self {
+        Self { generation: 0, variants }
+    }
+}
+
+/// The shared model-weight slot behind every worker's `LpExecutor`:
+/// `current` is the serving generation, `prev` the one before it. Lookups
+/// fall back `current -> prev` so a batch routed just before a swap that
+/// *removed* its variant still executes against the old weights instead of
+/// failing — the only window where two generations serve concurrently.
+#[derive(Debug)]
+pub struct VariantStore {
+    inner: RwLock<Generations>,
+}
+
+#[derive(Debug)]
+struct Generations {
+    current: Arc<VariantSet>,
+    prev: Option<Arc<VariantSet>>,
+}
+
+impl VariantStore {
+    pub fn new(set: VariantSet) -> Self {
+        Self { inner: RwLock::new(Generations { current: Arc::new(set), prev: None }) }
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, Generations> {
+        match self.inner.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// The serving generation's set.
+    pub fn current(&self) -> Arc<VariantSet> {
+        Arc::clone(&self.read().current)
+    }
+
+    /// Serving generation number.
+    pub fn generation(&self) -> u64 {
+        self.read().current.generation
+    }
+
+    /// Resolve a variant's params: current generation first, previous as
+    /// the drain fallback. The clone is an `Arc` bump — the caller holds
+    /// the weights for its batch regardless of later swaps.
+    pub fn lookup(&self, variant: &str) -> Option<Arc<QModelParams>> {
+        let g = self.read();
+        g.current
+            .variants
+            .get(variant)
+            .or_else(|| g.prev.as_ref().and_then(|p| p.variants.get(variant)))
+            .map(Arc::clone)
+    }
+
+    /// Atomically publish a fully-validated set as generation `generation`;
+    /// the old current becomes the drain fallback.
+    pub fn publish(&self, mut set: VariantSet, generation: u64) {
+        set.generation = generation;
+        let mut g = match self.inner.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.prev = Some(Arc::clone(&g.current));
+        g.current = Arc::new(set);
+    }
+}
+
+// ------------------------------------------------------------ RoutingState
+
+/// Everything the dispatcher needs to admit and plan a request, swapped as
+/// one unit so a reload can never leave the router pointing at a variant
+/// the policy table does not know.
+#[derive(Debug)]
+pub struct RoutingState {
+    pub router: Router,
+    pub policies: BTreeMap<String, BatchPolicy>,
+    /// generation this routing state was published for (0 = startup)
+    pub generation: u64,
+}
+
+impl RoutingState {
+    /// Resolve the class to serve a request at: the routed variant if it
+    /// has a batch policy, else walk down the precision ladder to the
+    /// first variant that does. `None` when nothing at or below `class`
+    /// is servable.
+    pub fn resolve(&self, class: PrecisionClass) -> Option<(PrecisionClass, String)> {
+        let mut c = class;
+        loop {
+            if let Some(v) = self.router.try_route(c) {
+                if self.policies.contains_key(v) {
+                    return Some((c, v.to_string()));
+                }
+            }
+            c = c.cheaper()?;
+        }
+    }
+}
+
+// ------------------------------------------------------------ swap control
+
+/// A new artifact set, loaded and validated off the hot path, ready to
+/// commit. Produced by a [`ReloadHook`]; nothing is visible to serving
+/// until the coordinator calls `commit`.
+pub struct PreparedSwap {
+    /// router over the new variant ladder
+    pub router: Router,
+    /// per-variant artifact batch sizes for the new ladder
+    pub sizes: BTreeMap<String, Vec<usize>>,
+    /// names of the variants the new set serves (for the report)
+    pub variants: Vec<String>,
+    /// publishes the validated set into the shared store; called exactly
+    /// once, with the generation number the coordinator assigned
+    pub commit: Box<dyn FnOnce(u64) + Send>,
+}
+
+/// Loads + validates a new artifact directory into a [`PreparedSwap`].
+/// Installed on the coordinator by whoever owns the [`VariantStore`]
+/// (see `LpExecutor::reload_hook`).
+pub type ReloadHook = Box<dyn Fn(&Path) -> Result<PreparedSwap, SwapError> + Send + Sync>;
+
+/// Typed hot-swap failure. Every rejection means the previous generation
+/// is still serving, untouched — a failed reload is diagnosable from the
+/// error and invisible to traffic.
+#[derive(Debug)]
+pub enum SwapError {
+    /// this coordinator has no reload hook (e.g. PJRT/mock executors)
+    Unsupported,
+    /// the new artifact set failed to load or validate; `reason` carries
+    /// the full typed chain (checksum mismatches name file and tensor)
+    Rejected { path: PathBuf, reason: String },
+}
+
+impl std::fmt::Display for SwapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwapError::Unsupported => {
+                write!(f, "hot-swap is not supported by this coordinator's executors")
+            }
+            SwapError::Rejected { path, reason } => {
+                write!(
+                    f,
+                    "reload from {} rejected (still serving previous generation): {reason}",
+                    path.display()
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for SwapError {}
+
+/// Outcome of a successful [`Coordinator::reload`](super::Coordinator::reload).
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    /// the generation now serving
+    pub generation: u64,
+    /// variants in the new ladder
+    pub variants: Vec<String>,
+    /// wall time spent loading + validating off the hot path
+    pub prepare_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet_mini;
+    use crate::scheme::Scheme;
+
+    #[test]
+    fn test_arc_cell_load_store() {
+        let cell = ArcCell::new(Arc::new(1u32));
+        let before = cell.load();
+        cell.store(Arc::new(2));
+        assert_eq!(*before, 1, "in-flight snapshot must survive a store");
+        assert_eq!(*cell.load(), 2);
+    }
+
+    fn tiny_set(seed: u64) -> VariantSet {
+        let net = resnet_mini(8, &[4, 4, 4], 1, 3);
+        let scheme = Scheme::parse("8a2w_n4").unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("8a2w_n4".to_string(), Arc::new(QModelParams::synthetic(&net, seed, &scheme)));
+        VariantSet::new(m)
+    }
+
+    #[test]
+    fn test_store_publish_and_prev_fallback() {
+        let store = VariantStore::new(tiny_set(1));
+        assert_eq!(store.generation(), 0);
+        let held = store.lookup("8a2w_n4").expect("startup set");
+
+        // publish a generation that renames the variant
+        let net = resnet_mini(8, &[4, 4, 4], 1, 3);
+        let scheme = Scheme::parse("8a4w_n4").unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("8a4w_n4".to_string(), Arc::new(QModelParams::synthetic(&net, 2, &scheme)));
+        store.publish(VariantSet::new(m), 1);
+
+        assert_eq!(store.generation(), 1);
+        assert!(store.lookup("8a4w_n4").is_some(), "new variant must resolve");
+        // the removed name still resolves through the prev generation...
+        let fallback = store.lookup("8a2w_n4").expect("prev-generation fallback");
+        assert!(Arc::ptr_eq(&held, &fallback));
+        // ...and only one generation back: a second publish retires it
+        store.publish(tiny_set(3), 2);
+        assert!(store.lookup("8a4w_n4").is_some(), "gen-1 variant still in prev");
+        store.publish(tiny_set(4), 3);
+        assert!(store.lookup("8a4w_n4").is_none(), "two publishes retire a generation");
+    }
+
+    #[test]
+    fn test_swap_error_display_names_path() {
+        let e = SwapError::Rejected {
+            path: PathBuf::from("/tmp/bad_artifacts"),
+            reason: "checksum mismatch in tensor 'c1.wq'".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("bad_artifacts"), "{msg}");
+        assert!(msg.contains("c1.wq"), "{msg}");
+        assert!(msg.contains("previous generation"), "{msg}");
+        assert!(!SwapError::Unsupported.to_string().is_empty());
+    }
+}

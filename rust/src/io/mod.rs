@@ -1,8 +1,10 @@
 //! DFT binary tensor container — Rust side of the python<->rust interchange.
 //!
-//! Format (little endian), mirrored in `python/compile/dft.py`:
+//! Two format versions, mirrored in `python/compile/dft.py`:
+//!
+//! **v2** (current, written by [`write_dft`]) — little endian:
 //! ```text
-//! magic  b"DFT1"
+//! magic  b"DFT2"
 //! u32    tensor count
 //! per tensor:
 //!   u16  name length + utf-8 name
@@ -10,17 +12,131 @@
 //!   u8   ndim
 //!   u32* dims
 //!   u64  payload length + raw row-major bytes
+//!   u64  FNV-1a 64 of the record (name-length field through payload)
+//! u64    FNV-1a 64 of every preceding byte (magic through last record)
 //! ```
+//! **v1** (`b"DFT1"`) is the same layout without either checksum; readers
+//! still accept it so pre-v2 exports keep loading.
+//!
+//! Every read failure is a typed [`ArtifactError`] naming the offending
+//! path (and tensor where known) — corrupt bytes must surface as an error
+//! the caller can match on, never a panic and never a silently-wrong load.
+//! [`verify_dft`] walks the same decode path but returns a per-tensor
+//! integrity report for the `verify-artifact` CLI.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::{DType, Element, Tensor};
 
-const MAGIC: &[u8; 4] = b"DFT1";
+const MAGIC_V1: &[u8; 4] = b"DFT1";
+const MAGIC_V2: &[u8; 4] = b"DFT2";
+
+// ------------------------------------------------------------ FNV-1a 64
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit hash — the DFT v2 integrity checksum. Not cryptographic;
+/// chosen because it is a dozen lines in both Rust and Python (no deps),
+/// and detects every single-bit flip and truncation we fuzz for.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+// ------------------------------------------------------------ typed errors
+
+/// Typed artifact-load failure. Every variant names the file; tensor-level
+/// variants name the tensor. Implements [`std::error::Error`], so `?` in
+/// `anyhow` contexts converts it while `match` still sees the structure.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// OS-level read/open failure.
+    Io { path: PathBuf, source: std::io::Error },
+    /// First four bytes are not any DFT magic.
+    BadMagic { path: PathBuf, found: [u8; 4] },
+    /// A DFT magic from a format revision this reader does not know.
+    UnsupportedVersion { path: PathBuf, version: u8 },
+    /// File ends before the structure says it should.
+    Truncated { path: PathBuf, offset: usize },
+    /// A stored checksum does not match the bytes (`tensor: None` = the
+    /// whole-file trailer).
+    ChecksumMismatch { path: PathBuf, tensor: Option<String>, stored: u64, computed: u64 },
+    /// Shape/payload disagreement for a named tensor.
+    BadShape { path: PathBuf, tensor: String, detail: String },
+    /// Structural corruption that is not shape-specific (bad dtype tag,
+    /// non-utf8 name, trailing garbage, ...).
+    Corrupt { path: PathBuf, detail: String },
+}
+
+impl ArtifactError {
+    /// The artifact path the error is about (every variant carries one).
+    pub fn path(&self) -> &Path {
+        match self {
+            ArtifactError::Io { path, .. }
+            | ArtifactError::BadMagic { path, .. }
+            | ArtifactError::UnsupportedVersion { path, .. }
+            | ArtifactError::Truncated { path, .. }
+            | ArtifactError::ChecksumMismatch { path, .. }
+            | ArtifactError::BadShape { path, .. }
+            | ArtifactError::Corrupt { path, .. } => path,
+        }
+    }
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io { path, source } => {
+                write!(f, "{}: io error: {source}", path.display())
+            }
+            ArtifactError::BadMagic { path, found } => {
+                write!(f, "{}: bad magic {:?} (not a DFT file)", path.display(), found)
+            }
+            ArtifactError::UnsupportedVersion { path, version } => {
+                write!(f, "{}: unsupported DFT format version {version}", path.display())
+            }
+            ArtifactError::Truncated { path, offset } => {
+                write!(f, "{}: truncated at offset {offset}", path.display())
+            }
+            ArtifactError::ChecksumMismatch { path, tensor, stored, computed } => match tensor {
+                Some(t) => write!(
+                    f,
+                    "{}: checksum mismatch in tensor '{t}' (stored {stored:#018x}, computed {computed:#018x})",
+                    path.display()
+                ),
+                None => write!(
+                    f,
+                    "{}: whole-file checksum mismatch (stored {stored:#018x}, computed {computed:#018x})",
+                    path.display()
+                ),
+            },
+            ArtifactError::BadShape { path, tensor, detail } => {
+                write!(f, "{}: tensor '{tensor}': {detail}", path.display())
+            }
+            ArtifactError::Corrupt { path, detail } => {
+                write!(f, "{}: corrupt: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
 
 /// A dtype-erased tensor as stored in a DFT file.
 #[derive(Debug, Clone, PartialEq)]
@@ -118,17 +234,40 @@ fn encode_tensor(out: &mut Vec<u8>, name: &str, t: &AnyTensor) {
     }
 }
 
-/// Write a DFT file.
+fn write_file(path: &Path, buf: &[u8]) -> Result<()> {
+    std::fs::File::create(path)
+        .and_then(|mut f| f.write_all(buf))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write a DFT **v2** file: per-tensor FNV-1a checksums plus a whole-file
+/// checksum trailer.
 pub fn write_dft(path: &Path, tensors: &TensorMap) -> Result<()> {
     let mut buf = Vec::new();
-    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(MAGIC_V2);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let start = buf.len();
+        encode_tensor(&mut buf, name, t);
+        let sum = fnv1a(&buf[start..]);
+        buf.extend_from_slice(&sum.to_le_bytes());
+    }
+    let file_sum = fnv1a(&buf);
+    buf.extend_from_slice(&file_sum.to_le_bytes());
+    write_file(path, &buf)
+}
+
+/// Write the legacy **v1** layout (no checksums). Kept so the v1
+/// backward-compat path stays testable; new exports should use
+/// [`write_dft`].
+pub fn write_dft_v1(path: &Path, tensors: &TensorMap) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC_V1);
     buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for (name, t) in tensors {
         encode_tensor(&mut buf, name, t);
     }
-    std::fs::File::create(path)
-        .and_then(|mut f| f.write_all(&buf))
-        .with_context(|| format!("writing {}", path.display()))
+    write_file(path, &buf)
 }
 
 // ---------------------------------------------------------------- reading
@@ -136,31 +275,35 @@ pub fn write_dft(path: &Path, tensors: &TensorMap) -> Result<()> {
 struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
+    path: &'a Path,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
         if self.pos + n > self.buf.len() {
-            bail!("truncated DFT file at offset {}", self.pos);
+            return Err(ArtifactError::Truncated {
+                path: self.path.to_path_buf(),
+                offset: self.pos,
+            });
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u16(&mut self) -> Result<u16> {
+    fn u16(&mut self) -> Result<u16, ArtifactError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    fn u32(&mut self) -> Result<u32, ArtifactError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    fn u64(&mut self) -> Result<u64, ArtifactError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    fn u8(&mut self) -> Result<u8, ArtifactError> {
         Ok(self.take(1)?[0])
     }
 }
@@ -178,43 +321,185 @@ fn decode_vec<T: Element>(raw: &[u8]) -> Vec<T> {
     out
 }
 
-/// Read a DFT file into a [`TensorMap`].
-pub fn read_dft(path: &Path) -> Result<TensorMap> {
-    let mut raw = Vec::new();
-    std::fs::File::open(path)
-        .and_then(|mut f| f.read_to_end(&mut raw))
-        .with_context(|| format!("reading {}", path.display()))?;
-    let mut c = Cursor { buf: &raw, pos: 0 };
-    if c.take(4)? != MAGIC {
-        bail!("{}: bad magic", path.display());
-    }
+/// Per-tensor row of a [`verify_dft`] integrity report.
+#[derive(Debug, Clone)]
+pub struct TensorReport {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub payload_bytes: usize,
+    /// stored FNV-1a checksum (`None` on a v1 file, which carries none)
+    pub checksum: Option<u64>,
+}
+
+/// Whole-file result of [`verify_dft`].
+#[derive(Debug, Clone)]
+pub struct DftReport {
+    /// DFT format version (1 or 2)
+    pub version: u8,
+    pub tensors: Vec<TensorReport>,
+    pub file_bytes: usize,
+}
+
+/// One decoded tensor record plus its integrity metadata.
+struct Record {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    payload: std::ops::Range<usize>,
+    checksum: Option<u64>,
+}
+
+fn corrupt(path: &Path, detail: String) -> ArtifactError {
+    ArtifactError::Corrupt { path: path.to_path_buf(), detail }
+}
+
+/// Decode the container structure, verifying checksums on v2. Shared by
+/// [`read_dft`] (which materializes tensors) and [`verify_dft`] (which
+/// only reports). Returns the format version and the record table.
+fn decode(path: &Path, raw: &[u8]) -> Result<(u8, Vec<Record>), ArtifactError> {
+    let mut c = Cursor { buf: raw, pos: 0, path };
+    let magic: [u8; 4] = c.take(4)?.try_into().unwrap();
+    let version = match &magic {
+        m if m == MAGIC_V1 => 1,
+        m if m == MAGIC_V2 => 2,
+        m if &m[..3] == b"DFT" => {
+            return Err(ArtifactError::UnsupportedVersion {
+                path: path.to_path_buf(),
+                version: m[3].wrapping_sub(b'0'),
+            })
+        }
+        _ => return Err(ArtifactError::BadMagic { path: path.to_path_buf(), found: magic }),
+    };
+    // v2: the trailer checksum covers everything before it — verify first,
+    // so any single flipped bit (header, name, shape, or payload) surfaces
+    // as a checksum error before we interpret the bytes at all.
+    let body_end = if version == 2 {
+        let n = raw.len();
+        if n < 12 {
+            return Err(ArtifactError::Truncated { path: path.to_path_buf(), offset: n });
+        }
+        let stored = u64::from_le_bytes(raw[n - 8..].try_into().unwrap());
+        let computed = fnv1a(&raw[..n - 8]);
+        if stored != computed {
+            return Err(ArtifactError::ChecksumMismatch {
+                path: path.to_path_buf(),
+                tensor: None,
+                stored,
+                computed,
+            });
+        }
+        n - 8
+    } else {
+        raw.len()
+    };
     let count = c.u32()?;
-    let mut out = TensorMap::new();
+    let mut records = Vec::with_capacity(count as usize);
     for _ in 0..count {
+        let start = c.pos;
         let nlen = c.u16()? as usize;
-        let name = String::from_utf8(c.take(nlen)?.to_vec()).context("tensor name utf8")?;
-        let dtype = DType::from_tag(c.u8()?)?;
+        let name = String::from_utf8(c.take(nlen)?.to_vec())
+            .map_err(|_| corrupt(path, format!("non-utf8 tensor name at offset {start}")))?;
+        let dtype = DType::from_tag(c.u8()?)
+            .map_err(|e| corrupt(path, format!("tensor '{name}': {e}")))?;
         let ndim = c.u8()? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(c.u32()? as usize);
         }
         let blen = c.u64()? as usize;
-        let payload = c.take(blen)?;
-        let expected: usize = shape.iter().product::<usize>() * dtype.size_of();
+        c.take(blen)?;
+        let payload = c.pos - blen..c.pos;
+        let expected = shape.iter().product::<usize>() * dtype.size_of();
         if blen != expected {
-            bail!("{name}: payload {blen} bytes != shape {shape:?} * dtype");
+            return Err(ArtifactError::BadShape {
+                path: path.to_path_buf(),
+                tensor: name,
+                detail: format!("payload {blen} bytes != shape {shape:?} * dtype {dtype:?}"),
+            });
         }
-        let t = match dtype {
-            DType::F32 => AnyTensor::F32(Tensor::new(&shape, decode_vec(payload))?),
-            DType::I8 => AnyTensor::I8(Tensor::new(&shape, decode_vec(payload))?),
-            DType::I32 => AnyTensor::I32(Tensor::new(&shape, decode_vec(payload))?),
-            DType::U8 => AnyTensor::U8(Tensor::new(&shape, decode_vec(payload))?),
-            DType::I64 => AnyTensor::I64(Tensor::new(&shape, decode_vec(payload))?),
+        let checksum = if version == 2 {
+            let computed = fnv1a(&raw[start..c.pos]);
+            let stored = c.u64()?;
+            if stored != computed {
+                return Err(ArtifactError::ChecksumMismatch {
+                    path: path.to_path_buf(),
+                    tensor: Some(name),
+                    stored,
+                    computed,
+                });
+            }
+            Some(stored)
+        } else {
+            None
         };
-        out.insert(name, t);
+        records.push(Record { name, dtype, shape, payload, checksum });
+    }
+    if c.pos != body_end {
+        return Err(corrupt(
+            path,
+            format!("{} trailing bytes after last tensor record", body_end - c.pos),
+        ));
+    }
+    Ok((version, records))
+}
+
+fn read_raw(path: &Path) -> Result<Vec<u8>, ArtifactError> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut raw))
+        .map_err(|source| ArtifactError::Io { path: path.to_path_buf(), source })?;
+    Ok(raw)
+}
+
+/// Read a DFT file (v1 or v2) into a [`TensorMap`], verifying all v2
+/// checksums. Any malformed input yields a typed [`ArtifactError`].
+pub fn read_dft(path: &Path) -> Result<TensorMap, ArtifactError> {
+    let raw = read_raw(path)?;
+    let (_, records) = decode(path, &raw)?;
+    let mut out = TensorMap::new();
+    for r in records {
+        let payload = &raw[r.payload];
+        let mk = |detail: String| ArtifactError::BadShape {
+            path: path.to_path_buf(),
+            tensor: r.name.clone(),
+            detail,
+        };
+        let t = match r.dtype {
+            DType::F32 => Tensor::new(&r.shape, decode_vec(payload)).map(AnyTensor::F32),
+            DType::I8 => Tensor::new(&r.shape, decode_vec(payload)).map(AnyTensor::I8),
+            DType::I32 => Tensor::new(&r.shape, decode_vec(payload)).map(AnyTensor::I32),
+            DType::U8 => Tensor::new(&r.shape, decode_vec(payload)).map(AnyTensor::U8),
+            DType::I64 => Tensor::new(&r.shape, decode_vec(payload)).map(AnyTensor::I64),
+        }
+        .map_err(|e| mk(e.to_string()))?;
+        if out.insert(r.name.clone(), t).is_some() {
+            return Err(corrupt(path, format!("duplicate tensor name '{}'", r.name)));
+        }
     }
     Ok(out)
+}
+
+/// Walk a DFT file's full decode-and-checksum path without materializing
+/// tensors; returns a per-tensor integrity report. The `verify-artifact`
+/// CLI builds its table from this.
+pub fn verify_dft(path: &Path) -> Result<DftReport, ArtifactError> {
+    let raw = read_raw(path)?;
+    let (version, records) = decode(path, &raw)?;
+    Ok(DftReport {
+        version,
+        file_bytes: raw.len(),
+        tensors: records
+            .into_iter()
+            .map(|r| TensorReport {
+                name: r.name,
+                dtype: r.dtype,
+                shape: r.shape,
+                payload_bytes: r.payload.len(),
+                checksum: r.checksum,
+            })
+            .collect(),
+    })
 }
 
 #[cfg(test)]
@@ -227,18 +512,45 @@ mod tests {
         p
     }
 
-    #[test]
-    fn test_roundtrip_all_dtypes() {
+    fn sample_map() -> TensorMap {
         let mut m = TensorMap::new();
         m.insert("a".into(), AnyTensor::F32(Tensor::new(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]).unwrap()));
         m.insert("b".into(), AnyTensor::I8(Tensor::new(&[3], vec![-128i8, 0, 127]).unwrap()));
         m.insert("c".into(), AnyTensor::I32(Tensor::new(&[1], vec![-70000]).unwrap()));
         m.insert("d".into(), AnyTensor::U8(Tensor::new(&[2], vec![0u8, 255]).unwrap()));
         m.insert("e".into(), AnyTensor::I64(Tensor::new(&[1], vec![1i64 << 40]).unwrap()));
+        m
+    }
+
+    #[test]
+    fn test_fnv1a_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn test_roundtrip_all_dtypes() {
+        let m = sample_map();
         let p = tmpfile("roundtrip.dft");
         write_dft(&p, &m).unwrap();
         let back = read_dft(&p).unwrap();
         assert_eq!(m, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_v1_still_loads() {
+        let m = sample_map();
+        let p = tmpfile("v1.dft");
+        write_dft_v1(&p, &m).unwrap();
+        assert_eq!(&std::fs::read(&p).unwrap()[..4], MAGIC_V1);
+        let back = read_dft(&p).unwrap();
+        assert_eq!(m, back);
+        let rep = verify_dft(&p).unwrap();
+        assert_eq!(rep.version, 1);
+        assert!(rep.tensors.iter().all(|t| t.checksum.is_none()));
         std::fs::remove_file(&p).ok();
     }
 
@@ -254,7 +566,18 @@ mod tests {
     fn test_bad_magic_rejected() {
         let p = tmpfile("bad.dft");
         std::fs::write(&p, b"NOPE\x00\x00\x00\x00").unwrap();
-        assert!(read_dft(&p).is_err());
+        assert!(matches!(read_dft(&p), Err(ArtifactError::BadMagic { .. })));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_future_version_rejected() {
+        let p = tmpfile("v9.dft");
+        std::fs::write(&p, b"DFT9\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        match read_dft(&p) {
+            Err(ArtifactError::UnsupportedVersion { version, .. }) => assert_eq!(version, 9),
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
         std::fs::remove_file(&p).ok();
     }
 
@@ -266,8 +589,64 @@ mod tests {
         write_dft(&p, &m).unwrap();
         let raw = std::fs::read(&p).unwrap();
         std::fs::write(&p, &raw[..raw.len() - 3]).unwrap();
-        assert!(read_dft(&p).is_err());
+        // dropping trailer bytes makes the file-level checksum unreadable
+        let err = read_dft(&p).unwrap_err();
+        assert!(
+            matches!(err, ArtifactError::Truncated { .. } | ArtifactError::ChecksumMismatch { .. }),
+            "{err}"
+        );
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_bit_flip_names_tensor() {
+        let m = sample_map();
+        let p = tmpfile("flip.dft");
+        write_dft(&p, &m).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        // flip one payload bit of tensor 'a' (first record after the 8-byte
+        // header: 2 name + 1 name byte + 1 dtype + 1 ndim + 8 dims + 8 len)
+        let payload_off = 8 + 2 + 1 + 1 + 1 + 8 + 8;
+        raw[payload_off] ^= 0x40;
+        // the whole-file trailer catches it first...
+        std::fs::write(&p, &raw).unwrap();
+        assert!(matches!(
+            read_dft(&p),
+            Err(ArtifactError::ChecksumMismatch { tensor: None, .. })
+        ));
+        // ...and with the trailer recomputed, the per-tensor sum names 'a'
+        let n = raw.len();
+        let fixed = fnv1a(&raw[..n - 8]);
+        raw[n - 8..].copy_from_slice(&fixed.to_le_bytes());
+        std::fs::write(&p, &raw).unwrap();
+        match read_dft(&p) {
+            Err(ArtifactError::ChecksumMismatch { tensor: Some(t), .. }) => assert_eq!(t, "a"),
+            other => panic!("expected per-tensor ChecksumMismatch, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_verify_report() {
+        let m = sample_map();
+        let p = tmpfile("verify.dft");
+        write_dft(&p, &m).unwrap();
+        let rep = verify_dft(&p).unwrap();
+        assert_eq!(rep.version, 2);
+        assert_eq!(rep.tensors.len(), m.len());
+        assert!(rep.tensors.iter().all(|t| t.checksum.is_some()));
+        assert_eq!(rep.tensors[0].name, "a");
+        assert_eq!(rep.tensors[0].shape, vec![2, 2]);
+        assert_eq!(rep.tensors[0].payload_bytes, 16);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn test_error_names_path() {
+        let p = tmpfile("missing_nonexistent.dft");
+        let err = read_dft(&p).unwrap_err();
+        assert!(err.to_string().contains("missing_nonexistent"), "{err}");
+        assert_eq!(err.path(), p);
     }
 
     #[test]

@@ -504,9 +504,13 @@ impl QModelParams {
         self.epilogues = EpilogueCache::default();
     }
 
-    /// Sanity-check the params against the network description *and* the
-    /// declared scheme: layer shapes must match the net, and every layer's
-    /// codes must fit the range its [`LayerPolicy`] codec promises.
+    /// Deep-check the params against the network description *and* the
+    /// declared scheme: layer shapes must match the net, every layer's
+    /// codes must fit the range its [`LayerPolicy`] codec promises (a full
+    /// sweep — the packed encodings in [`PackedLayer`] are built from these
+    /// same validated dense codes), every f32 scale must be finite, and the
+    /// DFP exponents must sit inside the envelope the integer requantizer
+    /// supports. A corrupt artifact must fail here, never serve.
     pub fn validate(&self, net: &Network) -> Result<()> {
         let check_codes = |name: &str, codes: &[i8], policy: &LayerPolicy| -> Result<()> {
             let qmax = crate::dfp::qmax(policy.w_bits());
@@ -519,24 +523,49 @@ impl QModelParams {
             }
             Ok(())
         };
+        let check_finite = |name: &str, what: &str, v: &[f32]| -> Result<()> {
+            if let Some((c, &x)) = v.iter().enumerate().find(|(_, x)| !x.is_finite()) {
+                bail!("{name}: non-finite {what} {x} at channel {c}");
+            }
+            Ok(())
+        };
+        // the integer requantizer's shift arithmetic is bounded by the ±512
+        // exponent envelope (see LayerRequant::from_parts); an exponent
+        // outside it can only come from a corrupt export
+        let check_exp = |name: &str, what: &str, e: i32| -> Result<()> {
+            ensure!((-512..=512).contains(&e), "{name}: {what} {e} outside [-512, 512]");
+            Ok(())
+        };
+        check_exp("meta", "in_exp", self.in_exp)?;
+        check_exp("meta", "feat_exp", self.feat_exp)?;
         for l in &net.layers {
             let p = self.convs.get(&l.name).with_context(|| format!("no params for {}", l.name))?;
             let want = [l.kh, l.kw, l.cin, l.cout];
             if p.wq.shape() != want {
                 bail!("{}: weight shape {:?} != {:?}", l.name, p.wq.shape(), want);
             }
-            if p.w_scale.len() != l.cout || p.bn_scale.len() != l.cout {
+            if p.w_scale.len() != l.cout || p.bn_scale.len() != l.cout || p.bn_shift.len() != l.cout
+            {
                 bail!("{}: scale length mismatch", l.name);
             }
             if p.requant.len() != l.cout {
                 bail!("{}: requant channel count {} != {}", l.name, p.requant.len(), l.cout);
             }
             check_codes(&l.name, p.wq.data(), &p.policy)?;
+            check_finite(&l.name, "w_scale", &p.w_scale)?;
+            check_finite(&l.name, "bn_scale", &p.bn_scale)?;
+            check_finite(&l.name, "bn_shift", &p.bn_shift)?;
+            check_exp(&l.name, "act_exp", p.act_exp)?;
         }
         if self.fc_wq.dim(0) != net.fc_in || self.fc_wq.dim(1) != net.fc_out {
             bail!("fc shape mismatch");
         }
+        if self.fc_scale.len() != net.fc_out || self.fc_b.len() != net.fc_out {
+            bail!("fc: scale/bias length mismatch");
+        }
         check_codes("fc", self.fc_wq.data(), self.scheme.policy_for("fc"))?;
+        check_finite("fc", "scale", &self.fc_scale)?;
+        check_finite("fc", "bias", &self.fc_b)?;
         Ok(())
     }
 }

@@ -24,6 +24,19 @@
 //!   quantize   quantize a DFT weight file under a precision scheme
 //!              (rust-native Algorithms 1 & 2 + k-bit DFP)
 //!   info       show the artifact manifest
+//!   verify-artifact  deep-validate an artifact set before it serves:
+//!              container checksums per tensor (DFT v2), manifest
+//!              consistency, packed-code ranges, requant envelopes and
+//!              scheme cross-checks — exits nonzero on the first typed
+//!              failure. `--file <x.dft>` checks a single container instead
+//!   export-synthetic  write the seeded §3.3 synthetic ladder to `--out`
+//!              as a real checksummed artifact set (fixture for the CI
+//!              round-trip and for trying verify/reload without a trainer)
+//!
+//! `serve` can hot-swap artifacts while under load: `--reload-from <dir>`
+//! atomically reloads the coordinator from `<dir>` after `--reload-after
+//! <n>` requests (default: halfway) — a rejected reload (corrupt or
+//! inconsistent set) rolls back and the previous generation keeps serving.
 //!
 //! Precision is selected with typed schemes (see `scheme::Scheme` and
 //! DESIGN.md §scheme): `--scheme 8a2w_n4` is the legacy ternary-N4 variant,
@@ -43,16 +56,17 @@
 //!   dfp-infer eval --artifacts artifacts --variants fp32,8a2w_n4
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use dfp_infer::cli::Args;
 use dfp_infer::config::Config;
 use dfp_infer::coordinator::{
-    Coordinator, Executor, ExecutorFactory, LpExecutor, PjrtExecutor, PrecisionClass, Request,
-    Router, ServeError,
+    Coordinator, Executor, ExecutorFactory, LpExecutor, PjrtExecutor, PrecisionClass, ReloadHook,
+    Request, Router, ServeError,
 };
-use dfp_infer::io::read_dft;
+use dfp_infer::io::{read_dft, verify_dft, DftReport};
 use dfp_infer::json::Json;
 use dfp_infer::kernels::KernelKind;
 use dfp_infer::lpinfer::{forward_quant_into, ForwardPlan, ForwardWorkspace, QModelParams};
@@ -81,13 +95,18 @@ fn run() -> Result<()> {
         Some("opcount") => cmd_opcount(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("info") => cmd_info(&args),
+        Some("verify-artifact") => cmd_verify_artifact(&args),
+        Some("export-synthetic") => cmd_export_synthetic(&args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (try serve|eval|profile|opcount|quantize|info)")
+            bail!(
+                "unknown subcommand '{other}' \
+                 (try serve|eval|profile|opcount|quantize|info|verify-artifact|export-synthetic)"
+            )
         }
         None => {
             println!(
                 "dfp-infer — mixed low-precision inference with dynamic fixed point\n\
-                 usage: dfp-infer <serve|eval|profile|opcount|quantize|info> [options]"
+                 usage: dfp-infer <serve|eval|profile|opcount|quantize|info|verify-artifact|export-synthetic> [options]"
             );
             Ok(())
         }
@@ -110,6 +129,103 @@ fn cmd_info(args: &Args) -> Result<()> {
             name, v.w_bits, v.cluster, v.eval_acc, v.requant_version, scheme
         );
     }
+    Ok(())
+}
+
+/// Per-tensor integrity table of a [`DftReport`].
+fn print_tensor_table(report: &DftReport) {
+    println!(
+        "  {:<28} {:>6} {:>18} {:>12} {:>18}",
+        "tensor", "dtype", "shape", "bytes", "fnv1a"
+    );
+    for t in &report.tensors {
+        let sum = t.checksum.map(|c| format!("{c:016x}")).unwrap_or_else(|| "- (v1)".into());
+        println!(
+            "  {:<28} {:>6} {:>18} {:>12} {:>18}",
+            t.name,
+            format!("{:?}", t.dtype).to_lowercase(),
+            format!("{:?}", t.shape),
+            t.payload_bytes,
+            sum
+        );
+    }
+}
+
+/// `verify-artifact`: the offline twin of the serve/reload load gate.
+/// Walks the same typed decode + deep-validation path the server enforces
+/// and exits nonzero on the first failure, so a deploy pipeline can reject
+/// a corrupt artifact set before it ever reaches a coordinator.
+fn cmd_verify_artifact(args: &Args) -> Result<()> {
+    // --file: verify a single DFT container (any tensor file, not just
+    // qweights) — container-level checks only
+    if let Some(file) = args.get_str("file") {
+        let path = Path::new(file);
+        let report = verify_dft(path)?;
+        println!(
+            "{} — DFT v{}, {} tensors, {} bytes",
+            path.display(),
+            report.version,
+            report.tensors.len(),
+            report.file_bytes
+        );
+        print_tensor_table(&report);
+        println!("OK: every stored checksum verified");
+        return Ok(());
+    }
+    let cfg = Config::resolve(args)?;
+    let dir = &cfg.artifacts_dir;
+    let manifest = runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!(
+        "manifest OK: {} variant(s), img {img}x{img}, classes {}",
+        manifest.variants.len(),
+        manifest.classes,
+        img = manifest.img
+    );
+    let mut verified = 0usize;
+    for name in manifest.variants.keys() {
+        let path = dir.join(format!("qweights_{name}.dft"));
+        if !path.exists() {
+            continue;
+        }
+        let report = verify_dft(&path)
+            .with_context(|| format!("integrity check failed for variant '{name}'"))?;
+        println!(
+            "\nvariant '{name}' — DFT v{}, {} tensors, {} bytes",
+            report.version,
+            report.tensors.len(),
+            report.file_bytes
+        );
+        print_tensor_table(&report);
+        verified += 1;
+    }
+    anyhow::ensure!(
+        verified > 0,
+        "no qweights_<variant>.dft exports found in {}",
+        dir.display()
+    );
+    // deep semantic validation: packed-code ranges, requant envelopes,
+    // scheme/manifest cross-checks — the same gate `serve` and a hot
+    // reload enforce before a set may serve
+    let (_, variants) = LpExecutor::load_variant_set(dir)?;
+    println!(
+        "\ndeep validation OK: {} servable variant(s) {:?}",
+        variants.len(),
+        variants.keys().collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+/// `export-synthetic`: write the seeded §3.3 ladder as a real artifact set.
+fn cmd_export_synthetic(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "artifacts-synthetic");
+    let seed: u64 = args.get_or("seed", 7)?;
+    let dir = Path::new(out);
+    LpExecutor::export_synthetic_artifacts(dir, seed)?;
+    println!(
+        "wrote synthetic ladder ({} variants, seed {seed}) to {}",
+        LpExecutor::SYNTHETIC_LADDER.len(),
+        dir.display()
+    );
     Ok(())
 }
 
@@ -512,11 +628,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
     let registry = cfg.kernel_registry();
     let t = Timer::new();
-    let (router, sizes, factories, img): (
+    let (router, sizes, factories, img, reload_hook): (
         Router,
         std::collections::BTreeMap<String, Vec<usize>>,
         Vec<ExecutorFactory>,
         usize,
+        Option<ReloadHook>,
     ) = if args.has_flag("synthetic") {
         // --synthetic: artifact-free serving over the seeded §3.3 ladder
         // (ternary N=64 / 4-bit / full i8) — used by the resilience CI
@@ -531,10 +648,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         let router = Router::from_manifest(&m)?;
         let sizes = m.variants.keys().map(|v| (v.clone(), m.batch_sizes.clone())).collect();
+        // one shared weight store across the pool, so a hot reload swaps
+        // every worker at once
+        let store = LpExecutor::synthetic_store(cfg.seed);
+        let net = model::resnet_mini_default();
         let factories = (0..cfg.workers.max(1))
-            .map(|_| LpExecutor::synthetic_factory(cfg.seed, registry.clone()))
+            .map(|_| {
+                LpExecutor::store_factory(
+                    net.clone(),
+                    Arc::clone(&store),
+                    registry.clone(),
+                    m.batch_sizes.clone(),
+                )
+            })
             .collect();
-        (router, sizes, factories, m.img)
+        let hook = Some(LpExecutor::reload_hook(store));
+        (router, sizes, factories, m.img, hook)
     } else {
         println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
         let mut manifest = runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
@@ -575,10 +704,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .keys()
                 .map(|v| (v.clone(), m.batch_sizes.clone()))
                 .collect();
+            // load once into a shared store (deep-validated: checksums,
+            // packed codes, requant envelopes) instead of once per worker
+            let (_, store) = LpExecutor::shared_store_from_artifacts(&cfg.artifacts_dir)?;
+            let net = model::resnet_mini_default();
             let factories = (0..cfg.workers.max(1))
-                .map(|_| LpExecutor::factory(cfg.artifacts_dir.clone(), registry.clone()))
+                .map(|_| {
+                    LpExecutor::store_factory(
+                        net.clone(),
+                        Arc::clone(&store),
+                        registry.clone(),
+                        m.batch_sizes.clone(),
+                    )
+                })
                 .collect();
-            (router, sizes, factories, manifest.img)
+            let hook = Some(LpExecutor::reload_hook(store));
+            (router, sizes, factories, manifest.img, hook)
         } else {
             println!("executor: pjrt");
             let router = Router::from_manifest(&manifest)?;
@@ -590,7 +731,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let factories = (0..cfg.workers.max(1))
                 .map(|_| PjrtExecutor::factory(cfg.artifacts_dir.clone(), true))
                 .collect();
-            (router, sizes, factories, manifest.img)
+            (router, sizes, factories, manifest.img, None)
         }
     };
     println!(
@@ -600,6 +741,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         router.route(PrecisionClass::Accurate)
     );
     let coord = Coordinator::start(factories, router.clone(), &sizes, img, cfg.to_coordinator())?;
+    if let Some(hook) = reload_hook {
+        coord.install_reload_hook(hook);
+    }
     println!("coordinator up ({} workers, warmup {:.1}s)", cfg.workers.max(1), t.elapsed_s());
 
     // synthetic closed-loop load: round-robin precision classes
@@ -607,6 +751,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --stats-every <secs>: periodic one-line serving + engine report
     // (engine counters are printed as deltas since the previous line)
     let stats_every: f64 = args.get_or("stats-every", 0.0)?;
+    // --reload-from <dir>: hot-swap the serving artifacts mid-run, after
+    // --reload-after requests (default halfway) — exercises the atomic
+    // swap + rollback path under real load
+    let reload_from = args.get_str("reload-from").map(str::to_string);
+    let reload_after: usize = args.get_or("reload-after", (n / 2).max(1))?;
     println!("issuing {n} requests (ShapeSet noise={}) ...", cfg.noise);
     let protos = data::prototypes();
     let classes = [PrecisionClass::Fast, PrecisionClass::Balanced, PrecisionClass::Accurate];
@@ -664,6 +813,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     }
                 }
                 Err(e) => bail!("submit failed: {e}"),
+            }
+        }
+        if i + 1 == reload_after {
+            if let Some(dir) = &reload_from {
+                match coord.reload(Path::new(dir)) {
+                    Ok(r) => println!(
+                        "[reload] now serving generation {} ({} variants, prepared in {:.1}ms)",
+                        r.generation,
+                        r.variants.len(),
+                        r.prepare_us as f64 / 1e3
+                    ),
+                    Err(e) => {
+                        println!("[reload] rejected, previous generation keeps serving: {e}")
+                    }
+                }
             }
         }
         if stats_every > 0.0 && stats_t.elapsed_s() >= stats_every {

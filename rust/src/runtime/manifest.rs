@@ -37,7 +37,9 @@ impl Manifest {
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Self::from_json_text(&text)
+        // parse errors must name the file too: a fleet reload that fails on
+        // one of several manifests is undiagnosable from "manifest: img"
+        Self::from_json_text(&text).with_context(|| format!("parsing {}", path.display()))
     }
 
     pub fn from_json_text(text: &str) -> Result<Self> {
@@ -145,6 +147,15 @@ mod tests {
         let text = SAMPLE.replace(r#""w_bits": 2, "cluster": 4"#, r#""w_bits": 4, "cluster": 4"#);
         let m = Manifest::from_json_text(&text).unwrap();
         assert!(m.scheme_of("8a2w_n4").is_none());
+    }
+
+    #[test]
+    fn test_load_error_names_path() {
+        let p = std::env::temp_dir().join(format!("dfp_manifest_bad_{}.json", std::process::id()));
+        std::fs::write(&p, "{}").unwrap();
+        let msg = format!("{:#}", Manifest::load(&p).unwrap_err());
+        assert!(msg.contains("dfp_manifest_bad"), "{msg}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

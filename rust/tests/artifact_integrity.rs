@@ -1,0 +1,235 @@
+//! Corruption fuzz suite for the trustworthy artifact lifecycle: every way
+//! a `qweights_*.dft` export can rot on disk — flipped bits, truncation at
+//! any structural boundary, out-of-range packed codes, a requant version
+//! from the future — must surface as a **typed error**, never a panic and
+//! never a silently-wrong load. The legacy v1 container must keep loading.
+
+use dfp_infer::dfp::REQUANT_VERSION;
+use dfp_infer::io::{
+    read_dft, verify_dft, write_dft, write_dft_v1, AnyTensor, ArtifactError, TensorMap,
+};
+use dfp_infer::lpinfer::QModelParams;
+use dfp_infer::model::{resnet_mini, Network};
+use dfp_infer::scheme::Scheme;
+use dfp_infer::tensor::Tensor;
+
+fn tiny_net() -> Network {
+    resnet_mini(8, &[4, 4, 4], 1, 3)
+}
+
+/// A real (small) quantized model serialized the way the exporter writes it.
+fn fixture_map() -> TensorMap {
+    let net = tiny_net();
+    QModelParams::synthetic(&net, 42, &Scheme::parse("8a2w_n4").unwrap()).to_tensors()
+}
+
+fn tmpfile(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dfp_integrity_{tag}_{}.dft", std::process::id()))
+}
+
+/// Walk the v2 container structure and collect every section boundary:
+/// magic, count, and per record the name-length/name/dtype/ndim/dims/
+/// payload-length/payload/checksum edges, plus the file trailer.
+fn section_boundaries(raw: &[u8]) -> Vec<usize> {
+    let mut b = vec![0usize, 2, 4, 6, 8];
+    let count = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let mut pos = 8usize;
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(raw[pos..pos + 2].try_into().unwrap()) as usize;
+        b.push(pos + 2); // after name length
+        pos += 2 + nlen;
+        b.push(pos); // after name
+        pos += 1; // dtype tag
+        b.push(pos);
+        let ndim = raw[pos] as usize;
+        pos += 1 + 4 * ndim; // ndim + dims
+        b.push(pos);
+        let blen = u64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        b.push(pos); // payload start
+        pos += blen;
+        b.push(pos); // payload end
+        pos += 8; // record checksum
+        b.push(pos);
+    }
+    b.push(raw.len() - 8); // trailer start
+    b.push(raw.len() - 1); // mid-trailer
+    b.retain(|&x| x < raw.len());
+    b.sort_unstable();
+    b.dedup();
+    b
+}
+
+#[test]
+fn test_truncation_at_every_section_boundary_is_typed() {
+    let p = tmpfile("trunc_src");
+    write_dft(&p, &fixture_map()).unwrap();
+    let raw = std::fs::read(&p).unwrap();
+    let cuts = section_boundaries(&raw);
+    assert!(cuts.len() > 20, "expected many boundaries, got {}", cuts.len());
+    let q = tmpfile("trunc");
+    for &cut in &cuts {
+        std::fs::write(&q, &raw[..cut]).unwrap();
+        let err = read_dft(&q)
+            .err()
+            .unwrap_or_else(|| panic!("truncation at {cut}/{} must not load", raw.len()));
+        // typed, and it names the file it is about
+        assert!(err.path().ends_with(q.file_name().unwrap()), "cut {cut}: {err}");
+        // verify_dft walks the same decode path — must agree
+        assert!(verify_dft(&q).is_err(), "verify accepted truncation at {cut}");
+    }
+    std::fs::remove_file(&p).ok();
+    std::fs::remove_file(&q).ok();
+}
+
+#[test]
+fn test_single_bit_flips_are_detected_everywhere() {
+    let p = tmpfile("flip_src");
+    write_dft(&p, &fixture_map()).unwrap();
+    let raw = std::fs::read(&p).unwrap();
+    let q = tmpfile("flip");
+    // deterministic sample across the whole file, varying the bit position
+    let step = (raw.len() / 97).max(1);
+    let mut flips = 0usize;
+    for i in (0..raw.len()).step_by(step) {
+        let mut bad = raw.clone();
+        bad[i] ^= 1u8 << (i % 8);
+        std::fs::write(&q, &bad).unwrap();
+        let err = read_dft(&q)
+            .err()
+            .unwrap_or_else(|| panic!("bit flip at byte {i} must not load"));
+        assert!(err.path().ends_with(q.file_name().unwrap()), "byte {i}: {err}");
+        flips += 1;
+    }
+    assert!(flips >= 90, "sampled only {flips} flips");
+    // the untouched file still loads — the fixture itself is sound
+    assert!(read_dft(&p).is_ok());
+    std::fs::remove_file(&p).ok();
+    std::fs::remove_file(&q).ok();
+}
+
+#[test]
+fn test_payload_flip_is_checksum_mismatch_not_silent() {
+    let map = fixture_map();
+    let p = tmpfile("payload_flip");
+    write_dft(&p, &map).unwrap();
+    let mut raw = std::fs::read(&p).unwrap();
+    // flip a byte well inside the body (a tensor payload, past the header)
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x10;
+    std::fs::write(&p, &raw).unwrap();
+    match read_dft(&p) {
+        Err(ArtifactError::ChecksumMismatch { stored, computed, .. }) => {
+            assert_ne!(stored, computed);
+        }
+        other => panic!("expected ChecksumMismatch, got {other:?}"),
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+/// Helper: mutate one tensor in a valid map, re-serialize through the real
+/// writer (so all container checksums are *valid*), and load. The container
+/// accepts it — the corruption must be caught by the semantic layer
+/// (`QModelParams::from_tensors`), proving deep validation is a separate
+/// line of defense behind the checksums.
+fn load_mutated(
+    map: &TensorMap,
+    mutate: impl FnOnce(&mut TensorMap),
+    tag: &str,
+) -> anyhow::Result<QModelParams> {
+    let mut m = map.clone();
+    mutate(&mut m);
+    let p = tmpfile(tag);
+    write_dft(&p, &m).unwrap();
+    let reread = read_dft(&p).expect("container checksums are valid by construction");
+    let out = QModelParams::from_tensors(&reread, &tiny_net());
+    std::fs::remove_file(&p).ok();
+    out
+}
+
+#[test]
+fn test_out_of_range_packed_codes_rejected_by_deep_validation() {
+    let map = fixture_map();
+    // control: the fixture itself passes the deep gate
+    assert!(load_mutated(&map, |_| {}, "codes_ok").is_ok());
+    // find a conv code tensor and push one code far outside the 2-bit range
+    let name = map.keys().find(|k| k.ends_with(".wq") && *k != "fc.wq").unwrap().clone();
+    let err = load_mutated(
+        &map,
+        |m| {
+            let t = m[&name].as_i8().unwrap().clone();
+            let mut d = t.data().to_vec();
+            d[0] = 125;
+            m.insert(name.clone(), AnyTensor::I8(Tensor::new(t.shape(), d).unwrap()));
+        },
+        "codes_bad",
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(!msg.is_empty());
+}
+
+#[test]
+fn test_requant_version_from_the_future_is_rejected() {
+    let map = fixture_map();
+    let err = load_mutated(
+        &map,
+        |m| {
+            m.insert(
+                "meta.requant_version".into(),
+                AnyTensor::I32(Tensor::new(&[1], vec![REQUANT_VERSION + 1]).unwrap()),
+            );
+        },
+        "rq_future",
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("requant_version"), "{msg}");
+}
+
+#[test]
+fn test_corrupt_requant_envelope_rejected_by_deep_validation() {
+    let map = fixture_map();
+    let name = map.keys().find(|k| k.ends_with(".rq_shift")).unwrap().clone();
+    let err = load_mutated(
+        &map,
+        |m| {
+            let t = m[&name].as_i32().unwrap().clone();
+            let mut d = t.data().to_vec();
+            d[0] = 10_000; // far outside any sane requant shift envelope
+            m.insert(name.clone(), AnyTensor::I32(Tensor::new(t.shape(), d).unwrap()));
+        },
+        "rq_envelope",
+    )
+    .unwrap_err();
+    assert!(!format!("{err:#}").is_empty());
+}
+
+#[test]
+fn test_v1_container_still_loads_and_serves() {
+    let map = fixture_map();
+    let p = tmpfile("v1_compat");
+    write_dft_v1(&p, &map).unwrap();
+    // bytes round-trip exactly, checksums simply absent
+    let reread = read_dft(&p).unwrap();
+    assert_eq!(reread, map);
+    let report = verify_dft(&p).unwrap();
+    assert_eq!(report.version, 1);
+    assert!(report.tensors.iter().all(|t| t.checksum.is_none()));
+    // and the deep gate accepts it: v1 exports keep serving
+    assert!(QModelParams::from_tensors(&reread, &tiny_net()).is_ok());
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn test_unknown_future_container_version_is_typed() {
+    let p = tmpfile("future_version");
+    std::fs::write(&p, b"DFT7\x00\x00\x00\x00").unwrap();
+    match read_dft(&p) {
+        Err(ArtifactError::UnsupportedVersion { version, .. }) => assert_eq!(version, 7),
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+    std::fs::write(&p, b"JPEGnot a dft").unwrap();
+    assert!(matches!(read_dft(&p), Err(ArtifactError::BadMagic { .. })));
+    std::fs::remove_file(&p).ok();
+}

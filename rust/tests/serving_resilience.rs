@@ -11,9 +11,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dfp_infer::coordinator::{
-    Coordinator, CoordinatorConfig, DegradeConfig, Executor, ExecutorFactory, MockExecutor,
-    PrecisionClass, Request, Router, ServeError, ServeResult,
+    Coordinator, CoordinatorConfig, DegradeConfig, Executor, ExecutorFactory, LpExecutor,
+    MockExecutor, PrecisionClass, Request, Router, ServeError, ServeResult,
 };
+use dfp_infer::kernels::KernelRegistry;
+use dfp_infer::model::resnet_mini_default;
 use dfp_infer::runtime::Manifest;
 use dfp_infer::tensor::Tensor;
 use dfp_infer::testing::chaos::{ChaosConfig, FaultyExecutor};
@@ -292,6 +294,115 @@ fn test_injected_errors_reply_without_panicking_worker() {
     assert_eq!(m.worker_panics, 0);
     assert_eq!(m.quarantined, 0);
     c.shutdown();
+}
+
+// ---------------------------------------------------------------- hot-swap
+
+/// Shared-store serving stack on the real `LpExecutor`: every worker sees
+/// the same `VariantStore`, the coordinator gets the matching reload hook.
+fn start_swap_stack(
+    seed: u64,
+    workers: usize,
+) -> (Coordinator, dfp_infer::tensor::Tensor<f32>) {
+    let store = LpExecutor::synthetic_store(seed);
+    let registry = KernelRegistry::auto();
+    let net = resnet_mini_default();
+    let m = LpExecutor::synthetic_manifest();
+    let router = Router::from_manifest(&m).unwrap();
+    let sizes: BTreeMap<String, Vec<usize>> =
+        m.variants.keys().map(|v| (v.clone(), m.batch_sizes.clone())).collect();
+    let factories: Vec<ExecutorFactory> = (0..workers)
+        .map(|_| {
+            LpExecutor::store_factory(
+                net.clone(),
+                Arc::clone(&store),
+                registry.clone(),
+                m.batch_sizes.clone(),
+            )
+        })
+        .collect();
+    let c = Coordinator::start(
+        factories,
+        router,
+        &sizes,
+        m.img,
+        CoordinatorConfig { max_wait_us: 300, ..Default::default() },
+    )
+    .unwrap();
+    c.install_reload_hook(LpExecutor::reload_hook(store));
+    let n = m.img * m.img * 3;
+    let img = dfp_infer::tensor::Tensor::new(&[m.img, m.img, 3], vec![0.5; n]).unwrap();
+    (c, img)
+}
+
+fn swap_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("dfp_swap_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn test_hot_swap_under_load_loses_no_request() {
+    let dir = swap_dir("live");
+    LpExecutor::export_synthetic_artifacts(&dir, 99).unwrap();
+    let (c, img) = start_swap_stack(7, 2);
+    assert_eq!(c.serving_generation(), 0);
+
+    // fill the queues, swap while they drain, keep submitting
+    let mut rxs: Vec<_> = (0..6)
+        .map(|_| c.submit(Request::new(img.clone(), PrecisionClass::Fast)).unwrap())
+        .collect();
+    let report = c.reload(&dir).expect("reload of a valid artifact set");
+    assert_eq!(report.generation, 1);
+    assert_eq!(report.variants.len(), 3, "whole ladder must swap: {:?}", report.variants);
+    assert_eq!(c.serving_generation(), 1);
+    rxs.extend(
+        (0..6).map(|_| c.submit(Request::new(img.clone(), PrecisionClass::Fast)).unwrap()),
+    );
+    // the invariant: a reload mid-traffic loses nothing and fails nothing
+    for rx in &rxs {
+        recv_one(rx).expect("request lost or failed across a hot swap");
+    }
+    assert!(c.shutdown().drained);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn test_corrupt_artifact_reload_rolls_back_and_serving_continues() {
+    let dir = swap_dir("rollback");
+    LpExecutor::export_synthetic_artifacts(&dir, 99).unwrap();
+    // flip one byte in the middle of one weight file: the checksummed
+    // container must reject it, and the swap must never become visible
+    let victim = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| Some(e.ok()?.path()))
+        .find(|p| p.extension().is_some_and(|e| e == "dft"))
+        .expect("exported set has a .dft file");
+    let mut raw = std::fs::read(&victim).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x01;
+    std::fs::write(&victim, &raw).unwrap();
+
+    let (c, img) = start_swap_stack(7, 1);
+    let err = c.reload(&dir).expect_err("corrupt artifact set must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("previous generation"), "{msg}");
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    assert_eq!(c.serving_generation(), 0, "failed reload must not bump the generation");
+
+    // and a reload from a directory that does not exist is equally typed
+    let missing = dir.join("nope");
+    let err = c.reload(&missing).expect_err("missing dir must be rejected");
+    assert!(err.to_string().contains("previous generation"), "{err}");
+    assert_eq!(c.serving_generation(), 0);
+
+    // rollback is not a degraded state: the old generation keeps serving
+    for _ in 0..3 {
+        let rx = c.submit(Request::new(img.clone(), PrecisionClass::Fast)).unwrap();
+        recv_one(&rx).expect("serving must continue after a rejected reload");
+    }
+    assert!(c.shutdown().drained);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
